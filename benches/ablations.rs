@@ -1,0 +1,94 @@
+//! Ablations on the design choices DESIGN.md calls out:
+//!  - anchor tree vs divisive-only construction,
+//!  - serial vs threaded kNN search,
+//!  - multi-column vs column-at-a-time matvec (the coordinator's fusion),
+//!  - σ alternation vs fixed bandwidth (construction share),
+//!  - Table-1 empirical scaling exponents.
+
+use vdt::core::bench::Runner;
+use vdt::core::metrics::loglog_slope;
+use vdt::data::synthetic;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::one_hot_labels;
+use vdt::tree::{build_tree, BuildConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    let mut r = Runner::from_args();
+
+    println!("# ablation: tree construction strategy");
+    let ds = synthetic::secstr_like(4000, 1);
+    r.bench("ablation/tree_build/anchors_default", || {
+        std::hint::black_box(build_tree(&ds.x, &BuildConfig::default()));
+    });
+    r.bench("ablation/tree_build/divisive_only", || {
+        std::hint::black_box(build_tree(&ds.x, &BuildConfig { divisive_threshold: usize::MAX, ..Default::default() }));
+    });
+
+    println!("\n# ablation: kNN search parallelism");
+    let ds2 = synthetic::secstr_like(3000, 1);
+    for (name, par) in [("serial", false), ("threads", true)] {
+        r.bench(&format!("ablation/knn_build/{name}"), || {
+            std::hint::black_box(KnnGraph::build(
+                &ds2.x,
+                &KnnConfig { k: 4, parallel: par, ..Default::default() },
+            ));
+        });
+    }
+
+    println!("\n# ablation: matvec column fusion");
+    let ds3 = synthetic::digit1_like(1500, 1);
+    let mut m = VdtModel::build(&ds3.x, &VdtConfig::default());
+    m.refine_to(6 * ds3.n());
+    let y8 = one_hot_labels(&ds3.labels.iter().map(|&l| l % 8).collect::<Vec<_>>(), 8);
+    r.bench("ablation/matvec/fused_8_columns", || {
+        std::hint::black_box(m.matvec(&y8));
+    });
+    r.bench("ablation/matvec/one_column_x8", || {
+        for col in 0..8 {
+            let y1 = vdt::Matrix::from_fn(ds3.n(), 1, |row, _| y8.get(row, col));
+            std::hint::black_box(m.matvec(&y1));
+        }
+    });
+    if let (Some(f), Some(s)) = (
+        r.mean_of("ablation/matvec/fused_8_columns"),
+        r.mean_of("ablation/matvec/one_column_x8"),
+    ) {
+        println!("# fusion speedup for 8 columns: {:.2}x", s / f);
+    }
+
+    println!("\n# ablation: sigma fitting cost");
+    for (name, fixed) in [("fixed_sigma", true), ("alternating", false)] {
+        r.bench(&format!("ablation/sigma_fit/{name}"), || {
+            let cfg = VdtConfig {
+                sigma: if fixed { Some(1.0) } else { None },
+                ..Default::default()
+            };
+            std::hint::black_box(VdtModel::build(&ds3.x, &cfg));
+        });
+    }
+
+    println!("\n# table1: empirical scaling exponents (see also `vdt exp table1`)");
+    let sizes = [500usize, 1000, 2000, 4000];
+    let mut construct = Vec::new();
+    let mut matvec = Vec::new();
+    for &n in &sizes {
+        let d = synthetic::secstr_like(n, 3);
+        let t = std::time::Instant::now();
+        let v = VdtModel::build(&d.x, &VdtConfig::default());
+        construct.push(t.elapsed().as_secs_f64());
+        let y = one_hot_labels(&d.labels, d.n_classes);
+        let _ = v.matvec(&y);
+        let t = std::time::Instant::now();
+        for _ in 0..5 {
+            std::hint::black_box(v.matvec(&y));
+        }
+        matvec.push(t.elapsed().as_secs_f64() / 5.0);
+    }
+    let ns: Vec<f64> = sizes.iter().map(|&n| n as f64).collect();
+    println!(
+        "# vdt construction slope = {:.2} (paper ~1.5+log), matvec slope = {:.2} (paper 1.0)",
+        loglog_slope(&ns, &construct),
+        loglog_slope(&ns, &matvec)
+    );
+}

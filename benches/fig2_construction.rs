@@ -1,0 +1,60 @@
+//! Fig 2A / 2D / 2H — construction time: exact vs fast-kNN(k=2) vs
+//! VariationalDT(coarsest), over secstr-like samples of growing N and the
+//! two 1500-point refinement datasets.
+//!
+//! Offline build: timing loops use the in-tree harness
+//! (`vdt::core::bench::Runner`); `cargo bench` runs this `main`.
+
+use vdt::core::bench::Runner;
+use vdt::data::synthetic;
+use vdt::exact::ExactModel;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    let mut r = Runner::from_args();
+    println!("# fig2a_construction (secstr-like)");
+    for &n in &[500usize, 1000, 2000] {
+        let ds = synthetic::secstr_like(n, 1);
+        r.bench(&format!("fig2a/vdt_coarsest/N={n}"), || {
+            std::hint::black_box(VdtModel::build(&ds.x, &VdtConfig::default()));
+        });
+        r.bench(&format!("fig2a/fast_knn_k2/N={n}"), || {
+            std::hint::black_box(KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() }));
+        });
+        if n <= 1000 {
+            r.bench(&format!("fig2a/exact_dense/N={n}"), || {
+                std::hint::black_box(ExactModel::build_dense(&ds.x, None));
+            });
+        }
+    }
+    // headline ratio at N=1000 (the paper claims orders of magnitude)
+    if let (Some(v), Some(e)) = (
+        r.mean_of("fig2a/vdt_coarsest/N=1000"),
+        r.mean_of("fig2a/exact_dense/N=1000"),
+    ) {
+        println!("# speedup vdt vs exact at N=1000: {:.1}x", e / v);
+    }
+    if let (Some(v), Some(k)) = (
+        r.mean_of("fig2a/vdt_coarsest/N=2000"),
+        r.mean_of("fig2a/fast_knn_k2/N=2000"),
+    ) {
+        println!("# speedup vdt vs fast-knn at N=2000: {:.1}x", k / v);
+    }
+
+    println!("\n# fig2dh_construction_1500 (digit1/usps-like)");
+    for (name, ds) in [
+        ("digit1", synthetic::digit1_like(1500, 1)),
+        ("usps", synthetic::usps_like(1500, 1)),
+    ] {
+        r.bench(&format!("fig2dh/vdt_coarsest/{name}"), || {
+            std::hint::black_box(VdtModel::build(&ds.x, &VdtConfig::default()));
+        });
+        r.bench(&format!("fig2dh/fast_knn_k2/{name}"), || {
+            std::hint::black_box(KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() }));
+        });
+        r.bench(&format!("fig2dh/exact_dense/{name}"), || {
+            std::hint::black_box(ExactModel::build_dense(&ds.x, None));
+        });
+    }
+}

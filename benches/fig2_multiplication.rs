@@ -1,0 +1,54 @@
+//! Fig 2B — one multiplication (P·Y) across the three representations,
+//! plus the matvec-cost-vs-|B| series showing the O(|B|) law. Memory
+//! shares Table 1's complexity column with multiplication, so this bench
+//! doubles as the memory comparison.
+
+use vdt::core::bench::Runner;
+use vdt::data::synthetic;
+use vdt::exact::ExactModel;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::{one_hot_labels, TransitionOp};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    let mut r = Runner::from_args();
+    println!("# fig2b_multiplication (secstr-like)");
+    for &n in &[500usize, 1000, 2000, 4000] {
+        let ds = synthetic::secstr_like(n, 1);
+        let y = one_hot_labels(&ds.labels, ds.n_classes);
+
+        let vdt = VdtModel::build(&ds.x, &VdtConfig::default());
+        r.bench(&format!("fig2b/vdt_coarsest/N={n}"), || {
+            std::hint::black_box(vdt.matvec(&y));
+        });
+
+        let knn = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+        r.bench(&format!("fig2b/fast_knn_k2/N={n}"), || {
+            std::hint::black_box(knn.matvec(&y));
+        });
+
+        if n <= 2000 {
+            let exact = ExactModel::build_dense(&ds.x, None);
+            r.bench(&format!("fig2b/exact_dense/N={n}"), || {
+                std::hint::black_box(exact.matvec(&y));
+            });
+        }
+    }
+    if let (Some(v), Some(e)) = (
+        r.mean_of("fig2b/vdt_coarsest/N=2000"),
+        r.mean_of("fig2b/exact_dense/N=2000"),
+    ) {
+        println!("# speedup vdt vs exact matvec at N=2000: {:.1}x", e / v);
+    }
+
+    println!("\n# fig2b matvec cost vs refinement level (O(|B|) law)");
+    let ds = synthetic::digit1_like(1500, 1);
+    let y = one_hot_labels(&ds.labels, ds.n_classes);
+    let mut vdt = VdtModel::build(&ds.x, &VdtConfig::default());
+    for k in [2usize, 4, 8] {
+        vdt.refine_to(k * ds.n());
+        r.bench(&format!("fig2b/vdt_matvec/B={k}N"), || {
+            std::hint::black_box(vdt.matvec(&y));
+        });
+    }
+}

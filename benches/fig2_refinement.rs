@@ -1,0 +1,47 @@
+//! Fig 2E / 2I — time to refine each model to the next level
+//! (|B|: kN → (k+1)N for VDT, k → k+1 for fast kNN).
+
+use vdt::core::bench::Runner;
+use vdt::data::synthetic;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    let mut r = Runner::from_args();
+    for (name, ds) in [
+        ("digit1", synthetic::digit1_like(1500, 1)),
+        ("usps", synthetic::usps_like(1500, 1)),
+    ] {
+        println!("# fig2ei_refinement ({name}-like)");
+        for k in [3usize, 5] {
+            r.bench_with_setup(
+                &format!("fig2ei/vdt_to_{k}N/{name}"),
+                || {
+                    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+                    if k > 3 {
+                        m.refine_to((k - 1) * ds.n());
+                    }
+                    m
+                },
+                |mut m| {
+                    m.refine_to(k * ds.n());
+                    m.num_blocks()
+                },
+            );
+            r.bench_with_setup(
+                &format!("fig2ei/knn_to_k{k}/{name}"),
+                || KnnGraph::build(&ds.x, &KnnConfig { k: k - 1, ..Default::default() }),
+                |mut g| {
+                    g.refine_to_k(k);
+                    g.num_params()
+                },
+            );
+            if let (Some(v), Some(kn)) = (
+                r.mean_of(&format!("fig2ei/vdt_to_{k}N/{name}")),
+                r.mean_of(&format!("fig2ei/knn_to_k{k}/{name}")),
+            ) {
+                println!("# refinement speedup vdt vs knn at level {k} ({name}): {:.1}x", kn / v);
+            }
+        }
+    }
+}

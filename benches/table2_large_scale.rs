@@ -1,0 +1,33 @@
+//! Table 2 — very-large-scale construction and propagation, bench-sized.
+//! (The headline alpha_n=100k/ocr_n=50k runs live in `vdt exp table2` and
+//! EXPERIMENTS.md; timing loops at those sizes would take hours, so this
+//! harness measures the same code path at 20k/10k.)
+
+use vdt::core::bench::Runner;
+use vdt::data::synthetic;
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    let mut r = Runner::from_args();
+    r.max_iters = 10;
+    for (name, ds) in [
+        ("alpha_like_20k", synthetic::alpha_like(20_000, 1)),
+        ("ocr_like_10k", synthetic::ocr_like(10_000, 1)),
+    ] {
+        r.bench(&format!("table2/construction/{name}"), || {
+            std::hint::black_box(VdtModel::build(&ds.x, &VdtConfig::default()));
+        });
+        let model = VdtModel::build(&ds.x, &VdtConfig::default());
+        let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, ds.n() / 10, 2);
+        let y0 = labelprop::seed_matrix(&ds.labels, &labeled, ds.n_classes);
+        // one 10-step propagation chunk (paper's T=500 = 50 of these)
+        r.bench(&format!("table2/propagate_10_steps/{name}"), || {
+            std::hint::black_box(labelprop::propagate(
+                &model,
+                &y0,
+                &LpConfig { alpha: 0.01, steps: 10 },
+            ));
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! Inductive SSL demo — the paper's stated future-work extension,
+//! implemented in `vdt::vdt::induct`: fit a transductive VDT model, run
+//! label propagation once, then classify *unseen* points by routing them
+//! down the partition tree and scoring against the block structure —
+//! O(d·log N + |B(x)|) per query, no model rebuild.
+//!
+//! ```bash
+//! cargo run --release --example inductive
+//! ```
+
+use std::time::Instant;
+
+use vdt::data::synthetic;
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::induct;
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    let train = synthetic::two_moons(1000, 0.07, 1);
+    let test = synthetic::two_moons(400, 0.07, 2026);
+
+    let mut model = VdtModel::build(&train.x, &VdtConfig::default());
+    model.refine_to(8 * train.n());
+    println!(
+        "fitted transductive model: N={}, |B|={}, σ={:.4}",
+        train.n(),
+        model.num_blocks(),
+        model.sigma()
+    );
+
+    // one transductive LP pass over the training points
+    let labeled = labelprop::choose_labeled(&train.labels, 2, 30, 7);
+    let (y, train_ccr) = labelprop::run_ssl(
+        &model,
+        &train.labels,
+        2,
+        &labeled,
+        &LpConfig { alpha: 0.5, steps: 100 },
+    );
+    println!("transductive CCR on train ({} labeled): {train_ccr:.3}", labeled.len());
+
+    // inductive: classify 400 unseen points without touching the model
+    let t = Instant::now();
+    let mut correct = 0usize;
+    for i in 0..test.n() {
+        let (pred, _) = induct::predict_label(&model, test.x.row(i), &y);
+        if pred == test.labels[i] {
+            correct += 1;
+        }
+    }
+    let elapsed = t.elapsed().as_secs_f64() * 1e3;
+    let acc = correct as f64 / test.n() as f64;
+    println!(
+        "inductive accuracy on {} held-out points: {acc:.3}  ({:.3} ms/query)",
+        test.n(),
+        elapsed / test.n() as f64
+    );
+    assert!(acc > 0.85, "inductive accuracy too low: {acc}");
+    println!("inductive OK");
+}

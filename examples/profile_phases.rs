@@ -1,0 +1,81 @@
+//! Phase-level profiler for the L3 hot paths (the §Perf driver):
+//! breaks construction into tree-build / coarsest / (q,σ)-fit, and times
+//! matvec + refinement per unit. `perf` symbolization is unusable on this
+//! image, so the profile is explicit.
+//!
+//! ```bash
+//! cargo run --release --example profile_phases -- 16000
+//! ```
+
+use std::time::Instant;
+
+use vdt::data::synthetic;
+use vdt::labelprop::one_hot_labels;
+use vdt::tree::{build_tree, BuildConfig};
+use vdt::vdt::optimize::{optimize_q, OptScratch};
+use vdt::vdt::partition::BlockPartition;
+use vdt::vdt::refine::Refiner;
+use vdt::vdt::sigma::fit_alternating;
+use vdt::vdt::matvec::{matvec, MatvecScratch};
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16_000);
+    let t = Instant::now();
+    let ds = synthetic::secstr_like(n, 1);
+    println!("{:<28} {:>10.1} ms", "generate", ms(t));
+
+    let t = Instant::now();
+    let _tree_exact = build_tree(&ds.x, &BuildConfig::default());
+    println!("{:<28} {:>10.1} ms", "tree build (exact radii)", ms(t));
+    drop(_tree_exact);
+
+    let t = Instant::now();
+    let tree = build_tree(&ds.x, &BuildConfig { exact_radii: false, ..Default::default() });
+    println!("{:<28} {:>10.1} ms", "tree build (vdt config)", ms(t));
+
+    let t = Instant::now();
+    let mut part = BlockPartition::coarsest(&tree);
+    println!("{:<28} {:>10.1} ms", "coarsest partition", ms(t));
+
+    let t = Instant::now();
+    let mut scratch = OptScratch::default();
+    optimize_q(&tree, &mut part, 1.0, &mut scratch);
+    println!("{:<28} {:>10.1} ms", "optimize_q (one pass)", ms(t));
+
+    let t = Instant::now();
+    let fit = fit_alternating(&tree, &mut part, None, 1e-4, 50);
+    println!(
+        "{:<28} {:>10.1} ms   ({} iters, σ={:.4})",
+        "fit_alternating",
+        ms(t),
+        fit.iterations,
+        fit.sigma
+    );
+
+    let y = one_hot_labels(&ds.labels, ds.n_classes);
+    let mut mscr = MatvecScratch::default();
+    let _ = matvec(&tree, &part, &y, &mut mscr); // warm
+    let t = Instant::now();
+    let reps = 20;
+    for _ in 0..reps {
+        std::hint::black_box(matvec(&tree, &part, &y, &mut mscr));
+    }
+    let per = ms(t) / reps as f64;
+    println!(
+        "{:<28} {:>10.3} ms   ({:.1} Mblock-ops/s)",
+        "matvec (C=2)",
+        per,
+        (part.num_blocks() + 2 * n) as f64 / per / 1e3
+    );
+
+    let t = Instant::now();
+    let mut refiner = Refiner::new(&tree, &part, fit.sigma);
+    println!("{:<28} {:>10.1} ms", "refiner init (gains)", ms(t));
+    let t = Instant::now();
+    refiner.refine_to(&tree, &mut part, 4 * n);
+    println!("{:<28} {:>10.1} ms   (|B|={})", "refine 2N -> 4N", ms(t), part.num_blocks());
+}

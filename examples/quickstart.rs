@@ -1,0 +1,52 @@
+//! Quickstart: build a VariationalDT model on a toy dataset, learn σ,
+//! refine, and run label propagation — the 60-second tour of the API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use vdt::data::synthetic;
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn main() {
+    // 1. data: two interleaved half-moons, 400 points
+    let ds = synthetic::two_moons(400, 0.08, 7);
+    println!("dataset: {} (N={}, d={})", ds.name, ds.n(), ds.d());
+
+    // 2. build the coarsest model: anchor tree + 2(N-1) blocks + (q, σ) fit
+    let mut model = VdtModel::build(&ds.x, &VdtConfig::default());
+    println!(
+        "coarsest model: |B| = {}, σ = {:.4}, ℓ(D) = {:.1}",
+        model.num_blocks(),
+        model.sigma(),
+        model.loglik()
+    );
+
+    // 3. refine: greedy symmetric refinement to |B| = 8N
+    model.refine_to(8 * ds.n());
+    println!(
+        "refined model:  |B| = {}, ℓ(D) = {:.1}  (bound can only improve)",
+        model.num_blocks(),
+        model.loglik()
+    );
+
+    // 4. one fast matvec: Q·Y in O(|B|) — rows of Q sum to 1
+    let ones = vdt::Matrix::from_fn(ds.n(), 1, |_, _| 1.0);
+    let out = model.matvec(&ones);
+    println!("Q·1 ≈ 1 check: max deviation {:.2e}",
+        out.data.iter().map(|v| (v - 1.0).abs()).fold(0.0f32, f32::max));
+
+    // 5. semi-supervised learning: 10 labels, label propagation
+    let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, 10, 3);
+    let (_, score) = labelprop::run_ssl(
+        &model,
+        &ds.labels,
+        ds.n_classes,
+        &labeled,
+        &LpConfig { alpha: 0.5, steps: 100 },
+    );
+    println!("label propagation with 10 labels: CCR = {score:.3}");
+    assert!(score > 0.8, "quickstart expects >0.8 CCR on two moons");
+    println!("quickstart OK");
+}

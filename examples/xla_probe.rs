@@ -1,0 +1,21 @@
+use std::rc::Rc;
+use vdt::runtime::Runtime;
+use vdt::core::{Matrix, Rng};
+use std::time::Instant;
+fn main() {
+    let rt = Rc::new(Runtime::load("artifacts").unwrap());
+    let mut rng = Rng::seed_from_u64(0);
+    for n in [256usize, 1024, 1500] {
+        let x = Matrix::from_fn(n, 241, |_, _| rng.f32());
+        let t = Instant::now();
+        let (p, np) = rt.transition_padded(&x, 1.0).unwrap();
+        println!("transition n={n} -> pad {np}: {:.2}s", t.elapsed().as_secs_f64());
+        let y = Matrix::zeros(np, 4);
+        let t = Instant::now();
+        let _ = rt.lp_chunk(&p, &y, &y, 0.01).unwrap();
+        println!("  lp_chunk pad {np}: {:.2}s", t.elapsed().as_secs_f64());
+        let t = Instant::now();
+        let _ = rt.lp_chunk(&p, &y, &y, 0.01).unwrap();
+        println!("  lp_chunk warm: {:.2}s", t.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,131 @@
+"""AOT compile path: lower the L2 entry points to HLO text artifacts.
+
+Run once by ``make artifacts``; Python never runs on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are lowered at a fixed menu of padded shapes; the Rust runtime
+(`rust/src/runtime/artifacts.rs`) picks the smallest artifact that fits and
+pads (zero feature-padding is exact; far-away sentinel row-padding
+underflows to zero kernel mass). ``manifest.json`` describes the menu.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape menu. d=512 covers every dataset the exact baseline is feasible for
+# (SecStr 315, Digit1/USPS 241, alpha 500); C=4 covers the 2-class tasks.
+TRANSITION_SIZES = [256, 1024, 4096]
+TRANSITION_DIM = 512
+LP_SIZES = [256, 1024, 4096]
+LP_CLASSES = 4
+SMOKE_N, SMOKE_D = 8, 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    def emit(name, kind, fn, specs, **meta):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "kind": kind, "path": path, **meta})
+        print(f"  {name}: {len(text)} chars")
+
+    # PJRT round-trip smoke artifact (loaded by runtime self-test).
+    emit(
+        f"sq_norms_n{SMOKE_N}_d{SMOKE_D}", "sq_norms", model.sq_norms_entry,
+        [_f32(SMOKE_N, SMOKE_D)], n=SMOKE_N, d=SMOKE_D,
+    )
+
+    for n in TRANSITION_SIZES:
+        emit(
+            f"transition_n{n}_d{TRANSITION_DIM}", "transition",
+            model.transition_entry,
+            [_f32(n, TRANSITION_DIM), _f32()],
+            n=n, d=TRANSITION_DIM,
+        )
+
+    for n in LP_SIZES:
+        emit(
+            f"lp_chunk_n{n}_c{LP_CLASSES}", "lp_chunk",
+            model.lp_chunk_entry,
+            [_f32(n, n), _f32(n, LP_CLASSES), _f32(n, LP_CLASSES), _f32()],
+            n=n, c=LP_CLASSES, steps=model.LP_CHUNK_STEPS,
+        )
+        emit(
+            f"matvec_n{n}_c{LP_CLASSES}", "matvec",
+            model.matvec_entry,
+            [_f32(n, n), _f32(n, LP_CLASSES)],
+            n=n, c=LP_CLASSES,
+        )
+
+    manifest = {
+        "version": 1,
+        "lp_chunk_steps": model.LP_CHUNK_STEPS,
+        "transition_dim": TRANSITION_DIM,
+        "lp_classes": LP_CLASSES,
+        "artifacts": entries,
+    }
+    # JSON for humans/tools…
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # …TSV for the Rust runtime (offline build: no serde_json on that side).
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"version\t1\n")
+        f.write(f"lp_chunk_steps\t{model.LP_CHUNK_STEPS}\n")
+        f.write(f"transition_dim\t{TRANSITION_DIM}\n")
+        f.write(f"lp_classes\t{LP_CLASSES}\n")
+        for e in entries:
+            f.write(
+                "artifact\t{name}\t{kind}\t{path}\t{n}\t{d}\t{c}\t{steps}\n".format(
+                    name=e["name"], kind=e["kind"], path=e["path"], n=e["n"],
+                    d=e.get("d", 0), c=e.get("c", 0), steps=e.get("steps", 0),
+                )
+            )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory for *.hlo.txt + manifest.json")
+    # Back-compat with `--out path/model.hlo.txt`: use its directory.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    manifest = lower_all(out_dir)
+    # The Makefile stamps on this file.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(json.dumps({"see": "manifest.json"}))
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

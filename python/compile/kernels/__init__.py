@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the exact-model hot spot + pure-jnp oracles.
+
+- ``pairwise``: tiled masked Gaussian kernel matrix / transition matrix.
+- ``lp_step``: tiled dense label-propagation update.
+- ``ref``: pure-jnp reference implementations (the correctness contract).
+"""
+
+from . import lp_step, pairwise, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: tiled dense label-propagation update (Eq. 15).
+
+Y' = alpha * P @ Y + (1 - alpha) * Y0   with P (N, N), Y/Y0 (N, C).
+
+Tiling: the output (TM, C) tile is revisited across the K grid dimension —
+the canonical Pallas accumulation pattern. Each step loads a (TM, TK) tile
+of P and a (TK, C) tile of Y, contracts on the MXU, and accumulates into
+the resident output tile; the first K step seeds the accumulator with
+(1 - alpha) * Y0.
+
+  grid = (N/TM, N/TK)          # K iterated innermost (sequential)
+  P  : block (TM, TK), index (i, k) -> (i, k)
+  Y  : block (TK, C),  index (i, k) -> (k, 0)
+  Y0 : block (TM, C),  index (i, k) -> (i, 0)
+  out: block (TM, C),  index (i, k) -> (i, 0)   # revisited over k
+
+`interpret=True` as everywhere on this image (see pairwise.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lp_tile(p_ref, y_ref, y0_ref, alpha_ref, out_ref):
+    k = pl.program_id(1)
+    alpha = alpha_ref[0, 0]
+
+    @pl.when(k == 0)
+    def _seed():
+        out_ref[...] = ((1.0 - alpha) * y0_ref[...]).astype(out_ref.dtype)
+
+    contrib = jax.lax.dot_general(
+        p_ref[...], y_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += (alpha * contrib).astype(out_ref.dtype)
+
+
+def _pick_tile(n: int, preferred: int) -> int:
+    t = min(preferred, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk"))
+def _lp_step_jit(p, y, y0, alpha, tm, tk):
+    n, c = y.shape
+    alpha2d = jnp.reshape(alpha.astype(jnp.float32), (1, 1))
+    grid = (n // tm, n // tk)
+    return pl.pallas_call(
+        _lp_tile,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, k: (i, k)),
+            pl.BlockSpec((tk, c), lambda i, k: (k, 0)),
+            pl.BlockSpec((tm, c), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, c), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), y.dtype),
+        interpret=True,
+    )(p, y, y0, alpha2d)
+
+
+def lp_step(p, y, y0, alpha, *, tm: int = 128, tk: int = 128):
+    """One Pallas-tiled LP update. Tile sizes shrink to divisors of N."""
+    n = y.shape[0]
+    tm = _pick_tile(n, tm)
+    tk = _pick_tile(n, tk)
+    return _lp_step_jit(p, y, y0, jnp.asarray(alpha), tm, tk)

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: tiled Gaussian kernel matrix (the exact-model hot spot).
+
+Computes K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)) with a zeroed diagonal,
+tiled over (TM, TN) output blocks. The feature dimension rides along whole
+(the paper's datasets have d <= 1280; a (128, 1280) f32 block is 640 KiB,
+within a TPU core's ~16 MiB VMEM together with the output tile), and the
+inner product is expressed as a single `dot` so on real hardware it maps to
+the MXU systolic array; the ||x||^2 terms are cheap VPU work.
+
+BlockSpec schedule (the HBM<->VMEM plan a CUDA version would express with
+threadblocks):
+  grid = (N/TM, N/TN)
+  x rows    : block (TM, d), index (i, j) -> (i, 0)   # reused along j
+  x cols    : block (TN, d), index (i, j) -> (j, 0)   # reused along i
+  sigma     : (1, 1) scalar block, broadcast
+  out       : block (TM, TN), index (i, j) -> (i, j)
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see DESIGN.md
+§Hardware-Adaptation). Correctness vs `ref.py` is enforced by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_tile(x_rows_ref, x_cols_ref, sigma_ref, out_ref, *, tm: int, tn: int):
+    """One (TM, TN) tile of the masked Gaussian kernel matrix."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    xr = x_rows_ref[...]  # (TM, d)
+    xc = x_cols_ref[...]  # (TN, d)
+    sigma = sigma_ref[0, 0]
+
+    # ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b ; the dot is the MXU-shaped op.
+    rr = jnp.sum(xr * xr, axis=1, keepdims=True)          # (TM, 1)
+    cc = jnp.sum(xc * xc, axis=1, keepdims=True)          # (TN, 1)
+    cross = jax.lax.dot_general(
+        xr, xc,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                     # (TM, TN)
+    d2 = jnp.maximum(rr + cc.T - 2.0 * cross, 0.0)
+
+    k = jnp.exp(-d2 / (2.0 * sigma * sigma))
+
+    # Mask the diagonal of the *global* matrix: this tile covers global rows
+    # i*TM.. and cols j*TN.. — zero entries where the global ids coincide.
+    row_ids = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    col_ids = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    k = jnp.where(row_ids == col_ids, 0.0, k)
+
+    out_ref[...] = k.astype(out_ref.dtype)
+
+
+def _pick_tile(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (tiles must tile N exactly)."""
+    t = min(preferred, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def _masked_kernel_matrix_jit(x, sigma, tm, tn):
+    n, d = x.shape
+    sigma2d = jnp.reshape(sigma.astype(jnp.float32), (1, 1))
+    grid = (n // tm, n // tn)
+    return pl.pallas_call(
+        functools.partial(_kernel_tile, tm=tm, tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
+        interpret=True,
+    )(x, x, sigma2d)
+
+
+def masked_kernel_matrix(x: jnp.ndarray, sigma, *, tm: int = 128, tn: int = 128):
+    """Gaussian kernel matrix with zero diagonal, Pallas-tiled.
+
+    ``tm``/``tn`` are preferred tile sizes; they are shrunk to divisors of N
+    so the grid tiles the output exactly (padding is the caller's job — the
+    AOT entry points use fixed power-of-two shapes).
+    """
+    n = x.shape[0]
+    tm = _pick_tile(n, tm)
+    tn = _pick_tile(n, tn)
+    return _masked_kernel_matrix_jit(x, jnp.asarray(sigma), tm, tn)
+
+
+def transition_matrix(x: jnp.ndarray, sigma, *, tm: int = 128, tn: int = 128):
+    """Row-stochastic P of Eq. (3): Pallas kernel matrix + fused row norm.
+
+    The normalization is a row reduction over the full N columns — left to
+    XLA (it fuses with the division), while the O(N^2 d) kernel evaluation
+    is the Pallas tile above.
+    """
+    k = masked_kernel_matrix(x, sigma, tm=tm, tn=tn)
+    row = jnp.sum(k, axis=1, keepdims=True)
+    return k / jnp.maximum(row, jnp.asarray(1e-30, dtype=k.dtype))

@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth for the L1 kernels in this package
+(`pairwise.py`, `lp_step.py`) and are swept against them by
+``python/tests/``. They are also the semantic contract for the Rust dense
+fallback in ``rust/src/exact/dense.rs``: both must produce the same numbers.
+
+Everything here mirrors the paper's equations:
+  - Eq. (3): transition probabilities p_ij = k(x_i, m_j) / sum_l k(x_i, m_l)
+    with the diagonal excluded (p_ii = 0).
+  - Eq. (15): label propagation update Y <- alpha * P Y + (1 - alpha) * Y0.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs squared Euclidean distances.
+
+    Uses the expanded form ||a - b||^2 = ||a||^2 + ||b||^2 - 2 a.b so the
+    hot loop is a single matmul (the same decomposition the Pallas kernel
+    tiles for the MXU). Clamped at zero against cancellation.
+    """
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)
+    d2 = xx + yy.T - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def gaussian_kernel_matrix(x: jnp.ndarray, sigma) -> jnp.ndarray:
+    """K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)) with zero diagonal."""
+    d2 = pairwise_sq_dists(x, x)
+    k = jnp.exp(-d2 / (2.0 * sigma * sigma))
+    n = x.shape[0]
+    return k * (1.0 - jnp.eye(n, dtype=k.dtype))
+
+
+def transition_matrix(x: jnp.ndarray, sigma) -> jnp.ndarray:
+    """Row-stochastic transition matrix P of Eq. (3), zero diagonal.
+
+    Rows whose kernel mass is ~0 (e.g. padding rows placed far away) are
+    guarded with a tiny epsilon instead of dividing by zero; their values
+    are irrelevant downstream but must stay finite.
+    """
+    k = gaussian_kernel_matrix(x, sigma)
+    row = jnp.sum(k, axis=1, keepdims=True)
+    return k / jnp.maximum(row, jnp.asarray(1e-30, dtype=k.dtype))
+
+
+def lp_step(p: jnp.ndarray, y: jnp.ndarray, y0: jnp.ndarray, alpha) -> jnp.ndarray:
+    """One label-propagation update, Eq. (15)."""
+    return alpha * (p @ y) + (1.0 - alpha) * y0
+
+
+def lp_run(p: jnp.ndarray, y0: jnp.ndarray, alpha, steps: int) -> jnp.ndarray:
+    """`steps` label-propagation updates starting from Y = Y0."""
+    y = y0
+    for _ in range(steps):
+        y = lp_step(p, y, y0, alpha)
+    return y

@@ -1,0 +1,78 @@
+"""L2: the exported JAX compute graphs for the exact baseline.
+
+Two entry points, both built on the L1 Pallas kernels and lowered once by
+``aot.py`` to HLO text that the Rust runtime executes via PJRT:
+
+- ``transition_entry(x, sigma)``   -> (P,)           Eq. (3)
+- ``lp_chunk_entry(p, y, y0, alpha)`` -> (Y',)       ``LP_CHUNK_STEPS`` x Eq. (15)
+
+Shapes are fixed at lowering time (see ``aot.py``); the Rust side pads:
+feature padding with zeros is exact (distances unchanged), row padding uses
+far-away sentinel points whose kernel contribution underflows to 0, and the
+epsilon guard in the row normalization keeps padded rows finite.
+
+``lp_chunk_entry`` runs ``LP_CHUNK_STEPS`` updates per call via ``lax.scan``
+so one PJRT dispatch from Rust amortizes several matmuls; the Rust
+coordinator loops chunks to reach the paper's T=500.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lp_step as lp_kernel
+from .kernels import pairwise
+
+# Number of LP updates folded into a single compiled artifact call.
+LP_CHUNK_STEPS = 10
+
+
+def _cpu_tile(n: int) -> int:
+    """Tile size for the AOT CPU artifacts.
+
+    On a real TPU the natural BlockSpec is (128, 128) MXU tiles. The CPU
+    PJRT that executes these artifacts is xla_extension 0.5.1, whose
+    while-loop lowering *copies loop-carried operands every iteration* —
+    with a (128,128) grid over N=4096 that is 10k copies of the 64 MiB P
+    per lp_chunk (~4 min/chunk, measured; EXPERIMENTS.md §Perf). Large
+    tiles shrink the grid to ≤64 steps and make the copy cost negligible.
+    The kernel code is identical; only the schedule constant changes per
+    target (DESIGN.md §Hardware-Adaptation).
+    """
+    return min(512, n)
+
+
+def transition_entry(x: jnp.ndarray, sigma: jnp.ndarray):
+    """Row-stochastic transition matrix P (Eq. 3); returns a 1-tuple."""
+    n = x.shape[0]
+    t = _cpu_tile(n)
+    return (pairwise.transition_matrix(x, sigma, tm=t, tn=n),)
+
+
+def lp_chunk_entry(p: jnp.ndarray, y: jnp.ndarray, y0: jnp.ndarray,
+                   alpha: jnp.ndarray):
+    """LP_CHUNK_STEPS label-propagation updates (Eq. 15); 1-tuple result."""
+    n = y.shape[0]
+    t = _cpu_tile(n)
+
+    def body(carry, _):
+        # full-K tiles: grid (n/t, 1) — see _cpu_tile
+        return lp_kernel.lp_step(p, carry, y0, alpha, tm=t, tk=n), None
+
+    out, _ = jax.lax.scan(body, y, None, length=LP_CHUNK_STEPS)
+    return (out,)
+
+
+def matvec_entry(p: jnp.ndarray, y: jnp.ndarray):
+    """Single dense multiplication P @ Y (Fig. 2B exact-model timing)."""
+    n = y.shape[0]
+    t = _cpu_tile(n)
+    return (lp_kernel.lp_step(p, y, jnp.zeros_like(y), jnp.asarray(1.0),
+                              tm=t, tk=n),)
+
+
+def sq_norms_entry(x: jnp.ndarray):
+    """Row squared norms — used by the Rust side to derive sentinel padding
+    magnitudes and in runtime self-tests. Trivial on purpose: it doubles as
+    the smoke-test artifact the runtime loads at startup to validate the
+    PJRT round trip."""
+    return (jnp.sum(x * x, axis=1),)

@@ -1,0 +1,174 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and sigma/alpha magnitudes); fixed-seed numpy
+draws keep the suite deterministic per example.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import lp_step as lpk
+from compile.kernels import pairwise, ref
+
+RNG = np.random.default_rng
+
+
+def _data(n, d, seed, scale=1.0):
+    return (RNG(seed).standard_normal((n, d)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- pairwise
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 96),
+    d=st.integers(1, 40),
+    sigma=st.floats(0.1, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_kernel_matrix_matches_ref(n, d, sigma, seed):
+    x = _data(n, d, seed)
+    got = pairwise.masked_kernel_matrix(jnp.asarray(x), sigma, tm=16, tn=16)
+    want = ref.gaussian_kernel_matrix(jnp.asarray(x), sigma)
+    # tolerance model: f32 summation-order differences give |Δd²| ~ 1e-6,
+    # which exp() amplifies to relative error ≈ |Δd²|/(2σ²) — at the σ=0.1
+    # strategy floor that is ~5e-5; 2e-4 leaves headroom
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    d=st.integers(1, 32),
+    sigma=st.floats(0.2, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_transition_matrix_matches_ref(n, d, sigma, seed):
+    x = _data(n, d, seed)
+    got = pairwise.transition_matrix(jnp.asarray(x), sigma, tm=16, tn=16)
+    want = ref.transition_matrix(jnp.asarray(x), sigma)
+    # small sigma amplifies f32 exp() rounding through the normalization
+    # (see the tolerance model in the kernel-matrix test above)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("n,d", [(7, 3), (32, 8), (50, 5)])
+def test_transition_rows_stochastic_zero_diag(n, d):
+    x = _data(n, d, seed=n * 101 + d)
+    p = np.asarray(pairwise.transition_matrix(jnp.asarray(x), 1.0, tm=8, tn=8))
+    np.testing.assert_allclose(p.sum(axis=1), np.ones(n), rtol=1e-5)
+    np.testing.assert_allclose(np.diag(p), np.zeros(n), atol=0)
+    assert (p >= 0).all()
+
+
+def test_transition_tile_size_invariance():
+    x = _data(48, 6, seed=9)
+    a = pairwise.transition_matrix(jnp.asarray(x), 0.7, tm=8, tn=8)
+    b = pairwise.transition_matrix(jnp.asarray(x), 0.7, tm=48, tn=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_row_padding_with_far_sentinels_is_inert():
+    """Rust pads N up to the artifact size with far-away rows; the real
+    block of P must be unchanged and padded columns ~0 for real rows."""
+    n, d, pad = 24, 4, 8
+    x = _data(n, d, seed=3)
+    sentinel = 1e4  # runtime uses max_norm-scaled sentinels; 1e4 sigmas away
+    xp = np.concatenate(
+        [x, np.full((pad, d), sentinel, dtype=np.float32)], axis=0)
+    p_small = np.asarray(pairwise.transition_matrix(jnp.asarray(x), 1.0, tm=8, tn=8))
+    p_big = np.asarray(pairwise.transition_matrix(jnp.asarray(xp), 1.0, tm=8, tn=8))
+    np.testing.assert_allclose(p_big[:n, :n], p_small, rtol=1e-5, atol=1e-7)
+    assert np.abs(p_big[:n, n:]).max() == 0.0
+    assert np.isfinite(p_big).all()
+
+
+def test_feature_zero_padding_is_exact():
+    """Exact up to float summation order (the contraction length changes)."""
+    n, d = 20, 5
+    x = _data(n, d, seed=11)
+    xp = np.concatenate([x, np.zeros((n, 11), dtype=np.float32)], axis=1)
+    a = pairwise.transition_matrix(jnp.asarray(x), 0.9, tm=4, tn=4)
+    b = pairwise.transition_matrix(jnp.asarray(xp), 0.9, tm=4, tn=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------- lp_step
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 64),
+    c=st.integers(1, 6),
+    alpha=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lp_step_matches_ref(n, c, alpha, seed):
+    r = RNG(seed)
+    p = r.random((n, n)).astype(np.float32)
+    p /= p.sum(axis=1, keepdims=True)
+    y = r.standard_normal((n, c)).astype(np.float32)
+    y0 = r.standard_normal((n, c)).astype(np.float32)
+    got = lpk.lp_step(jnp.asarray(p), jnp.asarray(y), jnp.asarray(y0), alpha,
+                      tm=16, tk=16)
+    want = ref.lp_step(jnp.asarray(p), jnp.asarray(y), jnp.asarray(y0), alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_lp_step_tile_invariance():
+    r = RNG(5)
+    n, c = 40, 3
+    p = r.random((n, n)).astype(np.float32)
+    y = r.standard_normal((n, c)).astype(np.float32)
+    y0 = r.standard_normal((n, c)).astype(np.float32)
+    a = lpk.lp_step(jnp.asarray(p), jnp.asarray(y), jnp.asarray(y0), 0.3, tm=8, tk=8)
+    b = lpk.lp_step(jnp.asarray(p), jnp.asarray(y), jnp.asarray(y0), 0.3, tm=40, tk=20)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- dtypes
+
+@pytest.mark.parametrize("dtype,rtol", [
+    (jnp.float32, 2e-4),
+    (jnp.bfloat16, 5e-2),   # 8-bit mantissa
+])
+def test_masked_kernel_matrix_dtype_sweep(dtype, rtol):
+    """The Pallas tile must work at reduced precision (the MXU's native
+    bf16 inputs) — compared against the f32 oracle with dtype-scaled
+    tolerance."""
+    x32 = _data(40, 8, seed=21, scale=0.8)
+    x = jnp.asarray(x32, dtype=dtype)
+    got = pairwise.masked_kernel_matrix(x, 1.1, tm=8, tn=8)
+    assert got.dtype == dtype
+    want = ref.gaussian_kernel_matrix(jnp.asarray(x32), 1.1)
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want),
+        rtol=rtol, atol=rtol * 0.1,
+    )
+
+
+@pytest.mark.parametrize("dtype,rtol", [
+    (jnp.float32, 2e-5),
+    (jnp.bfloat16, 5e-2),
+])
+def test_lp_step_dtype_sweep(dtype, rtol):
+    r = RNG(31)
+    n, c = 32, 3
+    p32 = r.random((n, n)).astype(np.float32)
+    p32 /= p32.sum(axis=1, keepdims=True)
+    y32 = r.standard_normal((n, c)).astype(np.float32)
+    got = lpk.lp_step(
+        jnp.asarray(p32, dtype=dtype), jnp.asarray(y32, dtype=dtype),
+        jnp.asarray(y32, dtype=dtype), 0.2, tm=8, tk=8)
+    assert got.dtype == dtype
+    want = ref.lp_step(jnp.asarray(p32), jnp.asarray(y32), jnp.asarray(y32), 0.2)
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want),
+        rtol=rtol, atol=rtol * 0.1,
+    )

@@ -1,0 +1,15 @@
+//! L3 serving coordinator: a tokio service that owns a registry of fitted
+//! transition models and answers inference requests (matvec, label
+//! propagation, spectral queries) with **column batching** — concurrent
+//! matvec requests against the same model are fused into one multi-column
+//! Algorithm-1 sweep, which is nearly free on the VDT representation
+//! (O((N+|B|)·C) for C columns vs C separate O(N+|B|) sweeps' tree-walk
+//! overhead).
+//!
+//! This is the "serving shell" around the paper's data structure: the
+//! request loop, routing and batching live here; all numeric work happens
+//! in the model backends. Python is never involved.
+
+pub mod service;
+
+pub use service::{Coordinator, CoordinatorHandle, ModelInfo, Request, Response};

@@ -1,0 +1,378 @@
+//! The coordinator service implementation (std::thread + mpsc; this is an
+//! offline build without tokio — the architecture is identical: one owner
+//! thread drains a request queue, fuses concurrent matvecs, and replies
+//! over per-request oneshot channels).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::core::Matrix;
+use crate::labelprop::{self, LpConfig, TransitionOp};
+
+/// Shared, thread-safe transition operator.
+pub type SharedOp = Arc<dyn TransitionOp + Send + Sync>;
+
+/// Metadata reported by [`CoordinatorHandle::list_models`].
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub backend: String,
+    pub n: usize,
+}
+
+/// Requests accepted by the coordinator.
+pub enum Request {
+    /// Register a model under a name (replaces any previous binding).
+    Register { name: String, op: SharedOp },
+    /// Ŷ = P·Y against a registered model. Batchable.
+    Matvec { model: String, y: Matrix, resp: mpsc::Sender<Response> },
+    /// Full label propagation run.
+    LabelProp { model: String, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
+    /// Top-m Ritz values via Arnoldi.
+    Spectral { model: String, m: usize, resp: mpsc::Sender<Response> },
+    ListModels { resp: mpsc::Sender<Vec<ModelInfo>> },
+    /// Counters: (requests served, matvec columns fused, batches run).
+    Stats { resp: mpsc::Sender<(u64, u64, u64)> },
+    Shutdown,
+}
+
+/// Responses.
+#[derive(Debug)]
+pub enum Response {
+    Matrix(Matrix),
+    Eigenvalues(Vec<(f64, f64)>),
+    Error(String),
+}
+
+/// Clonable client handle. All calls are synchronous; concurrency comes
+/// from calling threads (see `examples/serve.rs`).
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: mpsc::Sender<Request>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl CoordinatorHandle {
+    pub fn register(&self, name: impl Into<String>, op: SharedOp) {
+        let _ = self.tx.send(Request::Register { name: name.into(), op });
+    }
+
+    fn roundtrip(&self, make: impl FnOnce(mpsc::Sender<Response>) -> Request) -> Result<Response, String> {
+        let (tx, rx) = mpsc::channel();
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let sent = self.tx.send(make(tx));
+        let out = match sent {
+            Err(_) => Err("coordinator down".to_string()),
+            Ok(()) => rx.recv().map_err(|_| "dropped".to_string()),
+        };
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    pub fn matvec(&self, model: impl Into<String>, y: Matrix) -> Result<Matrix, String> {
+        match self.roundtrip(|resp| Request::Matvec { model: model.into(), y, resp })? {
+            Response::Matrix(m) => Ok(m),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn label_prop(
+        &self,
+        model: impl Into<String>,
+        y0: Matrix,
+        cfg: LpConfig,
+    ) -> Result<Matrix, String> {
+        match self.roundtrip(|resp| Request::LabelProp { model: model.into(), y0, cfg, resp })? {
+            Response::Matrix(m) => Ok(m),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn spectral(&self, model: impl Into<String>, m: usize) -> Result<Vec<(f64, f64)>, String> {
+        match self.roundtrip(|resp| Request::Spectral { model: model.into(), m, resp })? {
+            Response::Eigenvalues(e) => Ok(e),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn list_models(&self) -> Vec<ModelInfo> {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Request::ListModels { resp: tx }).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Request::Stats { resp: tx }).is_err() {
+            return (0, 0, 0);
+        }
+        rx.recv().unwrap_or((0, 0, 0))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// The coordinator service. `spawn` starts the worker thread and returns a
+/// handle; the worker drains bursts of requests and fuses same-model
+/// matvecs into one multi-column sweep.
+pub struct Coordinator;
+
+impl Coordinator {
+    pub fn spawn() -> CoordinatorHandle {
+        let (tx, rx) = mpsc::channel();
+        let inflight = Arc::new(AtomicU64::new(0));
+        std::thread::Builder::new()
+            .name("vdt-coordinator".into())
+            .spawn(move || Self::run(rx))
+            .expect("spawn coordinator");
+        CoordinatorHandle { tx, inflight }
+    }
+
+    fn run(rx: mpsc::Receiver<Request>) {
+        let mut models: HashMap<String, SharedOp> = HashMap::new();
+        let (mut served, mut fused_cols, mut batches) = (0u64, 0u64, 0u64);
+
+        'outer: while let Ok(first) = rx.recv() {
+            // drain whatever is already queued — this burst forms a batch
+            let mut burst = vec![first];
+            // brief batching window so concurrent clients can land in the
+            // same burst (the fusion ablation bench quantifies the win)
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            while let Ok(req) = rx.try_recv() {
+                burst.push(req);
+            }
+
+            let mut matvec_groups: HashMap<String, Vec<(Matrix, mpsc::Sender<Response>)>> =
+                HashMap::new();
+            for req in burst {
+                match req {
+                    Request::Register { name, op } => {
+                        models.insert(name, op);
+                    }
+                    Request::Matvec { model, y, resp } => {
+                        matvec_groups.entry(model).or_default().push((y, resp));
+                    }
+                    Request::LabelProp { model, y0, cfg, resp } => {
+                        served += 1;
+                        let r = match models.get(&model) {
+                            None => Response::Error(format!("unknown model {model}")),
+                            Some(op) => {
+                                if y0.rows != op.n() {
+                                    Response::Error(format!("Y0 rows {} != N {}", y0.rows, op.n()))
+                                } else {
+                                    Response::Matrix(labelprop::propagate(op.as_ref(), &y0, &cfg))
+                                }
+                            }
+                        };
+                        let _ = resp.send(r);
+                    }
+                    Request::Spectral { model, m, resp } => {
+                        served += 1;
+                        let r = match models.get(&model) {
+                            None => Response::Error(format!("unknown model {model}")),
+                            Some(op) => Response::Eigenvalues(
+                                crate::spectral::arnoldi_eigenvalues(op.as_ref(), m, 0).eigenvalues,
+                            ),
+                        };
+                        let _ = resp.send(r);
+                    }
+                    Request::ListModels { resp } => {
+                        let infos = models
+                            .iter()
+                            .map(|(name, op)| ModelInfo {
+                                name: name.clone(),
+                                backend: op.name().to_string(),
+                                n: op.n(),
+                            })
+                            .collect();
+                        let _ = resp.send(infos);
+                    }
+                    Request::Stats { resp } => {
+                        let _ = resp.send((served, fused_cols, batches));
+                    }
+                    Request::Shutdown => break 'outer,
+                }
+            }
+
+            // fused matvec execution per model
+            for (model, group) in matvec_groups {
+                served += group.len() as u64;
+                let op = match models.get(&model) {
+                    Some(op) => op.clone(),
+                    None => {
+                        for (_, resp) in group {
+                            let _ = resp.send(Response::Error(format!("unknown model {model}")));
+                        }
+                        continue;
+                    }
+                };
+                let n = op.n();
+                let (mut ok, mut bad): (Vec<_>, Vec<_>) = (Vec::new(), Vec::new());
+                for item in group {
+                    if item.0.rows == n {
+                        ok.push(item);
+                    } else {
+                        bad.push(item);
+                    }
+                }
+                for (y, resp) in bad {
+                    let _ = resp.send(Response::Error(format!("Y rows {} != N {}", y.rows, n)));
+                }
+                if ok.is_empty() {
+                    continue;
+                }
+                if ok.len() == 1 {
+                    let (y, resp) = ok.pop().unwrap();
+                    batches += 1;
+                    fused_cols += y.cols as u64;
+                    let _ = resp.send(Response::Matrix(op.matvec(&y)));
+                    continue;
+                }
+                // fuse: concatenate all columns, one sweep, then split
+                let total_cols: usize = ok.iter().map(|(y, _)| y.cols).sum();
+                let mut fused = Matrix::zeros(n, total_cols);
+                let mut off = 0usize;
+                for (y, _) in &ok {
+                    for r in 0..n {
+                        fused.data[r * total_cols + off..r * total_cols + off + y.cols]
+                            .copy_from_slice(y.row(r));
+                    }
+                    off += y.cols;
+                }
+                batches += 1;
+                fused_cols += total_cols as u64;
+                let out = op.matvec(&fused);
+                let mut off = 0usize;
+                for (y, resp) in ok {
+                    let mut part = Matrix::zeros(n, y.cols);
+                    for r in 0..n {
+                        part.row_mut(r).copy_from_slice(
+                            &out.data[r * total_cols + off..r * total_cols + off + y.cols],
+                        );
+                    }
+                    off += y.cols;
+                    let _ = resp.send(Response::Matrix(part));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn model(n: usize, seed: u64) -> (SharedOp, Matrix) {
+        let ds = synthetic::two_moons(n, 0.07, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * n);
+        let y = crate::labelprop::one_hot_labels(&ds.labels, 2);
+        (Arc::new(m), y)
+    }
+
+    #[test]
+    fn register_and_matvec() {
+        let handle = Coordinator::spawn();
+        let (op, y) = model(40, 1);
+        let want = op.matvec(&y);
+        handle.register("m", op);
+        let got = handle.matvec("m", y).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-6);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let handle = Coordinator::spawn();
+        let err = handle.matvec("nope", Matrix::zeros(4, 1)).unwrap_err();
+        assert!(err.contains("unknown model"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let handle = Coordinator::spawn();
+        let (op, _) = model(30, 2);
+        handle.register("m", op);
+        let err = handle.matvec("m", Matrix::zeros(7, 1)).unwrap_err();
+        assert!(err.contains("rows"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_matvecs_get_fused_and_are_correct() {
+        let handle = Coordinator::spawn();
+        let (op, _) = model(50, 3);
+        handle.register("m", op.clone());
+        let mut joins = Vec::new();
+        for c in 0..16usize {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let y = Matrix::from_fn(50, 1, move |r, _| ((r + c) % 5) as f32);
+                (c, h.matvec("m", y).unwrap())
+            }));
+        }
+        for j in joins {
+            let (c, got) = j.join().unwrap();
+            let y = Matrix::from_fn(50, 1, move |r, _| ((r + c) % 5) as f32);
+            let want = op.matvec(&y);
+            assert!(got.max_abs_diff(&want) < 1e-5, "request {c}");
+        }
+        let (served, cols, batches) = handle.stats();
+        assert_eq!(served, 16);
+        assert_eq!(cols, 16);
+        assert!(batches <= 16);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn label_prop_via_service() {
+        let handle = Coordinator::spawn();
+        let ds = synthetic::two_moons(80, 0.06, 4);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(6 * 80);
+        handle.register("moons", Arc::new(m));
+        let labeled = crate::labelprop::choose_labeled(&ds.labels, 2, 10, 5);
+        let y0 = crate::labelprop::seed_matrix(&ds.labels, &labeled, 2);
+        let y = handle
+            .label_prop("moons", y0, LpConfig { alpha: 0.5, steps: 60 })
+            .unwrap();
+        let score = crate::labelprop::ccr(&y, &ds.labels, &labeled);
+        assert!(score > 0.8, "CCR {score}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn list_models_reports_backend() {
+        let handle = Coordinator::spawn();
+        let (op, _) = model(20, 6);
+        handle.register("a", op);
+        // registration is async; ListModels goes through the same queue so
+        // it observes the registration
+        let infos = handle.list_models();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].backend, "variational-dt");
+        assert_eq!(infos[0].n, 20);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn spectral_via_service() {
+        let handle = Coordinator::spawn();
+        let (op, _) = model(40, 7);
+        handle.register("m", op);
+        let eigs = handle.spectral("m", 10).unwrap();
+        assert!((eigs[0].0 - 1.0).abs() < 1e-3, "top eig {:?}", eigs[0]);
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal benchmarking harness (offline build — no criterion): auto-
+//! calibrated timing loops with warm-up, mean/std/min/max reporting and a
+//! CLI name filter, used by every target in `benches/` (all declared with
+//! `harness = false`, so `cargo bench` runs their plain `main`).
+
+use std::time::Instant;
+
+use super::metrics::Stats;
+
+/// One benchmark runner; prints criterion-style lines.
+pub struct Runner {
+    filter: Option<String>,
+    /// target total measurement time per benchmark (seconds)
+    pub budget_secs: f64,
+    /// hard cap on measured iterations
+    pub max_iters: usize,
+    results: Vec<(String, Stats)>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Runner {
+    /// Parse `cargo bench -- <filter>`-style arguments.
+    pub fn from_args() -> Runner {
+        // cargo bench passes --bench; ignore flags, first free arg = filter
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        Runner { filter, budget_secs: 2.0, max_iters: 200, results: Vec::new() }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_ref().map_or(true, |f| name.contains(f.as_str()))
+    }
+
+    /// Time `f`, auto-calibrating the iteration count. Use
+    /// `std::hint::black_box` inside `f` for outputs.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        // warm-up + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget_secs / once) as usize).clamp(3, self.max_iters);
+        let mut stats = Stats::new();
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            stats.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{name:<56} {:>10.3} ms ± {:>8.3}  (min {:.3}, max {:.3}, n={})",
+            stats.mean(),
+            stats.std(),
+            stats.min,
+            stats.max,
+            stats.n
+        );
+        self.results.push((name.to_string(), stats));
+    }
+
+    /// Time `run(setup())` where only `run` is measured (criterion's
+    /// `iter_batched`).
+    pub fn bench_with_setup<S, T, FS: FnMut() -> S, FR: FnMut(S) -> T>(
+        &mut self,
+        name: &str,
+        mut setup: FS,
+        mut run: FR,
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        let s = setup();
+        let t0 = Instant::now();
+        std::hint::black_box(run(s));
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget_secs / once) as usize).clamp(3, self.max_iters.min(30));
+        let mut stats = Stats::new();
+        for _ in 0..iters {
+            let s = setup();
+            let t = Instant::now();
+            std::hint::black_box(run(s));
+            stats.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{name:<56} {:>10.3} ms ± {:>8.3}  (min {:.3}, max {:.3}, n={})",
+            stats.mean(),
+            stats.std(),
+            stats.min,
+            stats.max,
+            stats.n
+        );
+        self.results.push((name.to_string(), stats));
+    }
+
+    /// Mean time of a completed benchmark, for derived reporting
+    /// (speedup ratios etc.).
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|(n, _)| n == name).map(|(_, s)| s.mean())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut r = Runner { filter: None, budget_secs: 0.01, max_iters: 5, results: vec![] };
+        let mut counter = 0u64;
+        r.bench("test/busy", || {
+            for i in 0..10_000u64 {
+                counter = counter.wrapping_add(i);
+            }
+            std::hint::black_box(counter);
+        });
+        assert!(r.mean_of("test/busy").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut r = Runner {
+            filter: Some("xyz".into()),
+            budget_secs: 0.01,
+            max_iters: 3,
+            results: vec![],
+        };
+        r.bench("abc", || {});
+        assert!(r.mean_of("abc").is_none());
+    }
+
+    #[test]
+    fn setup_variant_measures_run_only() {
+        let mut r = Runner { filter: None, budget_secs: 0.01, max_iters: 3, results: vec![] };
+        r.bench_with_setup("with_setup", || vec![1u8; 10], |v| v.len());
+        assert!(r.mean_of("with_setup").is_some());
+    }
+}

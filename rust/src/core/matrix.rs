@@ -1,0 +1,192 @@
+//! Dense row-major `f32` matrix — the crate's basic numeric container.
+//!
+//! Deliberately minimal: contiguous storage, row views, and the handful of
+//! BLAS-1/2 style operations the library needs. Anything O(N²·d) heavy is
+//! either the paper's own data structure (which avoids it) or delegated to
+//! the XLA artifacts via [`crate::runtime`].
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// `rows * cols` contiguous values, row-major.
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Matrix {
+    /// Allocate a zeroed `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Wrap an existing buffer (must have `rows*cols` elements).
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { data, rows, cols }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `self @ other` — naive triple loop with row-major streaming; used by
+    /// the pure-Rust exact fallback and tests (N is small there).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise `self = a*self + b*other`.
+    pub fn scale_add(&mut self, a: f32, b: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (s, &o) in self.data.iter_mut().zip(other.data.iter()) {
+            *s = a * *s + b * o;
+        }
+    }
+
+    /// Maximum absolute difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Sum of each row.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows).map(|r| self.row(r).iter().sum()).collect()
+    }
+
+    /// Index of the max element per row (ties -> first).
+    pub fn row_argmax(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Zero-pad (or truncate is forbidden) to a larger shape; new cells 0.
+    pub fn padded(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "padded() cannot shrink");
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..self.rows {
+            out.data[r * cols..r * cols + self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Copy of the top-left `rows x cols` corner.
+    pub fn sliced(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows <= self.rows && cols <= self.cols, "sliced() cannot grow");
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[..cols]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut m = Matrix::zeros(3, 2);
+        m.set(2, 1, 5.0);
+        assert_eq!(m.get(2, 1), 5.0);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.row(2), &[0.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let b = Matrix::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        let a = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        let b = Matrix::from_fn(3, 1, |r, _| r as f32);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![5.0, 14.0]);
+    }
+
+    #[test]
+    fn pad_slice_roundtrip() {
+        let a = Matrix::from_fn(3, 2, |r, c| (r + c) as f32);
+        let p = a.padded(5, 4);
+        assert_eq!(p.get(2, 1), 3.0);
+        assert_eq!(p.get(4, 3), 0.0);
+        assert_eq!(p.sliced(3, 2), a);
+    }
+
+    #[test]
+    fn row_argmax_ties_first() {
+        let m = Matrix::from_vec(vec![1.0, 1.0, 0.5, 2.0], 2, 2);
+        assert_eq!(m.row_argmax(), vec![0, 1]);
+    }
+
+    #[test]
+    fn scale_add_works() {
+        let mut a = Matrix::from_vec(vec![1.0, 2.0], 1, 2);
+        let b = Matrix::from_vec(vec![10.0, 10.0], 1, 2);
+        a.scale_add(0.5, 2.0, &b);
+        assert_eq!(a.data, vec![20.5, 21.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Core substrates: dense row-major matrices, vector math, metrics/timing,
+//! a seedable RNG and the bench harness (this is an offline build — no
+//! external crates beyond `xla`/`anyhow`, so these are all in-tree).
+
+pub mod bench;
+pub mod matrix;
+pub mod metrics;
+pub mod rng;
+pub mod vecmath;
+
+pub use matrix::Matrix;
+pub use metrics::{Stats, Timer};
+pub use rng::Rng;

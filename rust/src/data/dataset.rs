@@ -1,0 +1,90 @@
+//! Labeled dataset container.
+
+use crate::core::Matrix;
+
+/// A labeled dataset: `n` points in `R^d` with integer class labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n x d` feature matrix.
+    pub x: Matrix,
+    /// Class label per row, in `0..n_classes`.
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+    /// Human-readable provenance (generator name + params).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, labels: Vec<usize>, n_classes: usize, name: impl Into<String>) -> Self {
+        assert_eq!(x.rows, labels.len(), "labels/rows mismatch");
+        if !labels.is_empty() {
+            assert!(*labels.iter().max().unwrap() < n_classes, "label out of range");
+        }
+        Dataset { x, labels, n_classes, name: name.into() }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Deterministic subsample of `m` rows (seeded Fisher–Yates prefix) —
+    /// the paper draws size-`s` samples from SecStr for Fig. 2A–C.
+    pub fn subsample(&self, m: usize, seed: u64) -> Dataset {
+        assert!(m <= self.n());
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        let mut rng = crate::core::Rng::seed_from_u64(seed);
+        rng.shuffle(&mut idx);
+        idx.truncate(m);
+        let mut x = Matrix::zeros(m, self.d());
+        let mut labels = Vec::with_capacity(m);
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.x.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset::new(x, labels, self.n_classes, format!("{}[sub{}]", self.name, m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Matrix::from_fn(6, 2, |r, c| (r * 2 + c) as f32);
+        Dataset::new(x, vec![0, 1, 0, 1, 0, 1], 2, "tiny")
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.n(), 6);
+        assert_eq!(d.d(), 2);
+    }
+
+    #[test]
+    fn subsample_is_deterministic_and_consistent() {
+        let d = tiny();
+        let a = d.subsample(3, 42);
+        let b = d.subsample(3, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        // every sampled row exists in the original with the right label
+        for r in 0..a.n() {
+            let found = (0..d.n()).any(|i| d.x.row(i) == a.x.row(r) && d.labels[i] == a.labels[r]);
+            assert!(found);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn label_out_of_range_panics() {
+        let x = Matrix::zeros(2, 2);
+        Dataset::new(x, vec![0, 5], 2, "bad");
+    }
+}

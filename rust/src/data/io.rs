@@ -1,0 +1,164 @@
+//! Dataset IO: headerless CSV (label-first) and LibSVM sparse format, so
+//! users can run the framework on the real benchmark files when they have
+//! them (SecStr/Digit1/USPS from Chapelle et al., alpha/ocr from the
+//! Pascal challenge) instead of the synthetic stand-ins.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::core::Matrix;
+use crate::data::Dataset;
+
+/// Load `label,f0,f1,...` CSV. Labels must be non-negative integers.
+pub fn load_csv(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut d = None;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let label: usize = parts
+            .next()
+            .ok_or_else(|| anyhow!("line {lineno}: empty"))?
+            .trim()
+            .parse()
+            .with_context(|| format!("line {lineno}: bad label"))?;
+        let feats: Vec<f32> = parts
+            .map(|p| p.trim().parse::<f32>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("line {lineno}: bad feature"))?;
+        match d {
+            None => d = Some(feats.len()),
+            Some(dd) if dd != feats.len() => {
+                return Err(anyhow!("line {lineno}: expected {dd} features, got {}", feats.len()))
+            }
+            _ => {}
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+    let d = d.ok_or_else(|| anyhow!("empty csv"))?;
+    let n = rows.len();
+    let mut x = Matrix::zeros(n, d);
+    for (i, row) in rows.into_iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&row);
+    }
+    let n_classes = labels.iter().max().map_or(0, |m| m + 1);
+    Ok(Dataset::new(x, labels, n_classes.max(1), "csv"))
+}
+
+/// Save as `label,f0,...` CSV.
+pub fn save_csv(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..ds.n() {
+        write!(f, "{}", ds.labels[i])?;
+        for v in ds.x.row(i) {
+            write!(f, ",{v}")?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Load LibSVM format: `label idx:val idx:val ...` (1-based indices).
+/// `dim` forces the feature dimension; pass 0 to infer from the max index.
+pub fn load_libsvm(path: impl AsRef<Path>, dim: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut entries: Vec<(usize, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let raw_label: f64 = parts
+            .next()
+            .ok_or_else(|| anyhow!("line {lineno}: empty"))?
+            .parse()
+            .with_context(|| format!("line {lineno}: bad label"))?;
+        // map {-1,+1} -> {0,1}, otherwise expect non-negative ints
+        let label = if raw_label < 0.0 { 0 } else if raw_label == 1.0 { 1 } else { raw_label as usize };
+        let mut feats = Vec::new();
+        for p in parts {
+            let (idx, val) = p
+                .split_once(':')
+                .ok_or_else(|| anyhow!("line {lineno}: bad pair {p}"))?;
+            let idx: usize = idx.parse().context("index")?;
+            let val: f32 = val.parse().context("value")?;
+            if idx == 0 {
+                return Err(anyhow!("line {lineno}: libsvm indices are 1-based"));
+            }
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        entries.push((label, feats));
+    }
+    let d = if dim > 0 { dim } else { max_idx };
+    if max_idx > d {
+        return Err(anyhow!("feature index {max_idx} exceeds dim {d}"));
+    }
+    let n = entries.len();
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for (i, (label, feats)) in entries.into_iter().enumerate() {
+        labels.push(label);
+        for (j, v) in feats {
+            x.set(i, j, v);
+        }
+    }
+    let n_classes = labels.iter().max().map_or(0, |m| m + 1);
+    Ok(Dataset::new(x, labels, n_classes.max(1), "libsvm"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = synthetic::two_moons(20, 0.05, 3);
+        let dir = std::env::temp_dir().join("vdt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("moons.csv");
+        save_csv(&ds, &p).unwrap();
+        let back = load_csv(&p).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.labels, ds.labels);
+        assert!(back.x.max_abs_diff(&ds.x) < 1e-4);
+    }
+
+    #[test]
+    fn libsvm_parse() {
+        let dir = std::env::temp_dir().join("vdt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.libsvm");
+        std::fs::write(&p, "+1 1:0.5 3:2.0\n-1 2:1.0\n").unwrap();
+        let ds = load_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.labels, vec![1, 0]);
+        assert_eq!(ds.x.get(0, 2), 2.0);
+        assert_eq!(ds.x.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join("vdt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ragged.csv");
+        std::fs::write(&p, "0,1.0,2.0\n1,3.0\n").unwrap();
+        assert!(load_csv(&p).is_err());
+    }
+}

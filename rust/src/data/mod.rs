@@ -1,0 +1,9 @@
+//! Datasets: the container type, deterministic synthetic generators that
+//! stand in for the paper's benchmark sets (see DESIGN.md §5 for the
+//! substitution table), and simple CSV / LibSVM IO.
+
+pub mod dataset;
+pub mod io;
+pub mod synthetic;
+
+pub use dataset::Dataset;

@@ -1,0 +1,141 @@
+//! Pure-Rust dense reference: Eq. (3) exactly as
+//! `python/compile/kernels/ref.py` defines it. This is both the fallback
+//! backend for shapes without an artifact and the cross-check oracle for
+//! the XLA path (`tests/xla_roundtrip.rs`).
+
+use crate::core::vecmath::sq_dist;
+use crate::core::Matrix;
+
+/// Dense pairwise squared distances (upper+lower, zero diagonal).
+pub fn pairwise_sq_dists(x: &Matrix) -> Matrix {
+    let n = x.rows;
+    let mut d2 = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = sq_dist(x.row(i), x.row(j)) as f32;
+            d2.set(i, j, v);
+            d2.set(j, i, v);
+        }
+    }
+    d2
+}
+
+/// Row-stochastic P from a precomputed distance matrix: masked Gaussian
+/// kernel + row normalization, with the per-row max-shift so large
+/// absolute distances don't underflow every entry.
+pub fn transition_from_d2(d2: &Matrix, sigma: f64) -> Matrix {
+    let n = d2.rows;
+    let inv = 1.0 / (2.0 * sigma * sigma);
+    let mut p = Matrix::zeros(n, n);
+    for i in 0..n {
+        let row = d2.row(i);
+        let mut dmin = f64::INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if j != i {
+                dmin = dmin.min(v as f64);
+            }
+        }
+        let mut sum = 0f64;
+        for (j, &v) in row.iter().enumerate() {
+            if j != i {
+                let e = (-(v as f64 - dmin) * inv).exp();
+                p.set(i, j, e as f32);
+                sum += e;
+            }
+        }
+        let norm = 1.0 / sum.max(1e-30);
+        for j in 0..n {
+            if j != i {
+                p.set(i, j, (p.get(i, j) as f64 * norm) as f32);
+            }
+        }
+    }
+    p
+}
+
+/// Alternating σ fit over singleton blocks (the exact-model analogue of
+/// §4.2): q = P(σ), then σ² = Σ_ij q_ij·d²_ij / (N·d).
+pub fn fit_sigma(d2: &Matrix, d: usize, tol: f64, max_iters: usize) -> f64 {
+    let n = d2.rows;
+    // Eq. (14) initializer
+    let total: f64 = d2.data.iter().map(|&v| v as f64).sum();
+    let mut sigma = ((total / d as f64).sqrt() / n as f64).max(1e-12);
+    for _ in 0..max_iters {
+        let p = transition_from_d2(d2, sigma);
+        let mut acc = 0f64;
+        for i in 0..n {
+            for j in 0..n {
+                acc += p.get(i, j) as f64 * d2.get(i, j) as f64;
+            }
+        }
+        let next = (acc / (n as f64 * d as f64)).sqrt().max(1e-12);
+        let rel = (next - sigma).abs() / sigma;
+        sigma = next;
+        if rel < tol {
+            break;
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn d2_symmetric_zero_diag() {
+        let ds = synthetic::two_moons(20, 0.05, 1);
+        let d2 = pairwise_sq_dists(&ds.x);
+        for i in 0..20 {
+            assert_eq!(d2.get(i, i), 0.0);
+            for j in 0..20 {
+                assert_eq!(d2.get(i, j), d2.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn transition_matches_unshifted_formula() {
+        // the max-shift must not change the normalized result
+        let ds = synthetic::gaussian_mixture(15, 3, 2, 1, 2.0, 2, "t");
+        let d2 = pairwise_sq_dists(&ds.x);
+        let sigma = 0.9f64;
+        let p = transition_from_d2(&d2, sigma);
+        for i in 0..15 {
+            let mut k: Vec<f64> = (0..15)
+                .map(|j| {
+                    if j == i {
+                        0.0
+                    } else {
+                        (-(d2.get(i, j) as f64) / (2.0 * sigma * sigma)).exp()
+                    }
+                })
+                .collect();
+            let s: f64 = k.iter().sum();
+            for v in k.iter_mut() {
+                *v /= s;
+            }
+            for j in 0..15 {
+                assert!((p.get(i, j) as f64 - k[j]).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_sigma_fixed_point() {
+        let ds = synthetic::gaussian_mixture(30, 4, 2, 2, 2.0, 3, "t");
+        let d2 = pairwise_sq_dists(&ds.x);
+        let sigma = fit_sigma(&d2, 4, 1e-8, 200);
+        // one more update is a no-op
+        let p = transition_from_d2(&d2, sigma);
+        let mut acc = 0f64;
+        for i in 0..30 {
+            for j in 0..30 {
+                acc += p.get(i, j) as f64 * d2.get(i, j) as f64;
+            }
+        }
+        let next = (acc / (30.0 * 4.0)).sqrt();
+        assert!((next - sigma).abs() / sigma < 1e-5);
+    }
+}

@@ -1,0 +1,152 @@
+//! The exact baseline: the full dense transition matrix P of Eq. (3) —
+//! O(N²) construction, memory and multiplication (paper Table 1).
+//!
+//! Two interchangeable backends:
+//! - [`dense`]: pure Rust (the semantic reference; mirrors
+//!   `python/compile/kernels/ref.py`).
+//! - XLA: the AOT Pallas/JAX artifacts executed via [`crate::runtime`] —
+//!   the L1/L2 compute path. [`ExactModel::build_xla`] keeps P in padded
+//!   form so LP chunks and matvecs run entirely inside compiled XLA
+//!   programs.
+
+pub mod dense;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::core::Matrix;
+use crate::labelprop::TransitionOp;
+use crate::runtime::Runtime;
+
+/// Dense exact transition model.
+pub struct ExactModel {
+    /// Unpadded N×N row-stochastic P.
+    pub p: Matrix,
+    sigma: f64,
+    /// XLA execution state: runtime + padded P (kept padded so the
+    /// lp_chunk/matvec artifacts can be dispatched without re-padding).
+    xla: Option<(Rc<Runtime>, Matrix)>,
+    backend: &'static str,
+}
+
+impl ExactModel {
+    /// Pure-Rust build: σ fitted by the alternating Eq. (12) scheme over
+    /// singleton blocks (i.e. on the dense distance matrix), then P.
+    pub fn build_dense(x: &Matrix, sigma: Option<f64>) -> ExactModel {
+        let d2 = dense::pairwise_sq_dists(x);
+        let sigma = sigma.unwrap_or_else(|| dense::fit_sigma(&d2, x.cols, 1e-6, 100));
+        let p = dense::transition_from_d2(&d2, sigma);
+        ExactModel { p, sigma, xla: None, backend: "exact-dense" }
+    }
+
+    /// XLA build: P computed by the AOT transition artifact (Pallas kernel
+    /// inside), σ fitted on the Rust side first (cheap relative to the
+    /// O(N²·d) kernel evaluation, and identical math).
+    pub fn build_xla(x: &Matrix, sigma: Option<f64>, rt: Rc<Runtime>) -> Result<ExactModel> {
+        let sigma = sigma.unwrap_or_else(|| {
+            let d2 = dense::pairwise_sq_dists(x);
+            dense::fit_sigma(&d2, x.cols, 1e-6, 100)
+        });
+        let (p_padded, n_pad) = rt.transition_padded(x, sigma as f32)?;
+        let p = p_padded.sliced(x.rows, x.rows);
+        let _ = n_pad;
+        Ok(ExactModel { p, sigma, xla: Some((rt, p_padded)), backend: "exact-xla" })
+    }
+
+    #[inline]
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Label propagation T steps via the XLA lp_chunk artifact when
+    /// available (⌈T/steps_per_chunk⌉ dispatches), dense loop otherwise.
+    pub fn lp_run(&self, y0: &Matrix, alpha: f32, steps: usize) -> Result<Matrix> {
+        if let Some((rt, p_pad)) = &self.xla {
+            let n_pad = p_pad.rows;
+            let c_pad = rt.lp_classes();
+            assert!(y0.cols <= c_pad, "more classes than the artifact supports");
+            let y0p = y0.padded(n_pad, c_pad);
+            let mut y = y0p.clone();
+            let chunk = rt.lp_chunk_steps();
+            let full_chunks = steps / chunk;
+            for _ in 0..full_chunks {
+                y = rt.lp_chunk(p_pad, &y, &y0p, alpha)?;
+            }
+            // leftover steps (steps % chunk) done densely on the slice
+            let mut y_out = y.sliced(self.p.rows, y0.cols);
+            for _ in 0..steps % chunk {
+                let mut py = self.p.matmul(&y_out);
+                py.scale_add(alpha, 1.0 - alpha, y0);
+                y_out = py;
+            }
+            Ok(y_out)
+        } else {
+            let mut y = y0.clone();
+            for _ in 0..steps {
+                let mut py = self.p.matmul(&y);
+                py.scale_add(alpha, 1.0 - alpha, y0);
+                y = py;
+            }
+            Ok(y)
+        }
+    }
+}
+
+impl TransitionOp for ExactModel {
+    fn n(&self) -> usize {
+        self.p.rows
+    }
+
+    fn matvec(&self, y: &Matrix) -> Matrix {
+        if let Some((rt, p_pad)) = &self.xla {
+            let c_pad = rt.lp_classes();
+            if y.cols <= c_pad {
+                let yp = y.padded(p_pad.rows, c_pad);
+                if let Ok(out) = rt.matvec(p_pad, &yp) {
+                    return out.sliced(self.p.rows, y.cols);
+                }
+            }
+            // fall through to dense on any mismatch
+        }
+        self.p.matmul(y)
+    }
+
+    fn name(&self) -> &str {
+        self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn dense_p_is_row_stochastic_zero_diag() {
+        let ds = synthetic::two_moons(40, 0.07, 1);
+        let m = ExactModel::build_dense(&ds.x, None);
+        for (i, s) in m.p.row_sums().iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-4, "row {i}: {s}");
+        }
+        for i in 0..40 {
+            assert_eq!(m.p.get(i, i), 0.0);
+        }
+        assert!(m.sigma() > 0.0);
+    }
+
+    #[test]
+    fn lp_run_dense_matches_generic_propagate() {
+        let ds = synthetic::two_moons(30, 0.07, 2);
+        let m = ExactModel::build_dense(&ds.x, Some(0.5));
+        let labeled = crate::labelprop::choose_labeled(&ds.labels, 2, 4, 3);
+        let y0 = crate::labelprop::seed_matrix(&ds.labels, &labeled, 2);
+        let via_lp_run = m.lp_run(&y0, 0.3, 23).unwrap();
+        let via_generic = crate::labelprop::propagate(
+            &m,
+            &y0,
+            &crate::labelprop::LpConfig { alpha: 0.3, steps: 23 },
+        );
+        assert!(via_lp_run.max_abs_diff(&via_generic) < 1e-4);
+    }
+}

@@ -1,0 +1,258 @@
+//! Figure 2 reproductions (paper §5.2, experiments 1 and 2).
+//!
+//! Row 1 (A/B/C): SecStr-like scaling — construction time, one-multiplication
+//! time, and LP CCR (10% labeled) vs problem size N for the exact model,
+//! fast kNN (k=2) and coarsest VariationalDT.
+//!
+//! Rows 2–3 (D–K): Digit1-/USPS-like refinement — coarse construction time,
+//! per-level refinement time, and CCR at matched parameter counts
+//! |B| = kN for k = 2..⌈log N⌉, with 10 and 100 labeled points.
+
+use crate::core::{metrics::Timer, Matrix};
+use crate::data::{synthetic, Dataset};
+use crate::exact::ExactModel;
+use crate::knn::{KnnConfig, KnnGraph};
+use crate::labelprop::{self, LpConfig, TransitionOp};
+use crate::vdt::{VdtConfig, VdtModel};
+
+use super::{f, Table};
+
+/// Shared experiment knobs (paper defaults).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub lp: LpConfig,
+    /// repetitions per size (paper: 5)
+    pub reps: usize,
+    /// sizes for the scaling experiment
+    pub sizes: Vec<usize>,
+    /// cap above which the exact model is skipped (O(N²) memory)
+    pub exact_cap: usize,
+    /// cap above which fast-kNN is skipped
+    pub knn_cap: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            lp: LpConfig::default(), // T=500, alpha=0.01
+            reps: 5,
+            sizes: vec![500, 1000, 2000, 4000, 8000],
+            exact_cap: 2000,
+            knn_cap: 8000,
+            seed: 20120815,
+        }
+    }
+}
+
+/// Construction timings for one sample: (exact_ms, knn_ms, vdt_ms).
+fn build_all(
+    ds: &Dataset,
+    exact_cap: usize,
+    knn_cap: usize,
+) -> (Option<(ExactModel, f64)>, Option<(KnnGraph, f64)>, (VdtModel, f64)) {
+    let exact = if ds.n() <= exact_cap {
+        let t = Timer::start();
+        let m = ExactModel::build_dense(&ds.x, None);
+        Some((m, t.ms()))
+    } else {
+        None
+    };
+    let knn = if ds.n() <= knn_cap {
+        let t = Timer::start();
+        let g = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+        Some((g, t.ms()))
+    } else {
+        None
+    };
+    let t = Timer::start();
+    let v = VdtModel::build(&ds.x, &VdtConfig::default());
+    let vdt = (v, t.ms());
+    (exact, knn, vdt)
+}
+
+fn time_matvec(op: &dyn TransitionOp, y: &Matrix, reps: usize) -> f64 {
+    // warm-up
+    let _ = op.matvec(y);
+    let t = Timer::start();
+    for _ in 0..reps.max(1) {
+        let out = op.matvec(y);
+        std::hint::black_box(&out.data[0]);
+    }
+    t.ms() / reps.max(1) as f64
+}
+
+/// Fig 2A/B/C in one sweep (construction ms, multiplication ms, CCR).
+pub fn fig2abc(cfg: &ExpConfig) -> (Table, Table, Table) {
+    let mut ta = Table::new(
+        "Fig 2A — construction time (ms) vs N, secstr-like",
+        &["N", "exact", "fast-knn(k=2)", "vdt-coarsest"],
+    );
+    let mut tb = Table::new(
+        "Fig 2B — one multiplication (ms) vs N",
+        &["N", "exact", "fast-knn(k=2)", "vdt-coarsest"],
+    );
+    let mut tc = Table::new(
+        "Fig 2C — LP CCR (10% labeled, T=500, α=0.01) vs N",
+        &["N", "exact", "fast-knn(k=2)", "vdt-coarsest"],
+    );
+    let base_n = *cfg.sizes.iter().max().unwrap();
+    let base = synthetic::secstr_like(base_n, cfg.seed);
+    for &n in &cfg.sizes {
+        let (mut ce, mut ck, mut cv) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut me, mut mk, mut mv) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut ae, mut ak, mut av) = (Vec::new(), Vec::new(), Vec::new());
+        for rep in 0..cfg.reps {
+            let ds = base.subsample(n, cfg.seed + rep as u64);
+            let (exact, knn, (vdt, vms)) = build_all(&ds, cfg.exact_cap, cfg.knn_cap);
+            cv.push(vms);
+            let labeled =
+                labelprop::choose_labeled(&ds.labels, ds.n_classes, (n / 10).max(2), rep as u64);
+            let y = labelprop::one_hot_labels(&ds.labels, ds.n_classes);
+            mv.push(time_matvec(&vdt, &y, 3));
+            let (_, score) = labelprop::run_ssl(&vdt, &ds.labels, ds.n_classes, &labeled, &cfg.lp);
+            av.push(score);
+            if let Some((m, ms)) = exact {
+                ce.push(ms);
+                me.push(time_matvec(&m, &y, 3));
+                let (_, s) = labelprop::run_ssl(&m, &ds.labels, ds.n_classes, &labeled, &cfg.lp);
+                ae.push(s);
+            }
+            if let Some((g, ms)) = knn {
+                ck.push(ms);
+                mk.push(time_matvec(&g, &y, 3));
+                let (_, s) = labelprop::run_ssl(&g, &ds.labels, ds.n_classes, &labeled, &cfg.lp);
+                ak.push(s);
+            }
+        }
+        let mean = |v: &Vec<f64>| {
+            if v.is_empty() {
+                "-".to_string()
+            } else {
+                f(v.iter().sum::<f64>() / v.len() as f64)
+            }
+        };
+        ta.push(vec![n.to_string(), mean(&ce), mean(&ck), mean(&cv)]);
+        tb.push(vec![n.to_string(), mean(&me), mean(&mk), mean(&mv)]);
+        tc.push(vec![n.to_string(), mean(&ae), mean(&ak), mean(&av)]);
+    }
+    (ta, tb, tc)
+}
+
+/// Which dataset the refinement experiment runs on.
+#[derive(Clone, Copy, Debug)]
+pub enum RefineDataset {
+    Digit1,
+    Usps,
+}
+
+/// Fig 2D/E/F/G (Digit1) or H/I/J/K (USPS): coarse construction time,
+/// per-level refinement time, CCR at 10 and 100 labeled per level.
+pub fn fig2_refinement(which: RefineDataset, cfg: &ExpConfig) -> (Table, Table, Table, Table) {
+    let (name, ds) = match which {
+        RefineDataset::Digit1 => ("digit1", synthetic::digit1_like(1500, cfg.seed)),
+        RefineDataset::Usps => ("usps", synthetic::usps_like(1500, cfg.seed)),
+    };
+    let n = ds.n();
+    let max_k = ((n as f64).ln().ceil() as usize).max(3); // |B| up to N·log N
+    let (d_lbl, e_lbl, f_lbl, g_lbl) = match which {
+        RefineDataset::Digit1 => ("2D", "2E", "2F", "2G"),
+        RefineDataset::Usps => ("2H", "2I", "2J", "2K"),
+    };
+
+    // --- construction (coarse models) ---
+    let mut td = Table::new(
+        format!("Fig {d_lbl} — coarse construction time (ms), {name}-like"),
+        &["model", "ms"],
+    );
+    let te_t = Timer::start();
+    let exact = ExactModel::build_dense(&ds.x, None);
+    let exact_ms = te_t.ms();
+    let tk_t = Timer::start();
+    let mut knn = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+    let knn_ms = tk_t.ms();
+    let tv_t = Timer::start();
+    let mut vdt = VdtModel::build(&ds.x, &VdtConfig::default());
+    let vdt_ms = tv_t.ms();
+    td.push(vec!["exact".into(), f(exact_ms)]);
+    td.push(vec!["fast-knn(k=2)".into(), f(knn_ms)]);
+    td.push(vec!["vdt-coarsest".into(), f(vdt_ms)]);
+
+    // --- refinement sweep: levels |B| = kN ---
+    let mut te = Table::new(
+        format!("Fig {e_lbl} — time (ms) to refine to next level, {name}-like"),
+        &["level k (|B|=kN)", "fast-knn", "vdt"],
+    );
+    let mut tf = Table::new(
+        format!("Fig {f_lbl} — CCR vs refinement level, 10 labeled, {name}-like"),
+        &["level k", "fast-knn", "vdt", "exact"],
+    );
+    let mut tg = Table::new(
+        format!("Fig {g_lbl} — CCR vs refinement level, 100 labeled, {name}-like"),
+        &["level k", "fast-knn", "vdt", "exact"],
+    );
+
+    let labeled10 = labelprop::choose_labeled(&ds.labels, ds.n_classes, 10, cfg.seed);
+    let labeled100 = labelprop::choose_labeled(&ds.labels, ds.n_classes, 100, cfg.seed + 1);
+    let (_, exact10) = labelprop::run_ssl(&exact, &ds.labels, ds.n_classes, &labeled10, &cfg.lp);
+    let (_, exact100) =
+        labelprop::run_ssl(&exact, &ds.labels, ds.n_classes, &labeled100, &cfg.lp);
+
+    for k in 2..=max_k {
+        let (knn_ref_ms, vdt_ref_ms) = if k == 2 {
+            (0.0, 0.0) // coarse models are already at level 2
+        } else {
+            let t1 = Timer::start();
+            knn.refine_to_k(k);
+            let kms = t1.ms();
+            let t2 = Timer::start();
+            vdt.refine_to(k * n);
+            (kms, t2.ms())
+        };
+        let (_, knn10) = labelprop::run_ssl(&knn, &ds.labels, ds.n_classes, &labeled10, &cfg.lp);
+        let (_, knn100) = labelprop::run_ssl(&knn, &ds.labels, ds.n_classes, &labeled100, &cfg.lp);
+        let (_, vdt10) = labelprop::run_ssl(&vdt, &ds.labels, ds.n_classes, &labeled10, &cfg.lp);
+        let (_, vdt100) = labelprop::run_ssl(&vdt, &ds.labels, ds.n_classes, &labeled100, &cfg.lp);
+        if k > 2 {
+            te.push(vec![k.to_string(), f(knn_ref_ms), f(vdt_ref_ms)]);
+        }
+        tf.push(vec![k.to_string(), f(knn10), f(vdt10), f(exact10)]);
+        tg.push(vec![k.to_string(), f(knn100), f(vdt100), f(exact100)]);
+    }
+    (td, te, tf, tg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            lp: LpConfig { alpha: 0.01, steps: 30 },
+            reps: 1,
+            sizes: vec![120, 240],
+            exact_cap: 240,
+            knn_cap: 240,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn fig2abc_smoke() {
+        let (a, b, c) = fig2abc(&tiny_cfg());
+        assert_eq!(a.rows.len(), 2);
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(c.rows.len(), 2);
+        // all three methods produced numbers at these sizes
+        for row in &a.rows {
+            assert!(row.iter().all(|c| c != "-"));
+        }
+        // CCR values parse as probabilities
+        for row in &c.rows {
+            for cell in &row[1..] {
+                let v: f64 = cell.parse().unwrap();
+                assert!((0.0..=1.0).contains(&v), "CCR {v}");
+            }
+        }
+    }
+}

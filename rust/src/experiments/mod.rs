@@ -1,0 +1,114 @@
+//! Experiment harness: one runner per table/figure of the paper's
+//! evaluation (§5). Each runner produces a [`Table`] with the same
+//! rows/series the paper reports; `vdt exp <id>` prints it and writes
+//! `results/<id>.csv`. Criterion benches in `benches/` wrap the same
+//! code paths for statistically-disciplined timing.
+
+pub mod fig2;
+pub mod tables;
+
+use std::path::Path;
+
+/// A simple result table (column headers + rows), printable and
+/// CSV-serializable. Cells are strings so mixed numeric formats are fine.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV (title as a comment line).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = format!("# {}\n{}\n", self.title, self.columns.join(","));
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Format a float with 3 significant-ish decimals.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 100.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("demo", &["n", "ms"]);
+        t.push(vec!["100".into(), "1.5".into()]);
+        t.push(vec!["200".into(), "3.25".into()]);
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("3.25"));
+        let dir = std::env::temp_dir().join("vdt_exp_test");
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let csv = std::fs::read_to_string(&p).unwrap();
+        assert!(csv.starts_with("# demo\nn,ms\n100,1.5\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,263 @@
+//! The kNN transition-matrix baseline.
+//!
+//! Each point keeps its k nearest neighbours; edge weights follow Eq. (3)
+//! restricted to the kept edges (row-normalized Gaussian kernel). σ is
+//! tuned with the same alternating lower-bound scheme as VDT (§4.2): with
+//! singleton "blocks" on the kept edges, Eq. (12) becomes
+//! `σ² = Σ_ij q_ij·d²_ij / (N·d)`.
+//!
+//! Refinement k → k+1 re-searches with the larger k — deliberately so: the
+//! paper's Table 1 charges fast-kNN `O(N(log N + N log k))` per refinement
+//! level, and the uniform degree growth is exactly the behaviour the
+//! second experiment (Fig. 2E/F/G/I/J/K) contrasts with VDT's targeted
+//! refinement.
+
+use crate::core::Matrix;
+use crate::labelprop::TransitionOp;
+use crate::sparse::Csr;
+use crate::tree::{build_tree, BuildConfig, PartitionTree};
+
+use super::search::knn_query;
+
+/// Configuration for [`KnnGraph::build`].
+#[derive(Clone, Debug)]
+pub struct KnnConfig {
+    pub k: usize,
+    pub tree: BuildConfig,
+    /// Fixed bandwidth; `None` = alternate Eq. (12)-style updates.
+    pub sigma: Option<f64>,
+    pub sigma_tol: f64,
+    pub sigma_max_iters: usize,
+    /// Parallelize the per-point searches (off by default: the paper's
+    /// baselines are serial; flip on for the ablation bench).
+    pub parallel: bool,
+}
+
+impl Default for KnnConfig {
+    fn default() -> Self {
+        KnnConfig {
+            k: 2,
+            tree: BuildConfig::default(),
+            sigma: None,
+            sigma_tol: 1e-4,
+            sigma_max_iters: 50,
+            parallel: false,
+        }
+    }
+}
+
+/// A k-nearest-neighbour transition model: sparse row-stochastic P.
+pub struct KnnGraph {
+    /// Neighbour lists: `(neighbour, distance²)`, ascending, k per row.
+    neighbors: Vec<Vec<(u32, f64)>>,
+    /// Row-stochastic sparse transition matrix at the current σ.
+    pub p: Csr,
+    sigma: f64,
+    pub k: usize,
+    tree: PartitionTree,
+    x: Matrix,
+    parallel: bool,
+}
+
+impl KnnGraph {
+    /// Build the k-NN graph with anchor-tree-pruned exact searches.
+    pub fn build(x: &Matrix, cfg: &KnnConfig) -> KnnGraph {
+        let tree = build_tree(x, &cfg.tree);
+        let mut g = KnnGraph {
+            neighbors: Vec::new(),
+            p: Csr::from_rows(x.rows, x.rows, &vec![Vec::new(); x.rows]),
+            sigma: 1.0,
+            k: cfg.k,
+            tree,
+            x: x.clone(),
+            parallel: cfg.parallel,
+        };
+        g.search_all(cfg.k);
+        g.fit_sigma(cfg.sigma, cfg.sigma_tol, cfg.sigma_max_iters);
+        g
+    }
+
+    fn search_all(&mut self, k: usize) {
+        let n = self.x.rows;
+        self.k = k;
+        self.neighbors = if self.parallel {
+            // std::thread::scope fan-out over contiguous chunks (offline
+            // build — no rayon): deterministic output order either way.
+            let threads = std::thread::available_parallelism().map_or(4, |p| p.get()).min(16);
+            let chunk = n.div_ceil(threads);
+            let tree = &self.tree;
+            let x = &self.x;
+            let mut out: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for t in 0..threads {
+                    let (lo, hi) = (t * chunk, ((t + 1) * chunk).min(n));
+                    if lo >= hi {
+                        break;
+                    }
+                    handles.push(scope.spawn(move || {
+                        (lo..hi).map(|i| knn_query(tree, x, i, k)).collect::<Vec<_>>()
+                    }));
+                }
+                for h in handles {
+                    out.extend(h.join().expect("knn worker panicked"));
+                }
+            });
+            out
+        } else {
+            (0..n).map(|i| knn_query(&self.tree, &self.x, i, k)).collect()
+        };
+    }
+
+    /// Recompute edge weights for the current σ (Eq. 3 on kept edges).
+    fn reweight(&mut self) {
+        let inv = 1.0 / (2.0 * self.sigma * self.sigma);
+        let rows: Vec<Vec<(u32, f32)>> = self
+            .neighbors
+            .iter()
+            .map(|nbrs| {
+                // subtract the min distance before exponentiating so rows
+                // with large absolute distances don't underflow to zero
+                let dmin = nbrs.first().map_or(0.0, |&(_, d)| d);
+                nbrs.iter()
+                    .map(|&(j, d2)| (j, (-(d2 - dmin) * inv).exp() as f32))
+                    .collect()
+            })
+            .collect();
+        let mut p = Csr::from_rows(self.x.rows, self.x.rows, &rows);
+        p.normalize_rows();
+        self.p = p;
+    }
+
+    /// Alternate weight computation and the Eq. (12) analogue
+    /// `σ² = Σ_ij q_ij·d²_ij/(N·d)` over the kept edges.
+    fn fit_sigma(&mut self, fixed: Option<f64>, tol: f64, max_iters: usize) {
+        if let Some(s) = fixed {
+            self.sigma = s;
+            self.reweight();
+            return;
+        }
+        // init from mean kept-edge distance (q-independent, Eq. 14 spirit)
+        let (mut sum, mut cnt) = (0f64, 0usize);
+        for nbrs in &self.neighbors {
+            for &(_, d2) in nbrs {
+                sum += d2;
+                cnt += 1;
+            }
+        }
+        let d = self.x.cols as f64;
+        self.sigma = ((sum / cnt.max(1) as f64) / d).sqrt().max(1e-12);
+        for _ in 0..max_iters {
+            self.reweight();
+            let mut acc = 0f64;
+            for (i, nbrs) in self.neighbors.iter().enumerate() {
+                let (_, vals) = self.p.row(i);
+                for (&(_, d2), &q) in nbrs.iter().zip(vals.iter()) {
+                    acc += q as f64 * d2;
+                }
+            }
+            let next = (acc / (self.x.rows as f64 * d)).sqrt().max(1e-12);
+            let rel = (next - self.sigma).abs() / self.sigma;
+            self.sigma = next;
+            if rel < tol {
+                break;
+            }
+        }
+        self.reweight();
+    }
+
+    /// Refine to `k`: full re-search with the larger k (see module docs),
+    /// then re-fit σ.
+    pub fn refine_to_k(&mut self, k: usize) {
+        assert!(k >= self.k, "kNN refinement only grows k");
+        if k == self.k {
+            return;
+        }
+        self.search_all(k);
+        self.fit_sigma(None, 1e-4, 50);
+    }
+
+    #[inline]
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Number of stored parameters (nonzero edges) — the paper's `kN`.
+    pub fn num_params(&self) -> usize {
+        self.p.nnz()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.p.nnz() * (4 + 4) + (self.p.rows + 1) * 8
+    }
+}
+
+impl TransitionOp for KnnGraph {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+    fn matvec(&self, y: &Matrix) -> Matrix {
+        self.p.matmul_dense(y)
+    }
+    fn name(&self) -> &str {
+        "fast-knn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn rows_are_stochastic_with_k_nonzeros() {
+        let ds = synthetic::two_moons(80, 0.07, 2);
+        let g = KnnGraph::build(&ds.x, &KnnConfig { k: 3, ..Default::default() });
+        assert_eq!(g.num_params(), 80 * 3);
+        for r in 0..80 {
+            let (idx, vals) = g.p.row(r);
+            assert_eq!(idx.len(), 3);
+            let s: f32 = vals.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+            assert!(!idx.contains(&(r as u32)), "self loop at {r}");
+        }
+    }
+
+    #[test]
+    fn refine_grows_k_and_preserves_stochasticity() {
+        let ds = synthetic::two_moons(60, 0.07, 3);
+        let mut g = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+        g.refine_to_k(5);
+        assert_eq!(g.k, 5);
+        assert_eq!(g.num_params(), 60 * 5);
+        let ones = Matrix::from_fn(60, 1, |_, _| 1.0);
+        let out = g.matvec(&ones);
+        for &v in &out.data {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sigma_fit_converges_to_positive_value() {
+        let ds = synthetic::gaussian_mixture(100, 5, 2, 2, 2.0, 7, "t");
+        let g = KnnGraph::build(&ds.x, &KnnConfig { k: 4, ..Default::default() });
+        assert!(g.sigma() > 0.0 && g.sigma().is_finite());
+    }
+
+    #[test]
+    fn parallel_build_matches_serial() {
+        let ds = synthetic::two_moons(70, 0.07, 4);
+        let a = KnnGraph::build(&ds.x, &KnnConfig { k: 3, ..Default::default() });
+        let b = KnnGraph::build(
+            &ds.x,
+            &KnnConfig { k: 3, parallel: true, ..Default::default() },
+        );
+        assert_eq!(a.p.indices, b.p.indices);
+        assert!(a
+            .p
+            .values
+            .iter()
+            .zip(b.p.values.iter())
+            .all(|(x, y)| (x - y).abs() < 1e-7));
+    }
+}

@@ -1,0 +1,10 @@
+//! The "Fast kNN" baseline (paper §5.1): exact k-nearest-neighbour graphs
+//! built with metric-tree pruning (Moore 1991, with the kd-tree replaced by
+//! the same anchor tree the VDT model uses), Gaussian edge weights of
+//! Eq. (3) restricted to the k edges, σ tuned by the same lower-bound
+//! scheme as VDT, and k → k+1 refinement.
+
+pub mod graph;
+pub mod search;
+
+pub use graph::{KnnConfig, KnnGraph};

@@ -1,0 +1,163 @@
+//! Exact k-NN search on the anchor tree with triangle-inequality pruning.
+//!
+//! Every tree node stores its centroid (as `S1/count`) and an exact radius
+//! bound, so `max(0, d(q, centroid) − radius)` lower-bounds the distance
+//! from a query to any point under the node. Best-first descent with a
+//! bounded max-heap of current bests gives exact results while skipping
+//! most of the tree — the paper's `O(N^0.5 log N + k log k)` per query in
+//! the friendly case.
+
+use std::collections::BinaryHeap;
+
+use crate::core::vecmath::{sq_dist, sq_dist_to_centroid};
+use crate::core::Matrix;
+use crate::tree::PartitionTree;
+
+/// (distance², point) max-heap entry so the heap root is the *worst* of
+/// the current k best.
+#[derive(PartialEq)]
+struct Best(f64, u32);
+impl Eq for Best {}
+impl PartialOrd for Best {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Best {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Frontier entry ordered by *smallest* lower bound first (min-heap via
+/// reversed ordering).
+#[derive(PartialEq)]
+struct Frontier(f64, u32);
+impl Eq for Frontier {}
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.partial_cmp(&self.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Lower bound on the squared distance from `q` to any point under `node`.
+#[inline]
+fn node_lower_bound(tree: &PartitionTree, x_row: &[f32], node: u32) -> f64 {
+    let c = tree.count[node as usize] as f64;
+    let dc = sq_dist_to_centroid(x_row, tree.s1_of(node), c).sqrt();
+    let lb = dc - tree.radius[node as usize] as f64;
+    if lb <= 0.0 {
+        0.0
+    } else {
+        lb * lb
+    }
+}
+
+/// Exact k nearest neighbours of point `query` (itself excluded), returned
+/// as (neighbour, distance²) sorted ascending by distance.
+pub fn knn_query(
+    tree: &PartitionTree,
+    x: &Matrix,
+    query: usize,
+    k: usize,
+) -> Vec<(u32, f64)> {
+    let qrow = x.row(query);
+    let mut best: BinaryHeap<Best> = BinaryHeap::with_capacity(k + 1);
+    let mut frontier: BinaryHeap<Frontier> = BinaryHeap::new();
+    frontier.push(Frontier(node_lower_bound(tree, qrow, tree.root()), tree.root()));
+
+    while let Some(Frontier(lb, node)) = frontier.pop() {
+        if best.len() == k && lb >= best.peek().unwrap().0 {
+            break; // every remaining frontier entry is at least this far
+        }
+        if tree.is_leaf(node) {
+            if node as usize == query {
+                continue;
+            }
+            let d2 = sq_dist(qrow, x.row(node as usize));
+            if best.len() < k {
+                best.push(Best(d2, node));
+            } else if d2 < best.peek().unwrap().0 {
+                best.pop();
+                best.push(Best(d2, node));
+            }
+        } else {
+            for child in [tree.left[node as usize], tree.right[node as usize]] {
+                let clb = node_lower_bound(tree, qrow, child);
+                if best.len() < k || clb < best.peek().unwrap().0 {
+                    frontier.push(Frontier(clb, child));
+                }
+            }
+        }
+    }
+    let mut out: Vec<(u32, f64)> = best.into_iter().map(|Best(d, p)| (p, d)).collect();
+    out.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+/// Brute-force reference (tests and tiny inputs).
+pub fn knn_bruteforce(x: &Matrix, query: usize, k: usize) -> Vec<(u32, f64)> {
+    let mut all: Vec<(u32, f64)> = (0..x.rows)
+        .filter(|&j| j != query)
+        .map(|j| (j as u32, sq_dist(x.row(query), x.row(j))))
+        .collect();
+    all.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    all.truncate(k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tree::{build_tree, BuildConfig};
+
+    #[test]
+    fn exact_vs_bruteforce_distances() {
+        let ds = synthetic::gaussian_mixture(150, 6, 2, 3, 2.0, 13, "t");
+        let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 16, ..Default::default() });
+        for q in (0..150).step_by(17) {
+            for k in [1usize, 3, 8] {
+                let fast = knn_query(&t, &ds.x, q, k);
+                let brute = knn_bruteforce(&ds.x, q, k);
+                assert_eq!(fast.len(), k);
+                // distances must match exactly (ties may swap ids)
+                for (f, b) in fast.iter().zip(brute.iter()) {
+                    assert!(
+                        (f.1 - b.1).abs() < 1e-9 * (1.0 + b.1),
+                        "q={q} k={k}: {} vs {}",
+                        f.1,
+                        b.1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn excludes_self_and_handles_k_ge_n() {
+        let ds = synthetic::two_moons(10, 0.05, 3);
+        let t = build_tree(&ds.x, &BuildConfig::default());
+        let r = knn_query(&t, &ds.x, 4, 20);
+        assert_eq!(r.len(), 9); // n-1 neighbours available
+        assert!(r.iter().all(|&(p, _)| p != 4));
+    }
+
+    #[test]
+    fn duplicates_are_fine() {
+        let mut x = Matrix::zeros(12, 2);
+        for i in 0..12 {
+            x.set(i, 0, (i % 2) as f32);
+        }
+        let t = build_tree(&x, &BuildConfig { divisive_threshold: 4, ..Default::default() });
+        let r = knn_query(&t, &x, 0, 5);
+        assert_eq!(r.len(), 5);
+        // the 5 even-index duplicates of point 0 are at distance 0
+        assert!(r.iter().all(|&(_, d)| d <= 1.0 + 1e-9));
+    }
+}

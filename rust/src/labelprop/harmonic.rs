@@ -1,0 +1,166 @@
+//! Harmonic-function semi-supervised learning (Zhu 2005, the thesis the
+//! paper builds its SSL framing on) — the *clamped* alternative to the
+//! soft Label Propagation of Eq. (15):
+//!
+//! ```text
+//!   repeat:  Y_U ← (P·Y)_U        (unlabeled rows take the harmonic avg)
+//!            Y_L ← Y⁰_L           (labeled rows stay clamped)
+//! ```
+//!
+//! At convergence Y_U = (I − P_UU)⁻¹ P_UL Y_L — the harmonic solution.
+//! Like everything else in the crate it only needs `TransitionOp::matvec`,
+//! so the O(|B|) VDT representation accelerates it identically.
+
+use crate::core::Matrix;
+
+use super::TransitionOp;
+
+/// Configuration for [`propagate_harmonic`].
+#[derive(Clone, Debug)]
+pub struct HarmonicConfig {
+    pub steps: usize,
+    /// Early-exit when the max absolute update falls below this.
+    pub tol: f32,
+}
+
+impl Default for HarmonicConfig {
+    fn default() -> Self {
+        HarmonicConfig { steps: 500, tol: 1e-6 }
+    }
+}
+
+/// Clamped harmonic propagation. `labeled` lists the clamped rows; their
+/// values are taken from `y0`.
+pub fn propagate_harmonic(
+    op: &dyn TransitionOp,
+    y0: &Matrix,
+    labeled: &[usize],
+    cfg: &HarmonicConfig,
+) -> Matrix {
+    assert_eq!(y0.rows, op.n(), "Y0 rows must equal N");
+    let is_labeled = {
+        let mut v = vec![false; op.n()];
+        for &i in labeled {
+            v[i] = true;
+        }
+        v
+    };
+    let mut y = y0.clone();
+    for _ in 0..cfg.steps {
+        let py = op.matvec(&y);
+        let mut delta = 0f32;
+        for i in 0..y.rows {
+            if is_labeled[i] {
+                continue; // clamped
+            }
+            for k in 0..y.cols {
+                let idx = i * y.cols + k;
+                delta = delta.max((py.data[idx] - y.data[idx]).abs());
+                y.data[idx] = py.data[idx];
+            }
+        }
+        if delta < cfg.tol {
+            break;
+        }
+    }
+    y
+}
+
+/// End-to-end convenience mirroring [`super::run_ssl`].
+pub fn run_harmonic_ssl(
+    op: &dyn TransitionOp,
+    labels: &[usize],
+    n_classes: usize,
+    labeled: &[usize],
+    cfg: &HarmonicConfig,
+) -> (Matrix, f64) {
+    let y0 = super::seed_matrix(labels, labeled, n_classes);
+    let y = propagate_harmonic(op, &y0, labeled, cfg);
+    let score = super::ccr(&y, labels, labeled);
+    (y, score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::exact::ExactModel;
+    use crate::labelprop;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    #[test]
+    fn labeled_rows_stay_clamped() {
+        let ds = synthetic::two_moons(60, 0.07, 1);
+        let m = ExactModel::build_dense(&ds.x, None);
+        let labeled = labelprop::choose_labeled(&ds.labels, 2, 6, 2);
+        let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+        let y = propagate_harmonic(&m, &y0, &labeled, &HarmonicConfig::default());
+        for &i in &labeled {
+            for k in 0..2 {
+                assert_eq!(y.get(i, k), y0.get(i, k), "row {i} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn harmonic_solution_is_harmonic() {
+        // at convergence, unlabeled rows equal their P-average
+        let ds = synthetic::two_moons(50, 0.07, 2);
+        let m = ExactModel::build_dense(&ds.x, None);
+        let labeled = labelprop::choose_labeled(&ds.labels, 2, 8, 3);
+        let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+        let y = propagate_harmonic(
+            &m,
+            &y0,
+            &labeled,
+            &HarmonicConfig { steps: 5000, tol: 1e-9 },
+        );
+        let py = m.matvec(&y);
+        let clamped: std::collections::HashSet<usize> = labeled.iter().copied().collect();
+        for i in 0..50 {
+            if clamped.contains(&i) {
+                continue;
+            }
+            for k in 0..2 {
+                assert!(
+                    (y.get(i, k) - py.get(i, k)).abs() < 1e-4,
+                    "row {i} not harmonic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn harmonic_ssl_on_moons_via_vdt() {
+        let ds = synthetic::two_moons(300, 0.06, 4);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(8 * ds.n());
+        let labeled = labelprop::choose_labeled(&ds.labels, 2, 20, 5);
+        let (_, score) = run_harmonic_ssl(
+            &m,
+            &ds.labels,
+            2,
+            &labeled,
+            &HarmonicConfig { steps: 300, tol: 1e-7 },
+        );
+        assert!(score > 0.85, "harmonic CCR {score}");
+    }
+
+    #[test]
+    fn harmonic_and_lp_agree_on_easy_data() {
+        let ds = synthetic::gaussian_mixture(120, 3, 2, 1, 5.0, 6, "blobs");
+        let m = ExactModel::build_dense(&ds.x, None);
+        let labeled = labelprop::choose_labeled(&ds.labels, 2, 10, 7);
+        let (_, harmonic) =
+            run_harmonic_ssl(&m, &ds.labels, 2, &labeled, &HarmonicConfig::default());
+        let (_, lp) = labelprop::run_ssl(
+            &m,
+            &ds.labels,
+            2,
+            &labeled,
+            &labelprop::LpConfig { alpha: 0.5, steps: 200 },
+        );
+        assert!((harmonic - lp).abs() < 0.05, "harmonic {harmonic} vs lp {lp}");
+        assert!(harmonic > 0.95);
+    }
+}

@@ -1,0 +1,236 @@
+//! Label Propagation (Zhou et al. 2003; paper Eq. 15) and CCR evaluation,
+//! generic over any transition-matrix backend via [`TransitionOp`]. The
+//! [`harmonic`] submodule adds the clamped harmonic-function variant
+//! (Zhu 2005).
+
+pub mod harmonic;
+
+use crate::core::{Matrix, Rng};
+
+/// Anything that can multiply a dense N×C matrix by its (approximate)
+/// transition matrix — the single interface LP, link analysis and the
+/// Arnoldi iteration need.
+pub trait TransitionOp {
+    /// Number of data points N (rows/cols of the operator).
+    fn n(&self) -> usize;
+    /// Ŷ = P·Y (or Q·Y).
+    fn matvec(&self, y: &Matrix) -> Matrix;
+    /// Backend name for logs/reports.
+    fn name(&self) -> &str {
+        "op"
+    }
+}
+
+impl TransitionOp for crate::vdt::VdtModel {
+    fn n(&self) -> usize {
+        VdtModelExt::n(self)
+    }
+    fn matvec(&self, y: &Matrix) -> Matrix {
+        self.matvec(y)
+    }
+    fn name(&self) -> &str {
+        "variational-dt"
+    }
+}
+
+// Helper to disambiguate the inherent `n` from the trait method.
+trait VdtModelExt {
+    fn n(&self) -> usize;
+}
+impl VdtModelExt for crate::vdt::VdtModel {
+    fn n(&self) -> usize {
+        self.tree.n
+    }
+}
+
+/// LP hyper-parameters. Paper §5: T = 500, α = 0.01 (kept deliberately —
+/// the experiments compare methods under identical settings, not tuned
+/// SSL).
+#[derive(Clone, Debug)]
+pub struct LpConfig {
+    pub alpha: f32,
+    pub steps: usize,
+}
+
+impl Default for LpConfig {
+    fn default() -> Self {
+        LpConfig { alpha: 0.01, steps: 500 }
+    }
+}
+
+/// One-hot encode labels into an N×C matrix.
+pub fn one_hot_labels(labels: &[usize], n_classes: usize) -> Matrix {
+    let mut y = Matrix::zeros(labels.len(), n_classes);
+    for (i, &l) in labels.iter().enumerate() {
+        y.set(i, l, 1.0);
+    }
+    y
+}
+
+/// Build Y⁰: one-hot rows for `labeled` indices, zero rows elsewhere.
+pub fn seed_matrix(labels: &[usize], labeled: &[usize], n_classes: usize) -> Matrix {
+    let mut y0 = Matrix::zeros(labels.len(), n_classes);
+    for &i in labeled {
+        y0.set(i, labels[i], 1.0);
+    }
+    y0
+}
+
+/// Pick a labeled set: `count` indices (at least one per class when
+/// possible), seeded and deterministic. The paper uses 10% / 10 / 100
+/// labeled points depending on the experiment.
+pub fn choose_labeled(labels: &[usize], n_classes: usize, count: usize, seed: u64) -> Vec<usize> {
+    let n = labels.len();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut chosen = Vec::with_capacity(count);
+    // first pass: one per class
+    for class in 0..n_classes {
+        if chosen.len() >= count {
+            break;
+        }
+        if let Some(&i) = idx.iter().find(|&&i| labels[i] == class && !chosen.contains(&i)) {
+            chosen.push(i);
+        }
+    }
+    for &i in &idx {
+        if chosen.len() >= count {
+            break;
+        }
+        if !chosen.contains(&i) {
+            chosen.push(i);
+        }
+    }
+    chosen
+}
+
+/// Run label propagation: `Y ← α·P·Y + (1−α)·Y⁰`, `steps` times.
+pub fn propagate(op: &dyn TransitionOp, y0: &Matrix, cfg: &LpConfig) -> Matrix {
+    assert_eq!(y0.rows, op.n(), "Y0 rows must equal N");
+    let mut y = y0.clone();
+    for _ in 0..cfg.steps {
+        let mut py = op.matvec(&y);
+        py.scale_add(cfg.alpha, 1.0 - cfg.alpha, y0);
+        y = py;
+    }
+    y
+}
+
+/// Correct classification rate over the *unlabeled* points.
+pub fn ccr(y: &Matrix, labels: &[usize], labeled: &[usize]) -> f64 {
+    let is_labeled: std::collections::HashSet<usize> = labeled.iter().copied().collect();
+    let pred = y.row_argmax();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..labels.len() {
+        if is_labeled.contains(&i) {
+            continue;
+        }
+        total += 1;
+        if pred[i] == labels[i] {
+            correct += 1;
+        }
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// End-to-end convenience: seed, propagate, score.
+pub fn run_ssl(
+    op: &dyn TransitionOp,
+    labels: &[usize],
+    n_classes: usize,
+    labeled: &[usize],
+    cfg: &LpConfig,
+) -> (Matrix, f64) {
+    let y0 = seed_matrix(labels, labeled, n_classes);
+    let y = propagate(op, &y0, cfg);
+    let score = ccr(&y, labels, labeled);
+    (y, score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    struct DenseOp(Matrix);
+    impl TransitionOp for DenseOp {
+        fn n(&self) -> usize {
+            self.0.rows
+        }
+        fn matvec(&self, y: &Matrix) -> Matrix {
+            self.0.matmul(y)
+        }
+    }
+
+    #[test]
+    fn one_hot_and_seed() {
+        let y = one_hot_labels(&[0, 1, 1], 2);
+        assert_eq!(y.data, vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        let y0 = seed_matrix(&[0, 1, 1], &[1], 2);
+        assert_eq!(y0.data, vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn choose_labeled_covers_classes_and_is_deterministic() {
+        let labels: Vec<usize> = (0..50).map(|i| i % 3).collect();
+        let a = choose_labeled(&labels, 3, 6, 42);
+        let b = choose_labeled(&labels, 3, 6, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        for c in 0..3 {
+            assert!(a.iter().any(|&i| labels[i] == c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn propagation_on_two_blocks_classifies_perfectly() {
+        // two disconnected 3-cliques: LP must label each clique by its seed
+        let mut p = Matrix::zeros(6, 6);
+        for block in 0..2 {
+            for i in 0..3 {
+                for j in 0..3 {
+                    if i != j {
+                        p.set(block * 3 + i, block * 3 + j, 0.5);
+                    }
+                }
+            }
+        }
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let labeled = vec![0, 3];
+        let op = DenseOp(p);
+        let (_, score) =
+            run_ssl(&op, &labels, 2, &labeled, &LpConfig { alpha: 0.5, steps: 50 });
+        assert_eq!(score, 1.0);
+    }
+
+    #[test]
+    fn vdt_ssl_on_two_moons_beats_chance() {
+        let ds = synthetic::two_moons(200, 0.06, 5);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(8 * ds.n());
+        let labeled = choose_labeled(&ds.labels, 2, 20, 7);
+        let (_, score) = run_ssl(
+            &m,
+            &ds.labels,
+            2,
+            &labeled,
+            &LpConfig { alpha: 0.5, steps: 100 },
+        );
+        assert!(score > 0.8, "CCR {score}");
+    }
+
+    #[test]
+    fn ccr_ignores_labeled_points() {
+        let y = one_hot_labels(&[0, 1], 2);
+        // both predicted right, but index 0 is labeled -> only index 1 counts
+        assert_eq!(ccr(&y, &[0, 1], &[0]), 1.0);
+        // wrong on the only unlabeled point
+        assert_eq!(ccr(&y, &[0, 0], &[0]), 0.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! # vdt — Variational Dual-Tree transition-matrix approximation
+//!
+//! A production-grade reproduction of *"Variational Dual-Tree Framework for
+//! Large-Scale Transition Matrix Approximation"* (Amizadeh, Thiesson,
+//! Hauskrecht, UAI 2012).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! - **L3 (this crate)**: the paper's contribution — anchor partition tree,
+//!   marked-partition-tree block model, O(|B|) variational optimizer, greedy
+//!   symmetric refinement, O(|B|) matvec (Algorithm 1), plus the fast-kNN
+//!   and exact baselines, label propagation, Arnoldi spectral inference, a
+//!   threaded serving coordinator, and the experiment harness that regenerates
+//!   every table/figure of the paper.
+//! - **L2 (python/compile/model.py)**: the dense exact-model compute graphs
+//!   (transition matrix of Eq. 3, LP chunks of Eq. 15) in JAX.
+//! - **L1 (python/compile/kernels/)**: Pallas tiles for the dense hot spot.
+//!
+//! L1/L2 are AOT-lowered once (`make artifacts`) to HLO text which
+//! [`runtime`] loads and executes via PJRT; Python is never on the request
+//! path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use vdt::data::synthetic;
+//! use vdt::vdt::VdtModel;
+//! use vdt::labelprop::{self, TransitionOp};
+//!
+//! let ds = synthetic::digit1_like(1500, 7);
+//! let mut model = VdtModel::build(&ds.x, &Default::default());
+//! model.refine_to(6 * ds.n());                  // |B| = 6N
+//! let y = labelprop::one_hot_labels(&ds.labels, ds.n_classes);
+//! let yhat = model.matvec(&y);                  // Q·Y in O(|B|)
+//! assert_eq!(yhat.rows, ds.n());
+//! ```
+
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod exact;
+pub mod experiments;
+pub mod knn;
+pub mod labelprop;
+pub mod linkanalysis;
+pub mod runtime;
+pub mod sparse;
+pub mod spectral;
+pub mod tree;
+pub mod vdt;
+
+pub use crate::core::matrix::Matrix;
+pub use crate::labelprop::TransitionOp;

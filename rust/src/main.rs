@@ -1,0 +1,339 @@
+//! `vdt` — CLI for the Variational Dual-Tree framework.
+//!
+//! Leader entrypoint of the L3 coordinator: builds models, runs label
+//! propagation / spectral inference, regenerates every experiment of the
+//! paper (`vdt exp <id>`), serves models over the threaded coordinator,
+//! and self-tests the PJRT artifact path.
+//!
+//! (Offline build: argument parsing is a small in-tree parser, not clap.)
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use vdt::core::metrics::Timer;
+use vdt::data::{io, synthetic, Dataset};
+use vdt::exact::ExactModel;
+use vdt::experiments::{fig2, tables, Table};
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::{self, LpConfig, TransitionOp};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+const USAGE: &str = "\
+vdt — Variational Dual-Tree transition-matrix framework (UAI 2012 reproduction)
+
+USAGE: vdt <command> [--flag value ...]
+
+COMMANDS
+  build     build a transition model and print statistics
+            --dataset secstr|digit1|usps|alpha|ocr|moons  (digit1)
+            --n <int> (1500)  --method vdt|knn|exact|exact-xla (vdt)
+            --k <int> (2)  --seed <int> (0)  --csv <path>
+  lp        run label-propagation SSL and report CCR
+            (build flags +) --labeled <int> (0 = 10% of N)
+            --alpha <f> (0.01)  --steps <int> (500)
+  spectral  top Ritz values of P via Arnoldi
+            (build flags +) --m <krylov dim> (20)
+  exp       regenerate a paper experiment and write results/<id>.csv
+            ids: fig2abc fig2digit1 fig2usps table1 table2 all
+            --sizes 500,1000,...  --reps <int> (5)  --steps <int> (500)
+            --alpha-n <int> (100000)  --ocr-n <int> (50000)
+            --out <dir> (results)
+  selftest  verify the AOT artifact <-> PJRT round trip
+            --artifacts <dir> (artifacts)
+  serve     run the coordinator and a demo client burst
+            --dataset ... --n <int> (1500) --k <int> (6)
+            --requests <int> (32)
+  help      print this text
+";
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.replace('-', "_"), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: {v}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+}
+
+fn make_dataset(kind: &str, n: usize, seed: u64) -> Result<Dataset> {
+    Ok(match kind {
+        "secstr" => synthetic::secstr_like(n, seed),
+        "digit1" => synthetic::digit1_like(n, seed),
+        "usps" => synthetic::usps_like(n, seed),
+        "alpha" => synthetic::alpha_like(n, seed),
+        "ocr" => synthetic::ocr_like(n, seed),
+        "moons" => synthetic::two_moons(n, 0.08, seed),
+        other => return Err(anyhow!("unknown dataset {other}")),
+    })
+}
+
+fn build_op(method: &str, ds: &Dataset, k: usize) -> Result<Box<dyn TransitionOp>> {
+    Ok(match method {
+        "vdt" => {
+            let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+            if k > 2 {
+                m.refine_to(k * ds.n());
+            }
+            Box::new(m)
+        }
+        "knn" => Box::new(KnnGraph::build(&ds.x, &KnnConfig { k: k.max(1), ..Default::default() })),
+        "exact" => Box::new(ExactModel::build_dense(&ds.x, None)),
+        "exact-xla" => {
+            let rt = std::rc::Rc::new(vdt::runtime::Runtime::load_default()?);
+            Box::new(ExactModel::build_xla(&ds.x, None, rt)?)
+        }
+        other => return Err(anyhow!("unknown method {other}")),
+    })
+}
+
+fn print_and_save(t: &Table, out: &str, id: &str) {
+    println!("{}", t.render());
+    let path = format!("{out}/{id}.csv");
+    if let Err(e) = t.write_csv(&path) {
+        eprintln!("warn: could not write {path}: {e}");
+    } else {
+        println!("(saved {path})\n");
+    }
+}
+
+fn run_exp(id: &str, cfg: &fig2::ExpConfig, alpha_n: usize, ocr_n: usize, out: &str) -> Result<()> {
+    match id {
+        "fig2abc" | "fig2a" | "fig2b" | "fig2c" => {
+            let (a, b, c) = fig2::fig2abc(cfg);
+            print_and_save(&a, out, "fig2a");
+            print_and_save(&b, out, "fig2b");
+            print_and_save(&c, out, "fig2c");
+        }
+        "fig2digit1" | "fig2defg" => {
+            let (d, e, ff, g) = fig2::fig2_refinement(fig2::RefineDataset::Digit1, cfg);
+            print_and_save(&d, out, "fig2d");
+            print_and_save(&e, out, "fig2e");
+            print_and_save(&ff, out, "fig2f");
+            print_and_save(&g, out, "fig2g");
+        }
+        "fig2usps" | "fig2hijk" => {
+            let (h, i, j, k) = fig2::fig2_refinement(fig2::RefineDataset::Usps, cfg);
+            print_and_save(&h, out, "fig2h");
+            print_and_save(&i, out, "fig2i");
+            print_and_save(&j, out, "fig2j");
+            print_and_save(&k, out, "fig2k");
+        }
+        "table1" => {
+            let t = tables::table1(&cfg.sizes, cfg.seed);
+            print_and_save(&t, out, "table1");
+        }
+        "table2" => {
+            let t = tables::table2(alpha_n, ocr_n, &cfg.lp, cfg.seed);
+            print_and_save(&t, out, "table2");
+        }
+        "all" => {
+            for sub in ["fig2abc", "fig2digit1", "fig2usps", "table1", "table2"] {
+                run_exp(sub, cfg, alpha_n, ocr_n, out)?;
+            }
+        }
+        other => return Err(anyhow!("unknown experiment id {other}; see `vdt help`")),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..])?;
+
+    match cmd {
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        "build" => {
+            let n = args.get("n", 1500usize)?;
+            let seed = args.get("seed", 0u64)?;
+            let k = args.get("k", 2usize)?;
+            let method = args.get_str("method", "vdt");
+            let ds = match args.opt_str("csv") {
+                Some(path) => io::load_csv(&path)?,
+                None => make_dataset(&args.get_str("dataset", "digit1"), n, seed)?,
+            };
+            println!(
+                "dataset: {} (N={}, d={}, classes={})",
+                ds.name,
+                ds.n(),
+                ds.d(),
+                ds.n_classes
+            );
+            let t = Timer::start();
+            let op = build_op(&method, &ds, k)?;
+            println!("built {} in {:.1} ms", op.name(), t.ms());
+            if method == "vdt" {
+                let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+                if k > 2 {
+                    m.refine_to(k * ds.n());
+                }
+                println!(
+                    "σ = {:.4}   |B| = {}   ℓ(D) = {:.2}   memory ≈ {:.1} MiB",
+                    m.sigma(),
+                    m.num_blocks(),
+                    m.loglik(),
+                    m.memory_bytes() as f64 / (1024.0 * 1024.0)
+                );
+            }
+        }
+        "lp" => {
+            let n = args.get("n", 1500usize)?;
+            let seed = args.get("seed", 0u64)?;
+            let k = args.get("k", 2usize)?;
+            let labeled = args.get("labeled", 0usize)?;
+            let alpha = args.get("alpha", 0.01f32)?;
+            let steps = args.get("steps", 500usize)?;
+            let method = args.get_str("method", "vdt");
+            let ds = make_dataset(&args.get_str("dataset", "digit1"), n, seed)?;
+            let count = if labeled == 0 { (n / 10).max(2) } else { labeled };
+            let t = Timer::start();
+            let op = build_op(&method, &ds, k)?;
+            let build_ms = t.ms();
+            let chosen = labelprop::choose_labeled(&ds.labels, ds.n_classes, count, seed);
+            let t2 = Timer::start();
+            let (_, score) = labelprop::run_ssl(
+                op.as_ref(),
+                &ds.labels,
+                ds.n_classes,
+                &chosen,
+                &LpConfig { alpha, steps },
+            );
+            println!(
+                "{} on {}: build {:.1} ms, propagate {:.1} ms, CCR = {:.4} ({} labeled)",
+                op.name(),
+                ds.name,
+                build_ms,
+                t2.ms(),
+                score,
+                count
+            );
+        }
+        "spectral" => {
+            let n = args.get("n", 500usize)?;
+            let seed = args.get("seed", 0u64)?;
+            let k = args.get("k", 2usize)?;
+            let m = args.get("m", 20usize)?;
+            let method = args.get_str("method", "vdt");
+            let ds = make_dataset(&args.get_str("dataset", "moons"), n, seed)?;
+            let op = build_op(&method, &ds, k)?;
+            let r = vdt::spectral::arnoldi_eigenvalues(op.as_ref(), m, seed);
+            println!("top Ritz values of P ({}):", op.name());
+            for (i, (re, im)) in r.eigenvalues.iter().take(10).enumerate() {
+                println!(
+                    "  λ{i} = {re:.6} {} {:.6}i",
+                    if *im >= 0.0 { "+" } else { "-" },
+                    im.abs()
+                );
+            }
+        }
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .cloned()
+                .ok_or_else(|| anyhow!("exp needs an id; see `vdt help`"))?;
+            let mut cfg = fig2::ExpConfig {
+                reps: args.get("reps", 5usize)?,
+                ..Default::default()
+            };
+            cfg.lp.steps = args.get("steps", 500usize)?;
+            if let Some(s) = args.opt_str("sizes") {
+                cfg.sizes = s
+                    .split(',')
+                    .map(|p| p.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| anyhow!("bad --sizes: {e}"))?;
+            }
+            let alpha_n = args.get("alpha_n", 100_000usize)?;
+            let ocr_n = args.get("ocr_n", 50_000usize)?;
+            let out = args.get_str("out", "results");
+            run_exp(&id, &cfg, alpha_n, ocr_n, &out)?;
+        }
+        "selftest" => {
+            let dir = args.get_str("artifacts", "artifacts");
+            let rt = std::rc::Rc::new(vdt::runtime::Runtime::load(&dir)?);
+            println!("PJRT platform: {}", rt.platform());
+            rt.self_test()?;
+            println!("sq_norms round trip: OK");
+            let ds = synthetic::two_moons(100, 0.08, 7);
+            let xla = ExactModel::build_xla(&ds.x, Some(0.5), rt)?;
+            let dense = ExactModel::build_dense(&ds.x, Some(0.5));
+            let diff = xla.p.max_abs_diff(&dense.p);
+            println!("exact-xla vs exact-dense: max |ΔP| = {diff:.2e}");
+            if diff > 1e-4 {
+                return Err(anyhow!("XLA/dense mismatch {diff}"));
+            }
+            println!("selftest: OK");
+        }
+        "serve" => {
+            let n = args.get("n", 1500usize)?;
+            let k = args.get("k", 6usize)?;
+            let requests = args.get("requests", 32usize)?;
+            let ds = make_dataset(&args.get_str("dataset", "digit1"), n, 0)?;
+            let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+            m.refine_to(k * ds.n());
+            let handle = vdt::coordinator::Coordinator::spawn();
+            handle.register("default", Arc::new(m));
+            println!("coordinator up; issuing {requests} demo matvec requests");
+            let t = Timer::start();
+            let mut joins = Vec::new();
+            for c in 0..requests {
+                let h = handle.clone();
+                joins.push(std::thread::spawn(move || {
+                    let y = vdt::Matrix::from_fn(n, 1, move |r, _| ((r + c) % 3) as f32);
+                    h.matvec("default", y).unwrap()
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+            let (served, cols, batches) = handle.stats();
+            println!(
+                "served {served} requests ({cols} columns) in {batches} fused batches, {:.1} ms total",
+                t.ms()
+            );
+            handle.shutdown();
+        }
+        other => {
+            eprintln!("unknown command {other}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! `artifacts/manifest.tsv` schema — the contract between
+//! `python/compile/aot.py` (producer) and [`super::Runtime`] (consumer).
+//!
+//! Format (this build is offline, so no serde/JSON; aot.py also writes a
+//! manifest.json for humans):
+//!
+//! ```text
+//! version	1
+//! lp_chunk_steps	10
+//! transition_dim	512
+//! lp_classes	4
+//! artifact	<name>	<kind>	<path>	<n>	<d>	<c>	<steps>
+//! ...
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    /// LP updates folded into one `lp_chunk` dispatch.
+    pub lp_chunk_steps: usize,
+    /// Feature dimension all `transition` artifacts are padded to.
+    pub transition_dim: usize,
+    /// Class columns all `lp_chunk`/`matvec` artifacts are padded to.
+    pub lp_classes: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+/// One lowered HLO-text program.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// `transition` | `lp_chunk` | `matvec` | `sq_norms`.
+    pub kind: String,
+    /// File name relative to the artifacts directory.
+    pub path: String,
+    pub n: usize,
+    pub d: usize,
+    pub c: usize,
+    pub steps: usize,
+}
+
+impl Manifest {
+    /// Parse the TSV text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest {
+            version: 0,
+            lp_chunk_steps: 0,
+            transition_dim: 0,
+            lp_classes: 0,
+            artifacts: Vec::new(),
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let key = fields[0];
+            let val = |i: usize| -> Result<&str> {
+                fields
+                    .get(i)
+                    .copied()
+                    .ok_or_else(|| anyhow!("line {lineno}: missing field {i}"))
+            };
+            match key {
+                "version" => m.version = val(1)?.parse().context("version")?,
+                "lp_chunk_steps" => {
+                    m.lp_chunk_steps = val(1)?.parse().context("lp_chunk_steps")?
+                }
+                "transition_dim" => {
+                    m.transition_dim = val(1)?.parse().context("transition_dim")?
+                }
+                "lp_classes" => m.lp_classes = val(1)?.parse().context("lp_classes")?,
+                "artifact" => {
+                    m.artifacts.push(ArtifactEntry {
+                        name: val(1)?.to_string(),
+                        kind: val(2)?.to_string(),
+                        path: val(3)?.to_string(),
+                        n: val(4)?.parse().context("n")?,
+                        d: val(5)?.parse().context("d")?,
+                        c: val(6)?.parse().context("c")?,
+                        steps: val(7)?.parse().context("steps")?,
+                    });
+                }
+                other => return Err(anyhow!("line {lineno}: unknown key {other}")),
+            }
+        }
+        if m.version != 1 {
+            return Err(anyhow!("unsupported manifest version {}", m.version));
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    /// Smallest artifact of `kind` with `n >= needed`, if any.
+    pub fn pick(&self, kind: &str, needed: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= needed)
+            .min_by_key(|a| a.n)
+    }
+
+    /// Largest supported `n` for a kind.
+    pub fn max_n(&self, kind: &str) -> usize {
+        self.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.n).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::parse(
+            "version\t1\nlp_chunk_steps\t10\ntransition_dim\t512\nlp_classes\t4\n\
+             artifact\tt256\ttransition\tt256.hlo.txt\t256\t512\t0\t0\n\
+             artifact\tt1024\ttransition\tt1024.hlo.txt\t1024\t512\t0\t0\n\
+             artifact\tm256\tmatvec\tm256.hlo.txt\t256\t0\t4\t0\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_fields() {
+        let m = sample();
+        assert_eq!(m.lp_chunk_steps, 10);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[2].c, 4);
+    }
+
+    #[test]
+    fn pick_smallest_fitting() {
+        let m = sample();
+        assert_eq!(m.pick("transition", 100).unwrap().n, 256);
+        assert_eq!(m.pick("transition", 257).unwrap().n, 1024);
+        assert!(m.pick("transition", 5000).is_none());
+        assert!(m.pick("lp_chunk", 1).is_none());
+    }
+
+    #[test]
+    fn max_n_per_kind() {
+        let m = sample();
+        assert_eq!(m.max_n("transition"), 1024);
+        assert_eq!(m.max_n("matvec"), 256);
+        assert_eq!(m.max_n("nope"), 0);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_keys() {
+        assert!(Manifest::parse("version\t2\n").is_err());
+        assert!(Manifest::parse("version\t1\nbogus\t3\n").is_err());
+    }
+}

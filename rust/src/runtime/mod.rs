@@ -1,0 +1,190 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts and execute them
+//! from the Rust hot path (the L1/L2 ↔ L3 bridge).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! because the crate's xla_extension 0.5.1 rejects jax≥0.5 serialized
+//! protos (64-bit instruction ids).
+//!
+//! Executables are compiled on first use and cached. The runtime is
+//! intentionally `!Sync` (the PJRT wrapper types are not thread-safe);
+//! the coordinator owns it from a single worker thread.
+
+pub mod artifacts;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::core::Matrix;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+
+/// PJRT client + artifact registry + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Build an f32 literal from a dense matrix (row-major).
+fn literal_of(m: &Matrix) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&m.data);
+    Ok(lit.reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain manifest.json).
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: `$VDT_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("VDT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for a manifest entry.
+    fn executable(&self, entry: &ArtifactEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&entry.name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}", name = entry.name))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact; all entry points return 1-tuples of f32 arrays.
+    fn run(&self, entry: &ArtifactEntry, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", entry.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {}: {e}", entry.name))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple {}: {e}", entry.name))?;
+        Ok(out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {}: {e}", entry.name))?)
+    }
+
+    /// Startup self-test: run the tiny `sq_norms` artifact and check the
+    /// numbers — proves the whole AOT → PJRT round trip.
+    pub fn self_test(&self) -> Result<()> {
+        let entry = self
+            .manifest
+            .pick("sq_norms", 1)
+            .ok_or_else(|| anyhow!("no sq_norms artifact"))?
+            .clone();
+        let (n, d) = (entry.n, entry.d);
+        let x = Matrix::from_fn(n, d, |r, c| (r * d + c) as f32 * 0.1);
+        let got = self.run(&entry, &[literal_of(&x)?])?;
+        for (i, &v) in got.iter().enumerate() {
+            let want: f32 = x.row(i).iter().map(|&a| a * a).sum();
+            if (v - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                return Err(anyhow!("self-test mismatch at {i}: {v} vs {want}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense transition matrix P (Eq. 3) of the *padded* artifact size.
+    /// `x` is padded: features with zeros (exact), rows with far-away
+    /// sentinels (kernel mass underflows to 0 for real rows). Returns
+    /// (P_padded, n_padded); slice with `Matrix::sliced(n, n)` if the
+    /// unpadded P is wanted.
+    pub fn transition_padded(&self, x: &Matrix, sigma: f32) -> Result<(Matrix, usize)> {
+        let entry = self
+            .manifest
+            .pick("transition", x.rows)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no transition artifact for N={} (max {})",
+                    x.rows,
+                    self.manifest.max_n("transition")
+                )
+            })?
+            .clone();
+        if x.cols > entry.d {
+            return Err(anyhow!("d={} exceeds artifact dim {}", x.cols, entry.d));
+        }
+        let mut xp = x.padded(entry.n, entry.d);
+        // sentinel rows: far from the data and from each other
+        let max_norm = x
+            .data
+            .iter()
+            .fold(0f32, |acc, &v| acc.max(v.abs()))
+            .max(1.0);
+        for (i, r) in (x.rows..entry.n).enumerate() {
+            xp.set(r, 0, max_norm * 1e4 * (i + 1) as f32);
+        }
+        let out = self.run(
+            &entry,
+            &[literal_of(&xp)?, xla::Literal::scalar(sigma)],
+        )?;
+        Ok((Matrix::from_vec(out, entry.n, entry.n), entry.n))
+    }
+
+    /// `lp_chunk_steps` LP updates on a padded square P. `y`/`y0` must be
+    /// `n_padded x lp_classes`.
+    pub fn lp_chunk(&self, p: &Matrix, y: &Matrix, y0: &Matrix, alpha: f32) -> Result<Matrix> {
+        assert_eq!(p.rows, p.cols, "P must be square");
+        let entry = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "lp_chunk" && a.n == p.rows)
+            .ok_or_else(|| anyhow!("no lp_chunk artifact for padded N={}", p.rows))?
+            .clone();
+        assert_eq!(y.cols, entry.c, "Y must be padded to {} classes", entry.c);
+        let out = self.run(
+            &entry,
+            &[literal_of(p)?, literal_of(y)?, literal_of(y0)?, xla::Literal::scalar(alpha)],
+        )?;
+        Ok(Matrix::from_vec(out, entry.n, entry.c))
+    }
+
+    /// Single dense multiplication P·Y on a padded square P.
+    pub fn matvec(&self, p: &Matrix, y: &Matrix) -> Result<Matrix> {
+        let entry = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "matvec" && a.n == p.rows)
+            .ok_or_else(|| anyhow!("no matvec artifact for padded N={}", p.rows))?
+            .clone();
+        assert_eq!(y.cols, entry.c, "Y must be padded to {} classes", entry.c);
+        let out = self.run(&entry, &[literal_of(p)?, literal_of(y)?])?;
+        Ok(Matrix::from_vec(out, entry.n, entry.c))
+    }
+
+    /// Steps folded into one lp_chunk dispatch.
+    pub fn lp_chunk_steps(&self) -> usize {
+        self.manifest.lp_chunk_steps
+    }
+
+    /// Class padding width of the lp/matvec artifacts.
+    pub fn lp_classes(&self) -> usize {
+        self.manifest.lp_classes
+    }
+}

@@ -1,0 +1,145 @@
+//! Compressed-sparse-row matrix — the storage behind the kNN baseline's
+//! sparse transition matrix (k nonzeros per row, O(kN) memory and matvec,
+//! matching the paper's Table 1 for "Fast kNN").
+
+use crate::core::Matrix;
+
+/// CSR matrix of `f32` with `usize` row pointers and `u32` column indices.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// len rows+1
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from per-row (col, value) lists. Each row's entries are sorted
+    /// by column; duplicate columns within a row are rejected.
+    pub fn from_rows(rows: usize, cols: usize, row_entries: &[Vec<(u32, f32)>]) -> Csr {
+        assert_eq!(row_entries.len(), rows);
+        let nnz: usize = row_entries.iter().map(|r| r.len()).sum();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for entries in row_entries {
+            let mut sorted = entries.clone();
+            sorted.sort_unstable_by_key(|e| e.0);
+            for w in sorted.windows(2) {
+                assert_ne!(w[0].0, w[1].0, "duplicate column in CSR row");
+            }
+            for (c, v) in sorted {
+                assert!((c as usize) < cols, "column out of range");
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Normalize every row to sum 1 (rows with zero mass are left as-is).
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+            let s: f32 = self.values[a..b].iter().sum();
+            if s > 0.0 {
+                for v in &mut self.values[a..b] {
+                    *v /= s;
+                }
+            }
+        }
+    }
+
+    /// `self @ dense` for a dense `cols x c` right-hand side.
+    pub fn matmul_dense(&self, y: &Matrix) -> Matrix {
+        assert_eq!(self.cols, y.rows, "shape mismatch");
+        let c = y.cols;
+        let mut out = Matrix::zeros(self.rows, c);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let out_row = &mut out.data[r * c..(r + 1) * c];
+            for (&j, &v) in idx.iter().zip(vals.iter()) {
+                let y_row = y.row(j as usize);
+                for (o, &yv) in out_row.iter_mut().zip(y_row.iter()) {
+                    *o += v * yv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize as dense (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            for (&j, &v) in idx.iter().zip(vals.iter()) {
+                m.set(r, j as usize, v);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_rows(
+            3,
+            4,
+            &[vec![(1, 2.0), (3, 1.0)], vec![], vec![(0, 0.5), (2, 0.5)]],
+        )
+    }
+
+    #[test]
+    fn construction_and_rows() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        let (idx, vals) = m.row(0);
+        assert_eq!(idx, &[1, 3]);
+        assert_eq!(vals, &[2.0, 1.0]);
+        assert_eq!(m.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn normalize_rows_sums_to_one() {
+        let mut m = sample();
+        m.normalize_rows();
+        let (_, vals) = m.row(0);
+        assert!((vals.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // empty row untouched
+        assert_eq!(m.row(1).1.len(), 0);
+    }
+
+    #[test]
+    fn matmul_matches_dense() {
+        let m = sample();
+        let y = Matrix::from_fn(4, 2, |r, c| (r * 2 + c) as f32);
+        let got = m.matmul_dense(&y);
+        let want = m.to_dense().matmul(&y);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_column_rejected() {
+        Csr::from_rows(1, 3, &[vec![(1, 1.0), (1, 2.0)]]);
+    }
+}

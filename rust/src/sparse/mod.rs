@@ -1,0 +1,5 @@
+//! Sparse matrix substrate for the kNN baseline.
+
+pub mod csr;
+
+pub use csr::Csr;

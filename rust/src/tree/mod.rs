@@ -1,0 +1,178 @@
+//! The shared partition tree (anchor tree, Moore 2000) with the sufficient
+//! statistics of Eq. (9): `S1(A) = Σ_{x∈A} x`, `S2(A) = Σ_{x∈A} xᵀx`.
+//!
+//! Data points and kernels share one tree (paper §3.1). Leaves are
+//! singletons with `leaf id == point index`; internal nodes are appended
+//! during construction, so a tree over `n` points has exactly `2n-1` nodes
+//! and `root() == 2n-2` (for `n > 1`).
+//!
+//! Every node stores:
+//! - `count`, `s1`, `s2` — the block-distance statistics (Eq. 9 gives
+//!   `D²_AB` in O(d) from these),
+//! - `radius` — an upper bound on the distance from the node *centroid*
+//!   (`s1/count`) to any member point, valid for triangle-inequality
+//!   pruning in the fast-kNN baseline.
+
+pub mod build;
+
+pub use build::{build_tree, BuildConfig};
+
+/// Sentinel for "no node".
+pub const NONE: u32 = u32::MAX;
+
+/// Arena-allocated binary partition tree over `n` points in `R^d`.
+pub struct PartitionTree {
+    pub n: usize,
+    pub d: usize,
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    pub parent: Vec<u32>,
+    pub count: Vec<u32>,
+    /// Σ xᵀx over the node's points.
+    pub s2: Vec<f64>,
+    /// Upper bound on max distance from the node centroid to its points.
+    pub radius: Vec<f32>,
+    /// Flat `[num_nodes * d]` array of Σ x per node.
+    pub s1: Vec<f32>,
+}
+
+impl PartitionTree {
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.count.len()
+    }
+
+    /// Root node id (the last internal node created).
+    #[inline]
+    pub fn root(&self) -> u32 {
+        (self.num_nodes() - 1) as u32
+    }
+
+    #[inline]
+    pub fn is_leaf(&self, a: u32) -> bool {
+        self.left[a as usize] == NONE
+    }
+
+    #[inline]
+    pub fn s1_of(&self, a: u32) -> &[f32] {
+        let a = a as usize;
+        &self.s1[a * self.d..(a + 1) * self.d]
+    }
+
+    /// Sibling of `a` (NONE for the root).
+    #[inline]
+    pub fn sibling(&self, a: u32) -> u32 {
+        let p = self.parent[a as usize];
+        if p == NONE {
+            return NONE;
+        }
+        if self.left[p as usize] == a {
+            self.right[p as usize]
+        } else {
+            self.left[p as usize]
+        }
+    }
+
+    /// Block-sum squared distance `D²_AB` of Eq. (9), in O(d).
+    ///
+    /// `D²_AB = |A|·S2(B) + |B|·S2(A) − 2·S1(A)ᵀS1(B)`; clamped at 0
+    /// against float cancellation for near-identical blocks.
+    pub fn d2_between(&self, a: u32, b: u32) -> f64 {
+        let (ca, cb) = (self.count[a as usize] as f64, self.count[b as usize] as f64);
+        let dot = crate::core::vecmath::dot(self.s1_of(a), self.s1_of(b));
+        (ca * self.s2[b as usize] + cb * self.s2[a as usize] - 2.0 * dot).max(0.0)
+    }
+
+    /// All point indices under node `a` (leaves carry their point index).
+    pub fn leaves_under(&self, a: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count[a as usize] as usize);
+        let mut stack = vec![a];
+        while let Some(v) = stack.pop() {
+            if self.is_leaf(v) {
+                out.push(v);
+            } else {
+                stack.push(self.left[v as usize]);
+                stack.push(self.right[v as usize]);
+            }
+        }
+        out
+    }
+
+    /// Depth of node `a` (root = 0). O(depth).
+    pub fn depth(&self, mut a: u32) -> usize {
+        let mut d = 0;
+        while self.parent[a as usize] != NONE {
+            a = self.parent[a as usize];
+            d += 1;
+        }
+        d
+    }
+
+    /// Structural + statistical invariants; used by tests and debug builds.
+    pub fn validate(&self, x: &crate::core::Matrix) -> Result<(), String> {
+        let nn = self.num_nodes();
+        if nn != 2 * self.n - 1 {
+            return Err(format!("expected {} nodes, got {nn}", 2 * self.n - 1));
+        }
+        for a in 0..nn as u32 {
+            let ai = a as usize;
+            if self.is_leaf(a) {
+                if ai >= self.n {
+                    return Err(format!("leaf id {ai} >= n"));
+                }
+                if self.count[ai] != 1 {
+                    return Err(format!("leaf {ai} count {}", self.count[ai]));
+                }
+            } else {
+                let (l, r) = (self.left[ai] as usize, self.right[ai] as usize);
+                if self.parent[l] != a || self.parent[r] != a {
+                    return Err(format!("parent link broken at {ai}"));
+                }
+                if self.count[ai] != self.count[l] + self.count[r] {
+                    return Err(format!("count mismatch at {ai}"));
+                }
+            }
+        }
+        // statistics & radius: check against explicit membership
+        for a in 0..nn as u32 {
+            let ai = a as usize;
+            let leaves = self.leaves_under(a);
+            if leaves.len() != self.count[ai] as usize {
+                return Err(format!("leaves_under mismatch at {ai}"));
+            }
+            let mut s1 = vec![0f64; self.d];
+            let mut s2 = 0f64;
+            for &p in &leaves {
+                for (acc, &v) in s1.iter_mut().zip(x.row(p as usize)) {
+                    *acc += v as f64;
+                }
+                s2 += crate::core::vecmath::sq_norm(x.row(p as usize));
+            }
+            for (j, &v) in self.s1_of(a).iter().enumerate() {
+                if (v as f64 - s1[j]).abs() > 1e-3 * (1.0 + s1[j].abs()) {
+                    return Err(format!("s1 mismatch at {ai}[{j}]"));
+                }
+            }
+            if (self.s2[ai] - s2).abs() > 1e-6 * (1.0 + s2.abs()) {
+                return Err(format!("s2 mismatch at {ai}"));
+            }
+            // radius must bound centroid->point distances
+            let c = self.count[ai] as f64;
+            for &p in &leaves {
+                let d = crate::core::vecmath::sq_dist_to_centroid(
+                    x.row(p as usize),
+                    self.s1_of(a),
+                    c,
+                )
+                .sqrt();
+                if d > self.radius[ai] as f64 + 1e-3 {
+                    return Err(format!(
+                        "radius bound violated at {ai}: {d} > {}",
+                        self.radius[ai]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,259 @@
+//! Inductive extension — the paper's stated future direction ("adding an
+//! inductive feature to our framework to deal with new examples").
+//!
+//! A fitted [`VdtModel`] is transductive: Q is defined over the N training
+//! points. For an unseen query x we derive its outgoing transition row the
+//! same way the training rows get theirs, *without* rebuilding anything:
+//!
+//! 1. Route x down the partition tree by nearest-centroid descent; the
+//!    visited path plays the role of the leaf-to-root path a training
+//!    point would have (so x inherits a block structure B(x)).
+//! 2. For every mark (A, B) on that path, give x the block's kernel-node
+//!    target B with the softmax weight of the same variational form used
+//!    by the optimizer: G_xB = −D²_xB/(2σ²|B|), where
+//!    D²_xB = Σ_{m∈B} ||x − m||² = |B|·xᵀx + S2(B) − 2·xᵀS1(B) (the Eq. 9
+//!    factorization specialized to a single data point — O(d) per block).
+//! 3. Normalize over the path with the same hierarchical-softmax
+//!    recursion: the per-row partition function reuses the training-time
+//!    log Z of the subtrees *below* the path nodes... which for a single
+//!    external row degenerates to a flat softmax over B(x) because x
+//!    contributes no nested constraints — exactly Eq. (3) restricted to
+//!    block-averaged targets.
+//!
+//! The result is a distribution over tree nodes; [`InductiveRow::expand`]
+//! pushes it to the N points (uniform within a kernel block, consistent
+//! with the block-sharing semantics), and [`predict_labels`] uses it for
+//! out-of-sample label prediction — inductive SSL on top of a fitted
+//! transductive model.
+
+use crate::core::vecmath::{logsumexp, sq_norm};
+use crate::core::Matrix;
+use crate::tree::PartitionTree;
+
+use super::model::VdtModel;
+
+/// Sparse outgoing transition row of an unseen point: kernel tree nodes
+/// with probabilities (summing to 1).
+#[derive(Clone, Debug)]
+pub struct InductiveRow {
+    /// (kernel node, probability mass assigned to the whole block).
+    pub targets: Vec<(u32, f64)>,
+}
+
+impl InductiveRow {
+    /// Expand to a dense length-N row (mass uniform within each block).
+    pub fn expand(&self, tree: &PartitionTree) -> Vec<f32> {
+        let mut row = vec![0f32; tree.n];
+        for &(node, mass) in &self.targets {
+            let leaves = tree.leaves_under(node);
+            let per = (mass / leaves.len() as f64) as f32;
+            for &leaf in &leaves {
+                row[leaf as usize] += per;
+            }
+        }
+        row
+    }
+
+    /// Expected value of per-point scores under this row: Σ_j p_xj y_j —
+    /// computed in O(|targets|) from per-node sums (CollectUp-style),
+    /// without expanding.
+    pub fn score(&self, tree: &PartitionTree, y: &Matrix) -> Vec<f64> {
+        let c = y.cols;
+        // per-node column sums for just the touched nodes
+        let mut out = vec![0f64; c];
+        for &(node, mass) in &self.targets {
+            let leaves = tree.leaves_under(node);
+            let inv = mass / leaves.len() as f64;
+            for &leaf in &leaves {
+                for k in 0..c {
+                    out[k] += inv * y.get(leaf as usize, k) as f64;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `D²_xB = |B|·xᵀx + S2(B) − 2·xᵀS1(B)` — Eq. (9) with A = {x}.
+fn d2_point_block(tree: &PartitionTree, x: &[f32], node: u32) -> f64 {
+    let nb = tree.count[node as usize] as f64;
+    let dot = crate::core::vecmath::dot(x, tree.s1_of(node));
+    (nb * sq_norm(x) + tree.s2[node as usize] - 2.0 * dot).max(0.0)
+}
+
+/// Route `x` root→leaf by nearest-centroid descent; returns the path
+/// (root first, leaf last).
+pub fn route(tree: &PartitionTree, x: &[f32]) -> Vec<u32> {
+    let mut path = Vec::with_capacity(32);
+    let mut node = tree.root();
+    loop {
+        path.push(node);
+        if tree.is_leaf(node) {
+            break;
+        }
+        let (l, r) = (tree.left[node as usize], tree.right[node as usize]);
+        let dl = crate::core::vecmath::sq_dist_to_centroid(
+            x,
+            tree.s1_of(l),
+            tree.count[l as usize] as f64,
+        );
+        let dr = crate::core::vecmath::sq_dist_to_centroid(
+            x,
+            tree.s1_of(r),
+            tree.count[r as usize] as f64,
+        );
+        node = if dl <= dr { l } else { r };
+    }
+    path
+}
+
+/// Outgoing transition row of an unseen `x` under a fitted model.
+pub fn inductive_row(model: &VdtModel, x: &[f32]) -> InductiveRow {
+    let tree = &model.tree;
+    assert_eq!(x.len(), tree.d, "query dimension mismatch");
+    let sigma = model.sigma();
+    let path = route(tree, x);
+    // collect the marks along the adopted path (x behaves like a point in
+    // the leaf it routed to)
+    let mut kernels: Vec<u32> = Vec::new();
+    for &a in &path {
+        for &bi in &model.partition.marks[a as usize] {
+            kernels.push(model.partition.blocks[bi as usize].kernel);
+        }
+    }
+    if kernels.is_empty() {
+        // degenerate single-point model
+        return InductiveRow { targets: vec![] };
+    }
+    // flat softmax over the path blocks with block-averaged energies:
+    // weight(B) ∝ |B| · exp(−D²_xB / (2σ²|B|))   (mass for the whole block)
+    let logits: Vec<f64> = kernels
+        .iter()
+        .map(|&b| {
+            let nb = tree.count[b as usize] as f64;
+            let g = -d2_point_block(tree, x, b) / (2.0 * sigma * sigma * nb);
+            nb.ln() + g
+        })
+        .collect();
+    let z = logsumexp(&logits);
+    let targets = kernels
+        .into_iter()
+        .zip(logits)
+        .map(|(b, l)| (b, (l - z).exp()))
+        .collect();
+    InductiveRow { targets }
+}
+
+/// Inductive label prediction: score each class by the expected label
+/// value under the query's transition row; returns (class, scores).
+pub fn predict_label(model: &VdtModel, x: &[f32], y: &Matrix) -> (usize, Vec<f64>) {
+    let row = inductive_row(model, x);
+    let scores = row.score(&model.tree, y);
+    let mut best = 0;
+    for (k, &s) in scores.iter().enumerate() {
+        if s > scores[best] {
+            best = k;
+        }
+    }
+    (best, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::labelprop;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn fitted(n: usize, seed: u64) -> (crate::data::Dataset, VdtModel) {
+        let ds = synthetic::two_moons(n, 0.07, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(6 * n);
+        (ds, m)
+    }
+
+    #[test]
+    fn row_is_a_distribution() {
+        let (ds, m) = fitted(120, 1);
+        for i in (0..ds.n()).step_by(17) {
+            let row = inductive_row(&m, ds.x.row(i));
+            let expanded = row.expand(&m.tree);
+            let sum: f64 = expanded.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "query {i}: sum {sum}");
+            assert!(expanded.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn route_reaches_a_leaf_near_the_query() {
+        let (ds, m) = fitted(100, 2);
+        for i in (0..100).step_by(13) {
+            let path = route(&m.tree, ds.x.row(i));
+            let leaf = *path.last().unwrap();
+            assert!(m.tree.is_leaf(leaf));
+            // the routed leaf should be close (not necessarily identical —
+            // centroid descent is greedy): within the 25th percentile of
+            // distances to the query
+            let d_leaf =
+                crate::core::vecmath::sq_dist(ds.x.row(i), ds.x.row(leaf as usize));
+            let mut dists: Vec<f64> = (0..100)
+                .map(|j| crate::core::vecmath::sq_dist(ds.x.row(i), ds.x.row(j)))
+                .collect();
+            dists.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            assert!(d_leaf <= dists[25], "routed leaf too far: {d_leaf}");
+        }
+    }
+
+    #[test]
+    fn inductive_prediction_matches_labels_on_held_out_moons() {
+        // train on 300, predict 100 held-out points inductively
+        let train = synthetic::two_moons(300, 0.07, 3);
+        let test = synthetic::two_moons(100, 0.07, 99);
+        let mut m = VdtModel::build(&train.x, &VdtConfig::default());
+        m.refine_to(8 * train.n());
+        // propagate labels transductively first
+        let labeled = labelprop::choose_labeled(&train.labels, 2, 20, 4);
+        let (y, _) = labelprop::run_ssl(
+            &m,
+            &train.labels,
+            2,
+            &labeled,
+            &labelprop::LpConfig { alpha: 0.5, steps: 100 },
+        );
+        // then predict held-out points from the propagated scores
+        let mut correct = 0;
+        for i in 0..test.n() {
+            let (pred, _) = predict_label(&m, test.x.row(i), &y);
+            if pred == test.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.n() as f64;
+        assert!(acc > 0.85, "inductive accuracy {acc}");
+    }
+
+    #[test]
+    fn score_agrees_with_expanded_row() {
+        let (ds, m) = fitted(60, 5);
+        let y = labelprop::one_hot_labels(&ds.labels, 2);
+        let row = inductive_row(&m, ds.x.row(7));
+        let fast = row.score(&m.tree, &y);
+        let expanded = row.expand(&m.tree);
+        for k in 0..2 {
+            let want: f64 = expanded
+                .iter()
+                .enumerate()
+                .map(|(j, &p)| p as f64 * y.get(j, k) as f64)
+                .sum();
+            // expand() rounds per-leaf mass to f32; score() stays f64
+            assert!((fast[k] - want).abs() < 1e-5, "class {k}: {} vs {want}", fast[k]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dimension_mismatch_panics() {
+        let (_, m) = fitted(30, 6);
+        let _ = inductive_row(&m, &[0.0; 5]);
+    }
+}

@@ -1,0 +1,26 @@
+//! The Variational Dual-Tree model — the paper's contribution.
+//!
+//! - [`partition`]: block partitions of P conforming to the shared tree,
+//!   stored as a marked partition tree (MPT, paper §3.1).
+//! - [`optimize`]: the O(|B|) constrained maximization of the variational
+//!   lower bound ℓ(D), Eq. (7) s.t. Eq. (16) (Thiesson–Kim Algorithm 3 as a
+//!   hierarchical-softmax recursion; DESIGN.md §4.2).
+//! - [`sigma`]: closed-form bandwidth updates (Eqs. 12/14) and the
+//!   alternating fit loop (paper §4.2).
+//! - [`matvec`]: Algorithm 1 — Q·Y in O((N+|B|)·C).
+//! - [`refine`]: greedy symmetric refinement driven by the closed-form
+//!   horizontal gain Δʰ (Eqs. 17–19, paper §4.4).
+//! - [`model`]: [`VdtModel`], the user-facing assembly of all of the above.
+//! - [`induct`]: out-of-sample (inductive) transition rows — the paper's
+//!   stated future-work extension.
+
+pub mod induct;
+pub mod matvec;
+pub mod model;
+pub mod optimize;
+pub mod partition;
+pub mod refine;
+pub mod sigma;
+
+pub use model::{VdtConfig, VdtModel};
+pub use partition::{Block, BlockPartition};

@@ -1,0 +1,175 @@
+//! [`VdtModel`] — the user-facing Variational Dual-Tree model.
+//!
+//! `build` = anchor tree + coarsest partition + alternating (q, σ) fit:
+//! `O(N^1.5 log N + |B|)` construction, `O(|B|)` memory (Table 1).
+//! `refine_to` grows |B| greedily (paper §4.4); `matvec` is Algorithm 1.
+
+use crate::core::Matrix;
+use crate::tree::{build_tree, BuildConfig, PartitionTree};
+
+use super::matvec::{matvec, MatvecScratch};
+use super::optimize::loglik;
+use super::partition::BlockPartition;
+use super::refine::Refiner;
+use super::sigma::fit_alternating;
+
+/// Configuration for [`VdtModel::build`].
+#[derive(Clone, Debug)]
+pub struct VdtConfig {
+    pub tree: BuildConfig,
+    /// Fixed bandwidth; `None` learns σ by the paper's alternating scheme.
+    pub sigma: Option<f64>,
+    /// Relative σ convergence tolerance of the alternating fit.
+    pub sigma_tol: f64,
+    /// Maximum alternating iterations.
+    pub sigma_max_iters: usize,
+}
+
+impl Default for VdtConfig {
+    fn default() -> Self {
+        VdtConfig {
+            // the VDT model never reads node radii — skip the exact-radius
+            // post-pass (it cost ~25-35% of construction at N=16k; §Perf)
+            tree: BuildConfig { exact_radii: false, ..BuildConfig::default() },
+            sigma: None,
+            sigma_tol: 1e-4,
+            sigma_max_iters: 50,
+        }
+    }
+}
+
+/// A fitted variational dual-tree transition model Q ≈ P.
+pub struct VdtModel {
+    pub tree: PartitionTree,
+    pub partition: BlockPartition,
+    sigma: f64,
+    refiner: Option<Refiner>,
+    /// Mutex (not RefCell) so fitted models are `Sync` and can be shared
+    /// with the coordinator service behind an `Arc`.
+    scratch: std::sync::Mutex<MatvecScratch>,
+}
+
+impl VdtModel {
+    /// Build the coarsest model (|B| = 2(N−1)) and fit (q, σ).
+    pub fn build(x: &Matrix, cfg: &VdtConfig) -> VdtModel {
+        let tree = build_tree(x, &cfg.tree);
+        let mut partition = BlockPartition::coarsest(&tree);
+        let sigma = if let Some(s) = cfg.sigma {
+            // fixed bandwidth: single q-optimization, no σ updates
+            let mut scratch = super::optimize::OptScratch::default();
+            super::optimize::optimize_q(&tree, &mut partition, s, &mut scratch);
+            s
+        } else {
+            fit_alternating(&tree, &mut partition, None, cfg.sigma_tol, cfg.sigma_max_iters)
+                .sigma
+        };
+        VdtModel {
+            tree,
+            partition,
+            sigma,
+            refiner: None,
+            scratch: std::sync::Mutex::new(MatvecScratch::default()),
+        }
+    }
+
+    /// Number of variational parameters |B| (off-diagonal blocks).
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.partition.num_blocks()
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.tree.n
+    }
+
+    /// Learned (or fixed) kernel bandwidth.
+    #[inline]
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Current variational lower bound ℓ(D) (Eq. 7).
+    pub fn loglik(&self) -> f64 {
+        loglik(&self.tree, &self.partition, self.sigma)
+    }
+
+    /// Greedy symmetric refinement to at least `target` blocks; see
+    /// [`super::refine`]. Returns the number of split operations.
+    pub fn refine_to(&mut self, target: usize) -> usize {
+        if self.refiner.is_none() {
+            self.refiner = Some(Refiner::new(&self.tree, &self.partition, self.sigma));
+        }
+        let refiner = self.refiner.as_mut().unwrap();
+        refiner.refine_to(&self.tree, &mut self.partition, target)
+    }
+
+    /// Ŷ = Q·Y via Algorithm 1, O((N+|B|)·C).
+    pub fn matvec(&self, y: &Matrix) -> Matrix {
+        matvec(&self.tree, &self.partition, y, &mut self.scratch.lock().unwrap())
+    }
+
+    /// Dense materialization of Q (tests / tiny N).
+    pub fn materialize(&self) -> Matrix {
+        self.partition.materialize(&self.tree)
+    }
+
+    /// Approximate resident memory of the model in bytes (for the paper's
+    /// memory-vs-N comparisons): tree statistics + blocks + marks.
+    pub fn memory_bytes(&self) -> usize {
+        let nn = self.tree.num_nodes();
+        let tree = nn * (4 * 4 + 8 + 4) + self.tree.s1.len() * 4;
+        let blocks = self.partition.blocks.len() * std::mem::size_of::<super::partition::Block>();
+        let marks: usize =
+            self.partition.marks.iter().map(|m| m.len() * 4 + 24).sum::<usize>();
+        tree + blocks + marks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn build_fit_refine_roundtrip() {
+        let ds = synthetic::two_moons(80, 0.08, 1);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        assert_eq!(m.num_blocks(), 2 * (80 - 1));
+        assert!(m.sigma() > 0.0);
+        let ll0 = m.loglik();
+        m.refine_to(6 * 80);
+        assert!(m.num_blocks() >= 6 * 80);
+        assert!(m.loglik() >= ll0 - 1e-6, "refinement decreased ℓ");
+        m.partition.validate(&m.tree).unwrap();
+    }
+
+    #[test]
+    fn fixed_sigma_respected() {
+        let ds = synthetic::two_moons(40, 0.08, 2);
+        let cfg = VdtConfig { sigma: Some(0.37), ..Default::default() };
+        let m = VdtModel::build(&ds.x, &cfg);
+        assert!((m.sigma() - 0.37).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_row_stochastic_after_refinement() {
+        let ds = synthetic::two_moons(60, 0.08, 3);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(5 * 60);
+        let ones = Matrix::from_fn(60, 1, |_, _| 1.0);
+        let out = m.matvec(&ones);
+        for &v in &out.data {
+            assert!((v - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn memory_grows_with_refinement() {
+        let ds = synthetic::two_moons(64, 0.08, 4);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        let before = m.memory_bytes();
+        m.refine_to(8 * 64);
+        assert!(m.memory_bytes() > before);
+    }
+}

@@ -1,0 +1,219 @@
+//! Block partitions of the transition matrix and their MPT representation.
+//!
+//! A valid partition B tiles the off-diagonal of P with blocks (A, B) of
+//! non-overlapping tree nodes; all posteriors inside a block share one
+//! variational parameter `q_AB` (Eq. 4). The *marked partition tree* keeps,
+//! for every data node A, the list of its kernel marks B — exactly the
+//! paper's `A_mkd`. The diagonal singleton blocks are neutral (`q_ii = 0`)
+//! and are represented implicitly.
+
+use crate::core::Matrix;
+use crate::tree::PartitionTree;
+
+/// One block (A, B) with its shared transition probability `q` and the
+/// block-sum squared distance `D²_AB` (Eq. 8/9).
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Data-side tree node A.
+    pub data: u32,
+    /// Kernel-side tree node B (the mark stored at A in the MPT).
+    pub kernel: u32,
+    /// Shared transition probability q_AB (Eq. 4).
+    pub q: f64,
+    /// D²_AB.
+    pub d2: f64,
+    /// Dead blocks have been refined away; kept for stable indices.
+    pub alive: bool,
+}
+
+/// A valid block partition stored as an MPT: `marks[a]` lists the indices
+/// (into `blocks`) of the alive blocks whose data node is `a`.
+#[derive(Clone)]
+pub struct BlockPartition {
+    pub blocks: Vec<Block>,
+    pub marks: Vec<Vec<u32>>,
+    alive: usize,
+}
+
+impl BlockPartition {
+    /// The coarsest valid partition B_c (paper §4.4): one block (A, B) for
+    /// every ordered pair of sibling subtrees — `|B_c| = 2(N-1)`.
+    pub fn coarsest(tree: &PartitionTree) -> BlockPartition {
+        let nn = tree.num_nodes();
+        let mut part =
+            BlockPartition { blocks: Vec::with_capacity(nn), marks: vec![Vec::new(); nn], alive: 0 };
+        for a in 0..nn as u32 {
+            if !tree.is_leaf(a) {
+                let (l, r) = (tree.left[a as usize], tree.right[a as usize]);
+                let d2 = tree.d2_between(l, r);
+                part.push_block(l, r, d2);
+                part.push_block(r, l, d2);
+            }
+        }
+        part
+    }
+
+    /// The most refined partition: every off-diagonal entry a singleton
+    /// block (used by tests to cross-check against the exact model).
+    pub fn singletons(tree: &PartitionTree) -> BlockPartition {
+        let n = tree.n;
+        let mut part = BlockPartition {
+            blocks: Vec::with_capacity(n * (n - 1)),
+            marks: vec![Vec::new(); tree.num_nodes()],
+            alive: 0,
+        };
+        for i in 0..n as u32 {
+            for j in 0..n as u32 {
+                if i != j {
+                    part.push_block(i, j, tree.d2_between(i, j));
+                }
+            }
+        }
+        part
+    }
+
+    /// Append a new alive block and register its mark; returns its index.
+    pub fn push_block(&mut self, data: u32, kernel: u32, d2: f64) -> u32 {
+        let idx = self.blocks.len() as u32;
+        self.blocks.push(Block { data, kernel, q: 0.0, d2, alive: true });
+        self.marks[data as usize].push(idx);
+        self.alive += 1;
+        idx
+    }
+
+    /// Kill a block (refined away) and unregister its mark.
+    pub fn kill_block(&mut self, idx: u32) {
+        let b = &mut self.blocks[idx as usize];
+        assert!(b.alive, "double kill");
+        b.alive = false;
+        let marks = &mut self.marks[b.data as usize];
+        let pos = marks.iter().position(|&m| m == idx).expect("mark missing");
+        marks.swap_remove(pos);
+        self.alive -= 1;
+    }
+
+    /// Number of alive (off-diagonal) blocks — the paper's |B|.
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.alive
+    }
+
+    /// Iterate alive blocks.
+    pub fn alive_blocks(&self) -> impl Iterator<Item = (u32, &Block)> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.alive)
+            .map(|(i, b)| (i as u32, b))
+    }
+
+    /// Materialize Q as a dense matrix (tests / tiny N only).
+    pub fn materialize(&self, tree: &PartitionTree) -> Matrix {
+        let n = tree.n;
+        let mut q = Matrix::zeros(n, n);
+        for (_, b) in self.alive_blocks() {
+            for &i in &tree.leaves_under(b.data) {
+                for &j in &tree.leaves_under(b.kernel) {
+                    assert_eq!(q.get(i as usize, j as usize), 0.0, "blocks overlap");
+                    q.set(i as usize, j as usize, b.q as f32);
+                }
+            }
+        }
+        q
+    }
+
+    /// Check validity: alive blocks exactly tile the off-diagonal.
+    pub fn validate(&self, tree: &PartitionTree) -> Result<(), String> {
+        let n = tree.n;
+        let mut covered = vec![false; n * n];
+        for (_, b) in self.alive_blocks() {
+            for &i in &tree.leaves_under(b.data) {
+                for &j in &tree.leaves_under(b.kernel) {
+                    if i == j {
+                        return Err(format!("block ({},{}) covers diagonal", b.data, b.kernel));
+                    }
+                    let cell = i as usize * n + j as usize;
+                    if covered[cell] {
+                        return Err(format!("cell ({i},{j}) covered twice"));
+                    }
+                    covered[cell] = true;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && !covered[i * n + j] {
+                    return Err(format!("cell ({i},{j}) uncovered"));
+                }
+            }
+        }
+        // mark lists consistent
+        for (a, marks) in self.marks.iter().enumerate() {
+            for &m in marks {
+                let b = &self.blocks[m as usize];
+                if !b.alive || b.data as usize != a {
+                    return Err(format!("stale mark {m} at node {a}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tree::{build_tree, BuildConfig};
+
+    fn tree_of(n: usize, seed: u64) -> (crate::core::Matrix, PartitionTree) {
+        let ds = synthetic::gaussian_mixture(n, 3, 2, 2, 2.0, seed, "t");
+        let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() });
+        (ds.x, t)
+    }
+
+    #[test]
+    fn coarsest_has_2n_minus_2_blocks() {
+        for n in [2usize, 3, 7, 20, 33] {
+            let (_, t) = tree_of(n, n as u64);
+            let p = BlockPartition::coarsest(&t);
+            assert_eq!(p.num_blocks(), 2 * (n - 1), "n={n}");
+            p.validate(&t).unwrap();
+        }
+    }
+
+    #[test]
+    fn singletons_partition_valid() {
+        let (_, t) = tree_of(9, 1);
+        let p = BlockPartition::singletons(&t);
+        assert_eq!(p.num_blocks(), 9 * 8);
+        p.validate(&t).unwrap();
+    }
+
+    #[test]
+    fn kill_unregisters_mark() {
+        let (_, t) = tree_of(6, 2);
+        let mut p = BlockPartition::coarsest(&t);
+        let before = p.num_blocks();
+        let idx = p.marks.iter().flatten().next().copied().unwrap();
+        let node = p.blocks[idx as usize].data;
+        p.kill_block(idx);
+        assert_eq!(p.num_blocks(), before - 1);
+        assert!(!p.marks[node as usize].contains(&idx));
+    }
+
+    #[test]
+    fn materialize_coarsest_covers_offdiag() {
+        let (_, t) = tree_of(8, 3);
+        let mut p = BlockPartition::coarsest(&t);
+        for b in p.blocks.iter_mut() {
+            b.q = 1.0; // sentinel
+        }
+        let q = p.materialize(&t);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(q.get(i, j), if i == j { 0.0 } else { 1.0 });
+            }
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! Greedy symmetric refinement (paper §4.4).
+//!
+//! Horizontal refinement splits a block (A, B) into {(A, B_l), (A, B_r)}.
+//! Keeping all other q fixed, the row constraints force
+//! `|B_l|q_l + |B_r|q_r = |B|q` (Eq. 17), whose constrained optimum is the
+//! local softmax of Eq. (18); the resulting bound improvement is the
+//! closed-form gain Δʰ_AB of Eq. (19) — a *lower bound* on the true gain
+//! (a later global re-optimization can only help, by the Eq. 6 argument).
+//!
+//! Vertical refinements admit no such local bound, so the paper refines
+//! *symmetrically*: popping (A, B) also horizontally refines its mirror
+//! (B, A) when that block is present, which plays the role of the vertical
+//! split of (A, B).
+//!
+//! The refiner keeps a max-heap of candidate gains with lazy invalidation
+//! (entries are stamped with the block's index; dead blocks are skipped on
+//! pop). Blocks whose kernel node is a leaf cannot be split horizontally
+//! and never enter the heap.
+
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+use crate::core::vecmath::logsumexp;
+use crate::tree::PartitionTree;
+
+use super::optimize::{g_of, optimize_q, OptScratch};
+use super::partition::BlockPartition;
+
+/// Max-heap entry ordered by gain.
+struct Candidate {
+    gain: f64,
+    block: u32,
+}
+
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.gain == other.gain && self.block == other.block
+    }
+}
+impl Eq for Candidate {}
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.gain
+            .partial_cmp(&other.gain)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.block.cmp(&other.block))
+    }
+}
+
+/// Greedy refinement driver. Owns the candidate heap and the (data,
+/// kernel) → block index map used to find symmetric counterparts.
+pub struct Refiner {
+    heap: BinaryHeap<Candidate>,
+    index: HashMap<(u32, u32), u32>,
+    sigma: f64,
+    /// Re-run the global optimizer whenever |B| has grown by this factor
+    /// since the last re-optimization (1.1 = every 10% growth). The paper
+    /// re-optimizes after refinement; doing it on a growth schedule keeps
+    /// the amortized cost at O(|B| log |B|) per level (Table 1).
+    pub reopt_growth: f64,
+    last_opt_size: usize,
+    scratch: OptScratch,
+}
+
+impl Refiner {
+    /// Build a refiner for the current partition (q must be optimized).
+    pub fn new(tree: &PartitionTree, part: &BlockPartition, sigma: f64) -> Refiner {
+        let mut r = Refiner {
+            heap: BinaryHeap::new(),
+            index: HashMap::with_capacity(part.num_blocks() * 2),
+            sigma,
+            reopt_growth: 1.1,
+            last_opt_size: part.num_blocks(),
+            scratch: OptScratch::default(),
+        };
+        for (i, b) in part.alive_blocks() {
+            r.index.insert((b.data, b.kernel), i);
+            if let Some(gain) = gain_h(tree, part, i, sigma) {
+                r.heap.push(Candidate { gain, block: i });
+            }
+        }
+        r
+    }
+
+    /// Refine until `part.num_blocks() >= target` (or no refinable blocks
+    /// remain). Returns the number of split operations performed.
+    pub fn refine_to(
+        &mut self,
+        tree: &PartitionTree,
+        part: &mut BlockPartition,
+        target: usize,
+    ) -> usize {
+        let mut splits = 0;
+        while part.num_blocks() < target {
+            let cand = match self.heap.pop() {
+                Some(c) => c,
+                None => break,
+            };
+            let blk = &part.blocks[cand.block as usize];
+            if !blk.alive {
+                continue; // stale heap entry
+            }
+            let (a, b) = (blk.data, blk.kernel);
+            self.split(tree, part, cand.block);
+            splits += 1;
+            // symmetric counterpart (B, A): the stand-in for the vertical
+            // refinement of (A, B)
+            if part.num_blocks() < target {
+                if let Some(&mirror) = self.index.get(&(b, a)) {
+                    if part.blocks[mirror as usize].alive && !tree.is_leaf(a) {
+                        self.split(tree, part, mirror);
+                        splits += 1;
+                    }
+                }
+            }
+            // periodic global re-optimization: recompute all q at the
+            // current partition and rebuild gains
+            if part.num_blocks() as f64 >= self.last_opt_size as f64 * self.reopt_growth {
+                self.reoptimize(tree, part);
+            }
+        }
+        self.reoptimize(tree, part);
+        splits
+    }
+
+    /// Globally re-optimize q and rebuild the gain heap.
+    pub fn reoptimize(&mut self, tree: &PartitionTree, part: &mut BlockPartition) {
+        optimize_q(tree, part, self.sigma, &mut self.scratch);
+        self.last_opt_size = part.num_blocks();
+        self.heap.clear();
+        for (i, b) in part.alive_blocks() {
+            debug_assert!(b.alive);
+            if let Some(gain) = gain_h(tree, part, i, self.sigma) {
+                self.heap.push(Candidate { gain, block: i });
+            }
+        }
+    }
+
+    /// Horizontally split block `bi` = (A, B) into (A, B_l), (A, B_r) with
+    /// the locally-optimal q of Eq. (18).
+    fn split(&mut self, tree: &PartitionTree, part: &mut BlockPartition, bi: u32) {
+        let blk = part.blocks[bi as usize].clone();
+        debug_assert!(blk.alive && !tree.is_leaf(blk.kernel));
+        let (a, b) = (blk.data, blk.kernel);
+        let (bl, br) = (tree.left[b as usize], tree.right[b as usize]);
+        let d2l = tree.d2_between(a, bl);
+        let d2r = tree.d2_between(a, br);
+        let (nb, nbl, nbr) = (
+            tree.count[b as usize] as f64,
+            tree.count[bl as usize] as f64,
+            tree.count[br as usize] as f64,
+        );
+        let gl = g_of(tree, a, bl, d2l, self.sigma);
+        let gr = g_of(tree, a, br, d2r, self.sigma);
+        // Eq. (18) in log space: q_c = |B| e^{G_c} q / Σ_t |B_t| e^{G_t}
+        let log_den = logsumexp(&[nbl.ln() + gl, nbr.ln() + gr]);
+        let (ql, qr) = if blk.q > 0.0 {
+            (
+                (nb.ln() + gl + blk.q.ln() - log_den).exp(),
+                (nb.ln() + gr + blk.q.ln() - log_den).exp(),
+            )
+        } else {
+            (0.0, 0.0)
+        };
+
+        part.kill_block(bi);
+        self.index.remove(&(a, b));
+        let il = part.push_block(a, bl, d2l);
+        part.blocks[il as usize].q = ql;
+        self.index.insert((a, bl), il);
+        let ir = part.push_block(a, br, d2r);
+        part.blocks[ir as usize].q = qr;
+        self.index.insert((a, br), ir);
+        for i in [il, ir] {
+            if let Some(gain) = gain_h(tree, part, i, self.sigma) {
+                self.heap.push(Candidate { gain, block: i });
+            }
+        }
+    }
+}
+
+/// Δʰ_AB of Eq. (19); `None` when B is a leaf (not horizontally
+/// refinable). Always ≥ 0 for q > 0 (Jensen).
+pub fn gain_h(
+    tree: &PartitionTree,
+    part: &BlockPartition,
+    block: u32,
+    sigma: f64,
+) -> Option<f64> {
+    let b = &part.blocks[block as usize];
+    if tree.is_leaf(b.kernel) {
+        return None;
+    }
+    if b.q <= 0.0 {
+        return Some(0.0);
+    }
+    let (bl, br) = (tree.left[b.kernel as usize], tree.right[b.kernel as usize]);
+    let na = tree.count[b.data as usize] as f64;
+    let nb = tree.count[b.kernel as usize] as f64;
+    let (nbl, nbr) = (tree.count[bl as usize] as f64, tree.count[br as usize] as f64);
+    let g = g_of(tree, b.data, b.kernel, b.d2, sigma);
+    let gl = g_of(tree, b.data, bl, tree.d2_between(b.data, bl), sigma);
+    let gr = g_of(tree, b.data, br, tree.d2_between(b.data, br), sigma);
+    let log_num = logsumexp(&[nbl.ln() + gl, nbr.ln() + gr]);
+    Some((na * nb * b.q * (log_num - nb.ln() - g)).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tree::{build_tree, BuildConfig};
+    use crate::vdt::optimize::loglik;
+    use crate::vdt::sigma::fit_alternating;
+
+    fn setup(n: usize, seed: u64) -> (PartitionTree, BlockPartition, f64) {
+        let ds = synthetic::gaussian_mixture(n, 3, 2, 2, 2.0, seed, "t");
+        let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() });
+        let mut p = BlockPartition::coarsest(&t);
+        let r = fit_alternating(&t, &mut p, None, 1e-8, 100);
+        let s = r.sigma;
+        (t, p, s)
+    }
+
+    #[test]
+    fn refinement_grows_partition_and_stays_valid() {
+        let (t, mut p, s) = setup(24, 1);
+        let mut refiner = Refiner::new(&t, &p, s);
+        let start = p.num_blocks();
+        refiner.refine_to(&t, &mut p, 4 * 24);
+        assert!(p.num_blocks() >= 4 * 24, "got {}", p.num_blocks());
+        assert!(p.num_blocks() > start);
+        p.validate(&t).unwrap();
+    }
+
+    #[test]
+    fn loglik_never_decreases_along_refinement_path() {
+        let (t, mut p, s) = setup(20, 3);
+        let mut prev = loglik(&t, &p, s);
+        let mut refiner = Refiner::new(&t, &p, s);
+        for level in 2..7usize {
+            refiner.refine_to(&t, &mut p, level * 20);
+            let cur = loglik(&t, &p, s);
+            assert!(cur >= prev - 1e-6, "level {level}: ℓ {cur} < {prev}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn gain_formula_matches_local_delta() {
+        // Apply one split WITHOUT global re-opt; ℓ' − ℓ must equal Δʰ.
+        let (t, mut p, s) = setup(16, 5);
+        let before = loglik(&t, &p, s);
+        // best refinable block
+        let (bi, gain) = p
+            .alive_blocks()
+            .filter_map(|(i, _)| gain_h(&t, &p, i, s).map(|g| (i, g)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let mut refiner = Refiner::new(&t, &p, s);
+        refiner.split(&t, &mut p, bi);
+        let after = loglik(&t, &p, s);
+        let actual = after - before;
+        assert!(
+            (actual - gain).abs() < 1e-6 * (1.0 + gain.abs()),
+            "Δ formula {gain} vs actual {actual}"
+        );
+    }
+
+    #[test]
+    fn split_preserves_row_sums_locally() {
+        // Eq. (17): splitting without re-opt keeps Q row-stochastic.
+        let (t, mut p, s) = setup(14, 7);
+        let mut refiner = Refiner::new(&t, &p, s);
+        let bi = p
+            .alive_blocks()
+            .find(|(_, b)| !t.is_leaf(b.kernel) && b.q > 0.0)
+            .map(|(i, _)| i)
+            .unwrap();
+        refiner.split(&t, &mut p, bi);
+        let q = p.materialize(&t);
+        for (i, sum) in q.row_sums().iter().enumerate() {
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sum {sum}");
+        }
+        p.validate(&t).unwrap();
+    }
+
+    #[test]
+    fn refinement_stalls_only_at_leaf_kernels() {
+        // With an unbounded target, greedy symmetric refinement exhausts
+        // every horizontally-splittable block. The paper's scheme cannot
+        // split a block whose *kernel* node is a leaf (that would need a
+        // true vertical refinement, §4.4), so at the stall point every
+        // alive block has a leaf kernel, the partition is still valid, and
+        // Q is still row-stochastic.
+        let (t, mut p, s) = setup(8, 9);
+        let mut refiner = Refiner::new(&t, &p, s);
+        refiner.refine_to(&t, &mut p, usize::MAX / 2);
+        p.validate(&t).unwrap();
+        for (_, b) in p.alive_blocks() {
+            assert!(t.is_leaf(b.kernel), "block ({},{}) still splittable", b.data, b.kernel);
+        }
+        assert!(p.num_blocks() > 2 * (8 - 1), "no refinement happened");
+        let q = p.materialize(&t);
+        for s in q.row_sums() {
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn heap_gains_are_nonnegative() {
+        let (t, p, s) = setup(18, 11);
+        for (i, _) in p.alive_blocks() {
+            if let Some(g) = gain_h(&t, &p, i, s) {
+                assert!(g >= 0.0, "negative gain {g}");
+            }
+        }
+    }
+}

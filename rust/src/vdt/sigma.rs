@@ -1,0 +1,137 @@
+//! Bandwidth learning (paper §4.2).
+//!
+//! Given fixed q, ℓ(D) is quasi-concave in σ with the closed-form maximizer
+//! of Eq. (12):  σ*² = Σ_(A,B) q_AB·D²_AB / (N·d).
+//!
+//! For the fully-refined (singleton) model Eq. (14) gives a q-independent
+//! initializer: σ₀ = (1/N)·sqrt(Σ_i Σ_{j≠i} ||x_i−x_j||² / d), which we
+//! compute in O(N·d) from the global statistics
+//! Σ_ij ||x_i−x_j||² = 2N·S2(root) − 2·||S1(root)||².
+//!
+//! The fit loop alternates `optimize_q` and Eq. (12) until σ stabilizes —
+//! the paper observes fast, initialization-insensitive convergence, which
+//! `fit_alternating` asserts in its tests.
+
+use crate::tree::PartitionTree;
+
+use super::optimize::{loglik, optimize_q, OptScratch};
+use super::partition::BlockPartition;
+
+/// Eq. (14): q-independent σ from the global pairwise distance mass.
+pub fn sigma_init(tree: &PartitionTree) -> f64 {
+    let root = tree.root();
+    let n = tree.n as f64;
+    let d = tree.d as f64;
+    let s2 = tree.s2[root as usize];
+    let s1_norm2 = crate::core::vecmath::sq_norm(tree.s1_of(root));
+    let total = (2.0 * n * s2 - 2.0 * s1_norm2).max(0.0);
+    ((total / d).sqrt() / n).max(1e-12)
+}
+
+/// Eq. (12): closed-form σ* given the current q.
+pub fn sigma_update(tree: &PartitionTree, part: &BlockPartition) -> f64 {
+    let mut acc = 0f64;
+    for (_, b) in part.alive_blocks() {
+        acc += b.q * b.d2;
+    }
+    (acc / (tree.n as f64 * tree.d as f64)).sqrt().max(1e-12)
+}
+
+/// Outcome of the alternating fit.
+pub struct FitResult {
+    pub sigma: f64,
+    pub loglik: f64,
+    pub iterations: usize,
+}
+
+/// Alternate q-optimization (Alg. 3) and σ updates (Eq. 12) until
+/// |Δσ|/σ < `tol` or `max_iters`.
+pub fn fit_alternating(
+    tree: &PartitionTree,
+    part: &mut BlockPartition,
+    sigma0: Option<f64>,
+    tol: f64,
+    max_iters: usize,
+) -> FitResult {
+    let mut sigma = sigma0.unwrap_or_else(|| sigma_init(tree));
+    let mut scratch = OptScratch::default();
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        optimize_q(tree, part, sigma, &mut scratch);
+        let next = sigma_update(tree, part);
+        let rel = (next - sigma).abs() / sigma.max(1e-12);
+        sigma = next;
+        if rel < tol {
+            break;
+        }
+    }
+    // final q at the converged bandwidth
+    optimize_q(tree, part, sigma, &mut scratch);
+    FitResult { sigma, loglik: loglik(tree, part, sigma), iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tree::{build_tree, BuildConfig};
+
+    fn tree_of(n: usize, seed: u64) -> PartitionTree {
+        let ds = synthetic::gaussian_mixture(n, 4, 2, 2, 2.0, seed, "t");
+        build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() })
+    }
+
+    #[test]
+    fn sigma_init_matches_bruteforce_eq14() {
+        let ds = synthetic::gaussian_mixture(25, 4, 2, 2, 2.0, 5, "t");
+        let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() });
+        let mut total = 0f64;
+        for i in 0..25 {
+            for j in 0..25 {
+                if i != j {
+                    total += crate::core::vecmath::sq_dist(ds.x.row(i), ds.x.row(j));
+                }
+            }
+        }
+        let want = (total / 4.0).sqrt() / 25.0;
+        assert!((sigma_init(&t) - want).abs() < 1e-6 * want);
+    }
+
+    #[test]
+    fn alternating_fit_converges_and_improves_ll() {
+        let t = tree_of(60, 2);
+        let mut p = BlockPartition::coarsest(&t);
+        let r = fit_alternating(&t, &mut p, None, 1e-6, 100);
+        assert!(r.iterations < 100, "did not converge");
+        assert!(r.sigma > 0.0 && r.sigma.is_finite());
+
+        // ℓ at (q*, σ*) must beat ℓ at (q(σ0), σ0)
+        let mut p0 = BlockPartition::coarsest(&t);
+        let s0 = sigma_init(&t);
+        super::optimize_q(&t, &mut p0, s0, &mut OptScratch::default());
+        let l0 = loglik(&t, &p0, s0);
+        assert!(r.loglik >= l0 - 1e-9, "fit {l} < init {l0}", l = r.loglik);
+    }
+
+    #[test]
+    fn fit_insensitive_to_initial_sigma() {
+        let t = tree_of(50, 3);
+        let mut pa = BlockPartition::coarsest(&t);
+        let mut pb = BlockPartition::coarsest(&t);
+        let ra = fit_alternating(&t, &mut pa, Some(0.05), 1e-8, 200);
+        let rb = fit_alternating(&t, &mut pb, Some(50.0), 1e-8, 200);
+        let rel = (ra.sigma - rb.sigma).abs() / ra.sigma;
+        assert!(rel < 1e-3, "σ from 0.05 -> {}, from 50 -> {}", ra.sigma, rb.sigma);
+    }
+
+    #[test]
+    fn sigma_update_is_stationary_point() {
+        // at (q*, σ*), one more σ update changes nothing
+        let t = tree_of(40, 4);
+        let mut p = BlockPartition::coarsest(&t);
+        let r = fit_alternating(&t, &mut p, None, 1e-10, 300);
+        let again = sigma_update(&t, &p);
+        assert!((again - r.sigma).abs() / r.sigma < 1e-6);
+    }
+}

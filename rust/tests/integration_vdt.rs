@@ -1,0 +1,180 @@
+//! Cross-module integration tests: the VDT model against the exact model
+//! (approximation quality, Eq. 6's KL view), full SSL pipelines across all
+//! three backends, and spectral consistency.
+
+use vdt::data::synthetic;
+use vdt::exact::ExactModel;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+/// Mean row KL(q_i || p_i) between the materialized Q and the exact P at
+/// the same bandwidth — the quantity the variational bound minimizes.
+fn mean_row_kl(q: &vdt::Matrix, p: &vdt::Matrix) -> f64 {
+    assert_eq!((q.rows, q.cols), (p.rows, p.cols));
+    let n = q.rows;
+    let mut total = 0f64;
+    for i in 0..n {
+        let mut kl = 0f64;
+        for j in 0..n {
+            let (qv, pv) = (q.get(i, j) as f64, p.get(i, j) as f64);
+            if qv > 1e-30 {
+                kl += qv * (qv.ln() - pv.max(1e-30).ln());
+            }
+        }
+        total += kl;
+    }
+    total / n as f64
+}
+
+#[test]
+fn refinement_monotonically_tightens_kl_to_exact() {
+    let ds = synthetic::gaussian_mixture(120, 5, 2, 2, 2.3, 42, "t");
+    let mut model = VdtModel::build(&ds.x, &VdtConfig::default());
+    let sigma = model.sigma();
+    let exact = ExactModel::build_dense(&ds.x, Some(sigma));
+    let mut last = f64::INFINITY;
+    for k in [2usize, 4, 8, 16] {
+        if k > 2 {
+            model.refine_to(k * ds.n());
+        }
+        let kl = mean_row_kl(&model.materialize(), &exact.p);
+        assert!(
+            kl <= last + 1e-6,
+            "KL increased at level {k}: {kl} > {last}"
+        );
+        assert!(kl >= -1e-9, "KL must be nonnegative, got {kl}");
+        last = kl;
+    }
+    // at |B| = 16N the approximation should be decent
+    assert!(last < 0.5, "KL still {last} at |B|=16N");
+}
+
+#[test]
+fn loglik_identity_eq6_holds() {
+    // ℓ(D) = log p(D) − Σ_i KL(q_i‖p_i): check against dense quantities.
+    let ds = synthetic::gaussian_mixture(60, 4, 2, 2, 2.0, 7, "t");
+    let model = VdtModel::build(&ds.x, &VdtConfig::default());
+    let sigma = model.sigma();
+    let n = ds.n();
+    let d = ds.d();
+    // dense log p(D) under the mixture view (Eq. 2)
+    let mut logp = 0f64;
+    let z = (2.0 * std::f64::consts::PI).powf(d as f64 / 2.0) * sigma.powi(d as i32);
+    for i in 0..n {
+        let mut s = 0f64;
+        for j in 0..n {
+            if i != j {
+                let d2 = vdt::core::vecmath::sq_dist(ds.x.row(i), ds.x.row(j));
+                s += (-d2 / (2.0 * sigma * sigma)).exp();
+            }
+        }
+        logp += (s / ((n - 1) as f64) / z).ln();
+    }
+    let exact = ExactModel::build_dense(&ds.x, Some(sigma));
+    let kl_sum = mean_row_kl(&model.materialize(), &exact.p) * n as f64;
+    let want = logp - kl_sum;
+    let got = model.loglik();
+    let tol = 1e-6 * (1.0 + want.abs());
+    assert!(
+        (got - want).abs() < tol.max(1e-3),
+        "ℓ = {got}, log p − ΣKL = {want}"
+    );
+}
+
+#[test]
+fn ssl_pipeline_all_backends_beat_chance_and_agree_roughly() {
+    let ds = synthetic::digit1_like(300, 3);
+    let lp = LpConfig { alpha: 0.01, steps: 200 };
+
+    let mut v = VdtModel::build(&ds.x, &VdtConfig::default());
+    v.refine_to(8 * ds.n());
+    let g = KnnGraph::build(&ds.x, &KnnConfig { k: 8, ..Default::default() });
+    let e = ExactModel::build_dense(&ds.x, None);
+
+    // LP with few labels has high variance across labeled sets — average
+    // over several seeds, like the paper's 5-repetition protocol
+    let (mut sv, mut sg, mut se) = (0.0, 0.0, 0.0);
+    let seeds = [5u64, 6, 7, 8, 9];
+    for &s in &seeds {
+        let labeled = labelprop::choose_labeled(&ds.labels, 2, 30, s);
+        sv += labelprop::run_ssl(&v, &ds.labels, 2, &labeled, &lp).1;
+        sg += labelprop::run_ssl(&g, &ds.labels, 2, &labeled, &lp).1;
+        se += labelprop::run_ssl(&e, &ds.labels, 2, &labeled, &lp).1;
+    }
+    let (sv, sg, se) =
+        (sv / seeds.len() as f64, sg / seeds.len() as f64, se / seeds.len() as f64);
+    // all clearly above chance; VDT within the paper's "compromising a
+    // little on accuracy" margin of exact (Fig. 2C shows a visible but
+    // modest gap at small N)
+    assert!(sv > 0.55, "vdt CCR {sv}");
+    assert!(sg > 0.6, "knn CCR {sg}");
+    assert!(se > 0.6, "exact CCR {se}");
+    assert!(se - sv < 0.25, "vdt {sv} too far below exact {se}");
+}
+
+#[test]
+fn sigma_learning_is_consistent_across_backends() {
+    // all methods use the §4.2 lower-bound technique; on the same data the
+    // learned bandwidths should be in the same ballpark (they optimize the
+    // same objective under different block structures)
+    let ds = synthetic::gaussian_mixture(200, 6, 2, 2, 2.0, 9, "t");
+    let v = VdtModel::build(&ds.x, &VdtConfig::default());
+    let e = ExactModel::build_dense(&ds.x, None);
+    let ratio = v.sigma() / e.sigma();
+    assert!(
+        (0.3..3.0).contains(&ratio),
+        "vdt σ {} vs exact σ {}",
+        v.sigma(),
+        e.sigma()
+    );
+}
+
+#[test]
+fn spectral_top_space_consistent_between_vdt_and_exact() {
+    // single well-connected blob: here the block-average distances track
+    // the individual distances, so the VDT spectrum approximates the exact
+    // one. (With far-separated clusters the block-averaged cross-cluster
+    // mass underflows and VDT over-estimates λ₂ toward 1 — a known
+    // behaviour of block sharing at coarse levels, visible in Fig 2F/J's
+    // low-refinement regime.)
+    let ds = synthetic::gaussian_mixture(100, 4, 1, 1, 1.0, 11, "blob");
+    let mut v = VdtModel::build(&ds.x, &VdtConfig::default());
+    v.refine_to(12 * ds.n());
+    let e = ExactModel::build_dense(&ds.x, Some(v.sigma()));
+    let rv = vdt::spectral::arnoldi_eigenvalues(&v, 30, 1);
+    let re = vdt::spectral::arnoldi_eigenvalues(&e, 30, 1);
+    assert!((rv.eigenvalues[0].0 - 1.0).abs() < 5e-3);
+    assert!((re.eigenvalues[0].0 - 1.0).abs() < 1e-4);
+    assert!(
+        (rv.eigenvalues[1].0 - re.eigenvalues[1].0).abs() < 0.1,
+        "λ₂: {} vs {}",
+        rv.eigenvalues[1].0,
+        re.eigenvalues[1].0
+    );
+}
+
+#[test]
+fn subsampled_pipeline_matches_full_determinism() {
+    // the experiment harness subsamples; everything downstream must be
+    // deterministic per seed
+    let ds = synthetic::secstr_like(400, 1);
+    let run = || {
+        let sub = ds.subsample(150, 9);
+        let mut m = VdtModel::build(&sub.x, &VdtConfig::default());
+        m.refine_to(4 * sub.n());
+        let labeled = labelprop::choose_labeled(&sub.labels, 2, 15, 2);
+        let (y, s) = labelprop::run_ssl(
+            &m,
+            &sub.labels,
+            2,
+            &labeled,
+            &LpConfig { alpha: 0.01, steps: 50 },
+        );
+        (y, s)
+    };
+    let (y1, s1) = run();
+    let (y2, s2) = run();
+    assert_eq!(s1, s2);
+    assert_eq!(y1.data, y2.data);
+}

@@ -1,0 +1,200 @@
+//! Property-based tests (in-tree driver — no proptest in this offline
+//! build): randomized sweeps over seeds/shapes asserting the library's
+//! core invariants. Each property runs many seeded cases; failures print
+//! the case for reproduction.
+
+use vdt::core::{Matrix, Rng};
+use vdt::data::synthetic;
+use vdt::knn::search::{knn_bruteforce, knn_query};
+use vdt::sparse::Csr;
+use vdt::tree::{build_tree, BuildConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+/// Random dataset with varied shape, cluster count and scale.
+fn random_dataset(rng: &mut Rng) -> vdt::data::Dataset {
+    let n = 5 + rng.below(120);
+    let d = 1 + rng.below(12);
+    let classes = 2 + rng.below(2);
+    let clusters = 1 + rng.below(3);
+    let sep = 0.5 + rng.f32() * 3.0;
+    synthetic::gaussian_mixture(n, d, classes, clusters, sep, rng.next_u64(), "prop")
+}
+
+#[test]
+fn prop_tree_invariants_hold_across_shapes() {
+    let mut rng = Rng::seed_from_u64(0x7ee);
+    for case in 0..30 {
+        let ds = random_dataset(&mut rng);
+        let threshold = 2 + rng.below(60);
+        let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: threshold, ..Default::default() });
+        t.validate(&ds.x)
+            .unwrap_or_else(|e| panic!("case {case} (n={}, thr={threshold}): {e}", ds.n()));
+    }
+}
+
+#[test]
+fn prop_partition_rows_sum_to_one_under_random_refinement() {
+    let mut rng = Rng::seed_from_u64(7);
+    for case in 0..20 {
+        let ds = random_dataset(&mut rng);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        // random refinement target between coarsest and ~N log N
+        let target = 2 * ds.n() + rng.below(3 * ds.n() + 1);
+        m.refine_to(target);
+        m.partition
+            .validate(&m.tree)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let q = m.materialize();
+        for (i, s) in q.row_sums().iter().enumerate() {
+            assert!(
+                (s - 1.0).abs() < 1e-4,
+                "case {case} (n={}): row {i} sums to {s}",
+                ds.n()
+            );
+        }
+        // all q in [0, 1]
+        assert!(q.data.iter().all(|&v| (0.0..=1.0 + 1e-6).contains(&v)));
+    }
+}
+
+#[test]
+fn prop_matvec_agrees_with_materialized_q() {
+    let mut rng = Rng::seed_from_u64(99);
+    for case in 0..20 {
+        let ds = random_dataset(&mut rng);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(2 * ds.n() + rng.below(2 * ds.n() + 1));
+        let c = 1 + rng.below(5);
+        let y = Matrix::from_fn(ds.n(), c, |_, _| rng.f32() * 2.0 - 1.0);
+        let fast = m.matvec(&y);
+        let slow = m.materialize().matmul(&y);
+        let diff = fast.max_abs_diff(&slow);
+        assert!(diff < 1e-4, "case {case} (n={}, c={c}): diff {diff}", ds.n());
+    }
+}
+
+#[test]
+fn prop_knn_matches_bruteforce() {
+    let mut rng = Rng::seed_from_u64(1234);
+    for case in 0..15 {
+        let ds = random_dataset(&mut rng);
+        let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 2 + rng.below(40), ..Default::default() });
+        let k = 1 + rng.below(6.min(ds.n() - 1));
+        for _ in 0..5 {
+            let q = rng.below(ds.n());
+            let fast = knn_query(&t, &ds.x, q, k);
+            let brute = knn_bruteforce(&ds.x, q, k);
+            for (f, b) in fast.iter().zip(brute.iter()) {
+                assert!(
+                    (f.1 - b.1).abs() <= 1e-9 * (1.0 + b.1),
+                    "case {case} q={q} k={k}: {} vs {}",
+                    f.1,
+                    b.1
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_csr_matmul_matches_dense() {
+    let mut rng = Rng::seed_from_u64(5);
+    for case in 0..25 {
+        let rows = 1 + rng.below(30);
+        let cols = 1 + rng.below(30);
+        let mut entries: Vec<Vec<(u32, f32)>> = vec![Vec::new(); rows];
+        for (_, row) in entries.iter_mut().enumerate() {
+            let nnz = rng.below(cols + 1);
+            let mut cs: Vec<u32> = (0..cols as u32).collect();
+            rng.shuffle(&mut cs);
+            for &c in cs.iter().take(nnz) {
+                row.push((c, rng.f32() * 4.0 - 2.0));
+            }
+        }
+        let m = Csr::from_rows(rows, cols, &entries);
+        let c2 = 1 + rng.below(4);
+        let y = Matrix::from_fn(cols, c2, |_, _| rng.f32() - 0.5);
+        let got = m.matmul_dense(&y);
+        let want = m.to_dense().matmul(&y);
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "case {case}: rows={rows} cols={cols}"
+        );
+    }
+}
+
+#[test]
+fn prop_loglik_nondecreasing_under_refinement_steps() {
+    let mut rng = Rng::seed_from_u64(31);
+    for case in 0..10 {
+        let ds = random_dataset(&mut rng);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        let mut last = m.loglik();
+        for step in 0..4 {
+            let target = m.num_blocks() + 1 + rng.below(ds.n());
+            m.refine_to(target);
+            let ll = m.loglik();
+            assert!(
+                ll >= last - 1e-6,
+                "case {case} step {step}: ℓ {ll} < {last}"
+            );
+            last = ll;
+        }
+    }
+}
+
+#[test]
+fn prop_coordinator_routing_and_batching_state() {
+    // random interleavings of requests across threads and models: every
+    // response must equal the direct computation; stats must account for
+    // every request.
+    use std::sync::Arc;
+    use vdt::coordinator::Coordinator;
+
+    let mut rng = Rng::seed_from_u64(77);
+    let ds1 = synthetic::two_moons(40, 0.08, 1);
+    let ds2 = synthetic::gaussian_mixture(25, 3, 2, 1, 2.0, 2, "g");
+    let mut m1 = VdtModel::build(&ds1.x, &VdtConfig::default());
+    m1.refine_to(4 * 40);
+    let m2 = VdtModel::build(&ds2.x, &VdtConfig::default());
+    let ops: Vec<(String, Arc<VdtModel>)> =
+        vec![("a".into(), Arc::new(m1)), ("b".into(), Arc::new(m2))];
+
+    let handle = Coordinator::spawn();
+    for (name, op) in &ops {
+        handle.register(name.clone(), op.clone());
+    }
+
+    let mut expected = 0u64;
+    for round in 0..5 {
+        let burst = 1 + rng.below(12);
+        expected += burst as u64;
+        let mut joins = Vec::new();
+        for i in 0..burst {
+            let which = rng.below(2);
+            let (name, op) = (&ops[which].0.clone(), ops[which].1.clone());
+            let n = op.tree.n;
+            let seedv = rng.next_u64();
+            let h = handle.clone();
+            let name = name.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut local = Rng::seed_from_u64(seedv);
+                let y = Matrix::from_fn(n, 1 + (seedv % 3) as usize, |_, _| {
+                    local.f32() - 0.5
+                });
+                let got = h.matvec(name, y.clone()).expect("matvec");
+                let want = op.matvec(&y);
+                (i, got.max_abs_diff(&want))
+            }));
+        }
+        for j in joins {
+            let (i, diff) = j.join().unwrap();
+            assert!(diff < 1e-5, "round {round} req {i}: diff {diff}");
+        }
+    }
+    let (served, cols, batches) = handle.stats();
+    assert_eq!(served, expected, "stats lost requests");
+    assert!(cols >= expected, "fused columns < requests");
+    assert!(batches <= served, "more batches than requests");
+    handle.shutdown();
+}

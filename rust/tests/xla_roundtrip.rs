@@ -1,0 +1,135 @@
+//! Integration tests over the PJRT runtime: every artifact kind loads,
+//! compiles and reproduces the Rust dense oracle (which itself mirrors
+//! python/compile/kernels/ref.py — so this closes the L1↔L2↔L3 loop).
+//!
+//! Tests are skipped (with a notice) when `artifacts/` has not been built;
+//! run `make artifacts` first for full coverage.
+
+use std::rc::Rc;
+
+use vdt::core::Matrix;
+use vdt::data::synthetic;
+use vdt::exact::{dense, ExactModel};
+use vdt::labelprop::{self, LpConfig, TransitionOp};
+use vdt::runtime::Runtime;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    // tests run from the package root; artifacts/ lives beside Cargo.toml
+    match Runtime::load_default() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP xla tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn self_test_round_trip() {
+    let Some(rt) = runtime() else { return };
+    rt.self_test().expect("sq_norms artifact round trip");
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn transition_artifact_matches_dense_oracle() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::gaussian_mixture(100, 7, 2, 2, 2.0, 3, "t");
+    let sigma = 0.9f64;
+    let (p_pad, n_pad) = rt.transition_padded(&ds.x, sigma as f32).expect("transition");
+    assert!(n_pad >= 100);
+    let p = p_pad.sliced(100, 100);
+    let d2 = dense::pairwise_sq_dists(&ds.x);
+    let want = dense::transition_from_d2(&d2, sigma);
+    let diff = p.max_abs_diff(&want);
+    assert!(diff < 1e-4, "XLA vs dense transition: {diff}");
+    // padded rows must not leak mass into real columns
+    for r in 0..100 {
+        for c in 100..n_pad {
+            assert!(p_pad.get(r, c).abs() < 1e-12, "leak at ({r},{c})");
+        }
+    }
+}
+
+#[test]
+fn matvec_artifact_matches_dense() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_moons(80, 0.08, 5);
+    let m = ExactModel::build_xla(&ds.x, Some(0.4), rt).expect("build");
+    let y = labelprop::one_hot_labels(&ds.labels, 2);
+    let via_xla = m.matvec(&y); // dispatches the matvec artifact
+    let via_dense = m.p.matmul(&y);
+    assert!(via_xla.max_abs_diff(&via_dense) < 1e-4);
+}
+
+#[test]
+fn lp_chunk_artifact_matches_dense_iteration() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_moons(60, 0.08, 6);
+    let m = ExactModel::build_xla(&ds.x, Some(0.4), rt.clone()).expect("build");
+    let labeled = labelprop::choose_labeled(&ds.labels, 2, 8, 1);
+    let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+    // 30 steps = 3 lp_chunk dispatches
+    let via_chunks = m.lp_run(&y0, 0.05, 30).expect("lp chunks");
+    let dense_model = ExactModel::build_dense(&ds.x, Some(0.4));
+    let via_dense = dense_model.lp_run(&y0, 0.05, 30).expect("dense lp");
+    assert!(via_chunks.max_abs_diff(&via_dense) < 1e-4);
+    // and non-multiple-of-chunk step counts exercise the remainder path
+    let via_chunks_33 = m.lp_run(&y0, 0.05, 33).expect("lp 33");
+    let via_dense_33 = dense_model.lp_run(&y0, 0.05, 33).expect("dense 33");
+    assert!(via_chunks_33.max_abs_diff(&via_dense_33) < 1e-4);
+}
+
+#[test]
+fn artifact_size_selection_picks_smallest_fit() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let sizes: Vec<usize> = {
+        let mut s: Vec<usize> = m
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "transition")
+            .map(|a| a.n)
+            .collect();
+        s.sort_unstable();
+        s
+    };
+    assert!(!sizes.is_empty());
+    // a problem exactly at a boundary uses that artifact
+    let at = m.pick("transition", sizes[0]).unwrap();
+    assert_eq!(at.n, sizes[0]);
+    // one above the boundary steps up
+    if sizes.len() > 1 {
+        let above = m.pick("transition", sizes[0] + 1).unwrap();
+        assert_eq!(above.n, sizes[1]);
+    }
+    // beyond the menu: None
+    assert!(m.pick("transition", m.max_n("transition") + 1).is_none());
+}
+
+#[test]
+fn sentinel_row_padding_is_inert_for_small_inputs() {
+    // tiny N forces heavy padding (256-row artifact for a 10-row input):
+    // the real block must still match the oracle
+    let Some(rt) = runtime() else { return };
+    let x = Matrix::from_fn(10, 3, |r, c| ((r * 3 + c) as f32 * 0.37).sin());
+    let (p_pad, _) = rt.transition_padded(&x, 0.8).expect("transition");
+    let p = p_pad.sliced(10, 10);
+    let d2 = dense::pairwise_sq_dists(&x);
+    let want = dense::transition_from_d2(&d2, 0.8);
+    assert!(p.max_abs_diff(&want) < 1e-4);
+    assert!(p_pad.data.iter().all(|v| v.is_finite()), "NaN in padded P");
+}
+
+#[test]
+fn xla_exact_end_to_end_ssl() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_moons(120, 0.07, 8);
+    let m = ExactModel::build_xla(&ds.x, None, rt).expect("build");
+    let labeled = labelprop::choose_labeled(&ds.labels, 2, 12, 3);
+    let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+    let y = m.lp_run(&y0, 0.5, 100).expect("lp");
+    let score = labelprop::ccr(&y, &ds.labels, &labeled);
+    assert!(score > 0.85, "XLA exact SSL CCR {score}");
+    let _ = LpConfig::default();
+}
