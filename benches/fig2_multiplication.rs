@@ -1,13 +1,17 @@
 //! Fig 2B — one multiplication (P·Y) across the three representations,
 //! plus the matvec-cost-vs-|B| series showing the O(|B|) law. Memory
 //! shares Table 1's complexity column with multiplication, so this bench
-//! doubles as the memory comparison.
+//! doubles as the memory comparison. A final section times the
+//! column-blocked matvec and a 10-step LP sweep serial vs parallel (the
+//! `core::par` thread-scaling record lives in `benches/parallel_scaling.rs`
+//! / `BENCH_parallel.json`).
 
 use vdt::core::bench::Runner;
+use vdt::core::par;
 use vdt::data::synthetic;
 use vdt::exact::ExactModel;
 use vdt::knn::{KnnConfig, KnnGraph};
-use vdt::labelprop::{one_hot_labels, TransitionOp};
+use vdt::labelprop::{self, one_hot_labels, LpConfig, TransitionOp};
 use vdt::vdt::{VdtConfig, VdtModel};
 
 fn main() {
@@ -50,5 +54,35 @@ fn main() {
         r.bench(&format!("fig2b/vdt_matvec/B={k}N"), || {
             std::hint::black_box(vdt.matvec(&y));
         });
+    }
+
+    println!("\n# fig2b serial vs parallel matvec / LP sweep (core::par)");
+    let hw = par::max_threads();
+    let dsp = synthetic::gaussian_mixture(6000, 32, 8, 2, 2.2, 1, "fig2b_par");
+    let mut vdtp = VdtModel::build(&dsp.x, &VdtConfig::default());
+    vdtp.refine_to(6 * dsp.n());
+    let yp = one_hot_labels(&dsp.labels, dsp.n_classes);
+    let lp_cfg = LpConfig { alpha: 0.01, steps: 10 };
+    for (label, threads) in [("serial", 1usize), ("threads", hw)] {
+        let prev = par::set_max_threads(threads);
+        r.bench(&format!("fig2b/vdt_matvec_8col/{label}/N=6000"), || {
+            std::hint::black_box(vdtp.matvec(&yp));
+        });
+        r.bench(&format!("fig2b/lp_sweep_10step/{label}/N=6000"), || {
+            std::hint::black_box(labelprop::propagate(&vdtp, &yp, &lp_cfg));
+        });
+        par::set_max_threads(prev);
+    }
+    if let (Some(s), Some(t)) = (
+        r.mean_of("fig2b/vdt_matvec_8col/serial/N=6000"),
+        r.mean_of("fig2b/vdt_matvec_8col/threads/N=6000"),
+    ) {
+        println!("# matvec parallel speedup at N=6000, C=8: {:.2}x ({hw} threads)", s / t);
+    }
+    if let (Some(s), Some(t)) = (
+        r.mean_of("fig2b/lp_sweep_10step/serial/N=6000"),
+        r.mean_of("fig2b/lp_sweep_10step/threads/N=6000"),
+    ) {
+        println!("# LP-sweep parallel speedup at N=6000, C=8: {:.2}x ({hw} threads)", s / t);
     }
 }

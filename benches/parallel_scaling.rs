@@ -1,0 +1,136 @@
+//! Serial-vs-parallel scaling for the `core::par` execution layer at
+//! serving-relevant sizes (N ≥ 16k by default; `BENCH_N` overrides for
+//! smoke runs). Measures the four paths the perf trajectory tracks —
+//! tree build, kNN graph construction, VDT refinement, LP sweep — plus
+//! the column-blocked matvec, and writes `BENCH_parallel.json` so each
+//! run's thread-scaling lands in the repo's perf record.
+
+use vdt::core::bench::Runner;
+use vdt::core::par;
+use vdt::data::synthetic;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::{self, LpConfig};
+use vdt::tree::{build_tree, BuildConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn env_n(default: usize) -> usize {
+    std::env::var("BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run `body` with the thread budget forced to `threads`, restoring after.
+fn with_threads<T>(threads: usize, body: impl FnOnce() -> T) -> T {
+    let prev = par::set_max_threads(threads);
+    let out = body();
+    par::set_max_threads(prev);
+    out
+}
+
+fn main() {
+    let n = env_n(16_000);
+    let hw_threads = par::max_threads();
+    let mut r = Runner::from_args();
+    r.budget_secs = 1.0;
+    r.max_iters = 5;
+    println!("# parallel_scaling: N={n}, thread budget {hw_threads}");
+
+    // ---- tree build ----
+    let ds_tree = synthetic::gaussian_mixture(n, 64, 2, 8, 2.0, 1, "bench");
+    let serial_cfg = BuildConfig { parallel: false, ..Default::default() };
+    let parallel_cfg = BuildConfig::default();
+    r.bench(&format!("par/tree_build/serial/N={n}"), || {
+        std::hint::black_box(build_tree(&ds_tree.x, &serial_cfg));
+    });
+    r.bench(&format!("par/tree_build/threads/N={n}"), || {
+        std::hint::black_box(build_tree(&ds_tree.x, &parallel_cfg));
+    });
+
+    // ---- kNN graph construction ----
+    let ds_knn = synthetic::two_moons(n, 0.06, 2);
+    r.bench(&format!("par/knn_graph/serial/N={n}"), || {
+        std::hint::black_box(KnnGraph::build(
+            &ds_knn.x,
+            &KnnConfig { k: 4, ..Default::default() },
+        ));
+    });
+    r.bench(&format!("par/knn_graph/threads/N={n}"), || {
+        std::hint::black_box(KnnGraph::build(
+            &ds_knn.x,
+            &KnnConfig { k: 4, parallel: true, ..Default::default() },
+        ));
+    });
+
+    // ---- refinement 2N -> 6N ----
+    let ds_ref = &ds_tree;
+    for (label, threads) in [("serial", 1usize), ("threads", hw_threads)] {
+        with_threads(threads, || {
+            r.bench_with_setup(
+                &format!("par/refine_to_6N/{label}/N={n}"),
+                || VdtModel::build(&ds_ref.x, &VdtConfig::default()),
+                |mut m| {
+                    m.refine_to(6 * ds_ref.n());
+                    m.num_blocks()
+                },
+            );
+        });
+    }
+
+    // ---- LP sweep (8 columns) and matvec ----
+    let ds_lp = synthetic::gaussian_mixture(n, 32, 8, 2, 2.2, 3, "bench_lp");
+    let mut model = VdtModel::build(&ds_lp.x, &VdtConfig::default());
+    model.refine_to(6 * ds_lp.n());
+    let labeled = labelprop::choose_labeled(&ds_lp.labels, ds_lp.n_classes, n / 10, 4);
+    let y0 = labelprop::seed_matrix(&ds_lp.labels, &labeled, ds_lp.n_classes);
+    let lp_cfg = LpConfig { alpha: 0.01, steps: 10 };
+    for (label, threads) in [("serial", 1usize), ("threads", hw_threads)] {
+        with_threads(threads, || {
+            r.bench(&format!("par/lp_sweep_10x8col/{label}/N={n}"), || {
+                std::hint::black_box(labelprop::propagate(&model, &y0, &lp_cfg));
+            });
+            r.bench(&format!("par/matvec_8col/{label}/N={n}"), || {
+                std::hint::black_box(model.matvec(&y0));
+            });
+        });
+    }
+
+    // sanity: parallel LP output must equal serial (the equivalence tests
+    // pin this; the bench double-checks on the bench shapes)
+    let a = with_threads(1, || labelprop::propagate(&model, &y0, &lp_cfg));
+    let b = with_threads(hw_threads, || labelprop::propagate(&model, &y0, &lp_cfg));
+    assert_eq!(a.data, b.data, "parallel LP diverged from serial");
+
+    // ---- emit BENCH_parallel.json ----
+    let pairs = [
+        ("tree_build", format!("par/tree_build/serial/N={n}"), format!("par/tree_build/threads/N={n}")),
+        ("knn_graph", format!("par/knn_graph/serial/N={n}"), format!("par/knn_graph/threads/N={n}")),
+        ("refine_to_6N", format!("par/refine_to_6N/serial/N={n}"), format!("par/refine_to_6N/threads/N={n}")),
+        ("lp_sweep", format!("par/lp_sweep_10x8col/serial/N={n}"), format!("par/lp_sweep_10x8col/threads/N={n}")),
+        ("matvec", format!("par/matvec_8col/serial/N={n}"), format!("par/matvec_8col/threads/N={n}")),
+    ];
+    if pairs.iter().any(|(_, s, t)| r.mean_of(s).is_none() || r.mean_of(t).is_none()) {
+        println!("# filtered run: skipping BENCH_parallel.json (needs all pairs)");
+        return;
+    }
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"bench\": \"parallel_scaling\",\n  \"n\": {n},\n"));
+    json.push_str(&format!("  \"threads\": {hw_threads},\n  \"paths\": [\n"));
+    let mut wins_2x = 0usize;
+    for (i, (key, s_name, t_name)) in pairs.iter().enumerate() {
+        let s = r.mean_of(s_name).expect("checked above");
+        let t = r.mean_of(t_name).expect("checked above");
+        let speedup = s / t;
+        if speedup >= 2.0 {
+            wins_2x += 1;
+        }
+        json.push_str(&format!(
+            "    {{\"path\": \"{key}\", \"serial_ms\": {s:.3}, \"parallel_ms\": {t:.3}, \"speedup\": {speedup:.3}}}{}\n",
+            if i + 1 < pairs.len() { "," } else { "" }
+        ));
+        println!("# {key}: serial {s:.1} ms, parallel {t:.1} ms -> {speedup:.2}x");
+    }
+    json.push_str(&format!("  ],\n  \"paths_at_or_above_2x\": {wins_2x}\n}}\n"));
+    if let Err(e) = std::fs::write("BENCH_parallel.json", &json) {
+        eprintln!("warn: could not write BENCH_parallel.json: {e}");
+    } else {
+        println!("# wrote BENCH_parallel.json ({wins_2x} path(s) at >= 2x)");
+    }
+}

@@ -2,6 +2,17 @@
 //! offline build without tokio — the architecture is identical: one owner
 //! thread drains a request queue, fuses concurrent matvecs, and replies
 //! over per-request oneshot channels).
+//!
+//! Execution is **off the owner thread**: each burst's work items (fused
+//! matvec batches, label-propagation runs, spectral queries) run on scoped
+//! worker threads — at most [`crate::core::par::max_threads`] at a time —
+//! so the items of a burst execute concurrently instead of queueing behind
+//! each other on the owner thread. Workers send responses directly to the
+//! waiting clients; the owner thread only routes, fuses and counts. (The
+//! owner still joins a burst before draining the next one, so a very long
+//! item delays requests that arrive *after* its burst formed — same
+//! ordering as the previous inline execution, minus the within-burst
+//! serialization.)
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -120,9 +131,72 @@ impl CoordinatorHandle {
     }
 }
 
-/// The coordinator service. `spawn` starts the worker thread and returns a
-/// handle; the worker drains bursts of requests and fuses same-model
-/// matvecs into one multi-column sweep.
+/// A validated burst work item, dispatched to a scoped worker thread.
+enum Work {
+    /// One fused multi-column matvec batch against a single model.
+    MatvecBatch { op: SharedOp, group: Vec<(Matrix, mpsc::Sender<Response>)> },
+    /// A full label-propagation run.
+    LabelProp { op: SharedOp, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
+    /// Top-m Ritz values via Arnoldi.
+    Spectral { op: SharedOp, m: usize, resp: mpsc::Sender<Response> },
+}
+
+impl Work {
+    /// Run the item and answer its client(s) directly.
+    fn execute(self) {
+        match self {
+            Work::MatvecBatch { op, group } => run_matvec_batch(op, group),
+            Work::LabelProp { op, y0, cfg, resp } => {
+                let _ = resp.send(Response::Matrix(labelprop::propagate(op.as_ref(), &y0, &cfg)));
+            }
+            Work::Spectral { op, m, resp } => {
+                let _ = resp.send(Response::Eigenvalues(
+                    crate::spectral::arnoldi_eigenvalues(op.as_ref(), m, 0).eigenvalues,
+                ));
+            }
+        }
+    }
+}
+
+/// Execute one fused batch: concatenate the requests' columns, run a
+/// single multi-column sweep (itself column-parallel on the model side),
+/// and split the result back per request.
+fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>)>) {
+    let n = op.n();
+    if group.len() == 1 {
+        let (y, resp) = group.pop().unwrap();
+        let _ = resp.send(Response::Matrix(op.matvec(&y)));
+        return;
+    }
+    // fuse: concatenate all columns, one sweep, then split
+    let total_cols: usize = group.iter().map(|(y, _)| y.cols).sum();
+    let mut fused = Matrix::zeros(n, total_cols);
+    let mut off = 0usize;
+    for (y, _) in &group {
+        for r in 0..n {
+            fused.data[r * total_cols + off..r * total_cols + off + y.cols]
+                .copy_from_slice(y.row(r));
+        }
+        off += y.cols;
+    }
+    let out = op.matvec(&fused);
+    let mut off = 0usize;
+    for (y, resp) in group {
+        let mut part = Matrix::zeros(n, y.cols);
+        for r in 0..n {
+            part.row_mut(r).copy_from_slice(
+                &out.data[r * total_cols + off..r * total_cols + off + y.cols],
+            );
+        }
+        off += y.cols;
+        let _ = resp.send(Response::Matrix(part));
+    }
+}
+
+/// The coordinator service. `spawn` starts the owner thread and returns a
+/// handle; the owner drains bursts of requests, fuses same-model matvecs
+/// into one multi-column sweep, and executes the burst on scoped worker
+/// threads.
 pub struct Coordinator;
 
 impl Coordinator {
@@ -140,7 +214,7 @@ impl Coordinator {
         let mut models: HashMap<String, SharedOp> = HashMap::new();
         let (mut served, mut fused_cols, mut batches) = (0u64, 0u64, 0u64);
 
-        'outer: while let Ok(first) = rx.recv() {
+        while let Ok(first) = rx.recv() {
             // drain whatever is already queued — this burst forms a batch
             let mut burst = vec![first];
             // brief batching window so concurrent clients can land in the
@@ -150,8 +224,14 @@ impl Coordinator {
                 burst.push(req);
             }
 
+            // ---- route & validate on the owner thread ----
             let mut matvec_groups: HashMap<String, Vec<(Matrix, mpsc::Sender<Response>)>> =
                 HashMap::new();
+            let mut work: Vec<Work> = Vec::new();
+            // Shutdown stops routing (later requests in the burst are
+            // dropped, as before) but work already accepted from this
+            // burst still executes and answers its clients before exit
+            let mut shutdown = false;
             for req in burst {
                 match req {
                     Request::Register { name, op } => {
@@ -162,27 +242,32 @@ impl Coordinator {
                     }
                     Request::LabelProp { model, y0, cfg, resp } => {
                         served += 1;
-                        let r = match models.get(&model) {
-                            None => Response::Error(format!("unknown model {model}")),
-                            Some(op) => {
-                                if y0.rows != op.n() {
-                                    Response::Error(format!("Y0 rows {} != N {}", y0.rows, op.n()))
-                                } else {
-                                    Response::Matrix(labelprop::propagate(op.as_ref(), &y0, &cfg))
-                                }
+                        match models.get(&model) {
+                            None => {
+                                let _ = resp
+                                    .send(Response::Error(format!("unknown model {model}")));
                             }
-                        };
-                        let _ = resp.send(r);
+                            Some(op) if y0.rows != op.n() => {
+                                let _ = resp.send(Response::Error(format!(
+                                    "Y0 rows {} != N {}",
+                                    y0.rows,
+                                    op.n()
+                                )));
+                            }
+                            Some(op) => {
+                                work.push(Work::LabelProp { op: op.clone(), y0, cfg, resp });
+                            }
+                        }
                     }
                     Request::Spectral { model, m, resp } => {
                         served += 1;
-                        let r = match models.get(&model) {
-                            None => Response::Error(format!("unknown model {model}")),
-                            Some(op) => Response::Eigenvalues(
-                                crate::spectral::arnoldi_eigenvalues(op.as_ref(), m, 0).eigenvalues,
-                            ),
-                        };
-                        let _ = resp.send(r);
+                        match models.get(&model) {
+                            None => {
+                                let _ = resp
+                                    .send(Response::Error(format!("unknown model {model}")));
+                            }
+                            Some(op) => work.push(Work::Spectral { op: op.clone(), m, resp }),
+                        }
                     }
                     Request::ListModels { resp } => {
                         let infos = models
@@ -198,11 +283,14 @@ impl Coordinator {
                     Request::Stats { resp } => {
                         let _ = resp.send((served, fused_cols, batches));
                     }
-                    Request::Shutdown => break 'outer,
+                    Request::Shutdown => {
+                        shutdown = true;
+                        break;
+                    }
                 }
             }
 
-            // fused matvec execution per model
+            // fuse matvec groups per model; shape errors answered here
             for (model, group) in matvec_groups {
                 served += group.len() as u64;
                 let op = match models.get(&model) {
@@ -229,38 +317,33 @@ impl Coordinator {
                 if ok.is_empty() {
                     continue;
                 }
-                if ok.len() == 1 {
-                    let (y, resp) = ok.pop().unwrap();
-                    batches += 1;
-                    fused_cols += y.cols as u64;
-                    let _ = resp.send(Response::Matrix(op.matvec(&y)));
-                    continue;
-                }
-                // fuse: concatenate all columns, one sweep, then split
-                let total_cols: usize = ok.iter().map(|(y, _)| y.cols).sum();
-                let mut fused = Matrix::zeros(n, total_cols);
-                let mut off = 0usize;
-                for (y, _) in &ok {
-                    for r in 0..n {
-                        fused.data[r * total_cols + off..r * total_cols + off + y.cols]
-                            .copy_from_slice(y.row(r));
-                    }
-                    off += y.cols;
-                }
                 batches += 1;
-                fused_cols += total_cols as u64;
-                let out = op.matvec(&fused);
-                let mut off = 0usize;
-                for (y, resp) in ok {
-                    let mut part = Matrix::zeros(n, y.cols);
-                    for r in 0..n {
-                        part.row_mut(r).copy_from_slice(
-                            &out.data[r * total_cols + off..r * total_cols + off + y.cols],
-                        );
-                    }
-                    off += y.cols;
-                    let _ = resp.send(Response::Matrix(part));
+                fused_cols += ok.iter().map(|(y, _)| y.cols as u64).sum::<u64>();
+                work.push(Work::MatvecBatch { op, group: ok });
+            }
+
+            // ---- execute the burst on scoped worker threads ----
+            // waves are capped at the thread budget and each worker runs
+            // its item with nested par regions serialized, so a client
+            // backlog translates into at most `cap` OS threads total; a
+            // lone item runs inline on the owner with full internal
+            // parallelism instead
+            let cap = crate::core::par::max_threads().max(1);
+            while !work.is_empty() {
+                if work.len() == 1 {
+                    work.pop().expect("non-empty").execute();
+                    break;
                 }
+                let wave: Vec<Work> = work.drain(..work.len().min(cap)).collect();
+                std::thread::scope(|s| {
+                    for w in wave {
+                        s.spawn(move || crate::core::par::with_nested_serial(|| w.execute()));
+                    }
+                });
+            }
+
+            if shutdown {
+                break;
             }
         }
     }

@@ -78,12 +78,17 @@ impl Matrix {
         out
     }
 
-    /// Elementwise `self = a*self + b*other`.
+    /// Elementwise `self = a*self + b*other`. Large matrices split over
+    /// the [`crate::core::par`] layer (per-element, so bit-exact vs
+    /// serial); the LP inner loop calls this every step.
     pub fn scale_add(&mut self, a: f32, b: f32, other: &Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (s, &o) in self.data.iter_mut().zip(other.data.iter()) {
-            *s = a * *s + b * o;
-        }
+        let o = &other.data;
+        crate::core::par::par_slices_mut(&mut self.data, 1, 16384, |start, chunk| {
+            for (i, s) in chunk.iter_mut().enumerate() {
+                *s = a * *s + b * o[start + i];
+            }
+        });
     }
 
     /// Maximum absolute difference to another matrix.

@@ -1,10 +1,12 @@
 //! Core substrates: dense row-major matrices, vector math, metrics/timing,
-//! a seedable RNG and the bench harness (this is an offline build — no
-//! external crates beyond `xla`/`anyhow`, so these are all in-tree).
+//! a seedable RNG, the bench harness, and the [`par`] data-parallel
+//! execution layer (this is an offline build — no external crates beyond
+//! the vendored `xla`/`anyhow` stand-ins, so these are all in-tree).
 
 pub mod bench;
 pub mod matrix;
 pub mod metrics;
+pub mod par;
 pub mod rng;
 pub mod vecmath;
 

@@ -1,0 +1,340 @@
+//! Data-parallel execution layer for every hot path in the crate.
+//!
+//! This is an offline build (no rayon), so the facade is built on
+//! `std::thread::scope`: each parallel region fans a contiguous index range
+//! out over at most [`max_threads`] scoped OS threads and joins before
+//! returning. There is no persistent pool — regions are coarse (a whole
+//! point-stealing scan, a whole q-update pass, a column block of a matvec),
+//! so the few tens of microseconds of spawn cost are noise, and the
+//! scoped-borrow model means callers can hand workers plain `&`/`&mut`
+//! slices with no `Arc` ceremony.
+//!
+//! ## Threading knobs
+//!
+//! - **`VDT_THREADS`** (environment): global thread budget, read once on
+//!   first use. `VDT_THREADS=1` forces every converted path down its serial
+//!   fallback; unset or invalid falls back to
+//!   `std::thread::available_parallelism()`.
+//! - **[`set_max_threads`]**: programmatic override (takes precedence over
+//!   the environment; used by the benches to time serial vs parallel in one
+//!   process).
+//!
+//! ## Determinism contract
+//!
+//! Every helper here is deterministic, and the per-*element* helpers
+//! ([`par_map`], [`par_slices_mut`]) are **bit-exact** against the serial
+//! fallback: each output element is produced by the same closure invocation
+//! with the same inputs, only on a different thread. Floating-point
+//! *reductions* cannot reassociate freely without changing low-order bits,
+//! so [`par_sum_f64`] accumulates in fixed 4096-element blocks whose
+//! partials are combined in block order — the result is identical for
+//! every thread count (including 1), though it may differ from a plain
+//! left-to-right sum in the last ulps. `rust/tests/parallel_equivalence.rs`
+//! pins both properties.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Cached thread budget; 0 = not yet initialized.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+std::thread_local! {
+    /// True on threads that are themselves parallel workers (spawned by a
+    /// facade region, or marked via [`with_nested_serial`]). Regions
+    /// started from such a thread run serial, so fan-out never compounds
+    /// multiplicatively across nesting levels.
+    static IN_PAR_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Mark the current thread as a parallel worker for the duration of `f`:
+/// every facade region entered from inside runs its serial fallback.
+/// Coordinators that fan work out with their own threads use this so each
+/// work item doesn't multiply the thread budget again.
+pub fn with_nested_serial<T>(f: impl FnOnce() -> T) -> T {
+    IN_PAR_WORKER.with(|c| {
+        let prev = c.replace(true);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+fn mark_worker() {
+    IN_PAR_WORKER.with(|c| c.set(true));
+}
+
+/// Block length for deterministic chunked reductions (fixed: independent of
+/// the thread count, so results do not change with `VDT_THREADS`).
+const SUM_BLOCK: usize = 4096;
+
+/// Hard cap — beyond this, scoped-spawn overhead beats any win on the
+/// region sizes this crate produces.
+const MAX_THREADS_CAP: usize = 64;
+
+fn detect_threads() -> usize {
+    if let Ok(v) = std::env::var("VDT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_THREADS_CAP);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS_CAP)
+}
+
+/// The current thread budget (≥ 1). Parallel regions never use more
+/// threads than this; 1 means every facade call runs serially inline.
+pub fn max_threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let t = detect_threads();
+    THREADS.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Override the thread budget for the rest of the process (clamped to
+/// `1..=64`). Returns the previous effective budget.
+pub fn set_max_threads(n: usize) -> usize {
+    let prev = max_threads();
+    THREADS.store(n.clamp(1, MAX_THREADS_CAP), Ordering::Relaxed);
+    prev
+}
+
+/// The budget a region started *on this thread* may use: the configured
+/// [`max_threads`], or 1 inside a parallel worker (nested regions are
+/// serial — see [`with_nested_serial`]).
+pub fn effective_threads() -> usize {
+    if IN_PAR_WORKER.with(|c| c.get()) {
+        1
+    } else {
+        max_threads()
+    }
+}
+
+/// True when a parallel region started on this thread will actually fan
+/// out.
+pub fn is_parallel() -> bool {
+    effective_threads() > 1
+}
+
+/// `(0..n).map(f)` with the index range split over up to [`max_threads`]
+/// threads. Results come back in index order; each element is bit-exact
+/// equal to the serial fallback's.
+pub fn par_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = effective_threads().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            handles.push(s.spawn(move || {
+                mark_worker();
+                (lo..hi).map(f).collect::<Vec<R>>()
+            }));
+            lo = hi;
+        }
+        for h in handles {
+            out.extend(h.join().expect("par_map worker panicked"));
+        }
+    });
+    out
+}
+
+/// Split `data` into contiguous chunks aligned to `unit` elements (e.g.
+/// `unit = cols` keeps matrix rows whole) and run `f(first_unit, chunk)`
+/// on each, returning the per-chunk results in order.
+///
+/// Falls back to a single inline `f(0, data)` call when the budget is 1
+/// or there are at most `min_units` units — so `Vec.len() == 1` in the
+/// serial case. Chunk boundaries depend on the thread budget; the closure
+/// must therefore treat elements independently (which also makes the
+/// element-wise output bit-exact vs serial).
+pub fn par_slices_mut<T, R, F>(data: &mut [T], unit: usize, min_units: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [T]) -> R + Sync,
+{
+    let unit = unit.max(1);
+    debug_assert_eq!(data.len() % unit, 0, "data length must be a multiple of unit");
+    let units = data.len() / unit;
+    let threads = effective_threads();
+    if threads <= 1 || units <= min_units.max(1) {
+        return vec![f(0, data)];
+    }
+    // floor chunks at min_units so inputs barely past the threshold don't
+    // shatter into spawn-dominated slivers
+    let units_per = units.div_ceil(threads).max(min_units.max(1));
+    let chunk = units_per * unit;
+    let f = &f;
+    let mut out: Vec<R> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        let mut first_unit = 0usize;
+        for piece in data.chunks_mut(chunk) {
+            let u0 = first_unit;
+            first_unit += piece.len() / unit;
+            handles.push(s.spawn(move || {
+                mark_worker();
+                f(u0, piece)
+            }));
+        }
+        for h in handles {
+            out.push(h.join().expect("par_slices_mut worker panicked"));
+        }
+    });
+    out
+}
+
+/// Fill `dst` with `f(0), f(1), ..., f(n-1)`, reusing its allocation.
+/// Equivalent to `par_map` but writes into a caller-owned scratch buffer.
+pub fn par_fill_f64<F>(dst: &mut Vec<f64>, n: usize, f: F)
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    dst.clear();
+    dst.resize(n, 0.0);
+    par_slices_mut(&mut dst[..], 1, SUM_BLOCK, |start, chunk| {
+        for (off, v) in chunk.iter_mut().enumerate() {
+            *v = f(start + off);
+        }
+    });
+}
+
+/// `Σ_{i<n} f(i)` accumulated in fixed [`SUM_BLOCK`]-element blocks whose
+/// partial sums are combined in block order. Deterministic for every
+/// thread budget (the blocking is independent of it); differs from a plain
+/// serial sum only by bounded reassociation in the last ulps.
+pub fn par_sum_f64<F>(n: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let n_blocks = n.div_ceil(SUM_BLOCK);
+    let block_sum = |b: usize| -> f64 {
+        let lo = b * SUM_BLOCK;
+        let hi = (lo + SUM_BLOCK).min(n);
+        let mut acc = 0.0f64;
+        for i in lo..hi {
+            acc += f(i);
+        }
+        acc
+    };
+    if effective_threads() <= 1 || n_blocks <= 1 {
+        return (0..n_blocks).map(block_sum).sum();
+    }
+    par_map(n_blocks, block_sum).into_iter().sum()
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `THREADS` is process-global and the harness runs tests
+    /// concurrently: every test that mutates the budget serializes on
+    /// this lock so none observes another's override.
+    static BUDGET_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn budget_guard() -> std::sync::MutexGuard<'static, ()> {
+        BUDGET_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn par_map_matches_serial_in_order() {
+        let want: Vec<u64> = (0..10_001u64).map(|i| i * i).collect();
+        let got = par_map(10_001, |i| (i as u64) * (i as u64));
+        assert_eq!(got, want);
+        // tiny n takes the serial path and still works
+        assert_eq!(par_map(1, |i| i + 7), vec![7]);
+        assert!(par_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn par_slices_mut_touches_every_element_once() {
+        let mut data = vec![0u32; 9_999];
+        par_slices_mut(&mut data, 1, 16, |start, chunk| {
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v += (start + off) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn par_slices_mut_respects_unit_alignment() {
+        // 7 columns per row: every chunk must hold whole rows
+        let cols = 7;
+        let mut data = vec![0f32; 123 * cols];
+        let sizes = par_slices_mut(&mut data, cols, 2, |first_row, chunk| {
+            assert_eq!(chunk.len() % cols, 0);
+            let _ = first_row;
+            chunk.len() / cols
+        });
+        assert_eq!(sizes.iter().sum::<usize>(), 123);
+    }
+
+    #[test]
+    fn par_sum_is_thread_count_invariant() {
+        let _guard = budget_guard();
+        let f = |i: usize| ((i as f64) * 0.3).sin();
+        let n = 50_000;
+        let before = set_max_threads(1);
+        let serial = par_sum_f64(n, f);
+        set_max_threads(4);
+        let par4 = par_sum_f64(n, f);
+        set_max_threads(before);
+        assert_eq!(serial.to_bits(), par4.to_bits(), "fixed-block sum must not depend on threads");
+    }
+
+    #[test]
+    fn par_fill_reuses_buffer() {
+        let mut buf = Vec::new();
+        par_fill_f64(&mut buf, 5000, |i| i as f64 * 2.0);
+        assert_eq!(buf.len(), 5000);
+        assert_eq!(buf[4999], 9998.0);
+        par_fill_f64(&mut buf, 10, |i| i as f64);
+        assert_eq!(buf.len(), 10);
+        assert_eq!(buf[9], 9.0);
+    }
+
+    #[test]
+    fn nested_regions_run_serial() {
+        let _guard = budget_guard();
+        let prev = set_max_threads(4);
+        // outer par_map workers are marked: a region started inside one
+        // must observe an effective budget of 1 (no compounding fan-out)
+        let inner_budgets = par_map(8, |_| effective_threads());
+        assert!(inner_budgets.iter().all(|&b| b == 1));
+        // ...and with_nested_serial marks the current thread explicitly
+        assert_eq!(with_nested_serial(effective_threads), 1);
+        assert_eq!(effective_threads(), 4, "flag must be restored");
+        set_max_threads(prev);
+    }
+
+    #[test]
+    fn set_max_threads_round_trips() {
+        let _guard = budget_guard();
+        let prev = set_max_threads(2);
+        assert_eq!(max_threads(), 2);
+        assert!(is_parallel());
+        set_max_threads(1);
+        assert!(!is_parallel());
+        set_max_threads(prev);
+    }
+}

@@ -17,8 +17,6 @@ use crate::labelprop::TransitionOp;
 use crate::sparse::Csr;
 use crate::tree::{build_tree, BuildConfig, PartitionTree};
 
-use super::search::knn_query;
-
 /// Configuration for [`KnnGraph::build`].
 #[derive(Clone, Debug)]
 pub struct KnnConfig {
@@ -78,35 +76,10 @@ impl KnnGraph {
     }
 
     fn search_all(&mut self, k: usize) {
-        let n = self.x.rows;
         self.k = k;
-        self.neighbors = if self.parallel {
-            // std::thread::scope fan-out over contiguous chunks (offline
-            // build — no rayon): deterministic output order either way.
-            let threads = std::thread::available_parallelism().map_or(4, |p| p.get()).min(16);
-            let chunk = n.div_ceil(threads);
-            let tree = &self.tree;
-            let x = &self.x;
-            let mut out: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
-            std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for t in 0..threads {
-                    let (lo, hi) = (t * chunk, ((t + 1) * chunk).min(n));
-                    if lo >= hi {
-                        break;
-                    }
-                    handles.push(scope.spawn(move || {
-                        (lo..hi).map(|i| knn_query(tree, x, i, k)).collect::<Vec<_>>()
-                    }));
-                }
-                for h in handles {
-                    out.extend(h.join().expect("knn worker panicked"));
-                }
-            });
-            out
-        } else {
-            (0..n).map(|i| knn_query(&self.tree, &self.x, i, k)).collect()
-        };
+        // per-query traversals fan out on the core::par layer; output
+        // order (and every distance) is bit-identical to the serial loop
+        self.neighbors = super::search::knn_all(&self.tree, &self.x, k, self.parallel);
     }
 
     /// Recompute edge weights for the current σ (Eq. 3 on kept edges).

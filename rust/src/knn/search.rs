@@ -100,6 +100,18 @@ pub fn knn_query(
     out
 }
 
+/// All-points kNN: one [`knn_query`] per point, fanned out over the
+/// [`crate::core::par`] layer when `parallel` is on. Each query's
+/// traversal is independent and writes only its own result row, so the
+/// output is bit-identical to the serial loop.
+pub fn knn_all(tree: &PartitionTree, x: &Matrix, k: usize, parallel: bool) -> Vec<Vec<(u32, f64)>> {
+    if parallel {
+        crate::core::par::par_map(x.rows, |i| knn_query(tree, x, i, k))
+    } else {
+        (0..x.rows).map(|i| knn_query(tree, x, i, k)).collect()
+    }
+}
+
 /// Brute-force reference (tests and tiny inputs).
 pub fn knn_bruteforce(x: &Matrix, query: usize, k: usize) -> Vec<(u32, f64)> {
     let mut all: Vec<(u32, f64)> = (0..x.rows)

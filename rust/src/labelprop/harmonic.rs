@@ -46,19 +46,37 @@ pub fn propagate_harmonic(
         v
     };
     let mut y = y0.clone();
+    let cols = y0.cols;
+    if cols == 0 {
+        return y;
+    }
     for _ in 0..cfg.steps {
         let py = op.matvec(&y);
-        let mut delta = 0f32;
-        for i in 0..y.rows {
-            if is_labeled[i] {
-                continue; // clamped
-            }
-            for k in 0..y.cols {
-                let idx = i * y.cols + k;
-                delta = delta.max((py.data[idx] - y.data[idx]).abs());
-                y.data[idx] = py.data[idx];
-            }
-        }
+        // unlabeled-row updates are independent: split row-aligned chunks
+        // over the par layer (each per-row delta/assignment is the same
+        // scalar sequence as serial; chunk deltas merge by max, which is
+        // order-insensitive) — the "per-class chunk" sweep of the LP layer
+        let chunk_deltas = crate::core::par::par_slices_mut(
+            &mut y.data,
+            cols,
+            256,
+            |first_row, chunk| {
+                let mut delta = 0f32;
+                for (ri, row) in chunk.chunks_mut(cols).enumerate() {
+                    let i = first_row + ri;
+                    if is_labeled[i] {
+                        continue; // clamped
+                    }
+                    let src = &py.data[i * cols..(i + 1) * cols];
+                    for (dst, &v) in row.iter_mut().zip(src.iter()) {
+                        delta = delta.max((v - *dst).abs());
+                        *dst = v;
+                    }
+                }
+                delta
+            },
+        );
+        let delta = chunk_deltas.into_iter().fold(0f32, f32::max);
         if delta < cfg.tol {
             break;
         }

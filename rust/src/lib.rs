@@ -20,6 +20,13 @@
 //! [`runtime`] loads and executes via PJRT; Python is never on the request
 //! path.
 //!
+//! Hot paths across every layer (tree build, kNN search, the variational
+//! optimizer, refinement scoring, Algorithm-1 matvec, label propagation,
+//! spectral dots, coordinator batch execution) run on the
+//! [`core::par`] data-parallel layer — `VDT_THREADS=1` forces the serial
+//! fallbacks, and parallel results are exactly equivalent to serial (see
+//! the `core::par` module docs for the determinism contract).
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -34,6 +41,10 @@
 //! let yhat = model.matvec(&y);                  // Q·Y in O(|B|)
 //! assert_eq!(yhat.rows, ds.n());
 //! ```
+
+// Index-driven loops mirror the paper's pseudocode and the arena layout;
+// the module path `vdt::vdt` is the crate's published API shape.
+#![allow(clippy::needless_range_loop, clippy::type_complexity, clippy::module_inception)]
 
 pub mod coordinator;
 pub mod core;

@@ -38,8 +38,18 @@ impl SmallMat {
 }
 
 /// Reduce to upper Hessenberg form by Householder similarity transforms.
+///
+/// Both rank-1 applications are organized so every matrix element is
+/// updated by one scalar expression from precomputed dots, which lets the
+/// dot passes and the element updates split row-wise over
+/// [`crate::core::par`] for the larger Krylov spaces — bit-identical to
+/// the serial sweeps (same expression per element, and each dot keeps its
+/// serial accumulation order).
 pub fn to_hessenberg(m: &mut SmallMat) {
     let n = m.n;
+    // below this the per-column regions (O(n²) flops each) are smaller
+    // than scoped spawn/join overhead and fan-out would pessimize
+    let parallel = crate::core::par::is_parallel() && n >= 256;
     for col in 0..n.saturating_sub(2) {
         // Householder vector for column `col`, rows col+1..n
         let mut norm2 = 0.0;
@@ -61,21 +71,52 @@ pub fn to_hessenberg(m: &mut SmallMat) {
             continue;
         }
         let beta = 2.0 / vtv;
-        // A ← (I − βvvᵀ) A
-        for j in 0..n {
-            let dot: f64 = ((col + 1)..n).map(|i| v[i] * m.get(i, j)).sum();
-            for i in (col + 1)..n {
-                let val = m.get(i, j) - beta * v[i] * dot;
-                m.set(i, j, val);
+        // A ← (I − βvvᵀ) A: dots d_j = Σ_i v_i A_ij, then the rank-1 update
+        let dots: Vec<f64> = if parallel {
+            let mm: &SmallMat = m;
+            crate::core::par::par_map(n, |j| {
+                ((col + 1)..n).map(|i| v[i] * mm.get(i, j)).sum()
+            })
+        } else {
+            (0..n).map(|j| ((col + 1)..n).map(|i| v[i] * m.get(i, j)).sum()).collect()
+        };
+        let update_left = |first_row: usize, rows: &mut [f64]| {
+            for (ri, row) in rows.chunks_mut(n).enumerate() {
+                let i = first_row + ri;
+                if i <= col {
+                    continue;
+                }
+                for (j, cell) in row.iter_mut().enumerate() {
+                    *cell -= beta * v[i] * dots[j];
+                }
             }
+        };
+        if parallel {
+            crate::core::par::par_slices_mut(&mut m.a, n, 8, update_left);
+        } else {
+            update_left(0, &mut m.a);
         }
-        // A ← A (I − βvvᵀ)
-        for i in 0..n {
-            let dot: f64 = ((col + 1)..n).map(|j| m.get(i, j) * v[j]).sum();
-            for j in (col + 1)..n {
-                let val = m.get(i, j) - beta * dot * v[j];
-                m.set(i, j, val);
+        // A ← A (I − βvvᵀ): dots d_i = Σ_j A_ij v_j, then the rank-1 update
+        let dots2: Vec<f64> = if parallel {
+            let mm: &SmallMat = m;
+            crate::core::par::par_map(n, |i| {
+                ((col + 1)..n).map(|j| mm.get(i, j) * v[j]).sum()
+            })
+        } else {
+            (0..n).map(|i| ((col + 1)..n).map(|j| m.get(i, j) * v[j]).sum()).collect()
+        };
+        let update_right = |first_row: usize, rows: &mut [f64]| {
+            for (ri, row) in rows.chunks_mut(n).enumerate() {
+                let i = first_row + ri;
+                for (j, cell) in row.iter_mut().enumerate().skip(col + 1) {
+                    *cell -= beta * dots2[i] * v[j];
+                }
             }
+        };
+        if parallel {
+            crate::core::par::par_slices_mut(&mut m.a, n, 8, update_right);
+        } else {
+            update_right(0, &mut m.a);
         }
     }
 }

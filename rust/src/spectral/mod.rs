@@ -100,16 +100,25 @@ pub fn subspace_iteration(
         y = op.matvec(&y);
         orthonormalize(&mut y);
     }
-    // Rayleigh–Ritz: B = Yᵀ (P Y), k×k
+    // Rayleigh–Ritz: B = Yᵀ (P Y), k×k — k² independent length-n dots,
+    // one parallel task per row of B (each entry's accumulation order is
+    // unchanged, so results are bit-identical to the serial loops)
     let py = op.matvec(&y);
     let mut b = SmallMat::zeros(k);
-    for i in 0..k {
-        for j in 0..k {
-            let mut acc = 0f64;
-            for r in 0..n {
-                acc += y.get(r, i) as f64 * py.get(r, j) as f64;
-            }
-            b.set(i, j, acc);
+    let rows: Vec<Vec<f64>> = crate::core::par::par_map(k, |i| {
+        (0..k)
+            .map(|j| {
+                let mut acc = 0f64;
+                for r in 0..n {
+                    acc += y.get(r, i) as f64 * py.get(r, j) as f64;
+                }
+                acc
+            })
+            .collect()
+    });
+    for (i, row) in rows.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            b.set(i, j, v);
         }
     }
     let mut eigs = eig::eigenvalues(b);

@@ -19,7 +19,31 @@
 //! The result is a full binary tree down to singleton leaves with exact
 //! `S1/S2` statistics and valid centroid-radius bounds — `O(N^1.5 log N)`
 //! construction, matching the paper's Table 1.
+//!
+//! ## Parallel construction
+//!
+//! With [`BuildConfig::parallel`] on (the default) and at least
+//! [`BuildConfig::parallel_threshold`] points in play, the hot phases run
+//! on [`crate::core::par`]:
+//!
+//! - the per-anchor **point-stealing scans** fan out one task per anchor
+//!   (each scan is independent; stolen lists are concatenated in anchor
+//!   order, exactly the serial visit order);
+//! - the per-anchor **subtree recursions** build each anchor's subtree in
+//!   an isolated arena over its extracted point subset, then splice the
+//!   internal nodes back in anchor order — reproducing the serial
+//!   allocation order node-for-node, so ids, statistics and topology are
+//!   identical to a serial build;
+//! - the initial **agglomeration score matrix** and the **exact-radius
+//!   post-pass** split their index ranges over threads (radii merge by
+//!   `max`, which is order-insensitive and exact in f32).
+//!
+//! Every phase computes each output value with the same scalar expressions
+//! as the serial path, so parallel and serial builds are **bit-identical**
+//! (pinned by `rust/tests/parallel_equivalence.rs`). `VDT_THREADS=1`
+//! forces the serial fallback globally.
 
+use crate::core::par;
 use crate::core::vecmath::{sq_dist, sq_dist_to_centroid, sq_norm};
 use crate::core::Matrix;
 
@@ -38,11 +62,24 @@ pub struct BuildConfig {
     /// builder turns this off — §Perf measured the pass at ~25-35% of VDT
     /// construction time at N=16k, d=315.
     pub exact_radii: bool,
+    /// Run the construction phases on the [`crate::core::par`] layer.
+    /// Results are bit-identical to a serial build; `VDT_THREADS=1` (or
+    /// `parallel: false`) forces the serial path.
+    pub parallel: bool,
+    /// Minimum working-set size before a recursion level fans out; below
+    /// it, thread-spawn overhead beats the win. Tests lower this to
+    /// exercise the parallel splice on tiny inputs.
+    pub parallel_threshold: usize,
 }
 
 impl Default for BuildConfig {
     fn default() -> Self {
-        BuildConfig { divisive_threshold: 48, exact_radii: true }
+        BuildConfig {
+            divisive_threshold: 48,
+            exact_radii: true,
+            parallel: true,
+            parallel_threshold: 2048,
+        }
     }
 }
 
@@ -149,13 +186,42 @@ impl Anchor {
     }
 }
 
-fn make_anchors(x: &Matrix, points: &[u32], m: usize) -> Vec<Anchor> {
+/// One anchor's share of a point-stealing scan against a new pivot:
+/// returns (kept, stolen) with the serial path's exact scan/cutoff logic.
+fn steal_scan(x: &Matrix, a: &Anchor, new_pivot: u32) -> (Vec<(u32, f32)>, Vec<(u32, f32)>) {
+    let pivot_gap = sq_dist(x.row(new_pivot as usize), x.row(a.pivot as usize)).sqrt() as f32;
+    let cutoff = pivot_gap / 2.0;
+    // pts sorted descending: only the prefix with dist >= cutoff can
+    // possibly be closer to the new pivot (triangle inequality).
+    let mut keep = Vec::with_capacity(a.pts.len());
+    let mut stolen = Vec::new();
+    for (idx, &(p, dist_owner)) in a.pts.iter().enumerate() {
+        if dist_owner < cutoff {
+            keep.extend_from_slice(&a.pts[idx..]);
+            break;
+        }
+        let dist_new = sq_dist(x.row(p as usize), x.row(new_pivot as usize)).sqrt() as f32;
+        if dist_new < dist_owner {
+            stolen.push((p, dist_new));
+        } else {
+            keep.push((p, dist_owner));
+        }
+    }
+    (keep, stolen)
+}
+
+fn make_anchors(x: &Matrix, points: &[u32], m: usize, parallel: bool) -> Vec<Anchor> {
     // first anchor: pivot = lowest-index point (deterministic), owns all
     let pivot0 = points[0];
-    let mut pts: Vec<(u32, f32)> = points
-        .iter()
-        .map(|&p| (p, sq_dist(x.row(p as usize), x.row(pivot0 as usize)).sqrt() as f32))
-        .collect();
+    let dist_to_pivot0 = |i: usize| -> (u32, f32) {
+        let p = points[i];
+        (p, sq_dist(x.row(p as usize), x.row(pivot0 as usize)).sqrt() as f32)
+    };
+    let mut pts: Vec<(u32, f32)> = if parallel {
+        par::par_map(points.len(), dist_to_pivot0)
+    } else {
+        (0..points.len()).map(dist_to_pivot0).collect()
+    };
     pts.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     let mut anchors = vec![Anchor { pivot: pivot0, pts }];
 
@@ -174,28 +240,17 @@ fn make_anchors(x: &Matrix, points: &[u32], m: usize) -> Vec<Anchor> {
             break; // only duplicates left; more anchors can't separate them
         }
         let new_pivot = anchors[ai].pts[0].0;
+        // per-anchor scans are independent; stolen lists concatenate in
+        // anchor order, matching the serial visit order exactly
+        let results: Vec<(Vec<(u32, f32)>, Vec<(u32, f32)>)> = if parallel && anchors.len() >= 2 {
+            par::par_map(anchors.len(), |i| steal_scan(x, &anchors[i], new_pivot))
+        } else {
+            anchors.iter().map(|a| steal_scan(x, a, new_pivot)).collect()
+        };
         let mut stolen: Vec<(u32, f32)> = Vec::new();
-        for a in anchors.iter_mut() {
-            let pivot_gap =
-                sq_dist(x.row(new_pivot as usize), x.row(a.pivot as usize)).sqrt() as f32;
-            let cutoff = pivot_gap / 2.0;
-            // pts sorted descending: only the prefix with dist >= cutoff can
-            // possibly be closer to the new pivot (triangle inequality).
-            let mut keep = Vec::with_capacity(a.pts.len());
-            for (idx, &(p, dist_owner)) in a.pts.iter().enumerate() {
-                if dist_owner < cutoff {
-                    keep.extend_from_slice(&a.pts[idx..]);
-                    break;
-                }
-                let dist_new =
-                    sq_dist(x.row(p as usize), x.row(new_pivot as usize)).sqrt() as f32;
-                if dist_new < dist_owner {
-                    stolen.push((p, dist_new));
-                } else {
-                    keep.push((p, dist_owner));
-                }
-            }
+        for (a, (keep, st)) in anchors.iter_mut().zip(results) {
             a.pts = keep;
+            stolen.extend(st);
         }
         stolen.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         anchors.push(Anchor { pivot: new_pivot, pts: stolen });
@@ -210,8 +265,10 @@ fn make_anchors(x: &Matrix, points: &[u32], m: usize) -> Vec<Anchor> {
 /// Scores are cached in a k×k matrix: each merge scans alive pairs in
 /// O(k²) *scalar* work and refreshes one row of O(k) scores at O(d) each —
 /// O(k²·d) total instead of the naive O(k³·d) (which dominated VDT
-/// construction before this cache; see EXPERIMENTS.md §Perf).
-fn agglomerate(arena: &mut Arena, roots: Vec<u32>) -> u32 {
+/// construction before this cache; see EXPERIMENTS.md §Perf). The initial
+/// O(k²·d) score fill is row-parallel; the merge loop itself is a cheap
+/// scalar scan and stays serial.
+fn agglomerate(arena: &mut Arena, roots: Vec<u32>, parallel: bool) -> u32 {
     assert!(!roots.is_empty());
     let k = roots.len();
     if k == 1 {
@@ -221,10 +278,23 @@ fn agglomerate(arena: &mut Arena, roots: Vec<u32>) -> u32 {
     let mut slots: Vec<Option<u32>> = roots.into_iter().map(Some).collect();
     // cached merged-radius score for each slot pair (upper triangle used)
     let mut scores = vec![f32::INFINITY; k * k];
-    for i in 0..k {
-        for j in (i + 1)..k {
-            scores[i * k + j] =
-                arena.merged_radius(slots[i].unwrap(), slots[j].unwrap());
+    if parallel && k >= 64 {
+        let arena_ref: &Arena = arena;
+        let slots_ref = &slots;
+        par::par_slices_mut(&mut scores, k, 4, |row0, chunk| {
+            for (ri, row) in chunk.chunks_mut(k).enumerate() {
+                let i = row0 + ri;
+                for (j, cell) in row.iter_mut().enumerate().skip(i + 1) {
+                    *cell =
+                        arena_ref.merged_radius(slots_ref[i].unwrap(), slots_ref[j].unwrap());
+                }
+            }
+        });
+    } else {
+        for i in 0..k {
+            for j in (i + 1)..k {
+                scores[i * k + j] = arena.merged_radius(slots[i].unwrap(), slots[j].unwrap());
+            }
         }
     }
     let mut alive = k;
@@ -316,22 +386,122 @@ fn build_divisive(arena: &mut Arena, points: &[u32]) -> u32 {
     arena.join(l, r)
 }
 
-fn build_recursive(arena: &mut Arena, points: &[u32], cfg: &BuildConfig) -> u32 {
+/// A subtree built in isolation over a point subset: only its internal
+/// nodes, in local allocation order. Local child ids `< m` index the
+/// subset (leaf), ids `>= m` index `internal` (`id - m`).
+struct SubTree {
+    /// Number of leaves (the subset size).
+    m: usize,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    count: Vec<u32>,
+    s2: Vec<f64>,
+    radius: Vec<f32>,
+    s1: Vec<f32>,
+}
+
+/// Build the subtree over `pts` in a private arena over the extracted
+/// submatrix. Local leaf i holds the same row values as global leaf
+/// `pts[i]`, and the serial recursion allocates internal nodes in the same
+/// order it would in the shared arena — so the result splices back
+/// bit-identically (see [`splice_subtree`]).
+fn build_subtree_standalone(x: &Matrix, pts: &[u32], cfg: &BuildConfig) -> SubTree {
+    let m = pts.len();
+    let d = x.cols;
+    let mut xs = Matrix::zeros(m, d);
+    for (i, &p) in pts.iter().enumerate() {
+        xs.row_mut(i).copy_from_slice(x.row(p as usize));
+    }
+    let mut arena = Arena::new(&xs);
+    if m > 1 {
+        let local_points: Vec<u32> = (0..m as u32).collect();
+        let root = build_recursive(&mut arena, &local_points, cfg, false);
+        debug_assert_eq!(root as usize, 2 * m - 2, "subtree root must be allocated last");
+    }
+    SubTree {
+        m,
+        left: arena.left.split_off(m),
+        right: arena.right.split_off(m),
+        count: arena.count.split_off(m),
+        s2: arena.s2.split_off(m),
+        radius: arena.radius.split_off(m),
+        s1: arena.s1.split_off(m * d),
+    }
+}
+
+/// Append a standalone subtree's internal nodes to the shared arena,
+/// remapping local ids (leaf i → `pts[i]`, internal k → `base + k`).
+/// Returns the global id of the subtree root.
+fn splice_subtree(arena: &mut Arena, pts: &[u32], st: &SubTree) -> u32 {
+    let m = st.m;
+    if m == 1 {
+        return pts[0];
+    }
+    let d = arena.d;
+    let base = arena.count.len() as u32;
+    let remap = |c: u32| -> u32 {
+        if (c as usize) < m {
+            pts[c as usize]
+        } else {
+            base + (c - m as u32)
+        }
+    };
+    for k in 0..(m - 1) {
+        let gid = base + k as u32;
+        let (l, r) = (remap(st.left[k]), remap(st.right[k]));
+        arena.left.push(l);
+        arena.right.push(r);
+        arena.parent.push(NONE);
+        arena.count.push(st.count[k]);
+        arena.s2.push(st.s2[k]);
+        arena.radius.push(st.radius[k]);
+        arena.s1.extend_from_slice(&st.s1[k * d..(k + 1) * d]);
+        arena.parent[l as usize] = gid;
+        arena.parent[r as usize] = gid;
+    }
+    base + (m as u32 - 2)
+}
+
+/// Build every anchor's subtree concurrently (isolated arenas), then
+/// splice them into the shared arena in anchor order — the same order the
+/// serial recursion allocates, so node ids match a serial build exactly.
+fn build_subtrees_parallel(arena: &mut Arena, anchors: &[Anchor], cfg: &BuildConfig) -> Vec<u32> {
+    let x = arena.x;
+    let pts_lists: Vec<Vec<u32>> = anchors
+        .iter()
+        .map(|a| a.pts.iter().map(|&(p, _)| p).collect())
+        .collect();
+    let subtrees: Vec<SubTree> =
+        par::par_map(pts_lists.len(), |i| build_subtree_standalone(x, &pts_lists[i], cfg));
+    pts_lists
+        .iter()
+        .zip(subtrees.iter())
+        .map(|(pts, st)| splice_subtree(arena, pts, st))
+        .collect()
+}
+
+fn build_recursive(arena: &mut Arena, points: &[u32], cfg: &BuildConfig, parallel: bool) -> u32 {
     if points.len() <= cfg.divisive_threshold {
         return build_divisive(arena, points);
     }
+    let par_here = parallel && points.len() >= cfg.parallel_threshold && par::is_parallel();
     let m = (points.len() as f64).sqrt().ceil() as usize;
-    let anchors = make_anchors(arena.x, points, m);
+    let anchors = make_anchors(arena.x, points, m, par_here);
     if anchors.len() == 1 {
         // anchors couldn't split (e.g. all-duplicate set): fall back
         return build_divisive(arena, points);
     }
-    let mut roots = Vec::with_capacity(anchors.len());
-    for a in &anchors {
-        let pts: Vec<u32> = a.pts.iter().map(|&(p, _)| p).collect();
-        roots.push(build_recursive(arena, &pts, cfg));
-    }
-    agglomerate(arena, roots)
+    let roots = if par_here {
+        build_subtrees_parallel(arena, &anchors, cfg)
+    } else {
+        let mut roots = Vec::with_capacity(anchors.len());
+        for a in &anchors {
+            let pts: Vec<u32> = a.pts.iter().map(|&(p, _)| p).collect();
+            roots.push(build_recursive(arena, &pts, cfg, parallel));
+        }
+        roots
+    };
+    agglomerate(arena, roots, par_here)
 }
 
 /// Build the shared partition tree over the rows of `x`.
@@ -339,7 +509,7 @@ pub fn build_tree(x: &Matrix, cfg: &BuildConfig) -> PartitionTree {
     assert!(x.rows >= 1, "need at least one point");
     let mut arena = Arena::new(x);
     let points: Vec<u32> = (0..x.rows as u32).collect();
-    let root = build_recursive(&mut arena, &points, cfg);
+    let root = build_recursive(&mut arena, &points, cfg, cfg.parallel);
     debug_assert_eq!(root as usize, 2 * x.rows - 2.min(x.rows * 2));
     let tree = PartitionTree {
         n: x.rows,
@@ -357,7 +527,7 @@ pub fn build_tree(x: &Matrix, cfg: &BuildConfig) -> PartitionTree {
     // pruning considerably but costs O(Σ depth·d) — skip it when the
     // consumer never reads radii (the VDT model).
     if cfg.exact_radii {
-        tighten_radii(tree, x)
+        tighten_radii(tree, x, cfg.parallel && x.rows >= cfg.parallel_threshold)
     } else {
         tree
     }
@@ -365,24 +535,58 @@ pub fn build_tree(x: &Matrix, cfg: &BuildConfig) -> PartitionTree {
 
 /// Replace the constructive radius bounds with exact centroid radii,
 /// computed in one O(Σ depth(i)) sweep (≈ N log N for balanced trees).
-fn tighten_radii(mut t: PartitionTree, x: &Matrix) -> PartitionTree {
-    for r in t.radius.iter_mut() {
-        *r = 0.0;
-    }
-    for p in 0..t.n as u32 {
-        let mut a = t.parent[p as usize];
-        while a != NONE {
-            let dist = sq_dist_to_centroid(
-                x.row(p as usize),
-                &t.s1[a as usize * t.d..(a as usize + 1) * t.d],
-                t.count[a as usize] as f64,
-            )
-            .sqrt() as f32;
-            if dist > t.radius[a as usize] {
-                t.radius[a as usize] = dist;
+/// The parallel path gives each thread a private radius array over a point
+/// chunk and merges by `max` — order-insensitive, so bit-identical to the
+/// serial sweep.
+fn tighten_radii(mut t: PartitionTree, x: &Matrix, parallel: bool) -> PartitionTree {
+    let nn = t.num_nodes();
+    let n = t.n;
+    let ancestor_sweep = |t: &PartitionTree, rad: &mut [f32], lo: usize, hi: usize| {
+        for p in lo as u32..hi as u32 {
+            let mut a = t.parent[p as usize];
+            while a != NONE {
+                let dist = sq_dist_to_centroid(
+                    x.row(p as usize),
+                    &t.s1[a as usize * t.d..(a as usize + 1) * t.d],
+                    t.count[a as usize] as f64,
+                )
+                .sqrt() as f32;
+                if dist > rad[a as usize] {
+                    rad[a as usize] = dist;
+                }
+                a = t.parent[a as usize];
             }
-            a = t.parent[a as usize];
         }
+    };
+    if parallel && par::is_parallel() {
+        // each chunk carries a private nn-sized radius array; cap the
+        // chunk count so transient memory stays a small multiple of the
+        // tree's own radius storage even on wide machines
+        let threads = par::effective_threads().min(16);
+        let chunk = n.div_ceil(threads);
+        let n_chunks = n.div_ceil(chunk);
+        let t_ref = &t;
+        let locals: Vec<Vec<f32>> = par::par_map(n_chunks, |ci| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut rad = vec![0f32; nn];
+            ancestor_sweep(t_ref, &mut rad, lo, hi);
+            rad
+        });
+        for r in t.radius.iter_mut() {
+            *r = 0.0;
+        }
+        for local in &locals {
+            for (dst, &v) in t.radius.iter_mut().zip(local.iter()) {
+                if v > *dst {
+                    *dst = v;
+                }
+            }
+        }
+    } else {
+        let mut rad = vec![0f32; nn];
+        ancestor_sweep(&t, &mut rad, 0, n);
+        t.radius = rad;
     }
     t
 }
@@ -430,6 +634,35 @@ mod tests {
         }
         let t = build_tree(&x, &BuildConfig { divisive_threshold: 4, ..Default::default() });
         t.validate(&x).unwrap();
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        // low parallel_threshold so the fan-out/splice path engages even at
+        // this test-sized N (on single-core runners par::is_parallel() is
+        // false and both sides take the serial path — trivially equal)
+        let ds = synthetic::gaussian_mixture(600, 7, 2, 3, 2.2, 23, "t");
+        let serial = build_tree(
+            &ds.x,
+            &BuildConfig { divisive_threshold: 12, parallel: false, ..Default::default() },
+        );
+        let par = build_tree(
+            &ds.x,
+            &BuildConfig {
+                divisive_threshold: 12,
+                parallel: true,
+                parallel_threshold: 32,
+                ..Default::default()
+            },
+        );
+        assert_eq!(serial.left, par.left);
+        assert_eq!(serial.right, par.right);
+        assert_eq!(serial.parent, par.parent);
+        assert_eq!(serial.count, par.count);
+        assert_eq!(serial.s2, par.s2);
+        assert_eq!(serial.radius, par.radius);
+        assert_eq!(serial.s1, par.s1);
+        par.validate(&ds.x).unwrap();
     }
 
     #[test]

@@ -12,20 +12,97 @@
 //! implement the corrected form and verify against materialized Q in tests.
 //!
 //! The implementation is multi-column (Y is N×C) so label propagation over
-//! C classes runs all columns in one tree sweep.
+//! C classes runs all columns in one tree sweep — and for C > 1 the
+//! columns are **blocked over threads**: each worker runs the full
+//! CollectUp/DistributeDown pass on its own column range with its own
+//! scratch lane. Every column's arithmetic is a scalar sequence
+//! independent of the blocking, so parallel output is bit-identical to
+//! serial (`VDT_THREADS=1` or a single column takes the serial lane).
 
+use crate::core::par;
 use crate::core::Matrix;
 use crate::tree::{PartitionTree, NONE};
 
 use super::partition::BlockPartition;
 
-/// Reusable buffers for [`matvec`]; sized (num_nodes × C).
+/// One worker's reusable buffers, sized (num_nodes × its column count).
 #[derive(Default)]
-pub struct MatvecScratch {
+struct Lane {
     /// CollectUp sums per node.
     t: Vec<f64>,
     /// DistributeDown running path sums per node.
     acc: Vec<f64>,
+    /// Column-block output staging (`n × block width`), interleaved into
+    /// the result matrix after the join; unused by the serial lane, which
+    /// writes the result matrix directly.
+    out: Vec<f32>,
+}
+
+/// Reusable buffers for [`matvec`]: one [`Lane`] per column-block worker
+/// (exactly one in the serial case). Lanes persist across calls, so
+/// steady-state matvec (e.g. LP iterations) allocates nothing.
+#[derive(Default)]
+pub struct MatvecScratch {
+    lanes: Vec<Lane>,
+}
+
+/// Run Algorithm 1 for the column range `c0..c1` of `y`, writing the
+/// result (row-major `n × (c1-c0)`) into `out`.
+#[allow(clippy::too_many_arguments)]
+fn sweep_columns(
+    tree: &PartitionTree,
+    part: &BlockPartition,
+    y: &Matrix,
+    c0: usize,
+    c1: usize,
+    t: &mut Vec<f64>,
+    acc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    let cb = c1 - c0;
+    let nn = tree.num_nodes();
+    debug_assert_eq!(out.len(), tree.n * cb);
+    t.clear();
+    t.resize(nn * cb, 0.0);
+    acc.clear();
+    acc.resize(nn * cb, 0.0);
+
+    // ---- CollectUp (ascending ids = children before parents) ----
+    for leaf in 0..tree.n {
+        for (k, &v) in y.row(leaf)[c0..c1].iter().enumerate() {
+            t[leaf * cb + k] = v as f64;
+        }
+    }
+    for a in tree.n..nn {
+        let (l, r) = (tree.left[a] as usize, tree.right[a] as usize);
+        for k in 0..cb {
+            t[a * cb + k] = t[l * cb + k] + t[r * cb + k];
+        }
+    }
+
+    // ---- DistributeDown (descending ids = parents before children) ----
+    for a in (0..nn).rev() {
+        let parent = tree.parent[a];
+        if parent != NONE {
+            let p = parent as usize;
+            debug_assert!(a < p, "parent id is always larger than child id");
+            let (lo, hi) = acc.split_at_mut(p * cb);
+            lo[a * cb..a * cb + cb].copy_from_slice(&hi[..cb]);
+        }
+        for &bi in &part.marks[a] {
+            let blk = &part.blocks[bi as usize];
+            let tb = &t[blk.kernel as usize * cb..blk.kernel as usize * cb + cb];
+            for k in 0..cb {
+                acc[a * cb + k] += blk.q * tb[k];
+            }
+        }
+    }
+
+    for leaf in 0..tree.n {
+        for k in 0..cb {
+            out[leaf * cb + k] = acc[leaf * cb + k] as f32;
+        }
+    }
 }
 
 /// Ŷ = Q·Y. `y` has one row per data point (tree leaf).
@@ -37,51 +114,49 @@ pub fn matvec(
 ) -> Matrix {
     assert_eq!(y.rows, tree.n, "Y rows must equal N");
     let c = y.cols;
-    let nn = tree.num_nodes();
-    scratch.t.clear();
-    scratch.t.resize(nn * c, 0.0);
-    scratch.acc.clear();
-    scratch.acc.resize(nn * c, 0.0);
-
-    // ---- CollectUp (ascending ids = children before parents) ----
-    for leaf in 0..tree.n {
-        for (k, &v) in y.row(leaf).iter().enumerate() {
-            scratch.t[leaf * c + k] = v as f64;
+    let n = tree.n;
+    let workers = par::effective_threads().min(c);
+    if workers <= 1 || n * c < 8192 {
+        // serial lane: the whole column range in one sweep, straight into
+        // the result matrix
+        if scratch.lanes.is_empty() {
+            scratch.lanes.push(Lane::default());
         }
-    }
-    for a in tree.n..nn {
-        let (l, r) = (tree.left[a] as usize, tree.right[a] as usize);
-        for k in 0..c {
-            scratch.t[a * c + k] = scratch.t[l * c + k] + scratch.t[r * c + k];
-        }
+        let mut out = Matrix::zeros(n, c);
+        let lane = &mut scratch.lanes[0];
+        sweep_columns(tree, part, y, 0, c, &mut lane.t, &mut lane.acc, &mut out.data);
+        return out;
     }
 
-    // ---- DistributeDown (descending ids = parents before children) ----
-    for a in (0..nn).rev() {
-        let parent = tree.parent[a];
-        if parent != NONE {
-            let p = parent as usize;
-            let (dst, src) = if a < p {
-                let (lo, hi) = scratch.acc.split_at_mut(p * c);
-                (&mut lo[a * c..a * c + c], &hi[..c])
-            } else {
-                unreachable!("parent id is always larger than child id")
-            };
-            dst.copy_from_slice(src);
-        }
-        for &bi in &part.marks[a] {
-            let blk = &part.blocks[bi as usize];
-            let tb = &scratch.t[blk.kernel as usize * c..blk.kernel as usize * c + c];
-            for k in 0..c {
-                scratch.acc[a * c + k] += blk.q * tb[k];
-            }
-        }
+    // column-blocked: worker w owns columns w*cb .. min((w+1)*cb, c),
+    // staging into its lane's persistent out buffer (steady state
+    // allocates nothing)
+    let cb = c.div_ceil(workers);
+    let n_blocks = c.div_ceil(cb);
+    if scratch.lanes.len() < n_blocks {
+        scratch.lanes.resize_with(n_blocks, Lane::default);
     }
+    std::thread::scope(|s| {
+        for (w, lane) in scratch.lanes.iter_mut().enumerate().take(n_blocks) {
+            let c0 = w * cb;
+            let c1 = (c0 + cb).min(c);
+            s.spawn(move || {
+                let Lane { t, acc, out } = lane;
+                out.clear();
+                out.resize(n * (c1 - c0), 0.0);
+                sweep_columns(tree, part, y, c0, c1, t, acc, &mut out[..]);
+            });
+        }
+    });
 
-    let mut out = Matrix::zeros(tree.n, c);
-    for leaf in 0..tree.n {
-        for k in 0..c {
-            out.data[leaf * c + k] = scratch.acc[leaf * c + k] as f32;
+    // interleave the column blocks back into one row-major matrix
+    let mut out = Matrix::zeros(n, c);
+    for (w, lane) in scratch.lanes.iter().enumerate().take(n_blocks) {
+        let c0 = w * cb;
+        let width = lane.out.len() / n;
+        for r in 0..n {
+            out.data[r * c + c0..r * c + c0 + width]
+                .copy_from_slice(&lane.out[r * width..(r + 1) * width]);
         }
     }
     out
@@ -149,5 +224,17 @@ mod tests {
         let b = matvec(&t, &p, &y2, &mut s);
         let fresh = matvec(&t, &p, &y2, &mut MatvecScratch::default());
         assert!(b.max_abs_diff(&fresh) == 0.0);
+    }
+
+    #[test]
+    fn column_blocked_path_is_bit_identical_to_serial_lane() {
+        // big enough that n*c clears the parallel gate when threads > 1
+        let (t, p) = setup(1300, 12);
+        let y = Matrix::from_fn(1300, 8, |r, c| (((r * 31 + c * 17) % 23) as f32 - 11.0) * 0.3);
+        let mut serial_out = Matrix::zeros(1300, 8);
+        let mut lane = Lane::default();
+        sweep_columns(&t, &p, &y, 0, 8, &mut lane.t, &mut lane.acc, &mut serial_out.data);
+        let blocked = matvec(&t, &p, &y, &mut MatvecScratch::default());
+        assert_eq!(serial_out.data, blocked.data, "column blocking changed bits");
     }
 }

@@ -44,9 +44,13 @@ pub struct VdtModel {
     pub partition: BlockPartition,
     sigma: f64,
     refiner: Option<Refiner>,
-    /// Mutex (not RefCell) so fitted models are `Sync` and can be shared
-    /// with the coordinator service behind an `Arc`.
-    scratch: std::sync::Mutex<MatvecScratch>,
+    /// Pool of reusable matvec scratch buffers. A Mutex (not RefCell) so
+    /// fitted models are `Sync` and shareable with the coordinator behind
+    /// an `Arc`; a *pool* (not a single scratch) so concurrent `&self`
+    /// matvecs each pop their own buffers and run truly in parallel —
+    /// the lock is held only for the pop/push, never the sweep. Steady
+    /// state (e.g. LP iterations) allocates nothing per call.
+    scratch_pool: std::sync::Mutex<Vec<MatvecScratch>>,
 }
 
 impl VdtModel {
@@ -68,7 +72,7 @@ impl VdtModel {
             partition,
             sigma,
             refiner: None,
-            scratch: std::sync::Mutex::new(MatvecScratch::default()),
+            scratch_pool: std::sync::Mutex::new(Vec::new()),
         }
     }
 
@@ -104,9 +108,16 @@ impl VdtModel {
         refiner.refine_to(&self.tree, &mut self.partition, target)
     }
 
-    /// Ŷ = Q·Y via Algorithm 1, O((N+|B|)·C).
+    /// Ŷ = Q·Y via Algorithm 1, O((N+|B|)·C). Thread-safe through `&self`:
+    /// each call borrows a scratch from the pool (allocating one only the
+    /// first time a new concurrency level is reached) and returns it after
+    /// the sweep, so concurrent callers never serialize on the buffers.
     pub fn matvec(&self, y: &Matrix) -> Matrix {
-        matvec(&self.tree, &self.partition, y, &mut self.scratch.lock().unwrap())
+        let mut scratch =
+            self.scratch_pool.lock().unwrap().pop().unwrap_or_default();
+        let out = matvec(&self.tree, &self.partition, y, &mut scratch);
+        self.scratch_pool.lock().unwrap().push(scratch);
+        out
     }
 
     /// Dense materialization of Q (tests / tiny N).

@@ -25,9 +25,14 @@
 //! created children-before-parents, so ascending id order is a valid
 //! bottom-up schedule and descending order a valid top-down one.
 
+use crate::core::par;
 use crate::tree::{PartitionTree, NONE};
 
 use super::partition::BlockPartition;
+
+/// Blocks below this count keep the whole update serial (the parallel
+/// precompute/write-back passes don't pay for themselves).
+const PAR_MIN_BLOCKS: usize = 4096;
 
 /// Scratch buffers reused across [`optimize_q`] calls (the fit loop calls
 /// it once per σ update; refinement once per re-optimization).
@@ -36,6 +41,10 @@ pub struct OptScratch {
     log_z: Vec<f64>,
     log_m: Vec<f64>,
     terms: Vec<f64>,
+    /// Per-block `G_AB` (parallel precompute; reused by the q write-back).
+    g: Vec<f64>,
+    /// Per-block `log|B| + G_AB` — the mark terms of the up-pass.
+    logit: Vec<f64>,
 }
 
 /// `G_AB` for one block.
@@ -47,6 +56,13 @@ pub fn g_of(tree: &PartitionTree, data: u32, kernel: u32, d2: f64, sigma: f64) -
 }
 
 /// Globally optimize all `q_AB` in place. O(|B| + N).
+///
+/// The O(|B|) work — evaluating `G_AB` for every block and exponentiating
+/// the final `q_AB` — runs on [`crate::core::par`] when |B| is large; the
+/// two O(N) tree sweeps in between are inherently ordered (children before
+/// parents and back) and stay serial. Each block's values are computed by
+/// the same scalar expressions in both modes, so parallel and serial
+/// results are bit-identical.
 pub fn optimize_q(
     tree: &PartitionTree,
     part: &mut BlockPartition,
@@ -54,19 +70,55 @@ pub fn optimize_q(
     scratch: &mut OptScratch,
 ) {
     let nn = tree.num_nodes();
+    let nblocks = part.blocks.len();
     scratch.log_z.clear();
     scratch.log_z.resize(nn, f64::NEG_INFINITY);
     scratch.log_m.clear();
     scratch.log_m.resize(nn, f64::NEG_INFINITY);
 
-    // ---- bottom-up: log Z ----
+    // ---- per-block precompute: G_AB and log|B| + G_AB ----
+    let parallel = par::is_parallel() && nblocks >= PAR_MIN_BLOCKS;
+    {
+        // dead (refined-away) blocks stay in the vec for index stability;
+        // their slots are never read (marks and the write-back are
+        // alive-only), so skip the G/ln work for them
+        let blocks = &part.blocks;
+        let g_at = |bi: usize| {
+            let blk = &blocks[bi];
+            if !blk.alive {
+                return 0.0;
+            }
+            g_of(tree, blk.data, blk.kernel, blk.d2, sigma)
+        };
+        if parallel {
+            par::par_fill_f64(&mut scratch.g, nblocks, g_at);
+        } else {
+            scratch.g.clear();
+            scratch.g.extend((0..nblocks).map(g_at));
+        }
+        let g = &scratch.g;
+        let logit_at = |bi: usize| {
+            let blk = &blocks[bi];
+            if !blk.alive {
+                return f64::NEG_INFINITY;
+            }
+            let nb = tree.count[blk.kernel as usize] as f64;
+            nb.ln() + g[bi]
+        };
+        if parallel {
+            par::par_fill_f64(&mut scratch.logit, nblocks, logit_at);
+        } else {
+            scratch.logit.clear();
+            scratch.logit.extend((0..nblocks).map(logit_at));
+        }
+    }
+
+    // ---- bottom-up: log Z (ascending ids = children before parents) ----
     for a in 0..nn as u32 {
         let ai = a as usize;
         scratch.terms.clear();
         for &bi in &part.marks[ai] {
-            let blk = &part.blocks[bi as usize];
-            let nb = tree.count[blk.kernel as usize] as f64;
-            scratch.terms.push(nb.ln() + g_of(tree, blk.data, blk.kernel, blk.d2, sigma));
+            scratch.terms.push(scratch.logit[bi as usize]);
         }
         if !tree.is_leaf(a) {
             let (l, r) = (tree.left[ai] as usize, tree.right[ai] as usize);
@@ -77,7 +129,7 @@ pub fn optimize_q(
         scratch.log_z[ai] = crate::core::vecmath::logsumexp(&scratch.terms);
     }
 
-    // ---- top-down: masses and q ----
+    // ---- top-down: masses (serial O(N) sweep over internal nodes) ----
     let root = tree.root() as usize;
     scratch.log_m[root] = 0.0;
     for a in (0..nn as u32).rev() {
@@ -88,11 +140,6 @@ pub fn optimize_q(
             // trees); guard anyway
             continue;
         }
-        for &bi in &part.marks[ai] {
-            let blk = &mut part.blocks[bi as usize];
-            let g = g_of(tree, blk.data, blk.kernel, blk.d2, sigma);
-            blk.q = (lm + g - scratch.log_z[ai]).exp();
-        }
         if !tree.is_leaf(a) {
             let (l, r) = (tree.left[ai] as usize, tree.right[ai] as usize);
             let ca = tree.count[ai] as f64;
@@ -101,6 +148,32 @@ pub fn optimize_q(
             let child_lm = lm + below - scratch.log_z[ai];
             scratch.log_m[l] = child_lm;
             scratch.log_m[r] = child_lm;
+        }
+    }
+
+    // ---- per-block write-back: q_AB = exp(m_A + G_AB − log Z_A) ----
+    {
+        let g = &scratch.g;
+        let log_m = &scratch.log_m;
+        let log_z = &scratch.log_z;
+        let parent = &tree.parent;
+        let write_q = |start: usize, chunk: &mut [super::partition::Block]| {
+            for (off, blk) in chunk.iter_mut().enumerate() {
+                if !blk.alive {
+                    continue;
+                }
+                let ai = blk.data as usize;
+                let lm = log_m[ai];
+                if !lm.is_finite() && parent[ai] != NONE {
+                    continue; // unreachable mass: mirror the sweep guard
+                }
+                blk.q = (lm + g[start + off] - log_z[ai]).exp();
+            }
+        };
+        if parallel {
+            par::par_slices_mut(&mut part.blocks[..], 1, PAR_MIN_BLOCKS, write_q);
+        } else {
+            write_q(0, &mut part.blocks[..]);
         }
     }
 }
@@ -114,19 +187,22 @@ pub fn loglik_constant(n: usize, d: usize, sigma: f64) -> f64 {
 }
 
 /// Evaluate the lower bound ℓ(D) of Eq. (7) for the current q.
+///
+/// The per-block sum runs through [`par::par_sum_f64`], whose fixed-block
+/// accumulation makes the result identical for every thread count.
 pub fn loglik(tree: &PartitionTree, part: &BlockPartition, sigma: f64) -> f64 {
-    let mut acc = loglik_constant(tree.n, tree.d, sigma);
     let inv = 1.0 / (2.0 * sigma * sigma);
-    for (_, b) in part.alive_blocks() {
-        if b.q <= 0.0 {
-            continue;
+    let blocks = &part.blocks;
+    let contribution = par::par_sum_f64(blocks.len(), |bi| {
+        let b = &blocks[bi];
+        if !b.alive || b.q <= 0.0 {
+            return 0.0;
         }
         let na = tree.count[b.data as usize] as f64;
         let nb = tree.count[b.kernel as usize] as f64;
-        acc -= b.q * b.d2 * inv;
-        acc -= na * nb * b.q * b.q.ln();
-    }
-    acc
+        -(b.q * b.d2 * inv) - na * nb * b.q * b.q.ln()
+    });
+    loglik_constant(tree.n, tree.d, sigma) + contribution
 }
 
 #[cfg(test)]

@@ -20,11 +20,40 @@
 use std::collections::BinaryHeap;
 use std::collections::HashMap;
 
+use crate::core::par;
 use crate::core::vecmath::logsumexp;
 use crate::tree::PartitionTree;
 
 use super::optimize::{g_of, optimize_q, OptScratch};
 use super::partition::BlockPartition;
+
+/// Below this block count, candidate scoring stays serial.
+const PAR_MIN_BLOCKS: usize = 4096;
+
+/// Score every block's horizontal gain (`None` = not refinable) — the
+/// candidate-generation pass feeding the greedy heap. Scoring is
+/// independent per block and fans out on [`crate::core::par`]; results
+/// come back in block order, so the heap the caller builds is identical
+/// to the serial path's.
+fn score_gains(
+    tree: &PartitionTree,
+    part: &BlockPartition,
+    sigma: f64,
+) -> Vec<Option<f64>> {
+    let nblocks = part.blocks.len();
+    let score = |i: usize| {
+        if part.blocks[i].alive {
+            gain_h(tree, part, i as u32, sigma)
+        } else {
+            None
+        }
+    };
+    if par::is_parallel() && nblocks >= PAR_MIN_BLOCKS {
+        par::par_map(nblocks, score)
+    } else {
+        (0..nblocks).map(score).collect()
+    }
+}
 
 /// Max-heap entry ordered by gain.
 struct Candidate {
@@ -80,8 +109,10 @@ impl Refiner {
         };
         for (i, b) in part.alive_blocks() {
             r.index.insert((b.data, b.kernel), i);
-            if let Some(gain) = gain_h(tree, part, i, sigma) {
-                r.heap.push(Candidate { gain, block: i });
+        }
+        for (i, gain) in score_gains(tree, part, sigma).into_iter().enumerate() {
+            if let Some(gain) = gain {
+                r.heap.push(Candidate { gain, block: i as u32 });
             }
         }
         r
@@ -128,15 +159,15 @@ impl Refiner {
         splits
     }
 
-    /// Globally re-optimize q and rebuild the gain heap.
+    /// Globally re-optimize q and rebuild the gain heap (candidate scoring
+    /// fans out per block; see [`score_gains`]).
     pub fn reoptimize(&mut self, tree: &PartitionTree, part: &mut BlockPartition) {
         optimize_q(tree, part, self.sigma, &mut self.scratch);
         self.last_opt_size = part.num_blocks();
         self.heap.clear();
-        for (i, b) in part.alive_blocks() {
-            debug_assert!(b.alive);
-            if let Some(gain) = gain_h(tree, part, i, self.sigma) {
-                self.heap.push(Candidate { gain, block: i });
+        for (i, gain) in score_gains(tree, part, self.sigma).into_iter().enumerate() {
+            if let Some(gain) = gain {
+                self.heap.push(Candidate { gain, block: i as u32 });
             }
         }
     }

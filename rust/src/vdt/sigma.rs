@@ -29,11 +29,20 @@ pub fn sigma_init(tree: &PartitionTree) -> f64 {
 }
 
 /// Eq. (12): closed-form σ* given the current q.
+///
+/// The O(|B|) sum runs through [`crate::core::par::par_sum_f64`]; its
+/// fixed-block accumulation keeps the value identical for every thread
+/// count.
 pub fn sigma_update(tree: &PartitionTree, part: &BlockPartition) -> f64 {
-    let mut acc = 0f64;
-    for (_, b) in part.alive_blocks() {
-        acc += b.q * b.d2;
-    }
+    let blocks = &part.blocks;
+    let acc = crate::core::par::par_sum_f64(blocks.len(), |bi| {
+        let b = &blocks[bi];
+        if b.alive {
+            b.q * b.d2
+        } else {
+            0.0
+        }
+    });
     (acc / (tree.n as f64 * tree.d as f64)).sqrt().max(1e-12)
 }
 

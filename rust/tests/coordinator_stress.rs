@@ -1,0 +1,154 @@
+//! Concurrency stress tests for the coordinator: many client threads
+//! hammering one handle, asserting the fused-column / batch counters and
+//! bit-exact results against direct `TransitionOp::matvec` calls.
+//!
+//! Bit-exactness across batching holds by construction: column fusion
+//! concatenates requests into one multi-column sweep, and every column of
+//! Algorithm 1 is an independent scalar sequence — identical whether the
+//! column runs alone, fused, or in a different parallel column block.
+
+use std::sync::Arc;
+
+use vdt::coordinator::Coordinator;
+use vdt::core::Matrix;
+use vdt::data::synthetic;
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+fn fitted_model(n: usize, seed: u64) -> Arc<VdtModel> {
+    let ds = synthetic::two_moons(n, 0.07, seed);
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    m.refine_to(5 * n);
+    Arc::new(m)
+}
+
+fn client_y(n: usize, client: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(n, cols, move |r, c| (((r * 31 + client * 7 + c * 13) % 19) as f32 - 9.0) * 0.1)
+}
+
+#[test]
+fn eight_plus_clients_fused_results_are_bit_exact() {
+    const N: usize = 120;
+    const CLIENTS: usize = 12;
+    const ROUNDS: usize = 6;
+
+    let model = fitted_model(N, 1);
+    let handle = Coordinator::spawn();
+    handle.register("m", model.clone());
+
+    let mut joins = Vec::new();
+    for client in 0..CLIENTS {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut outs = Vec::with_capacity(ROUNDS);
+            for round in 0..ROUNDS {
+                let y = client_y(N, client * 1000 + round, 2);
+                outs.push((client * 1000 + round, h.matvec("m", y).unwrap()));
+            }
+            outs
+        }));
+    }
+    let mut total_requests = 0u64;
+    let mut total_cols = 0u64;
+    for j in joins {
+        for (tag, got) in j.join().expect("client thread panicked") {
+            let y = client_y(N, tag, 2);
+            let want = model.matvec(&y);
+            assert_eq!(got.data, want.data, "request {tag} not bit-exact vs direct matvec");
+            total_requests += 1;
+            total_cols += y.cols as u64;
+        }
+    }
+    assert_eq!(total_requests, (CLIENTS * ROUNDS) as u64);
+
+    let (served, fused_cols, batches) = handle.stats();
+    assert_eq!(served, total_requests, "every request must be counted");
+    assert_eq!(fused_cols, total_cols, "every successful column must be counted");
+    assert!(batches >= 1 && batches <= total_requests, "batches {batches}");
+    handle.shutdown();
+}
+
+#[test]
+fn mixed_workload_under_concurrency_stays_correct() {
+    const N: usize = 100;
+    let model = fitted_model(N, 2);
+    let ds = synthetic::two_moons(N, 0.07, 2);
+    let labeled = labelprop::choose_labeled(&ds.labels, 2, 10, 4);
+    let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+    let lp_cfg = LpConfig { alpha: 0.3, steps: 25 };
+    let lp_want = labelprop::propagate(model.as_ref(), &y0, &lp_cfg);
+
+    let handle = Coordinator::spawn();
+    handle.register("m", model.clone());
+
+    let mut joins: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // 8 matvec clients + 2 LP clients + 2 spectral clients, interleaved
+    for client in 0..8usize {
+        let h = handle.clone();
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            for round in 0..4 {
+                let y = client_y(N, client * 100 + round, 1);
+                let got = h.matvec("m", y.clone()).unwrap();
+                let want = model.matvec(&y);
+                assert_eq!(got.data, want.data, "client {client} round {round}");
+            }
+        }));
+    }
+    for _ in 0..2 {
+        let h = handle.clone();
+        let y0 = y0.clone();
+        let want = lp_want.clone();
+        let cfg = lp_cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let got = h.label_prop("m", y0, cfg).unwrap();
+            assert_eq!(got.data, want.data, "LP through the service drifted");
+        }));
+    }
+    for _ in 0..2 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let eigs = h.spectral("m", 10).unwrap();
+            assert!((eigs[0].0 - 1.0).abs() < 5e-2, "top eig {:?}", eigs[0]);
+        }));
+    }
+    for j in joins {
+        j.join().expect("worker panicked");
+    }
+
+    let (served, fused_cols, _) = handle.stats();
+    assert_eq!(served, 8 * 4 + 2 + 2);
+    assert_eq!(fused_cols, 8 * 4);
+    handle.shutdown();
+}
+
+#[test]
+fn errors_under_concurrency_do_not_poison_counters() {
+    const N: usize = 60;
+    let model = fitted_model(N, 3);
+    let handle = Coordinator::spawn();
+    handle.register("m", model);
+
+    let mut joins = Vec::new();
+    for client in 0..8usize {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            if client % 2 == 0 {
+                // wrong shape: must error, not hang or crash workers
+                let err = h.matvec("m", Matrix::zeros(N + 3, 1)).unwrap_err();
+                assert!(err.contains("rows"), "unexpected error {err}");
+            } else {
+                let y = client_y(N, client, 1);
+                h.matvec("m", y).expect("valid request failed");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let (served, fused_cols, batches) = handle.stats();
+    assert_eq!(served, 8, "errors still count as served requests");
+    assert_eq!(fused_cols, 4, "only valid columns are fused");
+    assert!(batches <= 4);
+    handle.shutdown();
+}

@@ -1,0 +1,248 @@
+//! Exact-equivalence tests for the `core::par` execution layer: every
+//! converted hot path must produce results identical to its serial
+//! fallback at fixed seeds.
+//!
+//! Two guarantees are pinned (see `core::par` module docs):
+//!
+//! - per-element maps (tree build, kNN search, q-optimization, matvec,
+//!   gain scoring, LP updates) are **bit-exact** vs serial;
+//! - reductions (σ updates, ℓ(D)) use fixed-block accumulation, so their
+//!   value is **identical for every thread count** — the serial/parallel
+//!   comparison is still exact equality, by construction.
+//!
+//! On a single-core runner `par::is_parallel()` is false and both sides
+//! take the serial path; the assertions then hold trivially.
+
+use vdt::core::par;
+use vdt::core::Matrix;
+use vdt::data::synthetic;
+use vdt::knn::search::{knn_all, knn_query};
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::{self, LpConfig};
+use vdt::tree::{build_tree, BuildConfig, PartitionTree};
+use vdt::vdt::optimize::{loglik, optimize_q, OptScratch};
+use vdt::vdt::partition::BlockPartition;
+use vdt::vdt::refine::Refiner;
+use vdt::vdt::sigma::{fit_alternating, sigma_update};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+/// The thread budget is process-global and several tests override it;
+/// every test takes this lock so no test observes another's override
+/// (which would silently collapse its "parallel" side to serial).
+static BUDGET_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn budget_guard() -> std::sync::MutexGuard<'static, ()> {
+    BUDGET_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A build config whose parallel path engages even at test-sized N.
+fn par_cfg() -> BuildConfig {
+    BuildConfig { divisive_threshold: 12, parallel_threshold: 32, ..Default::default() }
+}
+
+fn serial_cfg() -> BuildConfig {
+    BuildConfig { parallel: false, ..par_cfg() }
+}
+
+fn assert_trees_identical(a: &PartitionTree, b: &PartitionTree) {
+    assert_eq!(a.left, b.left, "left links differ");
+    assert_eq!(a.right, b.right, "right links differ");
+    assert_eq!(a.parent, b.parent, "parent links differ");
+    assert_eq!(a.count, b.count, "counts differ");
+    assert_eq!(a.s2, b.s2, "S2 differs");
+    assert_eq!(a.s1, b.s1, "S1 differs");
+    assert_eq!(a.radius, b.radius, "radii differ");
+}
+
+#[test]
+fn tree_build_parallel_equals_serial_bitwise() {
+    let _guard = budget_guard();
+    for seed in [1u64, 7, 23] {
+        let ds = synthetic::gaussian_mixture(700, 6, 2, 3, 2.2, seed, "eq");
+        let s = build_tree(&ds.x, &serial_cfg());
+        let p = build_tree(&ds.x, &par_cfg());
+        assert_trees_identical(&s, &p);
+        p.validate(&ds.x).unwrap();
+    }
+}
+
+#[test]
+fn knn_all_parallel_equals_serial_bitwise() {
+    let _guard = budget_guard();
+    let ds = synthetic::gaussian_mixture(400, 5, 2, 3, 2.0, 11, "eq");
+    let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 16, ..Default::default() });
+    let serial = knn_all(&t, &ds.x, 5, false);
+    let parallel = knn_all(&t, &ds.x, 5, true);
+    assert_eq!(serial.len(), parallel.len());
+    for (q, (a, b)) in serial.iter().zip(parallel.iter()).enumerate() {
+        assert_eq!(a, b, "query {q} differs");
+        // sanity against an independent single query
+        assert_eq!(a, &knn_query(&t, &ds.x, q, 5), "query {q} vs direct");
+    }
+}
+
+#[test]
+fn knn_graph_parallel_equals_serial() {
+    let _guard = budget_guard();
+    let ds = synthetic::two_moons(300, 0.07, 4);
+    let a = KnnGraph::build(&ds.x, &KnnConfig { k: 4, ..Default::default() });
+    let b = KnnGraph::build(&ds.x, &KnnConfig { k: 4, parallel: true, ..Default::default() });
+    assert_eq!(a.p.indptr, b.p.indptr);
+    assert_eq!(a.p.indices, b.p.indices);
+    assert_eq!(a.p.values, b.p.values, "edge weights differ");
+}
+
+/// optimize_q takes its parallel branches only above an internal block
+/// threshold — push |B| past it by refining a mid-sized model, then check
+/// the whole pipeline output (q values) bitwise between thread settings.
+/// The fixed-block reductions make σ and ℓ(D) thread-count-invariant too.
+#[test]
+fn vdt_fit_and_refine_are_thread_count_invariant() {
+    let _guard = budget_guard();
+    let ds = synthetic::digit1_like(700, 3);
+
+    let run = || {
+        let tree = build_tree(
+            &ds.x,
+            &BuildConfig { exact_radii: false, parallel: false, ..Default::default() },
+        );
+        let mut part = BlockPartition::coarsest(&tree);
+        let fit = fit_alternating(&tree, &mut part, None, 1e-6, 60);
+        let mut refiner = Refiner::new(&tree, &part, fit.sigma);
+        refiner.refine_to(&tree, &mut part, 10 * ds.n());
+        let qs: Vec<f64> = part.blocks.iter().filter(|b| b.alive).map(|b| b.q).collect();
+        let keys: Vec<(u32, u32)> = part
+            .blocks
+            .iter()
+            .filter(|b| b.alive)
+            .map(|b| (b.data, b.kernel))
+            .collect();
+        (fit.sigma, loglik(&tree, &part, fit.sigma), qs, keys)
+    };
+
+    let prev = par::set_max_threads(1);
+    let (sigma_1, ll_1, q_1, k_1) = run();
+    par::set_max_threads(4);
+    let (sigma_4, ll_4, q_4, k_4) = run();
+    par::set_max_threads(prev);
+
+    assert_eq!(sigma_1.to_bits(), sigma_4.to_bits(), "σ differs across thread counts");
+    assert_eq!(ll_1.to_bits(), ll_4.to_bits(), "ℓ(D) differs across thread counts");
+    assert_eq!(k_1, k_4, "refinement chose different blocks");
+    assert_eq!(q_1.len(), q_4.len());
+    for (i, (a, b)) in q_1.iter().zip(q_4.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "q[{i}] differs");
+    }
+}
+
+#[test]
+fn optimize_q_parallel_write_back_is_bit_exact() {
+    let _guard = budget_guard();
+    // singleton partition at n=80 gives |B| = 6320 > the parallel gate
+    let ds = synthetic::gaussian_mixture(80, 4, 2, 2, 2.0, 9, "eq");
+    let tree = build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() });
+    let run = |threads: usize| {
+        let prev = par::set_max_threads(threads);
+        let mut part = BlockPartition::singletons(&tree);
+        optimize_q(&tree, &mut part, 0.9, &mut OptScratch::default());
+        par::set_max_threads(prev);
+        part.blocks.iter().map(|b| b.q.to_bits()).collect::<Vec<u64>>()
+    };
+    assert_eq!(run(1), run(4), "q write-back differs between thread counts");
+}
+
+#[test]
+fn sigma_update_is_thread_count_invariant() {
+    let _guard = budget_guard();
+    let ds = synthetic::gaussian_mixture(90, 4, 2, 2, 2.0, 5, "eq");
+    let tree = build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() });
+    let mut part = BlockPartition::singletons(&tree);
+    optimize_q(&tree, &mut part, 1.1, &mut OptScratch::default());
+    let prev = par::set_max_threads(1);
+    let s1 = sigma_update(&tree, &part);
+    par::set_max_threads(4);
+    let s4 = sigma_update(&tree, &part);
+    par::set_max_threads(prev);
+    assert_eq!(s1.to_bits(), s4.to_bits());
+}
+
+#[test]
+fn matvec_and_lp_are_thread_count_invariant() {
+    let _guard = budget_guard();
+    let ds = synthetic::digit1_like(1200, 7);
+    let mut model = VdtModel::build(
+        &ds.x,
+        &VdtConfig {
+            tree: BuildConfig { exact_radii: false, parallel: false, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    model.refine_to(6 * ds.n());
+    // 8 columns so N·C clears the column-blocking gate when threads > 1
+    let y0 = Matrix::from_fn(ds.n(), 8, |r, c| if (r + c) % 9 == 0 { 1.0 } else { 0.0 });
+
+    let prev = par::set_max_threads(1);
+    let mv_serial = model.matvec(&y0);
+    let lp_serial = labelprop::propagate(&model, &y0, &LpConfig { alpha: 0.2, steps: 40 });
+    par::set_max_threads(4);
+    let mv_par = model.matvec(&y0);
+    let lp_par = labelprop::propagate(&model, &y0, &LpConfig { alpha: 0.2, steps: 40 });
+    par::set_max_threads(prev);
+
+    assert_eq!(mv_serial.data, mv_par.data, "matvec differs");
+    assert_eq!(lp_serial.data, lp_par.data, "LP sweep differs");
+}
+
+#[test]
+fn harmonic_propagation_is_thread_count_invariant() {
+    let _guard = budget_guard();
+    let ds = synthetic::two_moons(500, 0.06, 8);
+    let mut model = VdtModel::build(&ds.x, &VdtConfig::default());
+    model.refine_to(6 * ds.n());
+    let labeled = labelprop::choose_labeled(&ds.labels, 2, 20, 3);
+    let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+    let cfg = labelprop::harmonic::HarmonicConfig { steps: 60, tol: 0.0 };
+
+    let prev = par::set_max_threads(1);
+    let a = labelprop::harmonic::propagate_harmonic(&model, &y0, &labeled, &cfg);
+    par::set_max_threads(4);
+    let b = labelprop::harmonic::propagate_harmonic(&model, &y0, &labeled, &cfg);
+    par::set_max_threads(prev);
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn scale_add_parallel_is_bit_exact() {
+    let _guard = budget_guard();
+    let mut a1 = Matrix::from_fn(600, 200, |r, c| ((r * 17 + c) % 13) as f32 * 0.37);
+    let mut a2 = a1.clone();
+    let b = Matrix::from_fn(600, 200, |r, c| ((r + c * 29) % 11) as f32 - 5.0);
+    let prev = par::set_max_threads(1);
+    a1.scale_add(0.3, 0.7, &b);
+    par::set_max_threads(4);
+    a2.scale_add(0.3, 0.7, &b);
+    par::set_max_threads(prev);
+    assert_eq!(a1.data, a2.data);
+}
+
+#[test]
+fn spectral_is_thread_count_invariant() {
+    let _guard = budget_guard();
+    let ds = synthetic::gaussian_mixture(150, 4, 2, 2, 2.4, 13, "eq");
+    let model = VdtModel::build(&ds.x, &VdtConfig::default());
+    let prev = par::set_max_threads(1);
+    let a = vdt::spectral::subspace_iteration(&model, 4, 60, 3);
+    let e1 = vdt::spectral::arnoldi_eigenvalues(&model, 80, 3);
+    par::set_max_threads(4);
+    let b = vdt::spectral::subspace_iteration(&model, 4, 60, 3);
+    let e4 = vdt::spectral::arnoldi_eigenvalues(&model, 80, 3);
+    par::set_max_threads(prev);
+    for ((ra, ia), (rb, ib)) in a.eigenvalues.iter().zip(b.eigenvalues.iter()) {
+        assert_eq!(ra.to_bits(), rb.to_bits());
+        assert_eq!(ia.to_bits(), ib.to_bits());
+    }
+    for ((ra, ia), (rb, ib)) in e1.eigenvalues.iter().zip(e4.eigenvalues.iter()) {
+        assert_eq!(ra.to_bits(), rb.to_bits());
+        assert_eq!(ia.to_bits(), ib.to_bits());
+    }
+}
