@@ -28,7 +28,10 @@ fn main() {
     handle.register("digits/knn", Arc::new(m2));
 
     for info in handle.list_models() {
-        println!("registered: {:<12} backend={:<14} N={}", info.name, info.backend, info.n);
+        println!(
+            "registered: {:<12} backend={:<14} divergence={:<12} N={}",
+            info.name, info.backend, info.divergence, info.n
+        );
     }
 
     // 64 concurrent single-column matvec clients against the VDT model —

@@ -29,6 +29,9 @@ pub type SharedOp = Arc<dyn TransitionOp + Send + Sync>;
 pub struct ModelInfo {
     pub name: String,
     pub backend: String,
+    /// Bregman geometry the model was fitted under (see
+    /// [`crate::core::divergence`]).
+    pub divergence: String,
     pub n: usize,
 }
 
@@ -275,6 +278,7 @@ impl Coordinator {
                             .map(|(name, op)| ModelInfo {
                                 name: name.clone(),
                                 backend: op.name().to_string(),
+                                divergence: op.divergence().to_string(),
                                 n: op.n(),
                             })
                             .collect();
@@ -445,6 +449,7 @@ mod tests {
         let infos = handle.list_models();
         assert_eq!(infos.len(), 1);
         assert_eq!(infos[0].backend, "variational-dt");
+        assert_eq!(infos[0].divergence, "sq_euclidean");
         assert_eq!(infos[0].n, 20);
         handle.shutdown();
     }

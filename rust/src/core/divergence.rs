@@ -1,0 +1,721 @@
+//! Pluggable Bregman-divergence geometry (arXiv:1309.6812, the authors'
+//! follow-up to the UAI 2012 paper).
+//!
+//! A Bregman divergence over a strictly convex generator φ is
+//!
+//! ```text
+//!   d_φ(x ‖ y) = φ(x) − φ(y) − ⟨x − y, ∇φ(y)⟩ ≥ 0,
+//! ```
+//!
+//! and every quantity the VDT pipeline needs decomposes over the same kind
+//! of per-node sufficient statistics the Euclidean code already stores.
+//! With ψ(y) = ⟨y, ∇φ(y)⟩ − φ(y) (the Legendre dual value at ∇φ(y)), the
+//! block divergence of Eq. (9) generalizes to
+//!
+//! ```text
+//!   D_AB = Σ_{i∈A} Σ_{j∈B} d_φ(x_i ‖ x_j)
+//!        = |B|·Sφ(A) + |A|·Sψ(B) − ⟨S1(A), Sg(B)⟩,
+//! ```
+//!
+//! where `S1 = Σ x`, `Sφ = Σ φ(x)`, `Sg = Σ ∇φ(x)`, `Sψ = Σ ψ(x)` — all
+//! additive under node merges, so the anchor tree, the O(|B|) optimizer,
+//! refinement gains, Algorithm-1 matvecs and the inductive extension are
+//! untouched by the choice of geometry: only the statistics and the block
+//! evaluation change. For squared Euclidean (`φ = ‖x‖²`) the identities
+//! `Sφ = Sψ = S2` and `Sg = 2·S1` collapse this to exactly the seed
+//! formulas, which [`SqEuclidean`] implements with the original
+//! expressions so the Euclidean path stays **bit-exact** with the
+//! pre-refactor code (pinned by `rust/tests/fig2_golden.rs`).
+//!
+//! Implementations provided:
+//! - [`SqEuclidean`] — `φ(x) = ‖x‖²`: the paper's Gaussian geometry.
+//! - [`KlSimplex`] — `φ(x) = Σ x·ln x`: generalized KL for histograms /
+//!   text / probability vectors (nonnegative orthant; simplex rows make it
+//!   the classical KL).
+//! - [`ItakuraSaito`] — `φ(x) = −Σ ln x`: spectra / strictly positive
+//!   data.
+//! - [`DiagMahalanobis`] — `φ(x) = Σ w_k x_k²`: per-feature precision
+//!   weighting for correlated/heteroscedastic features.
+//!
+//! Because the mean minimizes `Σ_i d_φ(x_i ‖ s)` over `s` for *every*
+//! Bregman divergence (Banerjee et al., JMLR 2005), `S1/count` stays the
+//! correct node representative, and the centroid-routing / merge-scoring
+//! heuristics carry over unchanged. Only the triangle-inequality shortcuts
+//! (the anchor steal cutoff, kNN ball pruning) are metric-specific; they
+//! are gated on [`Divergence::is_metric`] and degrade to exhaustive scans
+//! for non-metric geometries.
+
+use std::sync::Arc;
+
+use super::matrix::Matrix;
+use super::vecmath::{dot, sq_dist, sq_dist_to_centroid, sq_norm};
+
+/// Smallest value substituted for a coordinate inside `ln`/`1/x` so that
+/// boundary points (zeros in histograms) stay finite.
+const TINY: f64 = 1e-12;
+
+/// A view of one tree node's sufficient statistics (see
+/// [`crate::tree::PartitionTree::stats_of`]).
+///
+/// `sg`/`spsi` are populated only when the active divergence reports
+/// [`Divergence::needs_grad_stats`]; divergences that derive them from
+/// `(s1, sphi)` (Euclidean, Mahalanobis) must override every method that
+/// would otherwise read them.
+pub struct NodeStats<'a> {
+    /// |A| — number of points under the node.
+    pub count: f64,
+    /// `S1 = Σ x` (length d).
+    pub s1: &'a [f32],
+    /// `Sφ = Σ φ(x)` (the tree's `s2` field; `Σ‖x‖²` under Euclidean).
+    pub sphi: f64,
+    /// `Sg = Σ ∇φ(x)` (length d), or empty when derivable.
+    pub sg: &'a [f32],
+    /// `Sψ = Σ ψ(x)`, or 0 when derivable (never read then).
+    pub spsi: f64,
+}
+
+/// A Bregman divergence, threaded through tree build statistics, kNN
+/// search, bandwidth selection, the O(|B|) optimizer, refinement gains,
+/// matvec weights and the inductive extension.
+///
+/// All methods must be deterministic pure functions of their inputs: the
+/// parallel execution layer relies on recomputing the same scalar
+/// expressions on any thread (see `core::par`'s determinism contract).
+pub trait Divergence: Send + Sync {
+    /// Stable identifier used by configs, the CLI and registry listings.
+    fn name(&self) -> &'static str;
+
+    /// Pointwise `d_φ(x ‖ y)`.
+    fn point(&self, x: &[f32], y: &[f32]) -> f64;
+
+    /// Generator value `φ(x)`.
+    fn phi(&self, x: &[f32]) -> f64;
+
+    /// Gradient `∇φ(x)`, written into `out` (`out.len() == x.len()`).
+    fn grad(&self, x: &[f32], out: &mut [f32]);
+
+    /// Dual value `ψ(x) = ⟨x, ∇φ(x)⟩ − φ(x)`.
+    fn dual(&self, x: &[f32]) -> f64;
+
+    /// Whether the tree must store `Sg`/`Sψ` per node. Divergences whose
+    /// gradient statistics are derivable from `(S1, Sφ)` return `false`
+    /// and override [`Divergence::block`] / [`Divergence::point_block`].
+    fn needs_grad_stats(&self) -> bool {
+        true
+    }
+
+    /// Whether `sqrt(point)` satisfies the triangle inequality. Enables
+    /// the anchor steal cutoff, kNN ball pruning and the radius-bound
+    /// check in `PartitionTree::validate`.
+    fn is_metric(&self) -> bool {
+        false
+    }
+
+    /// Block divergence `D_AB` from data-side stats `a` and kernel-side
+    /// stats `b` (clamped at 0 against float cancellation).
+    fn block(&self, a: &NodeStats, b: &NodeStats) -> f64 {
+        debug_assert_eq!(a.s1.len(), b.sg.len(), "divergence requires grad stats");
+        (b.count * a.sphi + a.count * b.spsi - dot(a.s1, b.sg)).max(0.0)
+    }
+
+    /// `Σ_{j∈B} d_φ(x ‖ x_j)` from kernel-side stats — Eq. (9) with
+    /// `A = {x}`, used by the inductive extension.
+    fn point_block(&self, x: &[f32], b: &NodeStats) -> f64 {
+        debug_assert_eq!(x.len(), b.sg.len(), "divergence requires grad stats");
+        (b.count * self.phi(x) + b.spsi - dot(x, b.sg)).max(0.0)
+    }
+
+    /// `d_φ(x ‖ μ)` against a centroid stored as an unnormalized
+    /// `(Σ x, count)` pair. The mean is the right Bregman representative
+    /// for every φ, so this is the generic routing/pruning primitive.
+    fn point_to_centroid(&self, x: &[f32], s1: &[f32], count: f64) -> f64 {
+        let c: Vec<f32> = s1.iter().map(|&v| (v as f64 / count) as f32).collect();
+        self.point(x, &c)
+    }
+
+    /// Distance-like score between two node centroids, used to rank
+    /// agglomerative merges during tree construction. Symmetrized so the
+    /// merge order is independent of argument order.
+    fn centroid_dist(&self, s1a: &[f32], ca: f64, s1b: &[f32], cb: f64) -> f64 {
+        let a: Vec<f32> = s1a.iter().map(|&v| (v as f64 / ca) as f32).collect();
+        let b: Vec<f32> = s1b.iter().map(|&v| (v as f64 / cb) as f32).collect();
+        (0.5 * (self.point(&a, &b) + self.point(&b, &a))).max(0.0).sqrt()
+    }
+
+    /// Scalar distance from a point to an anchor pivot, used for the
+    /// ordering decisions of anchor construction. Metric divergences
+    /// return the true metric distance so the steal cutoff applies;
+    /// the default is the symmetrized divergence (ordering only).
+    fn anchor_dist(&self, x: &[f32], pivot: &[f32]) -> f32 {
+        (0.5 * (self.point(x, pivot) + self.point(pivot, x))) as f32
+    }
+
+    /// Triangle-inequality steal cutoff for a new pivot at `pivot_gap`
+    /// (in [`Divergence::anchor_dist`] units) from an anchor's pivot:
+    /// owned points closer than this to their owner cannot be stolen.
+    /// `0.0` disables the shortcut (every owned point is scanned), which
+    /// is the only correct choice for non-metric divergences.
+    fn steal_cutoff(&self, pivot_gap: f32) -> f32 {
+        let _ = pivot_gap;
+        0.0
+    }
+
+    /// Domain check for a single data point (tests and data validation).
+    fn check_point(&self, x: &[f32]) -> Result<(), String> {
+        let _ = x;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Squared Euclidean — the seed geometry, bit-exact with the pre-refactor
+// hard-coded formulas.
+// ---------------------------------------------------------------------------
+
+/// `φ(x) = ‖x‖²`, `d_φ(x‖y) = ‖x−y‖²` — the paper's Gaussian kernel
+/// geometry. Every override below is the literal pre-refactor expression.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SqEuclidean;
+
+impl Divergence for SqEuclidean {
+    fn name(&self) -> &'static str {
+        "sq_euclidean"
+    }
+
+    fn point(&self, x: &[f32], y: &[f32]) -> f64 {
+        sq_dist(x, y)
+    }
+
+    fn phi(&self, x: &[f32]) -> f64 {
+        sq_norm(x)
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = 2.0 * v;
+        }
+    }
+
+    fn dual(&self, x: &[f32]) -> f64 {
+        sq_norm(x)
+    }
+
+    fn needs_grad_stats(&self) -> bool {
+        false
+    }
+
+    fn is_metric(&self) -> bool {
+        true
+    }
+
+    /// `D²_AB = |A|·S2(B) + |B|·S2(A) − 2·S1(A)ᵀS1(B)` — identical to the
+    /// seed's `PartitionTree::d2_between`.
+    fn block(&self, a: &NodeStats, b: &NodeStats) -> f64 {
+        (a.count * b.sphi + b.count * a.sphi - 2.0 * dot(a.s1, b.s1)).max(0.0)
+    }
+
+    /// `D²_xB = |B|·xᵀx + S2(B) − 2·xᵀS1(B)` — identical to the seed's
+    /// `induct::d2_point_block`.
+    fn point_block(&self, x: &[f32], b: &NodeStats) -> f64 {
+        (b.count * sq_norm(x) + b.sphi - 2.0 * dot(x, b.s1)).max(0.0)
+    }
+
+    fn point_to_centroid(&self, x: &[f32], s1: &[f32], count: f64) -> f64 {
+        sq_dist_to_centroid(x, s1, count)
+    }
+
+    /// Identical to the seed's `Arena::centroid_dist`.
+    fn centroid_dist(&self, s1a: &[f32], ca: f64, s1b: &[f32], cb: f64) -> f64 {
+        let mut acc = 0.0f64;
+        for (x, y) in s1a.iter().zip(s1b.iter()) {
+            let d = *x as f64 / ca - *y as f64 / cb;
+            acc += d * d;
+        }
+        acc.sqrt()
+    }
+
+    fn anchor_dist(&self, x: &[f32], pivot: &[f32]) -> f32 {
+        sq_dist(x, pivot).sqrt() as f32
+    }
+
+    fn steal_cutoff(&self, pivot_gap: f32) -> f32 {
+        pivot_gap / 2.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generalized KL over the nonnegative orthant (classical KL on the simplex)
+// ---------------------------------------------------------------------------
+
+/// `φ(x) = Σ x_k·ln x_k` (negative entropy):
+/// `d_φ(x‖y) = Σ [x_k·ln(x_k/y_k) − x_k + y_k]` — the generalized KL
+/// divergence, nonnegative on the whole nonnegative orthant and equal to
+/// the classical KL when both rows sum to one. Kernel-side coordinates are
+/// floored at 1e-12 inside logarithms so boundary zeros stay finite.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KlSimplex;
+
+impl Divergence for KlSimplex {
+    fn name(&self) -> &'static str {
+        "kl"
+    }
+
+    fn point(&self, x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = 0.0f64;
+        for (&xv, &yv) in x.iter().zip(y.iter()) {
+            let xk = xv as f64;
+            let yk = (yv as f64).max(TINY);
+            if xk > 0.0 {
+                acc += xk * (xk / yk).ln() - xk + yk;
+            } else {
+                acc += yk;
+            }
+        }
+        acc.max(0.0)
+    }
+
+    fn phi(&self, x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for &xv in x {
+            let xk = xv as f64;
+            if xk > 0.0 {
+                acc += xk * xk.ln();
+            }
+        }
+        acc
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = ((v as f64).max(TINY).ln() + 1.0) as f32;
+        }
+    }
+
+    /// `ψ(x) = ⟨x, ln x + 1⟩ − Σ x·ln x = Σ x_k`.
+    fn dual(&self, x: &[f32]) -> f64 {
+        x.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Allocation-free (hot in merge scoring / inductive routing): the
+    /// centroid is materialized coordinate-by-coordinate in f64.
+    fn point_to_centroid(&self, x: &[f32], s1: &[f32], count: f64) -> f64 {
+        debug_assert_eq!(x.len(), s1.len());
+        let inv = 1.0 / count;
+        let mut acc = 0.0f64;
+        for (&xv, &sv) in x.iter().zip(s1.iter()) {
+            let xk = xv as f64;
+            let mk = (sv as f64 * inv).max(TINY);
+            if xk > 0.0 {
+                acc += xk * (xk / mk).ln() - xk + mk;
+            } else {
+                acc += mk;
+            }
+        }
+        acc.max(0.0)
+    }
+
+    /// Symmetrized generalized KL between centroids, per coordinate
+    /// `0.5·(a−b)·ln(a/b)` (the −a+b / −b+a terms cancel). No allocation.
+    fn centroid_dist(&self, s1a: &[f32], ca: f64, s1b: &[f32], cb: f64) -> f64 {
+        debug_assert_eq!(s1a.len(), s1b.len());
+        let (ia, ib) = (1.0 / ca, 1.0 / cb);
+        let mut acc = 0.0f64;
+        for (&av, &bv) in s1a.iter().zip(s1b.iter()) {
+            let ma = (av as f64 * ia).max(TINY);
+            let mb = (bv as f64 * ib).max(TINY);
+            acc += 0.5 * (ma - mb) * (ma / mb).ln();
+        }
+        acc.max(0.0).sqrt()
+    }
+
+    fn check_point(&self, x: &[f32]) -> Result<(), String> {
+        for (k, &v) in x.iter().enumerate() {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("KL domain violated at coord {k}: {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Itakura–Saito (Burg entropy) over strictly positive data
+// ---------------------------------------------------------------------------
+
+/// `φ(x) = −Σ ln x_k`:
+/// `d_φ(x‖y) = Σ [x_k/y_k − ln(x_k/y_k) − 1]` — the Itakura–Saito
+/// divergence classically used for power spectra. Strictly positive
+/// domain; coordinates are floored at 1e-12.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ItakuraSaito;
+
+impl Divergence for ItakuraSaito {
+    fn name(&self) -> &'static str {
+        "itakura_saito"
+    }
+
+    fn point(&self, x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = 0.0f64;
+        for (&xv, &yv) in x.iter().zip(y.iter()) {
+            let xk = (xv as f64).max(TINY);
+            let yk = (yv as f64).max(TINY);
+            let r = xk / yk;
+            acc += r - r.ln() - 1.0;
+        }
+        acc.max(0.0)
+    }
+
+    fn phi(&self, x: &[f32]) -> f64 {
+        -x.iter().map(|&v| (v as f64).max(TINY).ln()).sum::<f64>()
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = (-1.0 / (v as f64).max(TINY)) as f32;
+        }
+    }
+
+    /// `ψ(x) = ⟨x, −1/x⟩ + Σ ln x = Σ ln x_k − d`.
+    fn dual(&self, x: &[f32]) -> f64 {
+        x.iter().map(|&v| (v as f64).max(TINY).ln()).sum::<f64>() - x.len() as f64
+    }
+
+    /// Allocation-free centroid divergence (hot in routing).
+    fn point_to_centroid(&self, x: &[f32], s1: &[f32], count: f64) -> f64 {
+        debug_assert_eq!(x.len(), s1.len());
+        let inv = 1.0 / count;
+        let mut acc = 0.0f64;
+        for (&xv, &sv) in x.iter().zip(s1.iter()) {
+            let xk = (xv as f64).max(TINY);
+            let mk = (sv as f64 * inv).max(TINY);
+            let r = xk / mk;
+            acc += r - r.ln() - 1.0;
+        }
+        acc.max(0.0)
+    }
+
+    /// Symmetrized IS between centroids, per coordinate
+    /// `0.5·(r + 1/r) − 1` with `r = a/b` (the logs cancel). No allocation.
+    fn centroid_dist(&self, s1a: &[f32], ca: f64, s1b: &[f32], cb: f64) -> f64 {
+        debug_assert_eq!(s1a.len(), s1b.len());
+        let (ia, ib) = (1.0 / ca, 1.0 / cb);
+        let mut acc = 0.0f64;
+        for (&av, &bv) in s1a.iter().zip(s1b.iter()) {
+            let ma = (av as f64 * ia).max(TINY);
+            let mb = (bv as f64 * ib).max(TINY);
+            let r = ma / mb;
+            acc += 0.5 * (r + 1.0 / r) - 1.0;
+        }
+        acc.max(0.0).sqrt()
+    }
+
+    fn check_point(&self, x: &[f32]) -> Result<(), String> {
+        for (k, &v) in x.iter().enumerate() {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("Itakura-Saito domain violated at coord {k}: {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diagonal Mahalanobis
+// ---------------------------------------------------------------------------
+
+/// `φ(x) = Σ w_k·x_k²` with per-feature weights `w_k > 0`:
+/// `d_φ(x‖y) = Σ w_k·(x_k − y_k)²` — a diagonal Mahalanobis (whitened)
+/// squared distance. `Sg = 2·w⊙S1` and `Sψ = Sφ` are derivable, so the
+/// tree stores no extra statistics and the memory profile matches the
+/// Euclidean path exactly.
+#[derive(Clone, Debug)]
+pub struct DiagMahalanobis {
+    /// Per-dimension weights (precisions), strictly positive.
+    pub w: Vec<f32>,
+}
+
+impl DiagMahalanobis {
+    pub fn new(w: Vec<f32>) -> DiagMahalanobis {
+        assert!(!w.is_empty() && w.iter().all(|&v| v > 0.0 && v.is_finite()));
+        DiagMahalanobis { w }
+    }
+
+    /// Whitening weights from data: `w_k = 1/(var_k + ε)`, rescaled so the
+    /// mean weight is 1 (keeps the learned bandwidth on the same scale as
+    /// the Euclidean fit).
+    pub fn from_data(x: &Matrix) -> DiagMahalanobis {
+        let (n, d) = (x.rows, x.cols);
+        assert!(n > 0 && d > 0);
+        let mut mean = vec![0f64; d];
+        for i in 0..n {
+            for (m, &v) in mean.iter_mut().zip(x.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut var = vec![0f64; d];
+        for i in 0..n {
+            for ((s, &v), &m) in var.iter_mut().zip(x.row(i)).zip(mean.iter()) {
+                let c = v as f64 - m;
+                *s += c * c;
+            }
+        }
+        let mut w: Vec<f64> = var.iter().map(|&s| 1.0 / (s / n as f64 + 1e-9)).collect();
+        let mean_w: f64 = w.iter().sum::<f64>() / d as f64;
+        for v in w.iter_mut() {
+            *v /= mean_w.max(TINY);
+        }
+        DiagMahalanobis { w: w.into_iter().map(|v| v as f32).collect() }
+    }
+
+    /// `Σ w_k·a_k·b_k` (f64 accumulation, mirroring `vecmath::dot`).
+    fn wdot(&self, a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len(), self.w.len());
+        let mut acc = 0.0f64;
+        for ((&x, &y), &w) in a.iter().zip(b.iter()).zip(self.w.iter()) {
+            acc += (w as f64) * (x as f64) * (y as f64);
+        }
+        acc
+    }
+}
+
+impl Divergence for DiagMahalanobis {
+    fn name(&self) -> &'static str {
+        "mahalanobis"
+    }
+
+    fn point(&self, x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = 0.0f64;
+        for ((&xv, &yv), &w) in x.iter().zip(y.iter()).zip(self.w.iter()) {
+            let d = (xv - yv) as f64;
+            acc += w as f64 * d * d;
+        }
+        acc
+    }
+
+    fn phi(&self, x: &[f32]) -> f64 {
+        self.wdot(x, x)
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for ((o, &v), &w) in out.iter_mut().zip(x.iter()).zip(self.w.iter()) {
+            *o = 2.0 * w * v;
+        }
+    }
+
+    fn dual(&self, x: &[f32]) -> f64 {
+        self.wdot(x, x)
+    }
+
+    fn needs_grad_stats(&self) -> bool {
+        false
+    }
+
+    fn is_metric(&self) -> bool {
+        true
+    }
+
+    fn block(&self, a: &NodeStats, b: &NodeStats) -> f64 {
+        (a.count * b.sphi + b.count * a.sphi - 2.0 * self.wdot(a.s1, b.s1)).max(0.0)
+    }
+
+    fn point_block(&self, x: &[f32], b: &NodeStats) -> f64 {
+        (b.count * self.phi(x) + b.sphi - 2.0 * self.wdot(x, b.s1)).max(0.0)
+    }
+
+    fn point_to_centroid(&self, x: &[f32], s1: &[f32], count: f64) -> f64 {
+        debug_assert_eq!(x.len(), s1.len());
+        let inv = 1.0 / count;
+        let mut acc = 0.0f64;
+        for ((&xv, &s), &w) in x.iter().zip(s1.iter()).zip(self.w.iter()) {
+            let d = xv as f64 - (s as f64) * inv;
+            acc += w as f64 * d * d;
+        }
+        acc
+    }
+
+    fn centroid_dist(&self, s1a: &[f32], ca: f64, s1b: &[f32], cb: f64) -> f64 {
+        let mut acc = 0.0f64;
+        for ((&x, &y), &w) in s1a.iter().zip(s1b.iter()).zip(self.w.iter()) {
+            let d = x as f64 / ca - y as f64 / cb;
+            acc += w as f64 * d * d;
+        }
+        acc.sqrt()
+    }
+
+    fn anchor_dist(&self, x: &[f32], pivot: &[f32]) -> f32 {
+        self.point(x, pivot).sqrt() as f32
+    }
+
+    fn steal_cutoff(&self, pivot_gap: f32) -> f32 {
+        pivot_gap / 2.0
+    }
+
+    fn check_point(&self, x: &[f32]) -> Result<(), String> {
+        if x.len() != self.w.len() {
+            return Err(format!("dimension mismatch: {} vs {} weights", x.len(), self.w.len()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config-level selector
+// ---------------------------------------------------------------------------
+
+/// Serializable divergence selector carried by configs
+/// ([`crate::vdt::VdtConfig`], [`crate::knn::KnnConfig`], the experiment
+/// harness) and parsed from the CLI `--divergence` flag.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum DivergenceKind {
+    #[default]
+    SqEuclidean,
+    Kl,
+    ItakuraSaito,
+    /// `None` = fit whitening weights (1/variance) from the training data
+    /// at build time; `Some(w)` = explicit per-feature weights.
+    Mahalanobis(Option<Vec<f32>>),
+}
+
+impl DivergenceKind {
+    /// Parse a CLI/config token.
+    pub fn parse(s: &str) -> Result<DivergenceKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "euclidean" | "sq_euclidean" | "sq-euclidean" | "l2" => Ok(DivergenceKind::SqEuclidean),
+            "kl" | "kullback-leibler" | "kullback_leibler" => Ok(DivergenceKind::Kl),
+            "is" | "itakura-saito" | "itakura_saito" => Ok(DivergenceKind::ItakuraSaito),
+            "mahalanobis" | "maha" => Ok(DivergenceKind::Mahalanobis(None)),
+            other => Err(format!(
+                "unknown divergence {other}; expected euclidean|kl|itakura-saito|mahalanobis"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DivergenceKind::SqEuclidean => "sq_euclidean",
+            DivergenceKind::Kl => "kl",
+            DivergenceKind::ItakuraSaito => "itakura_saito",
+            DivergenceKind::Mahalanobis(_) => "mahalanobis",
+        }
+    }
+
+    /// Instantiate against training data `x` (needed by the data-fitted
+    /// Mahalanobis weights; the others ignore it).
+    pub fn instantiate(&self, x: &Matrix) -> Arc<dyn Divergence> {
+        match self {
+            DivergenceKind::SqEuclidean => Arc::new(SqEuclidean),
+            DivergenceKind::Kl => Arc::new(KlSimplex),
+            DivergenceKind::ItakuraSaito => Arc::new(ItakuraSaito),
+            DivergenceKind::Mahalanobis(None) => Arc::new(DiagMahalanobis::from_data(x)),
+            DivergenceKind::Mahalanobis(Some(w)) => {
+                assert_eq!(w.len(), x.cols, "Mahalanobis weights must match data dimension");
+                Arc::new(DiagMahalanobis::new(w.clone()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn divs() -> Vec<(Box<dyn Divergence>, Vec<f32>, Vec<f32>)> {
+        // (divergence, in-domain x, in-domain y)
+        vec![
+            (
+                Box::new(SqEuclidean) as Box<dyn Divergence>,
+                vec![0.3, -1.2, 2.0],
+                vec![1.0, 0.0, -0.5],
+            ),
+            (
+                Box::new(KlSimplex) as Box<dyn Divergence>,
+                vec![0.2, 0.5, 0.3],
+                vec![0.6, 0.1, 0.3],
+            ),
+            (
+                Box::new(ItakuraSaito) as Box<dyn Divergence>,
+                vec![0.4, 1.5, 2.0],
+                vec![0.9, 0.8, 3.0],
+            ),
+            (
+                Box::new(DiagMahalanobis::new(vec![0.5, 2.0, 1.0])) as Box<dyn Divergence>,
+                vec![0.3, -1.2, 2.0],
+                vec![1.0, 0.0, -0.5],
+            ),
+        ]
+    }
+
+    #[test]
+    fn bregman_identity_holds_pointwise() {
+        // d(x‖y) == φ(x) − φ(y) − ⟨x−y, ∇φ(y)⟩ for in-domain points
+        for (d, x, y) in divs() {
+            let mut g = vec![0f32; y.len()];
+            d.grad(&y, &mut g);
+            let mut inner = 0f64;
+            for k in 0..x.len() {
+                inner += (x[k] - y[k]) as f64 * g[k] as f64;
+            }
+            let want = d.phi(&x) - d.phi(&y) - inner;
+            let got = d.point(&x, &y);
+            assert!(
+                (got - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "{}: {got} vs {want}",
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn dual_is_legendre_value() {
+        // ψ(x) == ⟨x, ∇φ(x)⟩ − φ(x)
+        for (d, x, _) in divs() {
+            let mut g = vec![0f32; x.len()];
+            d.grad(&x, &mut g);
+            let inner: f64 = x.iter().zip(g.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let want = inner - d.phi(&x);
+            let got = d.dual(&x);
+            assert!(
+                (got - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "{}: {got} vs {want}",
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn nonneg_and_identity_of_indiscernibles() {
+        for (d, x, y) in divs() {
+            assert!(d.point(&x, &y) > 0.0, "{}", d.name());
+            assert!(d.point(&x, &x).abs() < 1e-9, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn euclidean_block_matches_seed_formula() {
+        let (s1a, s1b) = (vec![1.0f32, 2.0], vec![-0.5f32, 3.0]);
+        let a = NodeStats { count: 2.0, s1: &s1a, sphi: 7.0, sg: &[], spsi: 0.0 };
+        let b = NodeStats { count: 3.0, s1: &s1b, sphi: 11.0, sg: &[], spsi: 0.0 };
+        let want = (2.0 * 11.0 + 3.0 * 7.0 - 2.0 * dot(&s1a, &s1b)).max(0.0);
+        assert_eq!(SqEuclidean.block(&a, &b), want);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (s, k) in [
+            ("euclidean", DivergenceKind::SqEuclidean),
+            ("KL", DivergenceKind::Kl),
+            ("itakura-saito", DivergenceKind::ItakuraSaito),
+            ("mahalanobis", DivergenceKind::Mahalanobis(None)),
+        ] {
+            assert_eq!(DivergenceKind::parse(s).unwrap(), k);
+        }
+        assert!(DivergenceKind::parse("cosine").is_err());
+    }
+}

@@ -4,12 +4,16 @@
 //! the vendored `xla`/`anyhow` stand-ins, so these are all in-tree).
 
 pub mod bench;
+pub mod divergence;
 pub mod matrix;
 pub mod metrics;
 pub mod par;
 pub mod rng;
 pub mod vecmath;
 
+pub use divergence::{
+    DiagMahalanobis, Divergence, DivergenceKind, ItakuraSaito, KlSimplex, NodeStats, SqEuclidean,
+};
 pub use matrix::Matrix;
 pub use metrics::{Stats, Timer};
 pub use rng::Rng;

@@ -173,6 +173,132 @@ pub fn gaussian_mixture(
     Dataset::new(x, labels, n_classes, format!("{name}(n={n},d={d},seed={seed})"))
 }
 
+/// Softmax in place (f64 accumulation, max-shifted): strictly positive
+/// outputs summing to 1, the logistic-normal construction's last step.
+fn softmax_row(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f64;
+    for v in row.iter_mut() {
+        let e = ((*v - m) as f64).exp();
+        *v = e as f32;
+        sum += e;
+    }
+    let inv = (1.0 / sum) as f32;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Simplex-valued (histogram) mixture for the KL geometry: per-cluster
+/// logistic-normal rows — `x = softmax(center_c + noise/√conc)` — so every
+/// coordinate is strictly positive and every row sums to 1. Higher `conc`
+/// gives tighter clusters. Deterministic in `seed`.
+pub fn simplex_mixture(
+    n: usize,
+    d: usize,
+    n_classes: usize,
+    clusters_per_class: usize,
+    conc: f32,
+    seed: u64,
+    name: &str,
+) -> Dataset {
+    assert!(conc > 0.0);
+    let mut r = rng(seed ^ 0x51e7_5113);
+    let k = n_classes * clusters_per_class;
+    let centers: Vec<f32> = (0..k * d).map(|_| randn(&mut r) * 1.5).collect();
+    let noise = 1.0 / conc.sqrt();
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let y = r.below(n_classes);
+        let c = y * clusters_per_class + r.below(clusters_per_class);
+        labels.push(y);
+        let row = x.row_mut(i);
+        let center = &centers[c * d..(c + 1) * d];
+        for (v, &m) in row.iter_mut().zip(center.iter()) {
+            *v = m + randn(&mut r) * noise;
+        }
+        softmax_row(row);
+    }
+    Dataset::new(x, labels, n_classes, format!("{name}(n={n},d={d},seed={seed})"))
+}
+
+/// Text-like documents for the KL geometry: `topics` word distributions
+/// over a `vocab`-sized vocabulary, classes mixing topics with different
+/// weights, documents = Laplace-smoothed normalized word counts of
+/// `doc_len` sampled tokens. Rows are strictly positive and sum to 1.
+pub fn topic_histograms(
+    n: usize,
+    vocab: usize,
+    n_classes: usize,
+    topics: usize,
+    doc_len: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(topics >= n_classes && vocab >= 2 && doc_len >= 1);
+    let mut r = rng(seed ^ 0x7091c5);
+    // topic-word distributions (softmax of sharpened normals)
+    let mut word_dist = vec![0f32; topics * vocab];
+    for t in 0..topics {
+        let row = &mut word_dist[t * vocab..(t + 1) * vocab];
+        for v in row.iter_mut() {
+            *v = randn(&mut r) * 2.0;
+        }
+        softmax_row(row);
+    }
+    // per-class topic mixtures: class y favours topic y (and cycles)
+    let mut x = Matrix::zeros(n, vocab);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let y = r.below(n_classes);
+        labels.push(y);
+        let mut counts = vec![0f64; vocab];
+        for _ in 0..doc_len {
+            // 70% tokens from the class's own topic, 30% from a random one
+            let t = if r.f64() < 0.7 { y % topics } else { r.below(topics) };
+            // inverse-CDF sample a word from the topic distribution
+            let mut u = r.f64();
+            let dist = &word_dist[t * vocab..(t + 1) * vocab];
+            let mut w = vocab - 1;
+            for (j, &p) in dist.iter().enumerate() {
+                u -= p as f64;
+                if u <= 0.0 {
+                    w = j;
+                    break;
+                }
+            }
+            counts[w] += 1.0;
+        }
+        // Laplace smoothing keeps every coordinate strictly positive
+        let alpha = 0.1f64;
+        let total = doc_len as f64 + alpha * vocab as f64;
+        let row = x.row_mut(i);
+        for (v, &c) in row.iter_mut().zip(counts.iter()) {
+            *v = ((c + alpha) / total) as f32;
+        }
+    }
+    Dataset::new(x, labels, n_classes, format!("topic_histograms(n={n},v={vocab},seed={seed})"))
+}
+
+/// Strictly positive "spectra" for the Itakura–Saito geometry: log-normal
+/// rows around per-cluster log-envelopes, `x = exp(center + 0.4·noise)`.
+pub fn positive_spectra(n: usize, d: usize, n_classes: usize, seed: u64) -> Dataset {
+    let mut r = rng(seed ^ 0x15_0e57);
+    let centers: Vec<f32> = (0..n_classes * d).map(|_| randn(&mut r)).collect();
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let y = r.below(n_classes);
+        labels.push(y);
+        let row = x.row_mut(i);
+        let center = &centers[y * d..(y + 1) * d];
+        for (v, &m) in row.iter_mut().zip(center.iter()) {
+            *v = (m + 0.4 * randn(&mut r)).exp().max(1e-6);
+        }
+    }
+    Dataset::new(x, labels, n_classes, format!("positive_spectra(n={n},d={d},seed={seed})"))
+}
+
 /// Two interleaved half-moons in 2-D — the classic SSL smoke test used by
 /// the quickstart example and many unit tests.
 pub fn two_moons(n: usize, noise: f32, seed: u64) -> Dataset {
@@ -225,6 +351,30 @@ mod tests {
         assert_eq!(a.labels, b.labels);
         let c = digit1_like(40, 8);
         assert_ne!(a.x, c.x, "different seed must change data");
+    }
+
+    #[test]
+    fn simplex_generators_are_valid_histograms() {
+        for ds in [
+            simplex_mixture(60, 12, 2, 2, 4.0, 3, "s"),
+            topic_histograms(60, 20, 2, 4, 80, 3),
+        ] {
+            for i in 0..ds.n() {
+                let row = ds.x.row(i);
+                assert!(row.iter().all(|&v| v > 0.0), "{}: row {i} not positive", ds.name);
+                let sum: f64 = row.iter().map(|&v| v as f64).sum();
+                assert!((sum - 1.0).abs() < 1e-4, "{}: row {i} sums to {sum}", ds.name);
+            }
+        }
+    }
+
+    #[test]
+    fn positive_spectra_is_strictly_positive_and_deterministic() {
+        let a = positive_spectra(40, 8, 2, 5);
+        let b = positive_spectra(40, 8, 2, 5);
+        assert_eq!(a.x, b.x);
+        assert!(a.x.data.iter().all(|&v| v > 0.0));
+        assert!(a.labels.iter().any(|&l| l == 0) && a.labels.iter().any(|&l| l == 1));
     }
 
     #[test]

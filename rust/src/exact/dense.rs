@@ -3,6 +3,7 @@
 //! backend for shapes without an artifact and the cross-check oracle for
 //! the XLA path (`tests/xla_roundtrip.rs`).
 
+use crate::core::divergence::Divergence;
 use crate::core::vecmath::sq_dist;
 use crate::core::Matrix;
 
@@ -15,6 +16,23 @@ pub fn pairwise_sq_dists(x: &Matrix) -> Matrix {
             let v = sq_dist(x.row(i), x.row(j)) as f32;
             d2.set(i, j, v);
             d2.set(j, i, v);
+        }
+    }
+    d2
+}
+
+/// Dense pairwise Bregman divergences: entry (i, j) holds `d(x_i ‖ x_j)`
+/// (zero diagonal, asymmetric in general). Feeds [`transition_from_d2`]
+/// and [`fit_sigma`] unchanged — both only assume nonnegative entries —
+/// so the exact baseline works in any geometry.
+pub fn pairwise_divergences(x: &Matrix, div: &dyn Divergence) -> Matrix {
+    let n = x.rows;
+    let mut d2 = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                d2.set(i, j, div.point(x.row(i), x.row(j)) as f32);
+            }
         }
     }
     d2

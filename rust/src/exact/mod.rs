@@ -28,6 +28,8 @@ pub struct ExactModel {
     /// lp_chunk/matvec artifacts can be dispatched without re-padding).
     xla: Option<(Rc<Runtime>, Matrix)>,
     backend: &'static str,
+    /// Geometry name for registry listings.
+    div_name: &'static str,
 }
 
 impl ExactModel {
@@ -37,7 +39,27 @@ impl ExactModel {
         let d2 = dense::pairwise_sq_dists(x);
         let sigma = sigma.unwrap_or_else(|| dense::fit_sigma(&d2, x.cols, 1e-6, 100));
         let p = dense::transition_from_d2(&d2, sigma);
-        ExactModel { p, sigma, xla: None, backend: "exact-dense" }
+        ExactModel { p, sigma, xla: None, backend: "exact-dense", div_name: "sq_euclidean" }
+    }
+
+    /// Pure-Rust build under an arbitrary Bregman geometry: pairwise
+    /// divergences instead of squared distances, same masked-kernel
+    /// normalization and σ fit. The Euclidean kind takes the (symmetric,
+    /// half-work) [`dense::pairwise_sq_dists`] path and is identical to
+    /// [`ExactModel::build_dense`].
+    pub fn build_dense_div(
+        x: &Matrix,
+        sigma: Option<f64>,
+        kind: &crate::core::divergence::DivergenceKind,
+    ) -> ExactModel {
+        if matches!(kind, crate::core::divergence::DivergenceKind::SqEuclidean) {
+            return Self::build_dense(x, sigma);
+        }
+        let div = kind.instantiate(x);
+        let d2 = dense::pairwise_divergences(x, div.as_ref());
+        let sigma = sigma.unwrap_or_else(|| dense::fit_sigma(&d2, x.cols, 1e-6, 100));
+        let p = dense::transition_from_d2(&d2, sigma);
+        ExactModel { p, sigma, xla: None, backend: "exact-dense", div_name: div.name() }
     }
 
     /// XLA build: P computed by the AOT transition artifact (Pallas kernel
@@ -51,7 +73,13 @@ impl ExactModel {
         let (p_padded, n_pad) = rt.transition_padded(x, sigma as f32)?;
         let p = p_padded.sliced(x.rows, x.rows);
         let _ = n_pad;
-        Ok(ExactModel { p, sigma, xla: Some((rt, p_padded)), backend: "exact-xla" })
+        Ok(ExactModel {
+            p,
+            sigma,
+            xla: Some((rt, p_padded)),
+            backend: "exact-xla",
+            div_name: "sq_euclidean",
+        })
     }
 
     #[inline]
@@ -114,6 +142,10 @@ impl TransitionOp for ExactModel {
 
     fn name(&self) -> &str {
         self.backend
+    }
+
+    fn divergence(&self) -> &str {
+        self.div_name
     }
 }
 

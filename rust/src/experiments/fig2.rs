@@ -8,6 +8,7 @@
 //! per-level refinement time, and CCR at matched parameter counts
 //! |B| = kN for k = 2..⌈log N⌉, with 10 and 100 labeled points.
 
+use crate::core::divergence::DivergenceKind;
 use crate::core::{metrics::Timer, Matrix};
 use crate::data::{synthetic, Dataset};
 use crate::exact::ExactModel;
@@ -29,6 +30,10 @@ pub struct ExpConfig {
     pub exact_cap: usize,
     /// cap above which fast-kNN is skipped
     pub knn_cap: usize,
+    /// Geometry every model (exact, kNN, VDT) is built under — the CLI's
+    /// `--divergence` flag. Default reproduces the paper's Gaussian runs
+    /// bit-for-bit.
+    pub divergence: DivergenceKind,
     pub seed: u64,
 }
 
@@ -40,6 +45,7 @@ impl Default for ExpConfig {
             sizes: vec![500, 1000, 2000, 4000, 8000],
             exact_cap: 2000,
             knn_cap: 8000,
+            divergence: DivergenceKind::SqEuclidean,
             seed: 20120815,
         }
     }
@@ -50,23 +56,30 @@ fn build_all(
     ds: &Dataset,
     exact_cap: usize,
     knn_cap: usize,
+    divergence: &DivergenceKind,
 ) -> (Option<(ExactModel, f64)>, Option<(KnnGraph, f64)>, (VdtModel, f64)) {
     let exact = if ds.n() <= exact_cap {
         let t = Timer::start();
-        let m = ExactModel::build_dense(&ds.x, None);
+        let m = ExactModel::build_dense_div(&ds.x, None, divergence);
         Some((m, t.ms()))
     } else {
         None
     };
     let knn = if ds.n() <= knn_cap {
         let t = Timer::start();
-        let g = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+        let g = KnnGraph::build(
+            &ds.x,
+            &KnnConfig { k: 2, divergence: divergence.clone(), ..Default::default() },
+        );
         Some((g, t.ms()))
     } else {
         None
     };
     let t = Timer::start();
-    let v = VdtModel::build(&ds.x, &VdtConfig::default());
+    let v = VdtModel::build(
+        &ds.x,
+        &VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() },
+    );
     let vdt = (v, t.ms());
     (exact, knn, vdt)
 }
@@ -104,7 +117,8 @@ pub fn fig2abc(cfg: &ExpConfig) -> (Table, Table, Table) {
         let (mut ae, mut ak, mut av) = (Vec::new(), Vec::new(), Vec::new());
         for rep in 0..cfg.reps {
             let ds = base.subsample(n, cfg.seed + rep as u64);
-            let (exact, knn, (vdt, vms)) = build_all(&ds, cfg.exact_cap, cfg.knn_cap);
+            let (exact, knn, (vdt, vms)) =
+                build_all(&ds, cfg.exact_cap, cfg.knn_cap, &cfg.divergence);
             cv.push(vms);
             let labeled =
                 labelprop::choose_labeled(&ds.labels, ds.n_classes, (n / 10).max(2), rep as u64);
@@ -166,13 +180,19 @@ pub fn fig2_refinement(which: RefineDataset, cfg: &ExpConfig) -> (Table, Table, 
         &["model", "ms"],
     );
     let te_t = Timer::start();
-    let exact = ExactModel::build_dense(&ds.x, None);
+    let exact = ExactModel::build_dense_div(&ds.x, None, &cfg.divergence);
     let exact_ms = te_t.ms();
     let tk_t = Timer::start();
-    let mut knn = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+    let mut knn = KnnGraph::build(
+        &ds.x,
+        &KnnConfig { k: 2, divergence: cfg.divergence.clone(), ..Default::default() },
+    );
     let knn_ms = tk_t.ms();
     let tv_t = Timer::start();
-    let mut vdt = VdtModel::build(&ds.x, &VdtConfig::default());
+    let mut vdt = VdtModel::build(
+        &ds.x,
+        &VdtConfig { divergence: cfg.divergence.clone(), ..VdtConfig::default() },
+    );
     let vdt_ms = tv_t.ms();
     td.push(vec!["exact".into(), f(exact_ms)]);
     td.push(vec!["fast-knn(k=2)".into(), f(knn_ms)]);
@@ -234,6 +254,7 @@ mod tests {
             exact_cap: 240,
             knn_cap: 240,
             seed: 1,
+            ..Default::default()
         }
     }
 

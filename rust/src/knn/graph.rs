@@ -12,16 +12,20 @@
 //! second experiment (Fig. 2E/F/G/I/J/K) contrasts with VDT's targeted
 //! refinement.
 
+use crate::core::divergence::DivergenceKind;
 use crate::core::Matrix;
 use crate::labelprop::TransitionOp;
 use crate::sparse::Csr;
-use crate::tree::{build_tree, BuildConfig, PartitionTree};
+use crate::tree::{build_tree, build_tree_with, BuildConfig, PartitionTree};
 
 /// Configuration for [`KnnGraph::build`].
 #[derive(Clone, Debug)]
 pub struct KnnConfig {
     pub k: usize,
     pub tree: BuildConfig,
+    /// Geometry of the neighbour search and the edge weights (non-metric
+    /// divergences fall back to exhaustive per-query scans).
+    pub divergence: DivergenceKind,
     /// Fixed bandwidth; `None` = alternate Eq. (12)-style updates.
     pub sigma: Option<f64>,
     pub sigma_tol: f64,
@@ -36,6 +40,7 @@ impl Default for KnnConfig {
         KnnConfig {
             k: 2,
             tree: BuildConfig::default(),
+            divergence: DivergenceKind::SqEuclidean,
             sigma: None,
             sigma_tol: 1e-4,
             sigma_max_iters: 50,
@@ -60,7 +65,12 @@ pub struct KnnGraph {
 impl KnnGraph {
     /// Build the k-NN graph with anchor-tree-pruned exact searches.
     pub fn build(x: &Matrix, cfg: &KnnConfig) -> KnnGraph {
-        let tree = build_tree(x, &cfg.tree);
+        // the Euclidean default takes the monomorphized build (inlined
+        // sq_dist inner loops, bit-identical either way)
+        let tree = match &cfg.divergence {
+            DivergenceKind::SqEuclidean => build_tree(x, &cfg.tree),
+            kind => build_tree_with(x, &cfg.tree, kind.instantiate(x)),
+        };
         let mut g = KnnGraph {
             neighbors: Vec::new(),
             p: Csr::from_rows(x.rows, x.rows, &vec![Vec::new(); x.rows]),
@@ -174,6 +184,9 @@ impl TransitionOp for KnnGraph {
     }
     fn name(&self) -> &str {
         "fast-knn"
+    }
+    fn divergence(&self) -> &str {
+        self.tree.div.name()
     }
 }
 

@@ -6,10 +6,17 @@
 //! bounded max-heap of current bests gives exact results while skipping
 //! most of the tree — the paper's `O(N^0.5 log N + k log k)` per query in
 //! the friendly case.
+//!
+//! Distances come from the tree's [`crate::core::divergence::Divergence`].
+//! The ball-pruning bound is only valid when `sqrt(d)` satisfies the
+//! triangle inequality, so non-metric divergences (KL, Itakura–Saito)
+//! take an exact exhaustive scan per query instead — still correct,
+//! just unpruned.
 
 use std::collections::BinaryHeap;
 
-use crate::core::vecmath::{sq_dist, sq_dist_to_centroid};
+use crate::core::divergence::Divergence;
+use crate::core::vecmath::sq_dist;
 use crate::core::Matrix;
 use crate::tree::PartitionTree;
 
@@ -45,11 +52,12 @@ impl Ord for Frontier {
     }
 }
 
-/// Lower bound on the squared distance from `q` to any point under `node`.
+/// Lower bound on the squared distance from `q` to any point under `node`
+/// (valid for metric divergences only).
 #[inline]
 fn node_lower_bound(tree: &PartitionTree, x_row: &[f32], node: u32) -> f64 {
     let c = tree.count[node as usize] as f64;
-    let dc = sq_dist_to_centroid(x_row, tree.s1_of(node), c).sqrt();
+    let dc = tree.div.point_to_centroid(x_row, tree.s1_of(node), c).sqrt();
     let lb = dc - tree.radius[node as usize] as f64;
     if lb <= 0.0 {
         0.0
@@ -58,14 +66,18 @@ fn node_lower_bound(tree: &PartitionTree, x_row: &[f32], node: u32) -> f64 {
     }
 }
 
-/// Exact k nearest neighbours of point `query` (itself excluded), returned
-/// as (neighbour, distance²) sorted ascending by distance.
+/// Exact k nearest neighbours of point `query` (itself excluded) under the
+/// tree's divergence, returned as (neighbour, divergence) sorted ascending.
 pub fn knn_query(
     tree: &PartitionTree,
     x: &Matrix,
     query: usize,
     k: usize,
 ) -> Vec<(u32, f64)> {
+    if !tree.div.is_metric() {
+        // ball pruning needs the triangle inequality; scan exhaustively
+        return knn_bruteforce_div(tree.div.as_ref(), x, query, k);
+    }
     let qrow = x.row(query);
     let mut best: BinaryHeap<Best> = BinaryHeap::with_capacity(k + 1);
     let mut frontier: BinaryHeap<Frontier> = BinaryHeap::new();
@@ -79,7 +91,7 @@ pub fn knn_query(
             if node as usize == query {
                 continue;
             }
-            let d2 = sq_dist(qrow, x.row(node as usize));
+            let d2 = tree.div.point(qrow, x.row(node as usize));
             if best.len() < k {
                 best.push(Best(d2, node));
             } else if d2 < best.peek().unwrap().0 {
@@ -112,11 +124,29 @@ pub fn knn_all(tree: &PartitionTree, x: &Matrix, k: usize, parallel: bool) -> Ve
     }
 }
 
-/// Brute-force reference (tests and tiny inputs).
+/// Brute-force reference under squared Euclidean (tests and tiny inputs).
 pub fn knn_bruteforce(x: &Matrix, query: usize, k: usize) -> Vec<(u32, f64)> {
     let mut all: Vec<(u32, f64)> = (0..x.rows)
         .filter(|&j| j != query)
         .map(|j| (j as u32, sq_dist(x.row(query), x.row(j))))
+        .collect();
+    all.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    all.truncate(k);
+    all
+}
+
+/// Exhaustive exact search under an arbitrary divergence: row `query`'s
+/// neighbours ranked by `d(x_query ‖ x_j)` — the fallback for non-metric
+/// geometries and the oracle the conformance suite checks against.
+pub fn knn_bruteforce_div(
+    div: &dyn Divergence,
+    x: &Matrix,
+    query: usize,
+    k: usize,
+) -> Vec<(u32, f64)> {
+    let mut all: Vec<(u32, f64)> = (0..x.rows)
+        .filter(|&j| j != query)
+        .map(|j| (j as u32, div.point(x.row(query), x.row(j))))
         .collect();
     all.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
     all.truncate(k);

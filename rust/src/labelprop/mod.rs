@@ -19,6 +19,11 @@ pub trait TransitionOp {
     fn name(&self) -> &str {
         "op"
     }
+    /// Name of the Bregman geometry the operator was fitted under (for
+    /// registry listings; see [`crate::core::divergence`]).
+    fn divergence(&self) -> &str {
+        "sq_euclidean"
+    }
 }
 
 impl TransitionOp for crate::vdt::VdtModel {
@@ -30,6 +35,9 @@ impl TransitionOp for crate::vdt::VdtModel {
     }
     fn name(&self) -> &str {
         "variational-dt"
+    }
+    fn divergence(&self) -> &str {
+        self.tree.div.name()
     }
 }
 

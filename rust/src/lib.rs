@@ -27,6 +27,38 @@
 //! fallbacks, and parallel results are exactly equivalent to serial (see
 //! the `core::par` module docs for the determinism contract).
 //!
+//! ## Choosing a divergence
+//!
+//! The geometry is pluggable ([`core::divergence`], after the authors'
+//! Bregman follow-up, arXiv:1309.6812): squared Euclidean (default,
+//! bit-exact with the original paper pipeline), generalized KL for
+//! histogram/simplex data, Itakura–Saito for strictly positive spectra,
+//! and diagonal Mahalanobis for heteroscedastic features. Select with
+//! [`vdt::VdtConfig::divergence`] / [`knn::KnnConfig::divergence`] (a
+//! [`core::DivergenceKind`]), or pass an instance to
+//! [`vdt::VdtModel::build_with`]:
+//!
+//! ```no_run
+//! use vdt::core::divergence::{DivergenceKind, KlSimplex};
+//! use vdt::data::synthetic;
+//! use vdt::vdt::{VdtConfig, VdtModel};
+//!
+//! // text-like histograms: strictly positive rows summing to 1
+//! let ds = synthetic::topic_histograms(2000, 64, 2, 4, 120, 7);
+//! let cfg = VdtConfig { divergence: DivergenceKind::Kl, ..Default::default() };
+//! let mut model = VdtModel::build(&ds.x, &cfg);      // enum-driven …
+//! let same = VdtModel::build_with(&ds.x, &cfg, KlSimplex); // … or generic
+//! model.refine_to(6 * ds.n());
+//! assert_eq!(model.divergence_name(), "kl");
+//! # let _ = same;
+//! ```
+//!
+//! Every geometry yields a valid row-stochastic Q (pinned by
+//! `rust/tests/divergence_conformance.rs`); the Euclidean path is pinned
+//! bitwise against the pre-refactor formulas by
+//! `rust/tests/fig2_golden.rs`. See `examples/bregman.rs` for a runnable
+//! KL quickstart.
+//!
 //! ## Quick start
 //!
 //! ```no_run

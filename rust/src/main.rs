@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use vdt::core::divergence::DivergenceKind;
 use vdt::core::metrics::Timer;
 use vdt::data::{io, synthetic, Dataset};
 use vdt::exact::ExactModel;
@@ -26,8 +27,9 @@ USAGE: vdt <command> [--flag value ...]
 
 COMMANDS
   build     build a transition model and print statistics
-            --dataset secstr|digit1|usps|alpha|ocr|moons  (digit1)
+            --dataset secstr|digit1|usps|alpha|ocr|moons|simplex|topics|spectra  (digit1)
             --n <int> (1500)  --method vdt|knn|exact|exact-xla (vdt)
+            --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --k <int> (2)  --seed <int> (0)  --csv <path>
   lp        run label-propagation SSL and report CCR
             (build flags +) --labeled <int> (0 = 10% of N)
@@ -37,12 +39,14 @@ COMMANDS
   exp       regenerate a paper experiment and write results/<id>.csv
             ids: fig2abc fig2digit1 fig2usps table1 table2 all
             --sizes 500,1000,...  --reps <int> (5)  --steps <int> (500)
+            --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --alpha-n <int> (100000)  --ocr-n <int> (50000)
             --out <dir> (results)
   selftest  verify the AOT artifact <-> PJRT round trip
             --artifacts <dir> (artifacts)
   serve     run the coordinator and a demo client burst
             --dataset ... --n <int> (1500) --k <int> (6)
+            --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --requests <int> (32)
   help      print this text
 ";
@@ -98,27 +102,51 @@ fn make_dataset(kind: &str, n: usize, seed: u64) -> Result<Dataset> {
         "alpha" => synthetic::alpha_like(n, seed),
         "ocr" => synthetic::ocr_like(n, seed),
         "moons" => synthetic::two_moons(n, 0.08, seed),
+        // simplex-valued generators for the KL geometry
+        "simplex" => synthetic::simplex_mixture(n, 32, 2, 3, 4.0, seed, "simplex"),
+        "topics" => synthetic::topic_histograms(n, 64, 2, 4, 120, seed),
+        // strictly positive spectra for Itakura-Saito
+        "spectra" => synthetic::positive_spectra(n, 24, 2, seed),
         other => return Err(anyhow!("unknown dataset {other}")),
     })
 }
 
-fn build_op(method: &str, ds: &Dataset, k: usize) -> Result<Box<dyn TransitionOp>> {
+fn build_op(
+    method: &str,
+    ds: &Dataset,
+    k: usize,
+    divergence: &DivergenceKind,
+) -> Result<Box<dyn TransitionOp>> {
     Ok(match method {
         "vdt" => {
-            let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+            let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
+            let mut m = VdtModel::build(&ds.x, &cfg);
             if k > 2 {
                 m.refine_to(k * ds.n());
             }
             Box::new(m)
         }
-        "knn" => Box::new(KnnGraph::build(&ds.x, &KnnConfig { k: k.max(1), ..Default::default() })),
-        "exact" => Box::new(ExactModel::build_dense(&ds.x, None)),
+        "knn" => Box::new(KnnGraph::build(
+            &ds.x,
+            &KnnConfig { k: k.max(1), divergence: divergence.clone(), ..Default::default() },
+        )),
+        "exact" => Box::new(ExactModel::build_dense_div(&ds.x, None, divergence)),
         "exact-xla" => {
+            if *divergence != DivergenceKind::SqEuclidean {
+                return Err(anyhow!("exact-xla only supports the euclidean divergence"));
+            }
             let rt = std::rc::Rc::new(vdt::runtime::Runtime::load_default()?);
             Box::new(ExactModel::build_xla(&ds.x, None, rt)?)
         }
         other => return Err(anyhow!("unknown method {other}")),
     })
+}
+
+fn parse_divergence(args: &Args) -> Result<DivergenceKind> {
+    match args.opt_str("divergence") {
+        None => Ok(DivergenceKind::SqEuclidean),
+        Some(s) => DivergenceKind::parse(&s).map_err(|e| anyhow!("{e}")),
+    }
 }
 
 fn print_and_save(t: &Table, out: &str, id: &str) {
@@ -187,21 +215,24 @@ fn main() -> Result<()> {
                 Some(path) => io::load_csv(&path)?,
                 None => make_dataset(&args.get_str("dataset", "digit1"), n, seed)?,
             };
+            let divergence = parse_divergence(&args)?;
             println!(
-                "dataset: {} (N={}, d={}, classes={})",
+                "dataset: {} (N={}, d={}, classes={})   divergence: {}",
                 ds.name,
                 ds.n(),
                 ds.d(),
-                ds.n_classes
+                ds.n_classes,
+                divergence.name()
             );
             let t = Timer::start();
-            let op = build_op(&method, &ds, k)?;
-            println!("built {} in {:.1} ms", op.name(), t.ms());
             if method == "vdt" {
-                let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+                // build once; print both the timing and the model stats
+                let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
+                let mut m = VdtModel::build(&ds.x, &cfg);
                 if k > 2 {
                     m.refine_to(k * ds.n());
                 }
+                println!("built variational-dt in {:.1} ms", t.ms());
                 println!(
                     "σ = {:.4}   |B| = {}   ℓ(D) = {:.2}   memory ≈ {:.1} MiB",
                     m.sigma(),
@@ -209,6 +240,9 @@ fn main() -> Result<()> {
                     m.loglik(),
                     m.memory_bytes() as f64 / (1024.0 * 1024.0)
                 );
+            } else {
+                let op = build_op(&method, &ds, k, &divergence)?;
+                println!("built {} in {:.1} ms", op.name(), t.ms());
             }
         }
         "lp" => {
@@ -220,9 +254,10 @@ fn main() -> Result<()> {
             let steps = args.get("steps", 500usize)?;
             let method = args.get_str("method", "vdt");
             let ds = make_dataset(&args.get_str("dataset", "digit1"), n, seed)?;
+            let divergence = parse_divergence(&args)?;
             let count = if labeled == 0 { (n / 10).max(2) } else { labeled };
             let t = Timer::start();
-            let op = build_op(&method, &ds, k)?;
+            let op = build_op(&method, &ds, k, &divergence)?;
             let build_ms = t.ms();
             let chosen = labelprop::choose_labeled(&ds.labels, ds.n_classes, count, seed);
             let t2 = Timer::start();
@@ -250,7 +285,8 @@ fn main() -> Result<()> {
             let m = args.get("m", 20usize)?;
             let method = args.get_str("method", "vdt");
             let ds = make_dataset(&args.get_str("dataset", "moons"), n, seed)?;
-            let op = build_op(&method, &ds, k)?;
+            let divergence = parse_divergence(&args)?;
+            let op = build_op(&method, &ds, k, &divergence)?;
             let r = vdt::spectral::arnoldi_eigenvalues(op.as_ref(), m, seed);
             println!("top Ritz values of P ({}):", op.name());
             for (i, (re, im)) in r.eigenvalues.iter().take(10).enumerate() {
@@ -269,6 +305,7 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow!("exp needs an id; see `vdt help`"))?;
             let mut cfg = fig2::ExpConfig {
                 reps: args.get("reps", 5usize)?,
+                divergence: parse_divergence(&args)?,
                 ..Default::default()
             };
             cfg.lp.steps = args.get("steps", 500usize)?;
@@ -305,10 +342,18 @@ fn main() -> Result<()> {
             let k = args.get("k", 6usize)?;
             let requests = args.get("requests", 32usize)?;
             let ds = make_dataset(&args.get_str("dataset", "digit1"), n, 0)?;
-            let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+            let divergence = parse_divergence(&args)?;
+            let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
+            let mut m = VdtModel::build(&ds.x, &cfg);
             m.refine_to(k * ds.n());
             let handle = vdt::coordinator::Coordinator::spawn();
             handle.register("default", Arc::new(m));
+            for info in handle.list_models() {
+                println!(
+                    "model {:<10} backend={} divergence={} N={}",
+                    info.name, info.backend, info.divergence, info.n
+                );
+            }
             println!("coordinator up; issuing {requests} demo matvec requests");
             let t = Timer::start();
             let mut joins = Vec::new();

@@ -43,8 +43,10 @@
 //! (pinned by `rust/tests/parallel_equivalence.rs`). `VDT_THREADS=1`
 //! forces the serial fallback globally.
 
+use std::sync::Arc;
+
+use crate::core::divergence::{Divergence, SqEuclidean};
 use crate::core::par;
-use crate::core::vecmath::{sq_dist, sq_dist_to_centroid, sq_norm};
 use crate::core::Matrix;
 
 use super::{PartitionTree, NONE};
@@ -84,8 +86,18 @@ impl Default for BuildConfig {
 }
 
 /// Mutable arena the recursive builder appends into.
-struct Arena<'a> {
+///
+/// Generic over the divergence so the default Euclidean build is
+/// **monomorphized** — the SIMD-tuned `vecmath::sq_dist` stays inlined in
+/// the per-point-pair inner loops (steal scans, pole finding), with no
+/// virtual call per pair. Dynamic geometries enter with `D = dyn
+/// Divergence` through [`build_tree_with`].
+struct Arena<'a, D: Divergence + ?Sized> {
     x: &'a Matrix,
+    /// Geometry of the build; every distance-like quantity goes through it.
+    div: &'a D,
+    /// Cached `div.needs_grad_stats()`.
+    needs_grad: bool,
     d: usize,
     left: Vec<u32>,
     right: Vec<u32>,
@@ -94,15 +106,22 @@ struct Arena<'a> {
     s2: Vec<f64>,
     radius: Vec<f32>,
     s1: Vec<f32>,
+    /// Σ ∇φ(x) per node (empty unless `needs_grad`).
+    sg: Vec<f32>,
+    /// Σ ψ(x) per node (empty unless `needs_grad`).
+    spsi: Vec<f64>,
 }
 
-impl<'a> Arena<'a> {
-    fn new(x: &'a Matrix) -> Self {
+impl<'a, D: Divergence + ?Sized> Arena<'a, D> {
+    fn new(x: &'a Matrix, div: &'a D) -> Self {
         let n = x.rows;
         let d = x.cols;
         let cap = 2 * n - 1;
+        let needs_grad = div.needs_grad_stats();
         let mut a = Arena {
             x,
+            div,
+            needs_grad,
             d,
             left: Vec::with_capacity(cap),
             right: Vec::with_capacity(cap),
@@ -111,16 +130,24 @@ impl<'a> Arena<'a> {
             s2: Vec::with_capacity(cap),
             radius: Vec::with_capacity(cap),
             s1: Vec::with_capacity(cap * d),
+            sg: Vec::with_capacity(if needs_grad { cap * d } else { 0 }),
+            spsi: Vec::with_capacity(if needs_grad { cap } else { 0 }),
         };
         // leaves: node id == point index
+        let mut grad = vec![0f32; d];
         for i in 0..n {
             a.left.push(NONE);
             a.right.push(NONE);
             a.parent.push(NONE);
             a.count.push(1);
-            a.s2.push(sq_norm(x.row(i)));
+            a.s2.push(div.phi(x.row(i)));
             a.radius.push(0.0);
             a.s1.extend_from_slice(x.row(i));
+            if needs_grad {
+                div.grad(x.row(i), &mut grad);
+                a.sg.extend_from_slice(&grad);
+                a.spsi.push(div.dual(x.row(i)));
+            }
         }
         a
     }
@@ -129,16 +156,11 @@ impl<'a> Arena<'a> {
         &self.s1[v as usize * self.d..(v as usize + 1) * self.d]
     }
 
-    /// Distance between the centroids of two existing nodes.
+    /// Distance between the centroids of two existing nodes (in the
+    /// build divergence's geometry).
     fn centroid_dist(&self, a: u32, b: u32) -> f64 {
         let (ca, cb) = (self.count[a as usize] as f64, self.count[b as usize] as f64);
-        let (sa, sb) = (self.s1_of(a), self.s1_of(b));
-        let mut acc = 0.0f64;
-        for (x, y) in sa.iter().zip(sb.iter()) {
-            let d = *x as f64 / ca - *y as f64 / cb;
-            acc += d * d;
-        }
-        acc.sqrt()
+        self.div.centroid_dist(self.s1_of(a), ca, self.s1_of(b), cb)
     }
 
     /// Upper bound on the merged ball radius of `a ∪ b` (centroid-centered).
@@ -166,6 +188,13 @@ impl<'a> Arena<'a> {
             let v = self.s1[li + j] + self.s1[ri + j];
             self.s1.push(v);
         }
+        if self.needs_grad {
+            for j in 0..self.d {
+                let v = self.sg[li + j] + self.sg[ri + j];
+                self.sg.push(v);
+            }
+            self.spsi.push(self.spsi[l as usize] + self.spsi[r as usize]);
+        }
         self.parent[l as usize] = id;
         self.parent[r as usize] = id;
         id
@@ -188,9 +217,16 @@ impl Anchor {
 
 /// One anchor's share of a point-stealing scan against a new pivot:
 /// returns (kept, stolen) with the serial path's exact scan/cutoff logic.
-fn steal_scan(x: &Matrix, a: &Anchor, new_pivot: u32) -> (Vec<(u32, f32)>, Vec<(u32, f32)>) {
-    let pivot_gap = sq_dist(x.row(new_pivot as usize), x.row(a.pivot as usize)).sqrt() as f32;
-    let cutoff = pivot_gap / 2.0;
+/// Non-metric divergences report a zero cutoff, so every owned point is
+/// scanned (correct, just unpruned).
+fn steal_scan<D: Divergence + ?Sized>(
+    x: &Matrix,
+    div: &D,
+    a: &Anchor,
+    new_pivot: u32,
+) -> (Vec<(u32, f32)>, Vec<(u32, f32)>) {
+    let pivot_gap = div.anchor_dist(x.row(new_pivot as usize), x.row(a.pivot as usize));
+    let cutoff = div.steal_cutoff(pivot_gap);
     // pts sorted descending: only the prefix with dist >= cutoff can
     // possibly be closer to the new pivot (triangle inequality).
     let mut keep = Vec::with_capacity(a.pts.len());
@@ -200,7 +236,7 @@ fn steal_scan(x: &Matrix, a: &Anchor, new_pivot: u32) -> (Vec<(u32, f32)>, Vec<(
             keep.extend_from_slice(&a.pts[idx..]);
             break;
         }
-        let dist_new = sq_dist(x.row(p as usize), x.row(new_pivot as usize)).sqrt() as f32;
+        let dist_new = div.anchor_dist(x.row(p as usize), x.row(new_pivot as usize));
         if dist_new < dist_owner {
             stolen.push((p, dist_new));
         } else {
@@ -210,12 +246,18 @@ fn steal_scan(x: &Matrix, a: &Anchor, new_pivot: u32) -> (Vec<(u32, f32)>, Vec<(
     (keep, stolen)
 }
 
-fn make_anchors(x: &Matrix, points: &[u32], m: usize, parallel: bool) -> Vec<Anchor> {
+fn make_anchors<D: Divergence + ?Sized>(
+    x: &Matrix,
+    div: &D,
+    points: &[u32],
+    m: usize,
+    parallel: bool,
+) -> Vec<Anchor> {
     // first anchor: pivot = lowest-index point (deterministic), owns all
     let pivot0 = points[0];
     let dist_to_pivot0 = |i: usize| -> (u32, f32) {
         let p = points[i];
-        (p, sq_dist(x.row(p as usize), x.row(pivot0 as usize)).sqrt() as f32)
+        (p, div.anchor_dist(x.row(p as usize), x.row(pivot0 as usize)))
     };
     let mut pts: Vec<(u32, f32)> = if parallel {
         par::par_map(points.len(), dist_to_pivot0)
@@ -243,9 +285,9 @@ fn make_anchors(x: &Matrix, points: &[u32], m: usize, parallel: bool) -> Vec<Anc
         // per-anchor scans are independent; stolen lists concatenate in
         // anchor order, matching the serial visit order exactly
         let results: Vec<(Vec<(u32, f32)>, Vec<(u32, f32)>)> = if parallel && anchors.len() >= 2 {
-            par::par_map(anchors.len(), |i| steal_scan(x, &anchors[i], new_pivot))
+            par::par_map(anchors.len(), |i| steal_scan(x, div, &anchors[i], new_pivot))
         } else {
-            anchors.iter().map(|a| steal_scan(x, a, new_pivot)).collect()
+            anchors.iter().map(|a| steal_scan(x, div, a, new_pivot)).collect()
         };
         let mut stolen: Vec<(u32, f32)> = Vec::new();
         for (a, (keep, st)) in anchors.iter_mut().zip(results) {
@@ -268,7 +310,11 @@ fn make_anchors(x: &Matrix, points: &[u32], m: usize, parallel: bool) -> Vec<Anc
 /// construction before this cache; see EXPERIMENTS.md §Perf). The initial
 /// O(k²·d) score fill is row-parallel; the merge loop itself is a cheap
 /// scalar scan and stays serial.
-fn agglomerate(arena: &mut Arena, roots: Vec<u32>, parallel: bool) -> u32 {
+fn agglomerate<D: Divergence + ?Sized>(
+    arena: &mut Arena<D>,
+    roots: Vec<u32>,
+    parallel: bool,
+) -> u32 {
     assert!(!roots.is_empty());
     let k = roots.len();
     if k == 1 {
@@ -279,7 +325,7 @@ fn agglomerate(arena: &mut Arena, roots: Vec<u32>, parallel: bool) -> u32 {
     // cached merged-radius score for each slot pair (upper triangle used)
     let mut scores = vec![f32::INFINITY; k * k];
     if parallel && k >= 64 {
-        let arena_ref: &Arena = arena;
+        let arena_ref: &Arena<D> = arena;
         let slots_ref = &slots;
         par::par_slices_mut(&mut scores, k, 4, |row0, chunk| {
             for (ri, row) in chunk.chunks_mut(k).enumerate() {
@@ -339,7 +385,7 @@ fn agglomerate(arena: &mut Arena, roots: Vec<u32>, parallel: bool) -> u32 {
 
 /// Divisive split for small sets: approximate farthest pair as poles,
 /// assign by nearest pole, recurse.
-fn build_divisive(arena: &mut Arena, points: &[u32]) -> u32 {
+fn build_divisive<D: Divergence + ?Sized>(arena: &mut Arena<D>, points: &[u32]) -> u32 {
     if points.len() == 1 {
         return points[0];
     }
@@ -347,12 +393,13 @@ fn build_divisive(arena: &mut Arena, points: &[u32]) -> u32 {
         return arena.join(points[0], points[1]);
     }
     let x = arena.x;
+    let div = arena.div;
     // poles: p1 = farthest from points[0]; p2 = farthest from p1
     let far_from = |q: u32, pts: &[u32]| -> u32 {
         let mut best = pts[0];
         let mut bd = -1.0f64;
         for &p in pts {
-            let d = sq_dist(x.row(p as usize), x.row(q as usize));
+            let d = div.point(x.row(p as usize), x.row(q as usize));
             if d > bd {
                 bd = d;
                 best = p;
@@ -365,8 +412,8 @@ fn build_divisive(arena: &mut Arena, points: &[u32]) -> u32 {
     let mut a = Vec::new();
     let mut b = Vec::new();
     for &p in points {
-        let d1 = sq_dist(x.row(p as usize), x.row(p1 as usize));
-        let d2 = sq_dist(x.row(p as usize), x.row(p2 as usize));
+        let d1 = div.point(x.row(p as usize), x.row(p1 as usize));
+        let d2 = div.point(x.row(p as usize), x.row(p2 as usize));
         if d1 <= d2 {
             a.push(p);
         } else {
@@ -398,6 +445,8 @@ struct SubTree {
     s2: Vec<f64>,
     radius: Vec<f32>,
     s1: Vec<f32>,
+    sg: Vec<f32>,
+    spsi: Vec<f64>,
 }
 
 /// Build the subtree over `pts` in a private arena over the extracted
@@ -405,19 +454,25 @@ struct SubTree {
 /// `pts[i]`, and the serial recursion allocates internal nodes in the same
 /// order it would in the shared arena — so the result splices back
 /// bit-identically (see [`splice_subtree`]).
-fn build_subtree_standalone(x: &Matrix, pts: &[u32], cfg: &BuildConfig) -> SubTree {
+fn build_subtree_standalone<D: Divergence + ?Sized>(
+    x: &Matrix,
+    div: &D,
+    pts: &[u32],
+    cfg: &BuildConfig,
+) -> SubTree {
     let m = pts.len();
     let d = x.cols;
     let mut xs = Matrix::zeros(m, d);
     for (i, &p) in pts.iter().enumerate() {
         xs.row_mut(i).copy_from_slice(x.row(p as usize));
     }
-    let mut arena = Arena::new(&xs);
+    let mut arena = Arena::new(&xs, div);
     if m > 1 {
         let local_points: Vec<u32> = (0..m as u32).collect();
         let root = build_recursive(&mut arena, &local_points, cfg, false);
         debug_assert_eq!(root as usize, 2 * m - 2, "subtree root must be allocated last");
     }
+    let needs_grad = arena.needs_grad;
     SubTree {
         m,
         left: arena.left.split_off(m),
@@ -426,13 +481,15 @@ fn build_subtree_standalone(x: &Matrix, pts: &[u32], cfg: &BuildConfig) -> SubTr
         s2: arena.s2.split_off(m),
         radius: arena.radius.split_off(m),
         s1: arena.s1.split_off(m * d),
+        sg: if needs_grad { arena.sg.split_off(m * d) } else { Vec::new() },
+        spsi: if needs_grad { arena.spsi.split_off(m) } else { Vec::new() },
     }
 }
 
 /// Append a standalone subtree's internal nodes to the shared arena,
 /// remapping local ids (leaf i → `pts[i]`, internal k → `base + k`).
 /// Returns the global id of the subtree root.
-fn splice_subtree(arena: &mut Arena, pts: &[u32], st: &SubTree) -> u32 {
+fn splice_subtree<D: Divergence + ?Sized>(arena: &mut Arena<D>, pts: &[u32], st: &SubTree) -> u32 {
     let m = st.m;
     if m == 1 {
         return pts[0];
@@ -456,6 +513,10 @@ fn splice_subtree(arena: &mut Arena, pts: &[u32], st: &SubTree) -> u32 {
         arena.s2.push(st.s2[k]);
         arena.radius.push(st.radius[k]);
         arena.s1.extend_from_slice(&st.s1[k * d..(k + 1) * d]);
+        if arena.needs_grad {
+            arena.sg.extend_from_slice(&st.sg[k * d..(k + 1) * d]);
+            arena.spsi.push(st.spsi[k]);
+        }
         arena.parent[l as usize] = gid;
         arena.parent[r as usize] = gid;
     }
@@ -465,14 +526,19 @@ fn splice_subtree(arena: &mut Arena, pts: &[u32], st: &SubTree) -> u32 {
 /// Build every anchor's subtree concurrently (isolated arenas), then
 /// splice them into the shared arena in anchor order — the same order the
 /// serial recursion allocates, so node ids match a serial build exactly.
-fn build_subtrees_parallel(arena: &mut Arena, anchors: &[Anchor], cfg: &BuildConfig) -> Vec<u32> {
+fn build_subtrees_parallel<D: Divergence + ?Sized>(
+    arena: &mut Arena<D>,
+    anchors: &[Anchor],
+    cfg: &BuildConfig,
+) -> Vec<u32> {
     let x = arena.x;
+    let div = arena.div;
     let pts_lists: Vec<Vec<u32>> = anchors
         .iter()
         .map(|a| a.pts.iter().map(|&(p, _)| p).collect())
         .collect();
     let subtrees: Vec<SubTree> =
-        par::par_map(pts_lists.len(), |i| build_subtree_standalone(x, &pts_lists[i], cfg));
+        par::par_map(pts_lists.len(), |i| build_subtree_standalone(x, div, &pts_lists[i], cfg));
     pts_lists
         .iter()
         .zip(subtrees.iter())
@@ -480,13 +546,18 @@ fn build_subtrees_parallel(arena: &mut Arena, anchors: &[Anchor], cfg: &BuildCon
         .collect()
 }
 
-fn build_recursive(arena: &mut Arena, points: &[u32], cfg: &BuildConfig, parallel: bool) -> u32 {
+fn build_recursive<D: Divergence + ?Sized>(
+    arena: &mut Arena<D>,
+    points: &[u32],
+    cfg: &BuildConfig,
+    parallel: bool,
+) -> u32 {
     if points.len() <= cfg.divisive_threshold {
         return build_divisive(arena, points);
     }
     let par_here = parallel && points.len() >= cfg.parallel_threshold && par::is_parallel();
     let m = (points.len() as f64).sqrt().ceil() as usize;
-    let anchors = make_anchors(arena.x, points, m, par_here);
+    let anchors = make_anchors(arena.x, arena.div, points, m, par_here);
     if anchors.len() == 1 {
         // anchors couldn't split (e.g. all-duplicate set): fall back
         return build_divisive(arena, points);
@@ -504,10 +575,38 @@ fn build_recursive(arena: &mut Arena, points: &[u32], cfg: &BuildConfig, paralle
     agglomerate(arena, roots, par_here)
 }
 
-/// Build the shared partition tree over the rows of `x`.
+/// Build the shared partition tree over the rows of `x` under the default
+/// squared-Euclidean geometry (bit-identical to the pre-divergence seed).
+/// This path is **monomorphized** on [`SqEuclidean`], so the inner
+/// distance loops inline `vecmath::sq_dist` exactly as before.
 pub fn build_tree(x: &Matrix, cfg: &BuildConfig) -> PartitionTree {
+    build_tree_impl(x, cfg, &SqEuclidean, Arc::new(SqEuclidean))
+}
+
+/// Build the shared partition tree under an arbitrary Bregman divergence.
+/// The tree keeps the divergence, so every downstream consumer (blocks,
+/// kNN, routing) automatically evaluates in the same geometry.
+pub fn build_tree_with(x: &Matrix, cfg: &BuildConfig, div: Arc<dyn Divergence>) -> PartitionTree {
+    let div_ref = Arc::clone(&div);
+    build_tree_impl(x, cfg, div_ref.as_ref(), div)
+}
+
+fn build_tree_impl<D: Divergence + ?Sized>(
+    x: &Matrix,
+    cfg: &BuildConfig,
+    div: &D,
+    handle: Arc<dyn Divergence>,
+) -> PartitionTree {
     assert!(x.rows >= 1, "need at least one point");
-    let mut arena = Arena::new(x);
+    // fail fast on out-of-domain data (e.g. negative coordinates under
+    // KL, zeros under Itakura-Saito) instead of silently fitting a
+    // meaningless model; a no-op for unconstrained divergences
+    for i in 0..x.rows {
+        if let Err(e) = div.check_point(x.row(i)) {
+            panic!("data row {i} outside the {} domain: {e}", div.name());
+        }
+    }
+    let mut arena = Arena::new(x, div);
     let points: Vec<u32> = (0..x.rows as u32).collect();
     let root = build_recursive(&mut arena, &points, cfg, cfg.parallel);
     debug_assert_eq!(root as usize, 2 * x.rows - 2.min(x.rows * 2));
@@ -521,13 +620,16 @@ pub fn build_tree(x: &Matrix, cfg: &BuildConfig) -> PartitionTree {
         s2: arena.s2,
         radius: arena.radius,
         s1: arena.s1,
+        sg: arena.sg,
+        spsi: arena.spsi,
+        div: handle,
     };
     // The constructive merge bounds are valid but loose; the exact pass
     // (every point updates each ancestor's centroid radius) sharpens kNN
     // pruning considerably but costs O(Σ depth·d) — skip it when the
     // consumer never reads radii (the VDT model).
     if cfg.exact_radii {
-        tighten_radii(tree, x, cfg.parallel && x.rows >= cfg.parallel_threshold)
+        tighten_radii(tree, x, div, cfg.parallel && x.rows >= cfg.parallel_threshold)
     } else {
         tree
     }
@@ -538,19 +640,25 @@ pub fn build_tree(x: &Matrix, cfg: &BuildConfig) -> PartitionTree {
 /// The parallel path gives each thread a private radius array over a point
 /// chunk and merges by `max` — order-insensitive, so bit-identical to the
 /// serial sweep.
-fn tighten_radii(mut t: PartitionTree, x: &Matrix, parallel: bool) -> PartitionTree {
+fn tighten_radii<D: Divergence + ?Sized>(
+    mut t: PartitionTree,
+    x: &Matrix,
+    div: &D,
+    parallel: bool,
+) -> PartitionTree {
     let nn = t.num_nodes();
     let n = t.n;
     let ancestor_sweep = |t: &PartitionTree, rad: &mut [f32], lo: usize, hi: usize| {
         for p in lo as u32..hi as u32 {
             let mut a = t.parent[p as usize];
             while a != NONE {
-                let dist = sq_dist_to_centroid(
-                    x.row(p as usize),
-                    &t.s1[a as usize * t.d..(a as usize + 1) * t.d],
-                    t.count[a as usize] as f64,
-                )
-                .sqrt() as f32;
+                let dist = div
+                    .point_to_centroid(
+                        x.row(p as usize),
+                        &t.s1[a as usize * t.d..(a as usize + 1) * t.d],
+                        t.count[a as usize] as f64,
+                    )
+                    .sqrt() as f32;
                 if dist > rad[a as usize] {
                     rad[a as usize] = dist;
                 }

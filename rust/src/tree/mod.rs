@@ -1,5 +1,10 @@
 //! The shared partition tree (anchor tree, Moore 2000) with the sufficient
-//! statistics of Eq. (9): `S1(A) = Σ_{x∈A} x`, `S2(A) = Σ_{x∈A} xᵀx`.
+//! statistics of Eq. (9), generalized to an arbitrary Bregman divergence
+//! (see [`crate::core::divergence`]): `S1(A) = Σ_{x∈A} x`,
+//! `Sφ(A) = Σ_{x∈A} φ(x)` (the `s2` field), and — for divergences whose
+//! gradient is not derivable from `S1` — `Sg(A) = Σ ∇φ(x)` / `Sψ(A) =
+//! Σ ψ(x)`. Under the default squared-Euclidean geometry `s2 = Σ‖x‖²` and
+//! `sg`/`spsi` stay empty, so the memory layout is identical to the seed.
 //!
 //! Data points and kernels share one tree (paper §3.1). Leaves are
 //! singletons with `leaf id == point index`; internal nodes are appended
@@ -7,20 +12,26 @@
 //! and `root() == 2n-2` (for `n > 1`).
 //!
 //! Every node stores:
-//! - `count`, `s1`, `s2` — the block-distance statistics (Eq. 9 gives
-//!   `D²_AB` in O(d) from these),
+//! - `count`, `s1`, `s2` (+ `sg`/`spsi` when needed) — the block-distance
+//!   statistics ([`PartitionTree::d2_between`] gives `D_AB` in O(d) from
+//!   these for the tree's divergence),
 //! - `radius` — an upper bound on the distance from the node *centroid*
 //!   (`s1/count`) to any member point, valid for triangle-inequality
-//!   pruning in the fast-kNN baseline.
+//!   pruning in the fast-kNN baseline (metric divergences only).
 
 pub mod build;
 
-pub use build::{build_tree, BuildConfig};
+use std::sync::Arc;
+
+use crate::core::divergence::{Divergence, NodeStats};
+
+pub use build::{build_tree, build_tree_with, BuildConfig};
 
 /// Sentinel for "no node".
 pub const NONE: u32 = u32::MAX;
 
-/// Arena-allocated binary partition tree over `n` points in `R^d`.
+/// Arena-allocated binary partition tree over `n` points in `R^d`, built
+/// under a pluggable Bregman divergence (default: squared Euclidean).
 pub struct PartitionTree {
     pub n: usize,
     pub d: usize,
@@ -28,12 +39,20 @@ pub struct PartitionTree {
     pub right: Vec<u32>,
     pub parent: Vec<u32>,
     pub count: Vec<u32>,
-    /// Σ xᵀx over the node's points.
+    /// Σ φ(x) over the node's points (Σ xᵀx under squared Euclidean).
     pub s2: Vec<f64>,
     /// Upper bound on max distance from the node centroid to its points.
     pub radius: Vec<f32>,
     /// Flat `[num_nodes * d]` array of Σ x per node.
     pub s1: Vec<f32>,
+    /// Flat `[num_nodes * d]` array of Σ ∇φ(x) per node; empty unless the
+    /// divergence reports `needs_grad_stats()`.
+    pub sg: Vec<f32>,
+    /// Σ ψ(x) per node; empty unless the divergence needs it.
+    pub spsi: Vec<f64>,
+    /// The geometry this tree was built under; every distance-like
+    /// quantity downstream (blocks, routing, kNN) dispatches through it.
+    pub div: Arc<dyn Divergence>,
 }
 
 impl PartitionTree {
@@ -73,14 +92,30 @@ impl PartitionTree {
         }
     }
 
-    /// Block-sum squared distance `D²_AB` of Eq. (9), in O(d).
-    ///
-    /// `D²_AB = |A|·S2(B) + |B|·S2(A) − 2·S1(A)ᵀS1(B)`; clamped at 0
-    /// against float cancellation for near-identical blocks.
+    /// Sufficient-statistics view of node `a` for divergence evaluation.
+    #[inline]
+    pub fn stats_of(&self, a: u32) -> NodeStats<'_> {
+        let ai = a as usize;
+        NodeStats {
+            count: self.count[ai] as f64,
+            s1: &self.s1[ai * self.d..(ai + 1) * self.d],
+            sphi: self.s2[ai],
+            sg: if self.sg.is_empty() {
+                &[]
+            } else {
+                &self.sg[ai * self.d..(ai + 1) * self.d]
+            },
+            spsi: if self.spsi.is_empty() { 0.0 } else { self.spsi[ai] },
+        }
+    }
+
+    /// Block-sum divergence `D_AB` of Eq. (9) under the tree's divergence,
+    /// in O(d): data-side node `a`, kernel-side node `b`. Under squared
+    /// Euclidean this is exactly the seed's
+    /// `|A|·S2(B) + |B|·S2(A) − 2·S1(A)ᵀS1(B)` (clamped at 0 against
+    /// float cancellation for near-identical blocks).
     pub fn d2_between(&self, a: u32, b: u32) -> f64 {
-        let (ca, cb) = (self.count[a as usize] as f64, self.count[b as usize] as f64);
-        let dot = crate::core::vecmath::dot(self.s1_of(a), self.s1_of(b));
-        (ca * self.s2[b as usize] + cb * self.s2[a as usize] - 2.0 * dot).max(0.0)
+        self.div.block(&self.stats_of(a), &self.stats_of(b))
     }
 
     /// All point indices under node `a` (leaves carry their point index).
@@ -134,6 +169,7 @@ impl PartitionTree {
             }
         }
         // statistics & radius: check against explicit membership
+        let mut grad = vec![0f32; self.d];
         for a in 0..nn as u32 {
             let ai = a as usize;
             let leaves = self.leaves_under(a);
@@ -142,34 +178,57 @@ impl PartitionTree {
             }
             let mut s1 = vec![0f64; self.d];
             let mut s2 = 0f64;
+            let mut sg = vec![0f64; self.d];
+            let mut spsi = 0f64;
             for &p in &leaves {
-                for (acc, &v) in s1.iter_mut().zip(x.row(p as usize)) {
+                let row = x.row(p as usize);
+                for (acc, &v) in s1.iter_mut().zip(row) {
                     *acc += v as f64;
                 }
-                s2 += crate::core::vecmath::sq_norm(x.row(p as usize));
+                s2 += self.div.phi(row);
+                if !self.sg.is_empty() {
+                    self.div.grad(row, &mut grad);
+                    for (acc, &v) in sg.iter_mut().zip(grad.iter()) {
+                        *acc += v as f64;
+                    }
+                    spsi += self.div.dual(row);
+                }
             }
             for (j, &v) in self.s1_of(a).iter().enumerate() {
                 if (v as f64 - s1[j]).abs() > 1e-3 * (1.0 + s1[j].abs()) {
                     return Err(format!("s1 mismatch at {ai}[{j}]"));
                 }
             }
-            if (self.s2[ai] - s2).abs() > 1e-6 * (1.0 + s2.abs()) {
+            if (self.s2[ai] - s2).abs() > 1e-5 * (1.0 + s2.abs()) {
                 return Err(format!("s2 mismatch at {ai}"));
             }
-            // radius must bound centroid->point distances
-            let c = self.count[ai] as f64;
-            for &p in &leaves {
-                let d = crate::core::vecmath::sq_dist_to_centroid(
-                    x.row(p as usize),
-                    self.s1_of(a),
-                    c,
-                )
-                .sqrt();
-                if d > self.radius[ai] as f64 + 1e-3 {
-                    return Err(format!(
-                        "radius bound violated at {ai}: {d} > {}",
-                        self.radius[ai]
-                    ));
+            if !self.sg.is_empty() {
+                let st = self.stats_of(a);
+                for (j, &v) in st.sg.iter().enumerate() {
+                    if (v as f64 - sg[j]).abs() > 1e-2 * (1.0 + sg[j].abs()) {
+                        return Err(format!("sg mismatch at {ai}[{j}]"));
+                    }
+                }
+                if (st.spsi - spsi).abs() > 1e-5 * (1.0 + spsi.abs()) {
+                    return Err(format!("spsi mismatch at {ai}"));
+                }
+            }
+            // radius must bound centroid->point distances; the constructive
+            // bounds rely on the triangle inequality and only hold for
+            // metric divergences
+            if self.div.is_metric() {
+                let c = self.count[ai] as f64;
+                for &p in &leaves {
+                    let d = self
+                        .div
+                        .point_to_centroid(x.row(p as usize), self.s1_of(a), c)
+                        .sqrt();
+                    if d > self.radius[ai] as f64 + 1e-3 {
+                        return Err(format!(
+                            "radius bound violated at {ai}: {d} > {}",
+                            self.radius[ai]
+                        ));
+                    }
                 }
             }
         }

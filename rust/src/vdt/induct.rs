@@ -10,9 +10,11 @@
 //!    point would have (so x inherits a block structure B(x)).
 //! 2. For every mark (A, B) on that path, give x the block's kernel-node
 //!    target B with the softmax weight of the same variational form used
-//!    by the optimizer: G_xB = −D²_xB/(2σ²|B|), where
-//!    D²_xB = Σ_{m∈B} ||x − m||² = |B|·xᵀx + S2(B) − 2·xᵀS1(B) (the Eq. 9
-//!    factorization specialized to a single data point — O(d) per block).
+//!    by the optimizer: G_xB = −D_xB/(2σ²|B|), where
+//!    D_xB = Σ_{m∈B} d(x ‖ m) is evaluated in O(d) from the kernel-side
+//!    node statistics of the tree's Bregman divergence (under squared
+//!    Euclidean: |B|·xᵀx + S2(B) − 2·xᵀS1(B), the Eq. 9 factorization
+//!    specialized to a single data point).
 //! 3. Normalize over the path with the same hierarchical-softmax
 //!    recursion: the per-row partition function reuses the training-time
 //!    log Z of the subtrees *below* the path nodes... which for a single
@@ -26,7 +28,7 @@
 //! out-of-sample label prediction — inductive SSL on top of a fitted
 //! transductive model.
 
-use crate::core::vecmath::{logsumexp, sq_norm};
+use crate::core::vecmath::logsumexp;
 use crate::core::Matrix;
 use crate::tree::PartitionTree;
 
@@ -74,14 +76,15 @@ impl InductiveRow {
     }
 }
 
-/// `D²_xB = |B|·xᵀx + S2(B) − 2·xᵀS1(B)` — Eq. (9) with A = {x}.
+/// `D_xB = Σ_{m∈B} d(x ‖ m)` — Eq. (9) with A = {x}, evaluated under the
+/// tree's divergence from the kernel-side node statistics (under squared
+/// Euclidean this is the seed's `|B|·xᵀx + S2(B) − 2·xᵀS1(B)`).
 fn d2_point_block(tree: &PartitionTree, x: &[f32], node: u32) -> f64 {
-    let nb = tree.count[node as usize] as f64;
-    let dot = crate::core::vecmath::dot(x, tree.s1_of(node));
-    (nb * sq_norm(x) + tree.s2[node as usize] - 2.0 * dot).max(0.0)
+    tree.div.point_block(x, &tree.stats_of(node))
 }
 
-/// Route `x` root→leaf by nearest-centroid descent; returns the path
+/// Route `x` root→leaf by nearest-centroid descent (the mean is the
+/// correct Bregman representative for every divergence); returns the path
 /// (root first, leaf last).
 pub fn route(tree: &PartitionTree, x: &[f32]) -> Vec<u32> {
     let mut path = Vec::with_capacity(32);
@@ -92,16 +95,8 @@ pub fn route(tree: &PartitionTree, x: &[f32]) -> Vec<u32> {
             break;
         }
         let (l, r) = (tree.left[node as usize], tree.right[node as usize]);
-        let dl = crate::core::vecmath::sq_dist_to_centroid(
-            x,
-            tree.s1_of(l),
-            tree.count[l as usize] as f64,
-        );
-        let dr = crate::core::vecmath::sq_dist_to_centroid(
-            x,
-            tree.s1_of(r),
-            tree.count[r as usize] as f64,
-        );
+        let dl = tree.div.point_to_centroid(x, tree.s1_of(l), tree.count[l as usize] as f64);
+        let dr = tree.div.point_to_centroid(x, tree.s1_of(r), tree.count[r as usize] as f64);
         node = if dl <= dr { l } else { r };
     }
     path

@@ -4,8 +4,11 @@
 //! `O(N^1.5 log N + |B|)` construction, `O(|B|)` memory (Table 1).
 //! `refine_to` grows |B| greedily (paper §4.4); `matvec` is Algorithm 1.
 
+use std::sync::Arc;
+
+use crate::core::divergence::{Divergence, DivergenceKind};
 use crate::core::Matrix;
-use crate::tree::{build_tree, BuildConfig, PartitionTree};
+use crate::tree::{build_tree_with, BuildConfig, PartitionTree};
 
 use super::matvec::{matvec, MatvecScratch};
 use super::optimize::loglik;
@@ -17,6 +20,11 @@ use super::sigma::fit_alternating;
 #[derive(Clone, Debug)]
 pub struct VdtConfig {
     pub tree: BuildConfig,
+    /// Geometry the model is fitted under (see
+    /// [`crate::core::divergence`]). The default squared-Euclidean choice
+    /// reproduces the paper bit-for-bit; [`VdtModel::build_with`] accepts
+    /// an explicit [`Divergence`] instance instead.
+    pub divergence: DivergenceKind,
     /// Fixed bandwidth; `None` learns σ by the paper's alternating scheme.
     pub sigma: Option<f64>,
     /// Relative σ convergence tolerance of the alternating fit.
@@ -31,6 +39,7 @@ impl Default for VdtConfig {
             // the VDT model never reads node radii — skip the exact-radius
             // post-pass (it cost ~25-35% of construction at N=16k; §Perf)
             tree: BuildConfig { exact_radii: false, ..BuildConfig::default() },
+            divergence: DivergenceKind::SqEuclidean,
             sigma: None,
             sigma_tol: 1e-4,
             sigma_max_iters: 50,
@@ -54,9 +63,38 @@ pub struct VdtModel {
 }
 
 impl VdtModel {
-    /// Build the coarsest model (|B| = 2(N−1)) and fit (q, σ).
+    /// Build the coarsest model (|B| = 2(N−1)) and fit (q, σ) under the
+    /// geometry selected by `cfg.divergence`. The default Euclidean kind
+    /// takes the monomorphized [`crate::tree::build_tree`] path (inlined
+    /// `sq_dist` inner loops, bit-identical to the seed).
     pub fn build(x: &Matrix, cfg: &VdtConfig) -> VdtModel {
-        let tree = build_tree(x, &cfg.tree);
+        let tree = match &cfg.divergence {
+            DivergenceKind::SqEuclidean => crate::tree::build_tree(x, &cfg.tree),
+            kind => build_tree_with(x, &cfg.tree, kind.instantiate(x)),
+        };
+        Self::fit(tree, cfg)
+    }
+
+    /// Build under an explicit [`Divergence`] instance — the generic
+    /// entry point for custom geometries:
+    /// `VdtModel::build_with(&x, &cfg, KlSimplex)`.
+    pub fn build_with<D: Divergence + 'static>(x: &Matrix, cfg: &VdtConfig, div: D) -> VdtModel {
+        Self::build_with_arc(x, cfg, Arc::new(div))
+    }
+
+    /// Build under a shared divergence handle (used by the coordinator
+    /// and custom callers holding type-erased geometries).
+    pub fn build_with_arc(
+        x: &Matrix,
+        cfg: &VdtConfig,
+        div: Arc<dyn Divergence>,
+    ) -> VdtModel {
+        Self::fit(build_tree_with(x, &cfg.tree, div), cfg)
+    }
+
+    /// Shared fit tail: coarsest partition + alternating (q, σ) on an
+    /// already-built tree.
+    fn fit(tree: PartitionTree, cfg: &VdtConfig) -> VdtModel {
         let mut partition = BlockPartition::coarsest(&tree);
         let sigma = if let Some(s) = cfg.sigma {
             // fixed bandwidth: single q-optimization, no σ updates
@@ -91,6 +129,12 @@ impl VdtModel {
     #[inline]
     pub fn sigma(&self) -> f64 {
         self.sigma
+    }
+
+    /// Name of the Bregman geometry the model was fitted under.
+    #[inline]
+    pub fn divergence_name(&self) -> &'static str {
+        self.tree.div.name()
     }
 
     /// Current variational lower bound ℓ(D) (Eq. 7).
@@ -153,6 +197,21 @@ mod tests {
         assert!(m.num_blocks() >= 6 * 80);
         assert!(m.loglik() >= ll0 - 1e-6, "refinement decreased ℓ");
         m.partition.validate(&m.tree).unwrap();
+    }
+
+    #[test]
+    fn explicit_euclidean_build_matches_default() {
+        // the enum-driven and generic entry points must agree bit-for-bit
+        let ds = synthetic::two_moons(50, 0.08, 9);
+        let a = VdtModel::build(&ds.x, &VdtConfig::default());
+        let b = VdtModel::build_with(
+            &ds.x,
+            &VdtConfig::default(),
+            crate::core::divergence::SqEuclidean,
+        );
+        assert_eq!(a.sigma(), b.sigma());
+        assert_eq!(a.materialize().data, b.materialize().data);
+        assert_eq!(a.divergence_name(), "sq_euclidean");
     }
 
     #[test]

@@ -17,18 +17,39 @@ use crate::tree::PartitionTree;
 use super::optimize::{loglik, optimize_q, OptScratch};
 use super::partition::BlockPartition;
 
-/// Eq. (14): q-independent σ from the global pairwise distance mass.
+/// Eq. (14): q-independent σ from the global pairwise divergence mass.
+///
+/// `Σ_i Σ_{j≠i} d(x_i ‖ x_j) = D_{root,root}` (the diagonal contributes
+/// `d(x,x) = 0`), so the initializer is divergence-generic in O(d) from
+/// the root statistics. Under squared Euclidean the block evaluation is
+/// `2N·S2(root) − 2·‖S1(root)‖²` with the exact seed arithmetic
+/// (`n·s2 + n·s2` and `fl(2n·s2)` are bitwise identical because doubling
+/// is exact in IEEE-754), so the Euclidean path is bit-exact with the
+/// pre-refactor formula — pinned by `rust/tests/fig2_golden.rs`.
 pub fn sigma_init(tree: &PartitionTree) -> f64 {
     let root = tree.root();
     let n = tree.n as f64;
     let d = tree.d as f64;
-    let s2 = tree.s2[root as usize];
-    let s1_norm2 = crate::core::vecmath::sq_norm(tree.s1_of(root));
-    let total = (2.0 * n * s2 - 2.0 * s1_norm2).max(0.0);
+    let total = tree.d2_between(root, root);
     ((total / d).sqrt() / n).max(1e-12)
 }
 
-/// Eq. (12): closed-form σ* given the current q.
+/// Scale-aware lower clamp for the learned bandwidth.
+///
+/// Duplicate-heavy data makes the alternating fit collapse: q concentrates
+/// on zero-divergence blocks, Eq. (12)'s numerator `Σ q·D` shrinks, and σ
+/// spirals toward the old absolute floor of 1e-12 — a degenerate kernel
+/// whose energies `D/(2σ²)` overflow any useful dynamic range. Flooring at
+/// a tiny multiple of the data-scale σ₀ of Eq. (14) keeps the fit finite
+/// and Q row-stochastic while being far (6 orders of magnitude) below any
+/// bandwidth a non-degenerate fit produces, so regular fits are unaffected
+/// bit-for-bit.
+pub fn sigma_floor(tree: &PartitionTree) -> f64 {
+    (1e-6 * sigma_init(tree)).max(1e-12)
+}
+
+/// Eq. (12): closed-form σ* given the current q, clamped at
+/// [`sigma_floor`] against the duplicate-data collapse.
 ///
 /// The O(|B|) sum runs through [`crate::core::par::par_sum_f64`]; its
 /// fixed-block accumulation keeps the value identical for every thread
@@ -43,7 +64,7 @@ pub fn sigma_update(tree: &PartitionTree, part: &BlockPartition) -> f64 {
             0.0
         }
     });
-    (acc / (tree.n as f64 * tree.d as f64)).sqrt().max(1e-12)
+    (acc / (tree.n as f64 * tree.d as f64)).sqrt().max(sigma_floor(tree))
 }
 
 /// Outcome of the alternating fit.
@@ -83,12 +104,36 @@ pub fn fit_alternating(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::Matrix;
     use crate::data::synthetic;
-    use crate::tree::{build_tree, BuildConfig};
+    use crate::tree::{build_tree, BuildConfig, NONE};
 
     fn tree_of(n: usize, seed: u64) -> PartitionTree {
         let ds = synthetic::gaussian_mixture(n, 4, 2, 2, 2.0, seed, "t");
         build_tree(&ds.x, &BuildConfig { divisive_threshold: 8, ..Default::default() })
+    }
+
+    /// Exact (f64) row sums of Q from the block structure: row i sums
+    /// `|B|·q_AB` over the marks on its leaf-to-root path.
+    fn row_sums_f64(t: &PartitionTree, p: &BlockPartition) -> Vec<f64> {
+        (0..t.n as u32)
+            .map(|leaf| {
+                let mut a = leaf;
+                let mut sum = 0f64;
+                loop {
+                    for &bi in &p.marks[a as usize] {
+                        let b = &p.blocks[bi as usize];
+                        sum += t.count[b.kernel as usize] as f64 * b.q;
+                    }
+                    let par = t.parent[a as usize];
+                    if par == NONE {
+                        break;
+                    }
+                    a = par;
+                }
+                sum
+            })
+            .collect()
     }
 
     #[test]
@@ -132,6 +177,47 @@ mod tests {
         let rb = fit_alternating(&t, &mut pb, Some(50.0), 1e-8, 200);
         let rel = (ra.sigma - rb.sigma).abs() / ra.sigma;
         assert!(rel < 1e-3, "σ from 0.05 -> {}, from 50 -> {}", ra.sigma, rb.sigma);
+    }
+
+    #[test]
+    fn duplicate_rows_keep_bandwidth_clamped_and_q_stochastic() {
+        // Every row duplicated: q concentrates on the zero-divergence
+        // sibling blocks and the raw Eq. (12) fixed point collapses toward
+        // 0. The sigma_floor clamp must keep the fit finite and Q exactly
+        // row-stochastic (regression for the degenerate-bandwidth bug).
+        let base = synthetic::gaussian_mixture(15, 3, 2, 2, 2.0, 21, "t");
+        let mut x = Matrix::zeros(30, 3);
+        for i in 0..30 {
+            x.row_mut(i).copy_from_slice(base.x.row(i / 2));
+        }
+        let t = build_tree(&x, &BuildConfig { divisive_threshold: 8, ..Default::default() });
+        let mut p = BlockPartition::coarsest(&t);
+        let r = fit_alternating(&t, &mut p, None, 1e-10, 400);
+        assert!(r.sigma.is_finite() && r.sigma > 0.0);
+        assert!(r.sigma >= sigma_floor(&t), "σ {} below floor {}", r.sigma, sigma_floor(&t));
+        assert!(r.loglik.is_finite(), "ℓ diverged: {}", r.loglik);
+        for (i, s) in row_sums_f64(&t, &p).iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn all_identical_rows_stay_finite() {
+        // The fully degenerate case: every pairwise divergence is 0, so
+        // σ pins to its (tiny) floor and Q must still be a uniform
+        // row-stochastic matrix with finite ℓ.
+        let mut x = Matrix::zeros(12, 3);
+        for i in 0..12 {
+            x.row_mut(i).copy_from_slice(&[0.5, -1.0, 2.0]);
+        }
+        let t = build_tree(&x, &BuildConfig { divisive_threshold: 4, ..Default::default() });
+        let mut p = BlockPartition::coarsest(&t);
+        let r = fit_alternating(&t, &mut p, None, 1e-8, 100);
+        assert!(r.sigma.is_finite() && r.sigma > 0.0);
+        assert!(r.loglik.is_finite());
+        for (i, s) in row_sums_f64(&t, &p).iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+        }
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Golden regression pins for the Euclidean path across the
+//! Bregman-geometry refactor.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Seed-formula bit-exactness** (always active): the refactored
+//!    generic statistics layer is compared against in-test copies of the
+//!    *pre-refactor* hard-coded Euclidean expressions — leaf `S2`,
+//!    `D²_AB`, and the Eq. (14) σ initializer must match **bitwise**
+//!    (`assert_eq!` on `f64`), proving the trait dispatch did not move a
+//!    single ulp.
+//! 2. **Golden summary file** (`rust/tests/golden/fig2_euclidean.txt`):
+//!    deterministic `experiments::fig2` CCR cells plus full-precision
+//!    (bit-pattern) σ/ℓ(D)/|B| of a fixed-seed model. On first run the
+//!    file is generated; afterwards any drift fails the test. Regenerate
+//!    deliberately with `VDT_UPDATE_GOLDEN=1 cargo test -q fig2_golden`.
+//!
+//! Both layers rely on the `core::par` determinism contract (parallel ==
+//! serial bit-exact), so they hold under any `VDT_THREADS` setting.
+
+use std::path::PathBuf;
+
+use vdt::core::vecmath::{dot, sq_norm};
+use vdt::data::synthetic;
+use vdt::experiments::fig2::{fig2abc, ExpConfig};
+use vdt::labelprop::{self, LpConfig};
+use vdt::tree::{build_tree, BuildConfig, PartitionTree};
+use vdt::vdt::sigma::sigma_init;
+use vdt::vdt::{VdtConfig, VdtModel};
+
+/// The seed crate's hard-coded `PartitionTree::d2_between`, verbatim.
+fn seed_d2_between(t: &PartitionTree, a: u32, b: u32) -> f64 {
+    let (ca, cb) = (t.count[a as usize] as f64, t.count[b as usize] as f64);
+    let dotv = dot(t.s1_of(a), t.s1_of(b));
+    (ca * t.s2[b as usize] + cb * t.s2[a as usize] - 2.0 * dotv).max(0.0)
+}
+
+/// The seed crate's hard-coded Eq. (14) initializer, verbatim.
+fn seed_sigma_init(t: &PartitionTree) -> f64 {
+    let root = t.root();
+    let n = t.n as f64;
+    let d = t.d as f64;
+    let s2 = t.s2[root as usize];
+    let s1_norm2 = sq_norm(t.s1_of(root));
+    let total = (2.0 * n * s2 - 2.0 * s1_norm2).max(0.0);
+    ((total / d).sqrt() / n).max(1e-12)
+}
+
+#[test]
+fn euclidean_statistics_are_bit_exact_with_seed_formulas() {
+    let ds = synthetic::secstr_like(180, 20120815);
+    let t = build_tree(&ds.x, &BuildConfig { divisive_threshold: 12, ..Default::default() });
+
+    // leaf statistics: s2 must be the seed's sq_norm, bit for bit
+    for i in 0..ds.n() {
+        assert_eq!(t.s2[i], sq_norm(ds.x.row(i)), "leaf {i} s2 moved");
+    }
+    // sg/spsi must not be allocated for the Euclidean geometry
+    assert!(t.sg.is_empty() && t.spsi.is_empty(), "Euclidean tree grew extra stats");
+
+    // block divergences: every coarsest sibling pair + sampled pairs + root
+    let nn = t.num_nodes() as u32;
+    for a in 0..nn {
+        if !t.is_leaf(a) {
+            let (l, r) = (t.left[a as usize], t.right[a as usize]);
+            assert_eq!(t.d2_between(l, r), seed_d2_between(&t, l, r), "D²({l},{r}) moved");
+            assert_eq!(t.d2_between(r, l), seed_d2_between(&t, r, l), "D²({r},{l}) moved");
+        }
+    }
+    for a in (0..nn).step_by(17) {
+        for b in (0..nn).step_by(23) {
+            assert_eq!(t.d2_between(a, b), seed_d2_between(&t, a, b), "D²({a},{b}) moved");
+        }
+    }
+    let root = t.root();
+    assert_eq!(t.d2_between(root, root), seed_d2_between(&t, root, root));
+
+    // Eq. (14) initializer
+    assert_eq!(sigma_init(&t), seed_sigma_init(&t), "σ₀ moved");
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+        .join("fig2_euclidean.txt")
+}
+
+/// Deterministic Euclidean summary: tiny fig2 CCR table + full-precision
+/// model quantities at a fixed seed. No timings — only bit-stable values.
+fn euclidean_summary() -> String {
+    let mut out = String::new();
+
+    // fig2 A/B/C at toy sizes; only the CCR table (C) is deterministic
+    let cfg = ExpConfig {
+        lp: LpConfig { alpha: 0.01, steps: 40 },
+        reps: 1,
+        sizes: vec![96, 144],
+        exact_cap: 144,
+        knn_cap: 144,
+        seed: 20120815,
+        ..Default::default()
+    };
+    let (_, _, ccr) = fig2abc(&cfg);
+    for (i, row) in ccr.rows.iter().enumerate() {
+        out.push_str(&format!("fig2c.row{i}={}\n", row.join(",")));
+    }
+
+    // fixed-seed model: σ / ℓ / |B| pinned at the bit level
+    let ds = synthetic::digit1_like(220, 20120815);
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    out.push_str(&format!("vdt.sigma.bits={:#018x}\n", m.sigma().to_bits()));
+    out.push_str(&format!("vdt.sigma={:.17e}\n", m.sigma()));
+    out.push_str(&format!("vdt.loglik.bits={:#018x}\n", m.loglik().to_bits()));
+    out.push_str(&format!("vdt.blocks={}\n", m.num_blocks()));
+    m.refine_to(5 * ds.n());
+    out.push_str(&format!("vdt.refined.blocks={}\n", m.num_blocks()));
+    out.push_str(&format!("vdt.refined.loglik.bits={:#018x}\n", m.loglik().to_bits()));
+    let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, 22, 20120815);
+    let (_, ccr_ref) = labelprop::run_ssl(
+        &m,
+        &ds.labels,
+        ds.n_classes,
+        &labeled,
+        &LpConfig { alpha: 0.01, steps: 60 },
+    );
+    out.push_str(&format!("vdt.refined.ccr={ccr_ref:.12}\n"));
+    out
+}
+
+#[test]
+fn fig2_euclidean_summary_matches_golden() {
+    let path = golden_path();
+    let got = euclidean_summary();
+    let update = std::env::var("VDT_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+        std::fs::write(&path, &got).expect("write golden file");
+        eprintln!(
+            "fig2_golden: {} golden file at {} — subsequent runs pin against it",
+            if update { "updated" } else { "generated" },
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden file");
+    if got != want {
+        let mismatches: Vec<String> = want
+            .lines()
+            .zip(got.lines())
+            .filter(|(w, g)| w != g)
+            .map(|(w, g)| format!("  golden: {w}\n  actual: {g}"))
+            .collect();
+        panic!(
+            "Euclidean fig2 summary drifted from golden ({}):\n{}\n\
+             (regenerate deliberately with VDT_UPDATE_GOLDEN=1 if the change is intended)",
+            path.display(),
+            mismatches.join("\n")
+        );
+    }
+}
