@@ -54,6 +54,24 @@ use super::vecmath::{dot, sq_dist, sq_dist_to_centroid, sq_norm};
 /// boundary points (zeros in histograms) stay finite.
 const TINY: f64 = 1e-12;
 
+/// Finiteness scan shared by the default [`Divergence::check_point`] and
+/// the overrides that add their own constraints on top.
+fn check_finite(x: &[f32]) -> Result<(), String> {
+    for (k, &v) in x.iter().enumerate() {
+        if !v.is_finite() {
+            return Err(format!("non-finite coordinate {k}: {v}"));
+        }
+    }
+    Ok(())
+}
+
+/// Smallest coordinate [`ItakuraSaito`] accepts. Its gradient is `−1/x`,
+/// which is accumulated into the f32 `Sg` node sums: a coordinate near the
+/// TINY floor would contribute ~−1e12 and swamp the precision of the whole
+/// block statistic, so points below this bound are rejected up front by
+/// [`Divergence::check_point`] rather than silently degraded.
+pub const IS_MIN_COORD: f32 = 1e-9;
+
 /// A view of one tree node's sufficient statistics (see
 /// [`crate::tree::PartitionTree::stats_of`]).
 ///
@@ -160,10 +178,13 @@ pub trait Divergence: Send + Sync {
         0.0
     }
 
-    /// Domain check for a single data point (tests and data validation).
+    /// Domain check for a single data point, enforced by the fail-fast
+    /// gate in `build_tree_impl`. Every generator requires finite
+    /// coordinates (a single NaN/∞ silently poisons the additive node
+    /// statistics); constrained divergences override this with their
+    /// stricter domain on top.
     fn check_point(&self, x: &[f32]) -> Result<(), String> {
-        let _ = x;
-        Ok(())
+        check_finite(x)
     }
 }
 
@@ -346,7 +367,9 @@ impl Divergence for KlSimplex {
 /// `φ(x) = −Σ ln x_k`:
 /// `d_φ(x‖y) = Σ [x_k/y_k − ln(x_k/y_k) − 1]` — the Itakura–Saito
 /// divergence classically used for power spectra. Strictly positive
-/// domain; coordinates are floored at 1e-12.
+/// domain: data coordinates must be at least [`IS_MIN_COORD`] (enforced
+/// by `check_point`); internal evaluations still floor at 1e-12 for
+/// robustness.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ItakuraSaito;
 
@@ -413,8 +436,10 @@ impl Divergence for ItakuraSaito {
 
     fn check_point(&self, x: &[f32]) -> Result<(), String> {
         for (k, &v) in x.iter().enumerate() {
-            if !v.is_finite() || v <= 0.0 {
-                return Err(format!("Itakura-Saito domain violated at coord {k}: {v}"));
+            if !v.is_finite() || v < IS_MIN_COORD {
+                return Err(format!(
+                    "Itakura-Saito domain violated at coord {k}: {v} (minimum {IS_MIN_COORD:e})"
+                ));
             }
         }
         Ok(())
@@ -561,7 +586,7 @@ impl Divergence for DiagMahalanobis {
         if x.len() != self.w.len() {
             return Err(format!("dimension mismatch: {} vs {} weights", x.len(), self.w.len()));
         }
-        Ok(())
+        check_finite(x)
     }
 }
 
@@ -704,6 +729,33 @@ mod tests {
         let b = NodeStats { count: 3.0, s1: &s1b, sphi: 11.0, sg: &[], spsi: 0.0 };
         let want = (2.0 * 11.0 + 3.0 * 7.0 - 2.0 * dot(&s1a, &s1b)).max(0.0);
         assert_eq!(SqEuclidean.block(&a, &b), want);
+    }
+
+    #[test]
+    fn check_point_rejects_out_of_domain_data() {
+        // in-domain rows from `divs()` pass for every geometry
+        for (d, x, y) in divs() {
+            d.check_point(&x).unwrap();
+            d.check_point(&y).unwrap();
+        }
+        // non-finite coordinates fail everywhere, including the otherwise
+        // unconstrained Euclidean / Mahalanobis geometries
+        for (d, mut x, _) in divs() {
+            x[1] = f32::NAN;
+            assert!(d.check_point(&x).is_err(), "{}: NaN accepted", d.name());
+            x[1] = f32::INFINITY;
+            assert!(d.check_point(&x).is_err(), "{}: ∞ accepted", d.name());
+        }
+        // Mahalanobis still enforces its dimension contract
+        let maha = DiagMahalanobis::new(vec![1.0, 1.0]);
+        assert!(maha.check_point(&[0.5]).is_err());
+        // KL admits boundary zeros, rejects negatives
+        assert!(KlSimplex.check_point(&[0.0, 1.0]).is_ok());
+        assert!(KlSimplex.check_point(&[-1e-6, 1.0]).is_err());
+        // IS rejects zeros and near-zeros below the documented minimum
+        assert!(ItakuraSaito.check_point(&[1e-30, 1.0]).is_err());
+        assert!(ItakuraSaito.check_point(&[0.0, 1.0]).is_err());
+        assert!(ItakuraSaito.check_point(&[IS_MIN_COORD, 1.0]).is_ok());
     }
 
     #[test]

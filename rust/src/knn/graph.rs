@@ -69,7 +69,17 @@ impl KnnGraph {
         // sq_dist inner loops, bit-identical either way)
         let tree = match &cfg.divergence {
             DivergenceKind::SqEuclidean => build_tree(x, &cfg.tree),
-            kind => build_tree_with(x, &cfg.tree, kind.instantiate(x)),
+            kind => {
+                let div = kind.instantiate(x);
+                let mut tree_cfg = cfg.tree.clone();
+                // non-metric divergences take the brute-force kNN fallback
+                // and never consult the radii — skip the exact-radii
+                // tightening pass instead of paying for unread bounds
+                if !div.is_metric() {
+                    tree_cfg.exact_radii = false;
+                }
+                build_tree_with(x, &tree_cfg, div)
+            }
         };
         let mut g = KnnGraph {
             neighbors: Vec::new(),

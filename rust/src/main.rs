@@ -111,21 +111,44 @@ fn make_dataset(kind: &str, n: usize, seed: u64) -> Result<Dataset> {
     })
 }
 
+/// Reject out-of-domain dataset/divergence combinations with a clean CLI
+/// error before the library's fail-fast gate turns them into a panic
+/// (e.g. `--dataset moons --divergence kl`: moons has negative rows).
+fn check_domain(ds: &Dataset, divergence: &DivergenceKind) -> Result<()> {
+    let div = divergence.instantiate(&ds.x);
+    for i in 0..ds.n() {
+        if let Err(e) = div.check_point(ds.x.row(i)) {
+            return Err(anyhow!(
+                "dataset {} is outside the {} domain (row {i}: {e}); \
+                 pick a compatible --dataset/--divergence pair",
+                ds.name,
+                div.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The one vdt build recipe shared by every CLI path (`build_op` and the
+/// `build` command's stats fast path), so the two cannot drift.
+fn build_vdt(ds: &Dataset, k: usize, divergence: &DivergenceKind) -> VdtModel {
+    let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
+    let mut m = VdtModel::build(&ds.x, &cfg);
+    if k > 2 {
+        m.refine_to(k * ds.n());
+    }
+    m
+}
+
 fn build_op(
     method: &str,
     ds: &Dataset,
     k: usize,
     divergence: &DivergenceKind,
 ) -> Result<Box<dyn TransitionOp>> {
+    check_domain(ds, divergence)?;
     Ok(match method {
-        "vdt" => {
-            let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
-            let mut m = VdtModel::build(&ds.x, &cfg);
-            if k > 2 {
-                m.refine_to(k * ds.n());
-            }
-            Box::new(m)
-        }
+        "vdt" => Box::new(build_vdt(ds, k, divergence)),
         "knn" => Box::new(KnnGraph::build(
             &ds.x,
             &KnnConfig { k: k.max(1), divergence: divergence.clone(), ..Default::default() },
@@ -227,11 +250,8 @@ fn main() -> Result<()> {
             let t = Timer::start();
             if method == "vdt" {
                 // build once; print both the timing and the model stats
-                let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
-                let mut m = VdtModel::build(&ds.x, &cfg);
-                if k > 2 {
-                    m.refine_to(k * ds.n());
-                }
+                check_domain(&ds, &divergence)?;
+                let m = build_vdt(&ds, k, &divergence);
                 println!("built variational-dt in {:.1} ms", t.ms());
                 println!(
                     "σ = {:.4}   |B| = {}   ℓ(D) = {:.2}   memory ≈ {:.1} MiB",
@@ -343,9 +363,8 @@ fn main() -> Result<()> {
             let requests = args.get("requests", 32usize)?;
             let ds = make_dataset(&args.get_str("dataset", "digit1"), n, 0)?;
             let divergence = parse_divergence(&args)?;
-            let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
-            let mut m = VdtModel::build(&ds.x, &cfg);
-            m.refine_to(k * ds.n());
+            check_domain(&ds, &divergence)?;
+            let m = build_vdt(&ds, k, &divergence);
             let handle = vdt::coordinator::Coordinator::spawn();
             handle.register("default", Arc::new(m));
             for info in handle.list_models() {

@@ -598,9 +598,9 @@ fn build_tree_impl<D: Divergence + ?Sized>(
     handle: Arc<dyn Divergence>,
 ) -> PartitionTree {
     assert!(x.rows >= 1, "need at least one point");
-    // fail fast on out-of-domain data (e.g. negative coordinates under
-    // KL, zeros under Itakura-Saito) instead of silently fitting a
-    // meaningless model; a no-op for unconstrained divergences
+    // fail fast on out-of-domain data (non-finite coordinates anywhere;
+    // negative coordinates under KL, near-zeros under Itakura-Saito)
+    // instead of silently fitting a meaningless model
     for i in 0..x.rows {
         if let Err(e) = div.check_point(x.row(i)) {
             panic!("data row {i} outside the {} domain: {e}", div.name());

@@ -106,6 +106,12 @@ pub fn route(tree: &PartitionTree, x: &[f32]) -> Vec<u32> {
 pub fn inductive_row(model: &VdtModel, x: &[f32]) -> InductiveRow {
     let tree = &model.tree;
     assert_eq!(x.len(), tree.d, "query dimension mismatch");
+    // same fail-fast domain gate as build_tree_impl: a NaN (or, under
+    // Itakura-Saito, a near-zero coordinate) would otherwise flow through
+    // route()/d2_point_block and come back as a silently garbage posterior
+    if let Err(e) = tree.div.check_point(x) {
+        panic!("query outside the {} domain: {e}", tree.div.name());
+    }
     let sigma = model.sigma();
     let path = route(tree, x);
     // collect the marks along the adopted path (x behaves like a point in
@@ -250,5 +256,12 @@ mod tests {
     fn dimension_mismatch_panics() {
         let (_, m) = fitted(30, 6);
         let _ = inductive_row(&m, &[0.0; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the sq_euclidean domain")]
+    fn out_of_domain_query_panics() {
+        let (_, m) = fitted(30, 7);
+        let _ = inductive_row(&m, &[f32::NAN, 0.0]);
     }
 }

@@ -45,9 +45,12 @@ impl BlockPartition {
         for a in 0..nn as u32 {
             if !tree.is_leaf(a) {
                 let (l, r) = (tree.left[a as usize], tree.right[a as usize]);
-                let d2 = tree.d2_between(l, r);
-                part.push_block(l, r, d2);
-                part.push_block(r, l, d2);
+                // D_AB is asymmetric for KL / Itakura–Saito, so each ordered
+                // sibling block must evaluate Eq. (9) in its own
+                // (data, kernel) order; symmetric geometries give bitwise
+                // the same value for both calls.
+                part.push_block(l, r, tree.d2_between(l, r));
+                part.push_block(r, l, tree.d2_between(r, l));
             }
         }
         part
@@ -180,6 +183,51 @@ mod tests {
             assert_eq!(p.num_blocks(), 2 * (n - 1), "n={n}");
             p.validate(&t).unwrap();
         }
+    }
+
+    #[test]
+    fn coarsest_stores_data_kernel_ordered_energies() {
+        // Under an asymmetric divergence the two ordered sibling blocks
+        // (l,r) and (r,l) carry different energies; reusing one D for both
+        // (the old symmetric shortcut) transposes half the coarse blocks.
+        use crate::core::divergence::{Divergence, KlSimplex};
+        use crate::tree::build_tree_with;
+        use std::sync::Arc;
+
+        let ds = synthetic::simplex_mixture(24, 8, 2, 2, 4.0, 5, "part_kl");
+        let t = build_tree_with(
+            &ds.x,
+            &BuildConfig { divisive_threshold: 8, ..Default::default() },
+            Arc::new(KlSimplex),
+        );
+        let p = BlockPartition::coarsest(&t);
+        let mut asymmetric_pair_seen = false;
+        for (_, b) in p.alive_blocks() {
+            assert_eq!(
+                b.d2,
+                t.d2_between(b.data, b.kernel),
+                "block ({},{}) stores a transposed energy",
+                b.data,
+                b.kernel
+            );
+            let mut want = 0f64;
+            for &i in &t.leaves_under(b.data) {
+                for &j in &t.leaves_under(b.kernel) {
+                    want += KlSimplex.point(ds.x.row(i as usize), ds.x.row(j as usize));
+                }
+            }
+            assert!(
+                (b.d2 - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "block ({},{}) d2 = {}, pointwise sum = {want}",
+                b.data,
+                b.kernel,
+                b.d2
+            );
+            if (b.d2 - t.d2_between(b.kernel, b.data)).abs() > 1e-6 * (1.0 + b.d2) {
+                asymmetric_pair_seen = true;
+            }
+        }
+        assert!(asymmetric_pair_seen, "KL data produced no asymmetric sibling pair");
     }
 
     #[test]

@@ -131,6 +131,36 @@ fn block_statistics_match_pointwise_double_sums() {
 }
 
 #[test]
+fn coarsest_blocks_carry_data_kernel_ordered_energies() {
+    // Eq. (9) is asymmetric for KL and Itakura–Saito: D_AB = |B|·Sφ(A) +
+    // |A|·Sψ(B) − ⟨S1(A), Sg(B)⟩ ≠ D_BA. Every coarse block must store the
+    // energy evaluated in its own (data, kernel) order — a transposed
+    // energy silently skews sigma_update / optimize_q / loglik while row
+    // stochasticity still holds, so only this pointwise check catches it.
+    for (kind, ds) in cases(32, 21) {
+        let div = kind.instantiate(&ds.x);
+        let t = build_tree_with(&ds.x, &build_cfg(), div.clone());
+        let p = BlockPartition::coarsest(&t);
+        for (_, b) in p.alive_blocks() {
+            let mut want = 0f64;
+            for &i in &t.leaves_under(b.data) {
+                for &j in &t.leaves_under(b.kernel) {
+                    want += div.point(ds.x.row(i as usize), ds.x.row(j as usize));
+                }
+            }
+            assert!(
+                (b.d2 - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "{}: block ({},{}) stores {}, (data,kernel) pointwise sum is {want}",
+                div.name(),
+                b.data,
+                b.kernel,
+                b.d2
+            );
+        }
+    }
+}
+
+#[test]
 fn q_rows_stochastic_after_build_and_refine() {
     for (kind, ds) in cases(60, 11) {
         let name = kind.name();

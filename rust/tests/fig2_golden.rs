@@ -11,9 +11,11 @@
 //!    single ulp.
 //! 2. **Golden summary file** (`rust/tests/golden/fig2_euclidean.txt`):
 //!    deterministic `experiments::fig2` CCR cells plus full-precision
-//!    (bit-pattern) σ/ℓ(D)/|B| of a fixed-seed model. On first run the
-//!    file is generated; afterwards any drift fails the test. Regenerate
-//!    deliberately with `VDT_UPDATE_GOLDEN=1 cargo test -q fig2_golden`.
+//!    (bit-pattern) σ/ℓ(D)/|B| of a fixed-seed model. On the first local
+//!    run the file is generated (commit it); afterwards any drift fails
+//!    the test. A missing file **fails** on CI (`CI` env set) so a fresh
+//!    checkout can never regenerate-and-pass. Regenerate deliberately
+//!    with `VDT_UPDATE_GOLDEN=1 cargo test -q fig2_golden`.
 //!
 //! Both layers rely on the `core::par` determinism contract (parallel ==
 //! serial bit-exact), so they hold under any `VDT_THREADS` setting.
@@ -129,12 +131,33 @@ fn euclidean_summary() -> String {
     out
 }
 
+/// Truthy env flag: set, non-empty, and not "0"/"false".
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false)
+}
+
+/// True on CI runners (GitHub Actions and most providers export `CI`).
+fn on_ci() -> bool {
+    env_flag("CI")
+}
+
 #[test]
 fn fig2_euclidean_summary_matches_golden() {
     let path = golden_path();
     let got = euclidean_summary();
-    let update = std::env::var("VDT_UPDATE_GOLDEN").is_ok();
+    let update = env_flag("VDT_UPDATE_GOLDEN");
     if update || !path.exists() {
+        // A fresh CI checkout must never regenerate-and-pass: that would
+        // mean the golden layer pins nothing across commits. Generation is
+        // a local, deliberate act whose output gets committed.
+        assert!(
+            !on_ci() || update,
+            "golden file {} is missing on CI — run `cargo test -q --test fig2_golden` \
+             locally and commit the generated file",
+            path.display()
+        );
         std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
         std::fs::write(&path, &got).expect("write golden file");
         eprintln!(
@@ -146,12 +169,22 @@ fn fig2_euclidean_summary_matches_golden() {
     }
     let want = std::fs::read_to_string(&path).expect("read golden file");
     if got != want {
-        let mismatches: Vec<String> = want
+        let mut mismatches: Vec<String> = want
             .lines()
             .zip(got.lines())
             .filter(|(w, g)| w != g)
             .map(|(w, g)| format!("  golden: {w}\n  actual: {g}"))
             .collect();
+        // zip stops at the shorter side: surface pure added/removed lines
+        // (and trailing-newline-only drift) so the panic never reports an
+        // empty mismatch list
+        let (nw, ng) = (want.lines().count(), got.lines().count());
+        if nw != ng {
+            mismatches.push(format!("  line count: golden {nw} vs actual {ng}"));
+        }
+        if mismatches.is_empty() {
+            mismatches.push(format!("  byte length: golden {} vs actual {}", want.len(), got.len()));
+        }
         panic!(
             "Euclidean fig2 summary drifted from golden ({}):\n{}\n\
              (regenerate deliberately with VDT_UPDATE_GOLDEN=1 if the change is intended)",
