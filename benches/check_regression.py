@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Regression gate for the BENCH_*.json perf records.
+
+Usage: check_regression.py <current.json> <baseline.json> [tolerance]
+
+Both files are the JSON emitted by `benches/parallel_scaling.rs`
+(`serial_ms` / `parallel_ms` per path) or `benches/serve_warmstart.rs`
+(`ms` per path). Paths are matched by their `path` key; every timing
+field (`ms` or `*_ms`) must satisfy
+
+    current <= baseline * (1 + tolerance)
+
+with tolerance defaulting to 0.25 (the CI bench job's >25% gate). A
+baseline path missing from the current run fails (a rename must not
+silently disable its gate), as does a problem-size (n) mismatch; paths
+new in the current run are only reported (bench sets may grow), and a
+shrinking timing never fails.
+
+Exit status: 0 = within tolerance, 1 = regression (or unreadable input).
+"""
+
+import json
+import sys
+
+
+def timing_fields(entry):
+    return {
+        k: v
+        for k, v in entry.items()
+        if (k == "ms" or k.endswith("_ms")) and isinstance(v, (int, float))
+    }
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip())
+        return 1
+    tol = float(argv[3]) if len(argv) > 3 else 0.25
+    try:
+        with open(argv[1]) as f:
+            cur = json.load(f)
+        with open(argv[2]) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read inputs: {e}")
+        return 1
+
+    cur_paths = {p["path"]: p for p in cur.get("paths", [])}
+    base_paths = {p["path"]: p for p in base.get("paths", [])}
+    if cur.get("n") != base.get("n"):
+        # a different problem size invalidates every ratio below — fail
+        # rather than bless an apples-to-oranges comparison
+        print(
+            f"FAIL: size mismatch (current n={cur.get('n')}, baseline "
+            f"n={base.get('n')}) — re-record the baseline at the CI size"
+        )
+        return 1
+
+    failed = []
+    for name, b_entry in sorted(base_paths.items()):
+        c_entry = cur_paths.get(name)
+        if c_entry is None:
+            # a renamed/dropped path must not silently disable its gate
+            print(f"  {name}: missing from current run (baseline has it) REGRESSION")
+            failed.append(f"{name} (missing)")
+            continue
+        b_fields = timing_fields(b_entry)
+        for field, b_val in sorted(b_fields.items()):
+            c_val = timing_fields(c_entry).get(field)
+            if c_val is None or b_val <= 0:
+                continue
+            ratio = c_val / b_val
+            verdict = "OK" if ratio <= 1.0 + tol else "REGRESSION"
+            print(
+                f"  {name}.{field}: {c_val:.3f} ms vs baseline {b_val:.3f} ms "
+                f"({ratio:.2f}x) {verdict}"
+            )
+            if verdict != "OK":
+                failed.append(f"{name}.{field}")
+    for name in sorted(set(cur_paths) - set(base_paths)):
+        print(f"  {name}: new path (no baseline)")
+
+    if failed:
+        print(f"FAIL: {len(failed)} timing(s) regressed >{tol:.0%}: {', '.join(failed)}")
+        return 1
+    print(f"PASS: no timing regressed more than {tol:.0%} vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,101 @@
+//! Cold-fit vs snapshot warm-start latency at serving sizes — the number
+//! the `runtime::snapshot` subsystem exists to move. Measures:
+//!
+//! - `cold_fit`: build + refine from raw points (what `vdt serve` did on
+//!   every process start before snapshots),
+//! - `snapshot_load`: `VdtModel::load` from a snapshot file (the warm
+//!   start), including full checksum/structure validation,
+//! - `first_matvec`: first Algorithm-1 sweep on a freshly loaded model
+//!   (scratch pool cold), i.e. load-to-first-response tail,
+//! - `steady_matvec`: the same sweep with warm scratch, for reference.
+//!
+//! Emits `BENCH_serve.json` (consumed by the CI bench job alongside
+//! `BENCH_parallel.json`). `BENCH_N` overrides the default N=16k for
+//! smoke runs. The bench also asserts the loaded model's matvec is
+//! bit-identical to the fitted model's — a perf run that serves wrong
+//! numbers must fail loudly.
+
+use vdt::core::bench::Runner;
+use vdt::data::synthetic;
+use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::Matrix;
+
+fn env_n(default: usize) -> usize {
+    std::env::var("BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_n(16_000);
+    let k = 6usize;
+    let mut r = Runner::from_args();
+    r.budget_secs = 1.0;
+    r.max_iters = 5;
+    println!("# serve_warmstart: N={n}, refine target {k}N");
+
+    // the snapshot source: one reference fit, saved to a temp file
+    let ds = synthetic::digit1_like(n, 1);
+    let mut fitted = VdtModel::build(&ds.x, &VdtConfig::default());
+    fitted.refine_to(k * n);
+    let blocks = fitted.num_blocks();
+    let path = std::env::temp_dir().join(format!("vdt_serve_warmstart_{n}.vdt"));
+    fitted.save(&path, &ds.name).expect("save snapshot");
+    let snapshot_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!("# snapshot: {} blocks, {:.1} KiB", blocks, snapshot_bytes as f64 / 1024.0);
+
+    // correctness gate: warm start must serve the fit's exact bits
+    let y = Matrix::from_fn(n, 4, |row, c| (((row * 31 + c * 17) % 23) as f32 - 11.0) * 0.25);
+    let loaded = VdtModel::load(&path).expect("load snapshot");
+    assert_eq!(
+        fitted.matvec(&y).data,
+        loaded.matvec(&y).data,
+        "snapshot warm start diverged from the in-process fit"
+    );
+
+    r.bench(&format!("serve/cold_fit/N={n}"), || {
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(k * n);
+        std::hint::black_box(m.num_blocks());
+    });
+    r.bench(&format!("serve/snapshot_load/N={n}"), || {
+        std::hint::black_box(VdtModel::load(&path).expect("load snapshot"));
+    });
+    r.bench_with_setup(
+        &format!("serve/first_matvec/N={n}"),
+        || VdtModel::load(&path).expect("load snapshot"),
+        |m| std::hint::black_box(m.matvec(&y)).rows,
+    );
+    r.bench(&format!("serve/steady_matvec/N={n}"), || {
+        std::hint::black_box(loaded.matvec(&y));
+    });
+    let _ = std::fs::remove_file(&path);
+
+    // ---- emit BENCH_serve.json ----
+    let keys = ["cold_fit", "snapshot_load", "first_matvec", "steady_matvec"];
+    let names: Vec<String> = keys.iter().map(|key| format!("serve/{key}/N={n}")).collect();
+    if names.iter().any(|name| r.mean_of(name).is_none()) {
+        println!("# filtered run: skipping BENCH_serve.json (needs all paths)");
+        return;
+    }
+    let cold = r.mean_of(&names[0]).expect("checked above");
+    let warm = r.mean_of(&names[1]).expect("checked above");
+    let speedup = cold / warm;
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"bench\": \"serve_warmstart\",\n  \"n\": {n},\n"));
+    json.push_str(&format!(
+        "  \"blocks\": {blocks},\n  \"snapshot_bytes\": {snapshot_bytes},\n  \"paths\": [\n"
+    ));
+    for (i, (key, name)) in keys.iter().zip(names.iter()).enumerate() {
+        let ms = r.mean_of(name).expect("checked above");
+        json.push_str(&format!(
+            "    {{\"path\": \"{key}\", \"ms\": {ms:.3}}}{}\n",
+            if i + 1 < keys.len() { "," } else { "" }
+        ));
+        println!("# {key}: {ms:.1} ms");
+    }
+    json.push_str(&format!("  ],\n  \"warmstart_speedup\": {speedup:.3}\n}}\n"));
+    if let Err(e) = std::fs::write("BENCH_serve.json", &json) {
+        eprintln!("warn: could not write BENCH_serve.json: {e}");
+    } else {
+        println!("# wrote BENCH_serve.json (warm start {speedup:.1}x faster than cold fit)");
+    }
+}

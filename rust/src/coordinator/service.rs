@@ -72,7 +72,25 @@ impl CoordinatorHandle {
         let _ = self.tx.send(Request::Register { name: name.into(), op });
     }
 
-    fn roundtrip(&self, make: impl FnOnce(mpsc::Sender<Response>) -> Request) -> Result<Response, String> {
+    /// Warm-start path: load a fitted [`crate::vdt::VdtModel`] from a
+    /// `runtime::snapshot` file and register it under `name` — no refit,
+    /// so a multi-model coordinator comes up in milliseconds. Returns the
+    /// model size N on success.
+    pub fn register_snapshot(
+        &self,
+        name: impl Into<String>,
+        path: &std::path::Path,
+    ) -> Result<usize, String> {
+        let model = crate::vdt::VdtModel::load(path).map_err(|e| e.to_string())?;
+        let n = model.n();
+        self.register(name, Arc::new(model));
+        Ok(n)
+    }
+
+    fn roundtrip(
+        &self,
+        make: impl FnOnce(mpsc::Sender<Response>) -> Request,
+    ) -> Result<Response, String> {
         let (tx, rx) = mpsc::channel();
         self.inflight.fetch_add(1, Ordering::SeqCst);
         let sent = self.tx.send(make(tx));
@@ -376,6 +394,33 @@ mod tests {
         let got = handle.matvec("m", y).unwrap();
         assert!(got.max_abs_diff(&want) < 1e-6);
         handle.shutdown();
+    }
+
+    #[test]
+    fn register_snapshot_warm_starts_bit_identical_serving() {
+        let ds = synthetic::two_moons(40, 0.07, 8);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * 40);
+        let path = std::env::temp_dir().join(format!("vdt_coord_snap_{}.vdt", std::process::id()));
+        m.save(&path, &ds.name).unwrap();
+        let y = Matrix::from_fn(40, 2, |r, c| ((r * 5 + c) % 9) as f32 - 4.0);
+        let want = m.matvec(&y);
+
+        let handle = Coordinator::spawn();
+        let n = handle.register_snapshot("warm", &path).unwrap();
+        assert_eq!(n, 40);
+        let got = handle.matvec("warm", y).unwrap();
+        assert_eq!(got.data, want.data, "warm-started serving drifted from the fit");
+        let infos = handle.list_models();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].backend, "variational-dt");
+        // a missing file is a clean error, not a panic
+        let err = handle
+            .register_snapshot("nope", std::path::Path::new("/no/such/model.vdt"))
+            .unwrap_err();
+        assert!(err.contains("model.vdt"), "{err}");
+        handle.shutdown();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

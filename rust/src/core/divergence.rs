@@ -186,6 +186,16 @@ pub trait Divergence: Send + Sync {
     fn check_point(&self, x: &[f32]) -> Result<(), String> {
         check_finite(x)
     }
+
+    /// Parameters a model snapshot must carry to re-instantiate this
+    /// divergence (see [`crate::runtime::snapshot`]): empty for the
+    /// parameter-free geometries, the per-feature weights for
+    /// [`DiagMahalanobis`]. Only snapshot-registered kinds (the four
+    /// in-tree geometries, keyed by [`Divergence::name`]) can be
+    /// persisted; custom divergences are rejected at save time.
+    fn snapshot_params(&self) -> Vec<f32> {
+        Vec::new()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -587,6 +597,10 @@ impl Divergence for DiagMahalanobis {
             return Err(format!("dimension mismatch: {} vs {} weights", x.len(), self.w.len()));
         }
         check_finite(x)
+    }
+
+    fn snapshot_params(&self) -> Vec<f32> {
+        self.w.clone()
     }
 }
 

@@ -10,8 +10,9 @@
 //!   marked-partition-tree block model, O(|B|) variational optimizer, greedy
 //!   symmetric refinement, O(|B|) matvec (Algorithm 1), plus the fast-kNN
 //!   and exact baselines, label propagation, Arnoldi spectral inference, a
-//!   threaded serving coordinator, and the experiment harness that regenerates
-//!   every table/figure of the paper.
+//!   threaded serving coordinator, versioned model snapshots for
+//!   fit-once/serve-many warm starts ([`runtime::snapshot`]), and the
+//!   experiment harness that regenerates every table/figure of the paper.
 //! - **L2 (python/compile/model.py)**: the dense exact-model compute graphs
 //!   (transition matrix of Eq. 3, LP chunks of Eq. 15) in JAX.
 //! - **L1 (python/compile/kernels/)**: Pallas tiles for the dense hot spot.

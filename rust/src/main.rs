@@ -42,12 +42,19 @@ COMMANDS
             --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --alpha-n <int> (100000)  --ocr-n <int> (50000)
             --out <dir> (results)
+  save      fit a model and write a versioned binary snapshot (fit once,
+            serve many; see rust/src/runtime/SNAPSHOT.md)
+            (build flags +) --k <int> (6)  --out <path> (model.vdt)
+  load      read a snapshot back and print its model card
+            --model-path <path> (model.vdt)
   selftest  verify the AOT artifact <-> PJRT round trip
             --artifacts <dir> (artifacts)
   serve     run the coordinator and a demo client burst
             --dataset ... --n <int> (1500) --k <int> (6)
             --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --requests <int> (32)
+            --model-path <p1[,p2,...]>  warm-start from snapshots instead
+            of fitting (each registers under its file stem)
   help      print this text
 ";
 
@@ -341,6 +348,60 @@ fn main() -> Result<()> {
             let out = args.get_str("out", "results");
             run_exp(&id, &cfg, alpha_n, ocr_n, &out)?;
         }
+        "save" => {
+            let n = args.get("n", 1500usize)?;
+            let seed = args.get("seed", 0u64)?;
+            let k = args.get("k", 6usize)?;
+            let out = args.get_str("out", "model.vdt");
+            let ds = match args.opt_str("csv") {
+                Some(path) => io::load_csv(&path)?,
+                None => make_dataset(&args.get_str("dataset", "digit1"), n, seed)?,
+            };
+            let divergence = parse_divergence(&args)?;
+            check_domain(&ds, &divergence)?;
+            let t = Timer::start();
+            let m = build_vdt(&ds, k, &divergence);
+            let fit_ms = t.ms();
+            let t = Timer::start();
+            m.save(&out, &ds.name)?;
+            let bytes = std::fs::metadata(&out).map(|md| md.len()).unwrap_or(0);
+            println!(
+                "fitted {} (N={}, σ={:.4}, |B|={}) in {fit_ms:.1} ms",
+                ds.name,
+                ds.n(),
+                m.sigma(),
+                m.num_blocks()
+            );
+            println!(
+                "snapshot {} ({:.1} KiB) written in {:.1} ms — serve it with \
+                 `vdt serve --model-path {}`",
+                out,
+                bytes as f64 / 1024.0,
+                t.ms(),
+                out
+            );
+        }
+        "load" => {
+            let path = args.get_str("model_path", "model.vdt");
+            let t = Timer::start();
+            let snap = vdt::runtime::Snapshot::read_file(std::path::Path::new(&path))?;
+            let meta = snap.meta_name.clone();
+            let m = VdtModel::from_snapshot(snap)?;
+            println!("loaded {path} in {:.1} ms", t.ms());
+            println!(
+                "  dataset: {}   N={}  d={}  divergence={}",
+                if meta.is_empty() { "(unrecorded)" } else { meta.as_str() },
+                m.n(),
+                m.tree.d,
+                m.divergence_name()
+            );
+            println!(
+                "  σ = {:.6}   |B| = {}   ℓ(D) = {:.2}",
+                m.sigma(),
+                m.num_blocks(),
+                m.loglik()
+            );
+        }
         "selftest" => {
             let dir = args.get_str("artifacts", "artifacts");
             let rt = std::rc::Rc::new(vdt::runtime::Runtime::load(&dir)?);
@@ -358,15 +419,55 @@ fn main() -> Result<()> {
             println!("selftest: OK");
         }
         "serve" => {
-            let n = args.get("n", 1500usize)?;
-            let k = args.get("k", 6usize)?;
             let requests = args.get("requests", 32usize)?;
-            let ds = make_dataset(&args.get_str("dataset", "digit1"), n, 0)?;
-            let divergence = parse_divergence(&args)?;
-            check_domain(&ds, &divergence)?;
-            let m = build_vdt(&ds, k, &divergence);
             let handle = vdt::coordinator::Coordinator::spawn();
-            handle.register("default", Arc::new(m));
+            // (demo_name, demo_n): the model the client burst targets
+            let (demo_name, demo_n) = match args.opt_str("model_path") {
+                // warm start: register pre-fitted snapshots, no refit
+                Some(paths) => {
+                    let t = Timer::start();
+                    let mut first: Option<(String, usize)> = None;
+                    let mut seen = std::collections::HashSet::new();
+                    for p in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                        let path = std::path::Path::new(p);
+                        let name = path
+                            .file_stem()
+                            .and_then(|s| s.to_str())
+                            .unwrap_or("model")
+                            .to_string();
+                        // names come from file stems; a silent overwrite
+                        // would serve the wrong model under the first name
+                        if !seen.insert(name.clone()) {
+                            return Err(anyhow!(
+                                "--model-path has two snapshots named '{name}'; \
+                                 rename one file (the stem is the model name)"
+                            ));
+                        }
+                        let n = handle
+                            .register_snapshot(name.clone(), path)
+                            .map_err(|e| anyhow!("{e}"))?;
+                        if first.is_none() {
+                            first = Some((name, n));
+                        }
+                    }
+                    let first = first.ok_or_else(|| anyhow!("--model-path lists no snapshots"))?;
+                    println!("warm-started from snapshot(s) in {:.1} ms", t.ms());
+                    first
+                }
+                // cold start: fit from raw points (the pre-snapshot path)
+                None => {
+                    let n = args.get("n", 1500usize)?;
+                    let k = args.get("k", 6usize)?;
+                    let ds = make_dataset(&args.get_str("dataset", "digit1"), n, 0)?;
+                    let divergence = parse_divergence(&args)?;
+                    check_domain(&ds, &divergence)?;
+                    let t = Timer::start();
+                    let m = build_vdt(&ds, k, &divergence);
+                    println!("cold-fitted {} in {:.1} ms", ds.name, t.ms());
+                    handle.register("default", Arc::new(m));
+                    ("default".to_string(), n)
+                }
+            };
             for info in handle.list_models() {
                 println!(
                     "model {:<10} backend={} divergence={} N={}",
@@ -378,9 +479,10 @@ fn main() -> Result<()> {
             let mut joins = Vec::new();
             for c in 0..requests {
                 let h = handle.clone();
+                let name = demo_name.clone();
                 joins.push(std::thread::spawn(move || {
-                    let y = vdt::Matrix::from_fn(n, 1, move |r, _| ((r + c) % 3) as f32);
-                    h.matvec("default", y).unwrap()
+                    let y = vdt::Matrix::from_fn(demo_n, 1, move |r, _| ((r + c) % 3) as f32);
+                    h.matvec(name, y).unwrap()
                 }));
             }
             for j in joins {

@@ -12,6 +12,7 @@
 //! the coordinator owns it from a single worker thread.
 
 pub mod artifacts;
+pub mod snapshot;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -23,6 +24,7 @@ use anyhow::{anyhow, Result};
 use crate::core::Matrix;
 
 pub use artifacts::{ArtifactEntry, Manifest};
+pub use snapshot::Snapshot;
 
 /// PJRT client + artifact registry + compiled-executable cache.
 pub struct Runtime {

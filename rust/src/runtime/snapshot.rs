@@ -1,0 +1,651 @@
+//! Versioned binary snapshots of fitted [`crate::vdt::VdtModel`]s — the
+//! offline persistence layer behind `vdt save` / `vdt serve --model-path`.
+//!
+//! The paper's point is that the VDT representation is cheap to *use*
+//! once fitted (O(|B|) matvecs); this module makes the expensive fit a
+//! one-time offline step by serializing everything a serving process
+//! needs: tree topology + node statistics (`sg`/`spsi` included),
+//! the block partition with its exact mark order, the learned σ, the
+//! divergence the model was fitted under, and dataset provenance.
+//!
+//! No serde — like the TSV manifest contract in [`super::artifacts`],
+//! the format is hand-rolled and fully specified
+//! (`rust/src/runtime/SNAPSHOT.md`) so the Python side can read it later.
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic      8 B    "VDTSNAP\0"
+//! version    u32    format version (this build reads exactly 1)
+//! sections   u32    section count (exactly 4 in version 1)
+//! table      4 × (id u32, offset u64, len u64, fnv1a64 u64)
+//! payload    section bytes, contiguous, in table order (META, TREE,
+//!            BLOCKS, MARKS)
+//! ```
+//!
+//! Decoding is fail-fast: wrong magic, future format versions, unknown
+//! divergences, truncation, non-contiguous sections and checksum
+//! mismatches each produce a specific error. Every payload byte is
+//! covered by a section checksum and every header byte is structurally
+//! validated, so any single-byte corruption is rejected (pinned by
+//! `rust/tests/snapshot_roundtrip.rs`, which flips every byte of a file).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::core::divergence::{DiagMahalanobis, Divergence, ItakuraSaito, KlSimplex, SqEuclidean};
+
+/// File magic: identifies a VDT model snapshot.
+pub const MAGIC: [u8; 8] = *b"VDTSNAP\0";
+
+/// Current (and only) snapshot format version this build reads/writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Section ids, in their mandatory file order.
+const SEC_META: u32 = 1;
+const SEC_TREE: u32 = 2;
+const SEC_BLOCKS: u32 = 3;
+const SEC_MARKS: u32 = 4;
+const SECTIONS: [(u32, &str); 4] =
+    [(SEC_META, "META"), (SEC_TREE, "TREE"), (SEC_BLOCKS, "BLOCKS"), (SEC_MARKS, "MARKS")];
+
+/// Bytes per section-table entry: id u32 + offset u64 + len u64 + sum u64.
+const TABLE_ENTRY: usize = 4 + 8 + 8 + 8;
+
+/// FNV-1a 64-bit checksum. Not cryptographic, but any single-byte
+/// difference always changes the digest (xor-then-multiply by an odd
+/// prime is a bijection on u64), which is exactly the corruption class
+/// the rejection tests pin.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The decoded (or to-be-encoded) model state: plain arrays, no derived
+/// structures. [`crate::vdt::VdtModel::to_snapshot`] produces one,
+/// [`crate::vdt::VdtModel::from_snapshot`] consumes one and rebuilds the
+/// scratch/derived state the file deliberately omits.
+pub struct Snapshot {
+    /// Registered divergence name (`sq_euclidean`, `kl`, `itakura_saito`,
+    /// `mahalanobis`).
+    pub divergence: String,
+    /// Divergence parameters: the per-feature weights for `mahalanobis`,
+    /// empty for the parameter-free geometries.
+    pub div_params: Vec<f32>,
+    /// Number of data points N.
+    pub n: usize,
+    /// Feature dimension d.
+    pub d: usize,
+    /// Learned (or fixed) kernel bandwidth.
+    pub sigma: f64,
+    /// Free-form dataset provenance (e.g. the `Dataset::name`).
+    pub meta_name: String,
+    // ---- tree (num_nodes = left.len() = 2n-1) ----
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    pub parent: Vec<u32>,
+    pub count: Vec<u32>,
+    pub s2: Vec<f64>,
+    pub radius: Vec<f32>,
+    /// Flat `[num_nodes * d]` Σx statistics.
+    pub s1: Vec<f32>,
+    /// Flat `[num_nodes * d]` Σ∇φ(x) statistics; empty unless the
+    /// divergence needs them.
+    pub sg: Vec<f32>,
+    /// Σψ(x) per node; empty unless the divergence needs it.
+    pub spsi: Vec<f64>,
+    // ---- partition: alive blocks only, dead blocks compacted out ----
+    pub blk_data: Vec<u32>,
+    pub blk_kernel: Vec<u32>,
+    pub blk_q: Vec<f64>,
+    pub blk_d2: Vec<f64>,
+    /// Per tree node, the indices (into the block arrays) of the blocks
+    /// whose data node it is — **order preserved verbatim** so a loaded
+    /// model replays matvec f64 accumulation bit-identically.
+    pub marks: Vec<Vec<u32>>,
+}
+
+/// Validate a divergence name + parameter vector against the snapshot
+/// registry and instantiate it. Used by the save path (fail fast before
+/// writing an unloadable file) and the load path (fail fast on files
+/// from builds with divergences this one does not know).
+pub fn instantiate_divergence(
+    name: &str,
+    params: &[f32],
+    d: usize,
+) -> Result<Arc<dyn Divergence>> {
+    match name {
+        "sq_euclidean" | "kl" | "itakura_saito" => {
+            if !params.is_empty() {
+                bail!(
+                    "divergence mismatch: {name} takes no parameters, snapshot carries {}",
+                    params.len()
+                );
+            }
+            Ok(match name {
+                "sq_euclidean" => Arc::new(SqEuclidean) as Arc<dyn Divergence>,
+                "kl" => Arc::new(KlSimplex),
+                _ => Arc::new(ItakuraSaito),
+            })
+        }
+        "mahalanobis" => {
+            if params.len() != d {
+                bail!(
+                    "divergence mismatch: mahalanobis snapshot carries {} weights for d={d}",
+                    params.len()
+                );
+            }
+            if params.iter().any(|&w| !w.is_finite() || w <= 0.0) {
+                bail!("divergence mismatch: mahalanobis weights must be positive and finite");
+            }
+            Ok(Arc::new(DiagMahalanobis::new(params.to_vec())))
+        }
+        other => bail!(
+            "unknown divergence '{other}' — this build snapshots \
+             sq_euclidean|kl|itakura_saito|mahalanobis"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian primitives
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Fixed-position header reads (caller guarantees bounds).
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().expect("4 bytes"))
+}
+
+fn rd_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().expect("8 bytes"))
+}
+
+/// Section payload reader: every read is bounds-checked against the
+/// section slice, and claimed sequence lengths are validated against the
+/// remaining bytes *before* allocation (a corrupt length can never OOM).
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    section: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8], section: &'static str) -> Dec<'a> {
+        Dec { buf, pos: 0, section }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).unwrap_or(usize::MAX);
+        if end > self.buf.len() {
+            bail!(
+                "truncated snapshot: {} section needs {n} bytes at offset {}, {} available",
+                self.section,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read a sequence length and validate `len * elem_bytes` fits in the
+    /// remaining payload.
+    fn seq_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let bytes = n.checked_mul(elem_bytes).unwrap_or(usize::MAX);
+        if bytes > self.buf.len() - self.pos {
+            bail!(
+                "truncated snapshot: {} section claims {n} elements ({bytes} bytes), {} available",
+                self.section,
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| anyhow!("corrupt snapshot: non-UTF-8 text in {} section", self.section))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.seq_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().expect("4"))).collect())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4"))).collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.seq_len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().expect("8"))).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "corrupt snapshot: {} section has {} trailing bytes",
+                self.section,
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode / decode
+// ---------------------------------------------------------------------------
+
+impl Snapshot {
+    /// Serialize to the versioned binary format. Fails fast (before any
+    /// bytes are produced) if the divergence is not snapshot-registered
+    /// or its parameters are inconsistent — an unloadable file is never
+    /// written.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        instantiate_divergence(&self.divergence, &self.div_params, self.d)
+            .map_err(|e| anyhow!("cannot snapshot this model: {e}"))?;
+
+        let mut meta = Enc::default();
+        meta.u64(self.n as u64);
+        meta.u64(self.d as u64);
+        meta.f64(self.sigma);
+        meta.str(&self.divergence);
+        meta.f32s(&self.div_params);
+        meta.str(&self.meta_name);
+
+        let mut tree = Enc::default();
+        tree.u64(self.left.len() as u64);
+        tree.u32s(&self.left);
+        tree.u32s(&self.right);
+        tree.u32s(&self.parent);
+        tree.u32s(&self.count);
+        tree.f64s(&self.s2);
+        tree.f32s(&self.radius);
+        tree.f32s(&self.s1);
+        tree.f32s(&self.sg);
+        tree.f64s(&self.spsi);
+
+        let mut blocks = Enc::default();
+        blocks.u32s(&self.blk_data);
+        blocks.u32s(&self.blk_kernel);
+        blocks.f64s(&self.blk_q);
+        blocks.f64s(&self.blk_d2);
+
+        let mut marks = Enc::default();
+        marks.u64(self.marks.len() as u64);
+        for m in &self.marks {
+            marks.u32s(m);
+        }
+
+        let payloads = [meta.buf, tree.buf, blocks.buf, marks.buf];
+        let mut out = Vec::with_capacity(
+            16 + SECTIONS.len() * TABLE_ENTRY + payloads.iter().map(Vec::len).sum::<usize>(),
+        );
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(SECTIONS.len() as u32).to_le_bytes());
+        let mut offset = 16 + SECTIONS.len() * TABLE_ENTRY;
+        for ((id, _), payload) in SECTIONS.iter().zip(payloads.iter()) {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(offset as u64).to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+            offset += payload.len();
+        }
+        for payload in &payloads {
+            out.extend_from_slice(payload);
+        }
+        Ok(out)
+    }
+
+    /// Parse and fully validate a snapshot byte image (format level:
+    /// framing, checksums, lengths; the model-level structural checks
+    /// live in [`crate::vdt::VdtModel::from_snapshot`]).
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.len() < 16 {
+            bail!("truncated snapshot: {} bytes is shorter than the fixed header", bytes.len());
+        }
+        if bytes[..8] != MAGIC {
+            bail!("bad magic: not a VDT model snapshot");
+        }
+        let version = rd_u32(bytes, 8);
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported snapshot format version {version} (this build reads {FORMAT_VERSION})"
+            );
+        }
+        let n_sections = rd_u32(bytes, 12) as usize;
+        if n_sections != SECTIONS.len() {
+            bail!(
+                "corrupt snapshot: version {FORMAT_VERSION} has {} sections, header says \
+                 {n_sections}",
+                SECTIONS.len()
+            );
+        }
+        let table_end = 16 + SECTIONS.len() * TABLE_ENTRY;
+        if bytes.len() < table_end {
+            bail!("truncated snapshot: section table cut short");
+        }
+
+        // Section table: ids in canonical order, payloads contiguous and
+        // exactly tiling the rest of the file, checksums matching.
+        let mut payloads: Vec<&[u8]> = Vec::with_capacity(SECTIONS.len());
+        let mut expect_offset = table_end;
+        for (i, (want_id, name)) in SECTIONS.iter().enumerate() {
+            let at = 16 + i * TABLE_ENTRY;
+            let id = rd_u32(bytes, at);
+            let offset = rd_u64(bytes, at + 4) as usize;
+            let len = rd_u64(bytes, at + 12) as usize;
+            let sum = rd_u64(bytes, at + 20);
+            if id != *want_id {
+                bail!("corrupt snapshot: section {i} has id {id}, expected {want_id} ({name})");
+            }
+            if offset != expect_offset {
+                bail!(
+                    "corrupt snapshot: {name} section at offset {offset}, expected {expect_offset}"
+                );
+            }
+            let end = offset.checked_add(len).unwrap_or(usize::MAX);
+            if end > bytes.len() {
+                bail!(
+                    "truncated snapshot: {name} section runs to byte {end}, file has {}",
+                    bytes.len()
+                );
+            }
+            let payload = &bytes[offset..end];
+            let got = fnv1a64(payload);
+            if got != sum {
+                bail!(
+                    "checksum mismatch in {name} section (stored {sum:#018x}, computed \
+                     {got:#018x}) — snapshot is corrupt"
+                );
+            }
+            payloads.push(payload);
+            expect_offset = end;
+        }
+        if expect_offset != bytes.len() {
+            bail!(
+                "corrupt snapshot: {} trailing bytes after the last section",
+                bytes.len() - expect_offset
+            );
+        }
+
+        // ---- META ----
+        let mut m = Dec::new(payloads[0], "META");
+        let n = m.u64()? as usize;
+        let d = m.u64()? as usize;
+        let sigma = m.f64()?;
+        let divergence = m.str()?;
+        let div_params = m.f32s()?;
+        let meta_name = m.str()?;
+        m.done()?;
+        if n == 0 || d == 0 {
+            bail!("corrupt snapshot: empty model (n={n}, d={d})");
+        }
+
+        // ---- TREE ----
+        let mut t = Dec::new(payloads[1], "TREE");
+        let nn = t.u64()? as usize;
+        if nn != 2 * n - 1 {
+            bail!("corrupt snapshot: {nn} tree nodes for n={n} (expected {})", 2 * n - 1);
+        }
+        let left = t.u32s()?;
+        let right = t.u32s()?;
+        let parent = t.u32s()?;
+        let count = t.u32s()?;
+        let s2 = t.f64s()?;
+        let radius = t.f32s()?;
+        let s1 = t.f32s()?;
+        let sg = t.f32s()?;
+        let spsi = t.f64s()?;
+        t.done()?;
+        for (name, len, want) in [
+            ("left", left.len(), nn),
+            ("right", right.len(), nn),
+            ("parent", parent.len(), nn),
+            ("count", count.len(), nn),
+            ("s2", s2.len(), nn),
+            ("radius", radius.len(), nn),
+            ("s1", s1.len(), nn * d),
+        ] {
+            if len != want {
+                bail!("corrupt snapshot: tree {name} has {len} entries, expected {want}");
+            }
+        }
+        let has_grad = !sg.is_empty() || !spsi.is_empty();
+        if has_grad && (sg.len() != nn * d || spsi.len() != nn) {
+            bail!(
+                "corrupt snapshot: gradient statistics have {} / {} entries, expected {} / {nn}",
+                sg.len(),
+                spsi.len(),
+                nn * d
+            );
+        }
+
+        // ---- BLOCKS ----
+        let mut b = Dec::new(payloads[2], "BLOCKS");
+        let blk_data = b.u32s()?;
+        let blk_kernel = b.u32s()?;
+        let blk_q = b.f64s()?;
+        let blk_d2 = b.f64s()?;
+        b.done()?;
+        let nb = blk_data.len();
+        if blk_kernel.len() != nb || blk_q.len() != nb || blk_d2.len() != nb {
+            bail!(
+                "corrupt snapshot: block arrays disagree ({nb}/{}/{}/{})",
+                blk_kernel.len(),
+                blk_q.len(),
+                blk_d2.len()
+            );
+        }
+
+        // ---- MARKS ----
+        let mut k = Dec::new(payloads[3], "MARKS");
+        let n_nodes = k.u64()? as usize;
+        if n_nodes != nn {
+            bail!("corrupt snapshot: {n_nodes} mark lists for {nn} tree nodes");
+        }
+        let mut marks = Vec::with_capacity(nn);
+        for _ in 0..nn {
+            marks.push(k.u32s()?);
+        }
+        k.done()?;
+
+        Ok(Snapshot {
+            divergence,
+            div_params,
+            n,
+            d,
+            sigma,
+            meta_name,
+            left,
+            right,
+            parent,
+            count,
+            s2,
+            radius,
+            s1,
+            sg,
+            spsi,
+            blk_data,
+            blk_kernel,
+            blk_q,
+            blk_d2,
+            marks,
+        })
+    }
+
+    /// Encode and write to `path`.
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode()?;
+        std::fs::write(path, &bytes).with_context(|| format!("write snapshot {path:?}"))?;
+        Ok(())
+    }
+
+    /// Read and decode `path`.
+    pub fn read_file(path: &Path) -> Result<Snapshot> {
+        let bytes = std::fs::read(path).with_context(|| format!("read snapshot {path:?}"))?;
+        Self::decode(&bytes).map_err(|e| anyhow!("decode snapshot {path:?}: {e}"))
+    }
+
+    /// Number of (alive) blocks carried by the snapshot.
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.blk_data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        // hand-built 3-point tree: leaves 0,1,2; node 3 = (0,1); root 4
+        Snapshot {
+            divergence: "sq_euclidean".into(),
+            div_params: vec![],
+            n: 3,
+            d: 2,
+            sigma: 0.5,
+            meta_name: "unit".into(),
+            left: vec![u32::MAX, u32::MAX, u32::MAX, 0, 3],
+            right: vec![u32::MAX, u32::MAX, u32::MAX, 1, 2],
+            parent: vec![3, 3, 4, 4, u32::MAX],
+            count: vec![1, 1, 1, 2, 3],
+            s2: vec![1.0, 2.0, 3.0, 3.0, 6.0],
+            radius: vec![0.0, 0.0, 0.0, 1.0, 2.0],
+            s1: vec![0.0; 10],
+            sg: vec![],
+            spsi: vec![],
+            blk_data: vec![0, 1, 3, 2],
+            blk_kernel: vec![1, 0, 2, 3],
+            blk_q: vec![0.5, 0.5, 0.25, 0.25],
+            blk_d2: vec![1.0, 1.0, 2.0, 2.0],
+            marks: vec![vec![0], vec![1], vec![3], vec![2], vec![]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field_bitwise() {
+        let s = sample();
+        let bytes = s.encode().unwrap();
+        let r = Snapshot::decode(&bytes).unwrap();
+        assert_eq!(r.divergence, s.divergence);
+        assert_eq!(r.n, s.n);
+        assert_eq!(r.d, s.d);
+        assert_eq!(r.sigma.to_bits(), s.sigma.to_bits());
+        assert_eq!(r.meta_name, s.meta_name);
+        assert_eq!(r.left, s.left);
+        assert_eq!(r.count, s.count);
+        assert_eq!(r.s2, s.s2);
+        assert_eq!(r.blk_q, s.blk_q);
+        assert_eq!(r.marks, s.marks);
+        // re-encode is byte-stable
+        assert_eq!(r.encode().unwrap(), bytes);
+    }
+
+    #[test]
+    fn header_errors_are_specific() {
+        let bytes = sample().encode().unwrap();
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(Snapshot::decode(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = bytes.clone();
+        bad[8..12].copy_from_slice(&9u32.to_le_bytes());
+        assert!(Snapshot::decode(&bad).unwrap_err().to_string().contains("version 9"));
+        assert!(Snapshot::decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(Snapshot::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn payload_corruption_hits_a_checksum() {
+        let bytes = sample().encode().unwrap();
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let e = Snapshot::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn registry_rejects_unknown_and_misparameterized() {
+        assert!(instantiate_divergence("sq_euclidean", &[], 4).is_ok());
+        assert!(instantiate_divergence("kl", &[], 4).is_ok());
+        assert!(instantiate_divergence("itakura_saito", &[], 4).is_ok());
+        assert!(instantiate_divergence("mahalanobis", &[1.0, 2.0], 2).is_ok());
+        assert!(instantiate_divergence("cosine", &[], 4).is_err());
+        assert!(instantiate_divergence("mahalanobis", &[1.0], 2).is_err());
+        assert!(instantiate_divergence("mahalanobis", &[1.0, -1.0], 2).is_err());
+        assert!(instantiate_divergence("kl", &[1.0], 4).is_err());
+    }
+
+    #[test]
+    fn encode_refuses_unregistered_divergence() {
+        let mut s = sample();
+        s.divergence = "custom".into();
+        let e = s.encode().unwrap_err().to_string();
+        assert!(e.contains("custom"), "{e}");
+    }
+}

@@ -4,15 +4,19 @@
 //! `O(N^1.5 log N + |B|)` construction, `O(|B|)` memory (Table 1).
 //! `refine_to` grows |B| greedily (paper §4.4); `matvec` is Algorithm 1.
 
+use std::path::Path;
 use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::core::divergence::{Divergence, DivergenceKind};
 use crate::core::Matrix;
-use crate::tree::{build_tree_with, BuildConfig, PartitionTree};
+use crate::runtime::snapshot::{instantiate_divergence, Snapshot};
+use crate::tree::{build_tree_with, BuildConfig, PartitionTree, NONE};
 
 use super::matvec::{matvec, MatvecScratch};
 use super::optimize::loglik;
-use super::partition::BlockPartition;
+use super::partition::{Block, BlockPartition};
 use super::refine::Refiner;
 use super::sigma::fit_alternating;
 
@@ -169,6 +173,183 @@ impl VdtModel {
         self.partition.materialize(&self.tree)
     }
 
+    /// Capture the fitted state as a [`Snapshot`] (see
+    /// [`crate::runtime::snapshot`]). Dead (refined-away) blocks are
+    /// compacted out; per-node mark order is preserved verbatim, so a
+    /// loaded model replays matvec / label-propagation f64 accumulation
+    /// bit-identically. Derived state (refiner heap, scratch pools) is
+    /// deliberately omitted and rebuilt lazily on load.
+    pub fn to_snapshot(&self, meta_name: &str) -> Snapshot {
+        let t = &self.tree;
+        let nb = self.partition.num_blocks();
+        let mut remap = vec![u32::MAX; self.partition.blocks.len()];
+        let mut blk_data = Vec::with_capacity(nb);
+        let mut blk_kernel = Vec::with_capacity(nb);
+        let mut blk_q = Vec::with_capacity(nb);
+        let mut blk_d2 = Vec::with_capacity(nb);
+        for (i, b) in self.partition.blocks.iter().enumerate() {
+            if b.alive {
+                remap[i] = blk_data.len() as u32;
+                blk_data.push(b.data);
+                blk_kernel.push(b.kernel);
+                blk_q.push(b.q);
+                blk_d2.push(b.d2);
+            }
+        }
+        let marks = self
+            .partition
+            .marks
+            .iter()
+            .map(|ms| ms.iter().map(|&m| remap[m as usize]).collect())
+            .collect();
+        Snapshot {
+            divergence: t.div.name().to_string(),
+            div_params: t.div.snapshot_params(),
+            n: t.n,
+            d: t.d,
+            sigma: self.sigma,
+            meta_name: meta_name.to_string(),
+            left: t.left.clone(),
+            right: t.right.clone(),
+            parent: t.parent.clone(),
+            count: t.count.clone(),
+            s2: t.s2.clone(),
+            radius: t.radius.clone(),
+            s1: t.s1.clone(),
+            sg: t.sg.clone(),
+            spsi: t.spsi.clone(),
+            blk_data,
+            blk_kernel,
+            blk_q,
+            blk_d2,
+            marks,
+        }
+    }
+
+    /// Rebuild a fitted model from a decoded [`Snapshot`]: re-instantiate
+    /// the divergence from the registry, structurally validate the tree
+    /// and partition (fail fast — a corrupt file must never become a
+    /// silently-wrong model), and recreate the derived scratch state the
+    /// snapshot omits.
+    pub fn from_snapshot(s: Snapshot) -> Result<VdtModel> {
+        let nn = s.left.len();
+        if s.n == 0 || s.d == 0 || nn != 2 * s.n - 1 {
+            bail!("snapshot shape invalid: n={}, d={}, {nn} tree nodes", s.n, s.d);
+        }
+        if s.right.len() != nn
+            || s.parent.len() != nn
+            || s.count.len() != nn
+            || s.s2.len() != nn
+            || s.radius.len() != nn
+            || s.s1.len() != nn * s.d
+            || s.marks.len() != nn
+            || s.blk_kernel.len() != s.blk_data.len()
+            || s.blk_q.len() != s.blk_data.len()
+            || s.blk_d2.len() != s.blk_data.len()
+        {
+            bail!("snapshot arrays disagree on the model shape");
+        }
+        if !s.sigma.is_finite() || s.sigma <= 0.0 {
+            bail!("snapshot sigma {} is not a positive finite bandwidth", s.sigma);
+        }
+        let div = instantiate_divergence(&s.divergence, &s.div_params, s.d)?;
+        if div.needs_grad_stats() {
+            if s.sg.len() != nn * s.d || s.spsi.len() != nn {
+                bail!(
+                    "snapshot is missing the gradient statistics divergence {} requires",
+                    s.divergence
+                );
+            }
+        } else if !s.sg.is_empty() || !s.spsi.is_empty() {
+            bail!("snapshot carries gradient statistics divergence {} never reads", s.divergence);
+        }
+
+        // tree topology: leaves are 0..n with count 1; internal nodes have
+        // two distinct smaller-id children with consistent parent links,
+        // each non-root node claimed exactly once (matvec's CollectUp /
+        // DistributeDown sweeps index on these invariants)
+        let mut claimed = vec![false; nn];
+        for a in 0..nn {
+            if a < s.n {
+                if s.left[a] != NONE || s.right[a] != NONE || s.count[a] != 1 {
+                    bail!("snapshot tree: leaf {a} is malformed");
+                }
+            } else {
+                let (l, r) = (s.left[a] as usize, s.right[a] as usize);
+                if s.left[a] == NONE || s.right[a] == NONE || l >= a || r >= a || l == r {
+                    bail!("snapshot tree: internal node {a} has invalid children");
+                }
+                if s.parent[l] != a as u32 || s.parent[r] != a as u32 {
+                    bail!("snapshot tree: parent links broken at node {a}");
+                }
+                if claimed[l] || claimed[r] {
+                    bail!("snapshot tree: node claimed by two parents under {a}");
+                }
+                claimed[l] = true;
+                claimed[r] = true;
+                if s.count[a] as u64 != s.count[l] as u64 + s.count[r] as u64 {
+                    bail!("snapshot tree: count mismatch at node {a}");
+                }
+            }
+        }
+        if s.parent[nn - 1] != NONE {
+            bail!("snapshot tree: root has a parent");
+        }
+        if s.count[nn - 1] as usize != s.n {
+            bail!("snapshot tree: root count {} != n {}", s.count[nn - 1], s.n);
+        }
+
+        let mut blocks = Vec::with_capacity(s.blk_data.len());
+        for i in 0..s.blk_data.len() {
+            let (data, kernel) = (s.blk_data[i], s.blk_kernel[i]);
+            if data as usize >= nn || kernel as usize >= nn {
+                bail!("snapshot block {i} references nodes ({data},{kernel}) outside the tree");
+            }
+            let (q, d2) = (s.blk_q[i], s.blk_d2[i]);
+            if !q.is_finite() || q < 0.0 || !d2.is_finite() {
+                bail!("snapshot block {i} has invalid q={q} / d2={d2}");
+            }
+            blocks.push(Block { data, kernel, q, d2, alive: true });
+        }
+        let partition = BlockPartition::from_parts(blocks, s.marks)
+            .map_err(|e| anyhow!("snapshot partition invalid: {e}"))?;
+
+        let tree = PartitionTree {
+            n: s.n,
+            d: s.d,
+            left: s.left,
+            right: s.right,
+            parent: s.parent,
+            count: s.count,
+            s2: s.s2,
+            radius: s.radius,
+            s1: s.s1,
+            sg: s.sg,
+            spsi: s.spsi,
+            div,
+        };
+        Ok(VdtModel {
+            tree,
+            partition,
+            sigma: s.sigma,
+            refiner: None,
+            scratch_pool: std::sync::Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Write the fitted model to a versioned binary snapshot at `path`
+    /// (`meta_name` records dataset provenance in the file). See
+    /// [`crate::runtime::snapshot`] for the format and its guarantees.
+    pub fn save(&self, path: impl AsRef<Path>, meta_name: &str) -> Result<()> {
+        self.to_snapshot(meta_name).write_file(path.as_ref())
+    }
+
+    /// Load a model previously written by [`VdtModel::save`] — the serving
+    /// warm-start path: milliseconds instead of a full refit.
+    pub fn load(path: impl AsRef<Path>) -> Result<VdtModel> {
+        Self::from_snapshot(Snapshot::read_file(path.as_ref())?)
+    }
+
     /// Approximate resident memory of the model in bytes (for the paper's
     /// memory-vs-N comparisons): tree statistics + blocks + marks.
     pub fn memory_bytes(&self) -> usize {
@@ -232,6 +413,28 @@ mod tests {
         for &v in &out.data {
             assert!((v - 1.0).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_model_state() {
+        let ds = synthetic::two_moons(40, 0.08, 6);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(3 * 40);
+        let snap = m.to_snapshot("moons40");
+        assert_eq!(snap.meta_name, "moons40");
+        assert_eq!(snap.num_blocks(), m.num_blocks());
+        let l = VdtModel::from_snapshot(snap).unwrap();
+        assert_eq!(l.sigma().to_bits(), m.sigma().to_bits());
+        assert_eq!(l.num_blocks(), m.num_blocks());
+        assert_eq!(l.divergence_name(), m.divergence_name());
+        let y = Matrix::from_fn(40, 2, |r, c| ((r * 3 + c) % 7) as f32 - 3.0);
+        assert_eq!(m.matvec(&y).data, l.matvec(&y).data, "matvec drifted across snapshot");
+        l.partition.validate(&l.tree).unwrap();
+        // a loaded model stays refinable: derived state rebuilds on demand
+        let mut l = l;
+        l.refine_to(5 * 40);
+        assert!(l.num_blocks() >= 5 * 40);
+        l.partition.validate(&l.tree).unwrap();
     }
 
     #[test]

@@ -40,8 +40,11 @@ impl BlockPartition {
     /// every ordered pair of sibling subtrees — `|B_c| = 2(N-1)`.
     pub fn coarsest(tree: &PartitionTree) -> BlockPartition {
         let nn = tree.num_nodes();
-        let mut part =
-            BlockPartition { blocks: Vec::with_capacity(nn), marks: vec![Vec::new(); nn], alive: 0 };
+        let mut part = BlockPartition {
+            blocks: Vec::with_capacity(nn),
+            marks: vec![Vec::new(); nn],
+            alive: 0,
+        };
         for a in 0..nn as u32 {
             if !tree.is_leaf(a) {
                 let (l, r) = (tree.left[a as usize], tree.right[a as usize]);
@@ -73,6 +76,43 @@ impl BlockPartition {
             }
         }
         part
+    }
+
+    /// Reassemble a partition from persisted blocks and mark lists (the
+    /// snapshot load path, [`crate::runtime::snapshot`]). Every block must
+    /// be alive, every alive block marked exactly once at its own data
+    /// node — and the per-node mark *order* is taken verbatim, because
+    /// downstream f64 accumulation (Algorithm-1 matvec) must replay in
+    /// the exact order of the saved model to stay bit-identical.
+    pub fn from_parts(blocks: Vec<Block>, marks: Vec<Vec<u32>>) -> Result<BlockPartition, String> {
+        let mut seen = vec![false; blocks.len()];
+        for (node, ms) in marks.iter().enumerate() {
+            for &m in ms {
+                let b = blocks
+                    .get(m as usize)
+                    .ok_or_else(|| format!("mark {m} at node {node} is out of range"))?;
+                if !b.alive {
+                    return Err(format!("mark {m} at node {node} points at a dead block"));
+                }
+                if b.data as usize != node {
+                    return Err(format!(
+                        "mark {m} at node {node} but block data node is {}",
+                        b.data
+                    ));
+                }
+                if seen[m as usize] {
+                    return Err(format!("block {m} is marked twice"));
+                }
+                seen[m as usize] = true;
+            }
+        }
+        for (i, b) in blocks.iter().enumerate() {
+            if b.alive && !seen[i] {
+                return Err(format!("alive block {i} has no mark"));
+            }
+        }
+        let alive = blocks.iter().filter(|b| b.alive).count();
+        Ok(BlockPartition { blocks, marks, alive })
     }
 
     /// Append a new alive block and register its mark; returns its index.
@@ -248,6 +288,35 @@ mod tests {
         p.kill_block(idx);
         assert_eq!(p.num_blocks(), before - 1);
         assert!(!p.marks[node as usize].contains(&idx));
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_rejects_broken_marks() {
+        let (_, t) = tree_of(10, 4);
+        let p = BlockPartition::coarsest(&t);
+        let rebuilt = BlockPartition::from_parts(p.blocks.clone(), p.marks.clone()).unwrap();
+        assert_eq!(rebuilt.num_blocks(), p.num_blocks());
+        rebuilt.validate(&t).unwrap();
+
+        let node = p.blocks[0].data as usize;
+        // unmarked alive block
+        let mut marks = p.marks.clone();
+        marks[node].retain(|&m| m != 0);
+        assert!(BlockPartition::from_parts(p.blocks.clone(), marks).is_err());
+        // double mark
+        let mut marks = p.marks.clone();
+        marks[node].push(0);
+        assert!(BlockPartition::from_parts(p.blocks.clone(), marks).is_err());
+        // out-of-range mark
+        let mut marks = p.marks.clone();
+        marks[node].push(p.blocks.len() as u32);
+        assert!(BlockPartition::from_parts(p.blocks.clone(), marks).is_err());
+        // mark registered at a foreign node
+        let mut marks = p.marks.clone();
+        let moved = marks[node].pop().unwrap();
+        let other = (node + 1) % marks.len();
+        marks[other].push(moved);
+        assert!(BlockPartition::from_parts(p.blocks.clone(), marks).is_err());
     }
 
     #[test]

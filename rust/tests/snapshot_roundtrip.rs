@@ -1,0 +1,193 @@
+//! Snapshot robustness suite (`runtime::snapshot` + `VdtModel::save/load`):
+//!
+//! 1. **Roundtrip bit-equality** for all four shipped divergences: a
+//!    refined model's matvec and label-propagation outputs must match the
+//!    loaded model **bitwise** (`assert_eq!` on the raw f32 buffers), not
+//!    approximately — the snapshot preserves every statistic, every q,
+//!    and the exact per-node mark order the f64 accumulation replays in.
+//! 2. **Rejection**: truncated files, *any* single flipped byte, wrong
+//!    magic, future format versions, unknown divergences, and
+//!    divergence/statistics mismatches all fail loudly with specific
+//!    errors — never a panic, never a silently-wrong model.
+
+use std::path::PathBuf;
+
+use vdt::core::divergence::DivergenceKind;
+use vdt::data::{synthetic, Dataset};
+use vdt::labelprop::{self, LpConfig};
+use vdt::runtime::snapshot::Snapshot;
+use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::Matrix;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("vdt_snaptest_{}_{tag}.vdt", std::process::id()))
+}
+
+fn fitted(kind: DivergenceKind, ds: &Dataset) -> VdtModel {
+    let cfg = VdtConfig { divergence: kind, ..Default::default() };
+    let mut m = VdtModel::build(&ds.x, &cfg);
+    // refine so the partition carries dead blocks + permuted mark lists —
+    // the hard case for order-preserving persistence
+    m.refine_to(4 * ds.n());
+    m
+}
+
+fn cases() -> Vec<(DivergenceKind, Dataset)> {
+    vec![
+        (DivergenceKind::SqEuclidean, synthetic::two_moons(60, 0.08, 5)),
+        (DivergenceKind::Kl, synthetic::simplex_mixture(48, 8, 2, 2, 4.0, 7, "snap_kl")),
+        (DivergenceKind::ItakuraSaito, synthetic::positive_spectra(40, 12, 2, 9)),
+        (DivergenceKind::Mahalanobis(None), synthetic::two_moons(52, 0.07, 11)),
+    ]
+}
+
+#[test]
+fn roundtrip_is_bit_identical_for_every_divergence() {
+    for (kind, ds) in cases() {
+        let tag = kind.name();
+        let n = ds.n();
+        let m = fitted(kind, &ds);
+        let path = tmp_path(tag);
+        m.save(&path, &ds.name).unwrap();
+        let l = VdtModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(m.divergence_name(), l.divergence_name(), "{tag}");
+        assert_eq!(m.sigma().to_bits(), l.sigma().to_bits(), "{tag}: sigma moved");
+        assert_eq!(m.num_blocks(), l.num_blocks(), "{tag}");
+        assert_eq!(m.loglik().to_bits(), l.loglik().to_bits(), "{tag}: loglik moved");
+        l.partition.validate(&l.tree).unwrap();
+
+        // multi-column matvec, bit for bit
+        let y = Matrix::from_fn(n, 3, |r, c| (((r * 13 + c * 7) % 11) as f32 - 5.0) * 0.3);
+        assert_eq!(m.matvec(&y).data, l.matvec(&y).data, "{tag}: matvec drifted");
+
+        // full label-propagation run, bit for bit
+        let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, n / 5, 3);
+        let y0 = labelprop::seed_matrix(&ds.labels, &labeled, ds.n_classes);
+        let cfg = LpConfig { alpha: 0.05, steps: 25 };
+        let a = labelprop::propagate(&m, &y0, &cfg);
+        let b = labelprop::propagate(&l, &y0, &cfg);
+        assert_eq!(a.data, b.data, "{tag}: label propagation drifted");
+    }
+}
+
+#[test]
+fn loaded_models_keep_refining_and_serving() {
+    let ds = synthetic::two_moons(64, 0.08, 13);
+    let m = fitted(DivergenceKind::SqEuclidean, &ds);
+    let path = tmp_path("refine");
+    m.save(&path, &ds.name).unwrap();
+    let mut l = VdtModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    l.refine_to(6 * 64);
+    assert!(l.num_blocks() >= 6 * 64);
+    l.partition.validate(&l.tree).unwrap();
+    let ones = Matrix::from_fn(64, 1, |_, _| 1.0);
+    for &v in &l.matvec(&ones).data {
+        assert!((v - 1.0).abs() < 1e-4, "row-stochasticity lost after load+refine");
+    }
+}
+
+fn sample_bytes() -> Vec<u8> {
+    let ds = synthetic::two_moons(16, 0.08, 3);
+    let m = fitted(DivergenceKind::SqEuclidean, &ds);
+    m.to_snapshot(&ds.name).encode().unwrap()
+}
+
+#[test]
+fn rejects_wrong_magic() {
+    let mut b = sample_bytes();
+    b[0] ^= 0xff;
+    let e = Snapshot::decode(&b).unwrap_err().to_string();
+    assert!(e.contains("magic"), "{e}");
+}
+
+#[test]
+fn rejects_future_format_version() {
+    let mut b = sample_bytes();
+    b[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let e = Snapshot::decode(&b).unwrap_err().to_string();
+    assert!(e.contains("version 2"), "{e}");
+}
+
+#[test]
+fn rejects_truncation_at_any_cut() {
+    let b = sample_bytes();
+    for cut in [0, 7, 8, 12, 16, 40, b.len() / 3, b.len() / 2, b.len() - 1] {
+        assert!(Snapshot::decode(&b[..cut]).is_err(), "cut at {cut} bytes was accepted");
+    }
+}
+
+#[test]
+fn rejects_any_single_byte_flip() {
+    let b = sample_bytes();
+    Snapshot::decode(&b).unwrap(); // pristine bytes must decode
+    for i in 0..b.len() {
+        let mut c = b.clone();
+        c[i] ^= 0x01;
+        assert!(Snapshot::decode(&c).is_err(), "flip at byte {i} was accepted");
+        c[i] ^= 0x81;
+        assert!(Snapshot::decode(&c).is_err(), "flip at byte {i} (high bit) was accepted");
+    }
+}
+
+#[test]
+fn rejects_divergence_and_statistics_mismatches() {
+    let b = sample_bytes();
+    // unknown divergence: refused at save time (encode), before any bytes
+    let mut snap = Snapshot::decode(&b).unwrap();
+    snap.divergence = "cosine".into();
+    let e = snap.encode().unwrap_err().to_string();
+    assert!(e.contains("cosine"), "{e}");
+    // a KL model needs Sg/Sψ; a Euclidean file rebadged as KL must fail
+    let mut snap = Snapshot::decode(&b).unwrap();
+    snap.divergence = "kl".into();
+    let e = VdtModel::from_snapshot(snap).unwrap_err().to_string();
+    assert!(e.contains("gradient statistics"), "{e}");
+    // mahalanobis weight count must match d
+    let mut snap = Snapshot::decode(&b).unwrap();
+    snap.divergence = "mahalanobis".into();
+    snap.div_params = vec![1.0];
+    let e = VdtModel::from_snapshot(snap).unwrap_err().to_string();
+    assert!(e.contains("mismatch"), "{e}");
+}
+
+#[test]
+fn refuses_to_snapshot_unregistered_divergences() {
+    struct HomeGrown;
+    impl vdt::core::divergence::Divergence for HomeGrown {
+        fn name(&self) -> &'static str {
+            "home-grown"
+        }
+        fn point(&self, x: &[f32], y: &[f32]) -> f64 {
+            vdt::core::vecmath::sq_dist(x, y)
+        }
+        fn phi(&self, x: &[f32]) -> f64 {
+            vdt::core::vecmath::sq_norm(x)
+        }
+        fn grad(&self, x: &[f32], out: &mut [f32]) {
+            for (o, &v) in out.iter_mut().zip(x.iter()) {
+                *o = 2.0 * v;
+            }
+        }
+        fn dual(&self, x: &[f32]) -> f64 {
+            vdt::core::vecmath::sq_norm(x)
+        }
+    }
+    let ds = synthetic::two_moons(20, 0.08, 4);
+    let m = VdtModel::build_with(&ds.x, &VdtConfig::default(), HomeGrown);
+    let e = m.to_snapshot("x").encode().unwrap_err().to_string();
+    assert!(e.contains("home-grown"), "{e}");
+}
+
+#[test]
+fn save_then_load_file_roundtrip_is_byte_stable() {
+    let ds = synthetic::two_moons(30, 0.08, 2);
+    let m = fitted(DivergenceKind::SqEuclidean, &ds);
+    let bytes = m.to_snapshot("moons30").encode().unwrap();
+    let snap = Snapshot::decode(&bytes).unwrap();
+    assert_eq!(snap.meta_name, "moons30");
+    assert_eq!(snap.n, 30);
+    assert_eq!(snap.encode().unwrap(), bytes, "decode→encode changed bytes");
+}
