@@ -7,11 +7,12 @@
 //! / `BENCH_parallel.json`).
 
 use vdt::core::bench::Runner;
+use vdt::core::op::TransitionOp;
 use vdt::core::par;
 use vdt::data::synthetic;
 use vdt::exact::ExactModel;
 use vdt::knn::{KnnConfig, KnnGraph};
-use vdt::labelprop::{self, one_hot_labels, LpConfig, TransitionOp};
+use vdt::labelprop::{self, one_hot_labels, LpConfig};
 use vdt::vdt::{VdtConfig, VdtModel};
 
 fn main() {

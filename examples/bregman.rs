@@ -7,6 +7,7 @@
 //! cargo run --release --example bregman
 //! ```
 
+use vdt::api::ModelBuilder;
 use vdt::core::divergence::{DivergenceKind, KlSimplex};
 use vdt::data::synthetic;
 use vdt::labelprop::{self, LpConfig};
@@ -18,11 +19,19 @@ fn main() {
     let ds = synthetic::topic_histograms(600, 64, 2, 4, 120, 7);
     println!("dataset: {} (N={}, d={})", ds.name, ds.n(), ds.d());
 
-    // 2. build under KL — through the config selector, or generically
-    //    with an explicit divergence instance (both are equivalent)
+    // 2. build under KL — through the canonical builder, or generically
+    //    with an explicit divergence instance (both are equivalent; the
+    //    builder adds up-front domain validation and provenance)
+    let built = ModelBuilder::from_dataset(&ds)
+        .divergence(DivergenceKind::Kl)
+        .build()
+        .expect("topic histograms are in the KL domain");
     let cfg = VdtConfig { divergence: DivergenceKind::Kl, ..VdtConfig::default() };
-    let mut model = VdtModel::build(&ds.x, &cfg);
     let generic = VdtModel::build_with(&ds.x, &cfg, KlSimplex);
+    let mut model = match built {
+        vdt::AnyModel::Vdt(m) => m,
+        _ => unreachable!("builder default backend is vdt"),
+    };
     assert_eq!(model.sigma(), generic.sigma());
     println!(
         "KL model: |B| = {}, σ = {:.5}, ℓ(D) = {:.1}, divergence = {}",

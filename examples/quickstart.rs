@@ -1,46 +1,51 @@
-//! Quickstart: build a VariationalDT model on a toy dataset, learn σ,
-//! refine, and run label propagation — the 60-second tour of the API.
+//! Quickstart: build a transition model through the canonical
+//! [`vdt::api::ModelBuilder`], inspect its model card, and run label
+//! propagation — the 60-second tour of the API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use vdt::api::ModelBuilder;
+use vdt::core::op::Backend;
 use vdt::data::synthetic;
 use vdt::labelprop::{self, LpConfig};
-use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::VdtError;
 
-fn main() {
+fn main() -> Result<(), VdtError> {
     // 1. data: two interleaved half-moons, 400 points
     let ds = synthetic::two_moons(400, 0.08, 7);
     println!("dataset: {} (N={}, d={})", ds.name, ds.n(), ds.d());
 
-    // 2. build the coarsest model: anchor tree + 2(N-1) blocks + (q, σ) fit
-    let mut model = VdtModel::build(&ds.x, &VdtConfig::default());
-    println!(
-        "coarsest model: |B| = {}, σ = {:.4}, ℓ(D) = {:.1}",
-        model.num_blocks(),
-        model.sigma(),
-        model.loglik()
-    );
+    // 2. one canonical build path for every backend: anchor tree +
+    //    (q, σ) fit + greedy refinement to |B| = 8N, with typed errors
+    let model = ModelBuilder::from_dataset(&ds)
+        .backend(Backend::Vdt) // or Backend::Knn / Backend::Exact
+        .k(8)
+        .build()?;
+    println!("{}", model.card().summary());
 
-    // 3. refine: greedy symmetric refinement to |B| = 8N
-    model.refine_to(8 * ds.n());
-    println!(
-        "refined model:  |B| = {}, ℓ(D) = {:.1}  (bound can only improve)",
-        model.num_blocks(),
-        model.loglik()
-    );
+    // backend-specific extras stay reachable through the downcast
+    let v = model.as_vdt().expect("built as vdt");
+    println!("ℓ(D) = {:.1} (the variational lower bound, Eq. 7)", v.loglik());
 
-    // 4. one fast matvec: Q·Y in O(|B|) — rows of Q sum to 1
+    // 3. one fast matvec: Q·Y in O(|B|) — rows of Q sum to 1
     let ones = vdt::Matrix::from_fn(ds.n(), 1, |_, _| 1.0);
     let out = model.matvec(&ones);
-    println!("Q·1 ≈ 1 check: max deviation {:.2e}",
-        out.data.iter().map(|v| (v - 1.0).abs()).fold(0.0f32, f32::max));
+    println!(
+        "Q·1 ≈ 1 check: max deviation {:.2e}",
+        out.data.iter().map(|v| (v - 1.0).abs()).fold(0.0f32, f32::max)
+    );
+
+    // 4. allocation-free serving: steady-state loops reuse one buffer
+    let mut buf = vdt::Matrix::zeros(ds.n(), 1);
+    model.matvec_into(&ones, &mut buf);
+    assert_eq!(buf.data, out.data);
 
     // 5. semi-supervised learning: 10 labels, label propagation
     let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, 10, 3);
     let (_, score) = labelprop::run_ssl(
-        &model,
+        model.as_op(),
         &ds.labels,
         ds.n_classes,
         &labeled,
@@ -48,5 +53,15 @@ fn main() {
     );
     println!("label propagation with 10 labels: CCR = {score:.3}");
     assert!(score > 0.8, "quickstart expects >0.8 CCR on two moons");
+
+    // 6. errors are typed, not strings: moons data is out of the KL domain
+    let err = ModelBuilder::from_dataset(&ds)
+        .divergence(vdt::core::divergence::DivergenceKind::Kl)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, VdtError::Domain { divergence: "kl", .. }));
+    println!("typed error demo: {err}");
+
     println!("quickstart OK");
+    Ok(())
 }

@@ -15,10 +15,11 @@
 use std::rc::Rc;
 
 use vdt::core::metrics::Timer;
+use vdt::core::op::TransitionOp;
 use vdt::data::synthetic;
-use vdt::exact::ExactModel;
+use vdt::exact::{ExactModel, XlaExactModel};
 use vdt::knn::{KnnConfig, KnnGraph};
-use vdt::labelprop::{self, LpConfig, TransitionOp};
+use vdt::labelprop::{self, LpConfig};
 use vdt::runtime::Runtime;
 use vdt::vdt::{VdtConfig, VdtModel};
 
@@ -69,7 +70,7 @@ fn main() {
         Ok(rt) => {
             let rt = Rc::new(rt);
             let t = Timer::start();
-            let m = ExactModel::build_xla(&ds.x, None, rt.clone()).expect("xla exact");
+            let m = XlaExactModel::build(&ds.x, None, rt.clone()).expect("xla exact");
             let build_ms = t.ms();
             // LP through the compiled lp_chunk artifact
             let y0 = labelprop::seed_matrix(&ds.labels, &labeled, ds.n_classes);

@@ -2,36 +2,38 @@
 //! requests (matvec / LP / spectral) against a registry of fitted models,
 //! with automatic column-batching of concurrent matvecs.
 //!
+//! Every model is built through the one canonical
+//! [`vdt::api::ModelBuilder`] and registered as a
+//! [`vdt::core::op::AnyModel`] — the registry is backend-agnostic, so a
+//! VDT model and a kNN graph serve side by side.
+//!
 //! ```bash
 //! cargo run --release --example serve
 //! ```
 
 use std::sync::Arc;
 
+use vdt::api::ModelBuilder;
 use vdt::coordinator::Coordinator;
 use vdt::core::metrics::Timer;
+use vdt::core::op::Backend;
 use vdt::data::synthetic;
-use vdt::knn::{KnnConfig, KnnGraph};
 use vdt::labelprop::{self, LpConfig};
-use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::VdtError;
 
-fn main() {
-    // fit two models for the registry
+fn main() -> Result<(), VdtError> {
+    // fit two models — different backends, one build path
     let moons = synthetic::two_moons(800, 0.07, 1);
     let digits = synthetic::digit1_like(1000, 2);
-    let mut m1 = VdtModel::build(&moons.x, &VdtConfig::default());
-    m1.refine_to(6 * moons.n());
-    let m2 = KnnGraph::build(&digits.x, &KnnConfig { k: 6, ..Default::default() });
+    let m1 = ModelBuilder::from_dataset(&moons).backend(Backend::Vdt).k(6).build()?;
+    let m2 = ModelBuilder::from_dataset(&digits).backend(Backend::Knn).k(6).build()?;
 
     let handle = Coordinator::spawn();
     handle.register("moons/vdt", Arc::new(m1));
     handle.register("digits/knn", Arc::new(m2));
 
-    for info in handle.list_models() {
-        println!(
-            "registered: {:<12} backend={:<14} divergence={:<12} N={}",
-            info.name, info.backend, info.divergence, info.n
-        );
+    for card in handle.list_models() {
+        println!("registered: {}", card.summary());
     }
 
     // 64 concurrent single-column matvec clients against the VDT model —
@@ -57,20 +59,23 @@ fn main() {
     // a full LP job through the service
     let labeled = labelprop::choose_labeled(&moons.labels, 2, 16, 3);
     let y0 = labelprop::seed_matrix(&moons.labels, &labeled, 2);
-    let y = handle
-        .label_prop("moons/vdt", y0, LpConfig { alpha: 0.5, steps: 100 })
-        .unwrap();
+    let y = handle.label_prop("moons/vdt", y0, LpConfig { alpha: 0.5, steps: 100 })?;
     let ccr = labelprop::ccr(&y, &moons.labels, &labeled);
     println!("label_prop via coordinator: CCR = {ccr:.3}");
 
     // spectral query against the kNN model
-    let eigs = handle.spectral("digits/knn", 15).unwrap();
+    let eigs = handle.spectral("digits/knn", 15)?;
     println!(
         "digits/knn top Ritz values: {:.4}, {:.4}, {:.4}",
         eigs[0].0, eigs[1].0, eigs[2].0
     );
 
+    // errors are typed: an unknown model is a VdtError::UnknownModel
+    let err = handle.matvec("nope", vdt::Matrix::zeros(4, 1)).unwrap_err();
+    assert!(matches!(err, VdtError::UnknownModel(_)));
+
     assert!(ccr > 0.8);
     handle.shutdown();
     println!("serve OK");
+    Ok(())
 }

@@ -1,0 +1,327 @@
+//! The one canonical way to construct a transition model:
+//! [`ModelBuilder`] — a fluent spec over **backend × divergence ×
+//! dataset** that validates everything up front and returns typed
+//! [`VdtError`]s instead of panicking deep inside a build.
+//!
+//! ```no_run
+//! use vdt::api::ModelBuilder;
+//! use vdt::core::divergence::DivergenceKind;
+//! use vdt::core::op::Backend;
+//! use vdt::data::synthetic;
+//!
+//! # fn main() -> Result<(), vdt::VdtError> {
+//! let ds = synthetic::topic_histograms(2000, 64, 2, 4, 120, 7);
+//! let model = ModelBuilder::from_dataset(&ds)
+//!     .backend(Backend::Vdt)
+//!     .divergence(DivergenceKind::Kl)
+//!     .k(6)
+//!     .build()?;
+//! assert_eq!(model.n(), 2000);
+//! # Ok(()) }
+//! ```
+//!
+//! The builder subsumes the per-backend entry points
+//! (`VdtModel::build`/`build_with`, `KnnGraph::build`,
+//! `ExactModel::build_dense*`, `XlaExactModel::build`) — those remain
+//! available as low-level engine APIs, but the CLI, the coordinator
+//! examples and the conformance tests all construct through here, so
+//! every backend gets the same validation, the same provenance recording
+//! and the same error surface.
+
+use std::rc::Rc;
+
+use crate::core::divergence::DivergenceKind;
+use crate::core::error::VdtError;
+use crate::core::Matrix;
+use crate::core::op::{AnyModel, Backend, TransitionOp};
+use crate::data::Dataset;
+use crate::exact::{ExactModel, XlaExactModel};
+use crate::knn::{KnnConfig, KnnGraph};
+use crate::runtime::Runtime;
+use crate::vdt::{VdtConfig, VdtModel};
+
+/// A fully-specified model recipe — what [`ModelBuilder`] accumulates.
+/// Plain data, so specs can be stored, logged, or compared.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Which backend realizes the operator.
+    pub backend: Backend,
+    /// Bregman geometry of the fit.
+    pub divergence: DivergenceKind,
+    /// Capacity knob: the VDT backend refines to `|B| = k·N` blocks when
+    /// `k > 2` (k ≤ 2 keeps the coarsest `2(N−1)`-block model); the kNN
+    /// backend keeps `k` neighbours per point. Ignored by the exact
+    /// backends.
+    pub k: usize,
+    /// Fixed kernel bandwidth; `None` learns σ by the paper's
+    /// alternating scheme (§4.2).
+    pub sigma: Option<f64>,
+    /// Parallelize the kNN per-point searches (kNN backend only).
+    pub parallel: bool,
+    /// Dataset name recorded on the fitted model's card.
+    pub provenance: Option<String>,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec {
+            backend: Backend::Vdt,
+            divergence: DivergenceKind::SqEuclidean,
+            k: 2,
+            sigma: None,
+            parallel: false,
+            provenance: None,
+        }
+    }
+}
+
+/// Fluent builder over a borrowed dataset. See the module docs for the
+/// canonical usage; every setter consumes and returns the builder.
+pub struct ModelBuilder<'a> {
+    x: &'a Matrix,
+    spec: ModelSpec,
+}
+
+impl<'a> ModelBuilder<'a> {
+    /// Start a spec over a raw `n × d` feature matrix.
+    pub fn new(x: &'a Matrix) -> ModelBuilder<'a> {
+        ModelBuilder { x, spec: ModelSpec::default() }
+    }
+
+    /// Start a spec over a [`Dataset`], recording its name as the fitted
+    /// model's provenance.
+    pub fn from_dataset(ds: &'a Dataset) -> ModelBuilder<'a> {
+        ModelBuilder::new(&ds.x).provenance(ds.name.clone())
+    }
+
+    /// Select the backend (default [`Backend::Vdt`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.spec.backend = backend;
+        self
+    }
+
+    /// Select the Bregman geometry (default squared Euclidean).
+    pub fn divergence(mut self, divergence: DivergenceKind) -> Self {
+        self.spec.divergence = divergence;
+        self
+    }
+
+    /// Capacity knob — see [`ModelSpec::k`].
+    pub fn k(mut self, k: usize) -> Self {
+        self.spec.k = k;
+        self
+    }
+
+    /// Fix the kernel bandwidth instead of learning it.
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.spec.sigma = Some(sigma);
+        self
+    }
+
+    /// Parallelize kNN searches (kNN backend only).
+    pub fn parallel(mut self, on: bool) -> Self {
+        self.spec.parallel = on;
+        self
+    }
+
+    /// Record what the model is fitted on (shown on its card).
+    pub fn provenance(mut self, name: impl Into<String>) -> Self {
+        self.spec.provenance = Some(name.into());
+        self
+    }
+
+    /// Replace the whole spec at once (e.g. a stored recipe).
+    pub fn spec(mut self, spec: ModelSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Validate the spec against the data without building: shape sanity,
+    /// capacity bounds, backend support, and the full per-row divergence
+    /// domain check (the same gate that used to live ad hoc in the CLI).
+    pub fn validate(&self) -> Result<(), VdtError> {
+        let (n, d) = (self.x.rows, self.x.cols);
+        if n < 2 || d == 0 {
+            return Err(VdtError::InvalidSpec(format!(
+                "need at least 2 points with at least 1 feature, got {n}×{d}"
+            )));
+        }
+        if self.spec.k == 0 {
+            return Err(VdtError::InvalidSpec("k must be at least 1".to_string()));
+        }
+        if self.spec.backend == Backend::Knn && self.spec.k > n - 1 {
+            return Err(VdtError::InvalidSpec(format!(
+                "kNN with k={} needs k ≤ N−1 = {}",
+                self.spec.k,
+                n - 1
+            )));
+        }
+        if let Some(s) = self.spec.sigma {
+            if !s.is_finite() || s <= 0.0 {
+                return Err(VdtError::InvalidSpec(format!(
+                    "sigma must be a positive finite bandwidth, got {s}"
+                )));
+            }
+        }
+        if let DivergenceKind::Mahalanobis(Some(w)) = &self.spec.divergence {
+            if w.len() != d {
+                return Err(VdtError::InvalidSpec(format!(
+                    "Mahalanobis weights have dimension {} but the data has {d} features",
+                    w.len()
+                )));
+            }
+        }
+        if self.spec.backend == Backend::ExactXla
+            && self.spec.divergence != DivergenceKind::SqEuclidean
+        {
+            return Err(VdtError::Unsupported(
+                "exact-xla artifacts are lowered for the euclidean divergence only".to_string(),
+            ));
+        }
+        // per-row domain gate: reject out-of-domain data with a typed
+        // error before the library's fail-fast panic can trigger
+        let div = self.spec.divergence.instantiate(self.x);
+        for i in 0..n {
+            if let Err(reason) = div.check_point(self.x.row(i)) {
+                return Err(VdtError::Domain { divergence: div.name(), row: i, reason });
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a serving-grade model ([`AnyModel`]: `Send + Sync`, ready
+    /// for the coordinator and snapshots). Supports every backend except
+    /// [`Backend::ExactXla`], whose PJRT runtime is thread-local — use
+    /// [`ModelBuilder::build_boxed`] for that one.
+    pub fn build(self) -> Result<AnyModel, VdtError> {
+        self.validate()?;
+        let ModelBuilder { x, spec } = self;
+        match spec.backend {
+            Backend::Vdt => {
+                let cfg = VdtConfig {
+                    divergence: spec.divergence.clone(),
+                    sigma: spec.sigma,
+                    ..VdtConfig::default()
+                };
+                let mut m = VdtModel::build(x, &cfg);
+                if spec.k > 2 {
+                    m.refine_to(spec.k * x.rows);
+                }
+                if let Some(p) = spec.provenance {
+                    m.set_provenance(p);
+                }
+                Ok(AnyModel::Vdt(m))
+            }
+            Backend::Knn => {
+                let cfg = KnnConfig {
+                    k: spec.k,
+                    divergence: spec.divergence.clone(),
+                    sigma: spec.sigma,
+                    parallel: spec.parallel,
+                    ..KnnConfig::default()
+                };
+                let mut g = KnnGraph::build(x, &cfg);
+                if let Some(p) = spec.provenance {
+                    g.set_provenance(p);
+                }
+                Ok(AnyModel::Knn(g))
+            }
+            Backend::Exact => {
+                let mut m = ExactModel::build_dense_div(x, spec.sigma, &spec.divergence);
+                if let Some(p) = spec.provenance {
+                    m.set_provenance(p);
+                }
+                Ok(AnyModel::Exact(m))
+            }
+            Backend::ExactXla => Err(VdtError::Unsupported(
+                "exact-xla owns a thread-local PJRT runtime, so it cannot be shared with the \
+                 multi-threaded coordinator or snapshotted; it is available for single-threaded \
+                 use only (CLI build/lp/spectral, or ModelBuilder::build_boxed in code)"
+                    .to_string(),
+            )),
+            Backend::Custom(label) => Err(VdtError::Unsupported(format!(
+                "custom backend '{label}' has no in-tree constructor"
+            ))),
+        }
+    }
+
+    /// Build *any* backend — including [`Backend::ExactXla`] — as a boxed
+    /// [`TransitionOp`]. This is the CLI's path: single-threaded use,
+    /// widest backend coverage. The XLA runtime is resolved via
+    /// [`Runtime::load_default`] (`$VDT_ARTIFACTS` or `./artifacts`);
+    /// load/compile failures come back as [`VdtError::Runtime`].
+    pub fn build_boxed(self) -> Result<Box<dyn TransitionOp>, VdtError> {
+        if self.spec.backend != Backend::ExactXla {
+            return Ok(Box::new(self.build()?));
+        }
+        self.validate()?;
+        let ModelBuilder { x, spec } = self;
+        let rt = Runtime::load_default().map_err(|e| VdtError::Runtime(e.to_string()))?;
+        let mut m = XlaExactModel::build(x, spec.sigma, Rc::new(rt))
+            .map_err(|e| VdtError::Runtime(e.to_string()))?;
+        if let Some(p) = spec.provenance {
+            m.set_provenance(p);
+        }
+        Ok(Box::new(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn builder_vdt_matches_direct_entry_point() {
+        let ds = synthetic::two_moons(60, 0.08, 4);
+        let built = ModelBuilder::from_dataset(&ds).k(4).build().unwrap();
+        let mut direct = VdtModel::build(&ds.x, &VdtConfig::default());
+        direct.refine_to(4 * 60);
+        let y = Matrix::from_fn(60, 2, |r, c| ((r * 3 + c) % 7) as f32 - 3.0);
+        assert_eq!(built.matvec(&y).data, direct.matvec(&y).data, "builder drifted");
+        let card = built.card();
+        assert_eq!(card.backend, Backend::Vdt);
+        assert_eq!(card.provenance.as_deref(), Some(ds.name.as_str()));
+    }
+
+    #[test]
+    fn invalid_specs_are_typed_errors_not_panics() {
+        let ds = synthetic::two_moons(30, 0.08, 1);
+        // k = 0
+        let err = ModelBuilder::new(&ds.x).k(0).build().unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+        // kNN k too large
+        let err = ModelBuilder::new(&ds.x).backend(Backend::Knn).k(30).build().unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+        // non-positive sigma
+        let err = ModelBuilder::new(&ds.x).sigma(0.0).build().unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+        // out-of-domain data for KL (moons has negative coordinates)
+        let err = ModelBuilder::new(&ds.x).divergence(DivergenceKind::Kl).build().unwrap_err();
+        assert!(matches!(err, VdtError::Domain { divergence: "kl", .. }), "{err}");
+        // exact-xla under a non-Euclidean geometry
+        let err = ModelBuilder::new(&ds.x)
+            .backend(Backend::ExactXla)
+            .divergence(DivergenceKind::Mahalanobis(None))
+            .build_boxed()
+            .unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+        // mismatched explicit Mahalanobis weights
+        let err = ModelBuilder::new(&ds.x)
+            .divergence(DivergenceKind::Mahalanobis(Some(vec![1.0; 5])))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+        // tiny data
+        let one = Matrix::from_fn(1, 2, |_, _| 0.5);
+        let err = ModelBuilder::new(&one).build().unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+    }
+
+    #[test]
+    fn exact_xla_in_any_model_is_a_typed_unsupported() {
+        let ds = synthetic::two_moons(20, 0.08, 2);
+        let err = ModelBuilder::new(&ds.x).backend(Backend::ExactXla).build().unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+    }
+}

@@ -12,4 +12,10 @@
 
 pub mod service;
 
-pub use service::{Coordinator, CoordinatorHandle, ModelInfo, Request, Response};
+pub use service::{Coordinator, CoordinatorHandle, Request, Response, SharedOp};
+
+// Deprecated path: `ModelInfo` is now the structured
+// `core::op::ModelCard`; this re-export keeps old imports compiling for
+// one release of warning.
+#[allow(deprecated)]
+pub use service::ModelInfo;

@@ -18,22 +18,20 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
+use crate::core::error::VdtError;
 use crate::core::Matrix;
-use crate::labelprop::{self, LpConfig, TransitionOp};
+use crate::core::op::{AnyModel, ModelCard, TransitionOp};
+use crate::labelprop::{self, LpConfig};
 
 /// Shared, thread-safe transition operator.
 pub type SharedOp = Arc<dyn TransitionOp + Send + Sync>;
 
-/// Metadata reported by [`CoordinatorHandle::list_models`].
-#[derive(Clone, Debug)]
-pub struct ModelInfo {
-    pub name: String,
-    pub backend: String,
-    /// Bregman geometry the model was fitted under (see
-    /// [`crate::core::divergence`]).
-    pub divergence: String,
-    pub n: usize,
-}
+/// Deprecated alias for [`ModelCard`]: the coordinator now reports the
+/// structured card (typed [`crate::core::op::Backend`], parameter count,
+/// σ, provenance) instead of the old string triple. The field names
+/// `name`/`divergence`/`n` carry over; `backend` is now an enum.
+#[deprecated(note = "use core::op::ModelCard — list_models() now returns structured cards")]
+pub type ModelInfo = ModelCard;
 
 /// Requests accepted by the coordinator.
 pub enum Request {
@@ -45,18 +43,19 @@ pub enum Request {
     LabelProp { model: String, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
     /// Top-m Ritz values via Arnoldi.
     Spectral { model: String, m: usize, resp: mpsc::Sender<Response> },
-    ListModels { resp: mpsc::Sender<Vec<ModelInfo>> },
+    /// Structured cards of every registered model, name-sorted.
+    ListModels { resp: mpsc::Sender<Vec<ModelCard>> },
     /// Counters: (requests served, matvec columns fused, batches run).
     Stats { resp: mpsc::Sender<(u64, u64, u64)> },
     Shutdown,
 }
 
-/// Responses.
+/// Responses. Errors are the typed [`VdtError`], never a bare string.
 #[derive(Debug)]
 pub enum Response {
     Matrix(Matrix),
     Eigenvalues(Vec<(f64, f64)>),
-    Error(String),
+    Error(VdtError),
 }
 
 /// Clonable client handle. All calls are synchronous; concurrency comes
@@ -72,16 +71,16 @@ impl CoordinatorHandle {
         let _ = self.tx.send(Request::Register { name: name.into(), op });
     }
 
-    /// Warm-start path: load a fitted [`crate::vdt::VdtModel`] from a
-    /// `runtime::snapshot` file and register it under `name` — no refit,
-    /// so a multi-model coordinator comes up in milliseconds. Returns the
-    /// model size N on success.
+    /// Warm-start path: load a fitted model from a `runtime::snapshot`
+    /// file (any backend [`AnyModel::load`] understands) and register it
+    /// under `name` — no refit, so a multi-model coordinator comes up in
+    /// milliseconds. Returns the model size N on success.
     pub fn register_snapshot(
         &self,
         name: impl Into<String>,
         path: &std::path::Path,
-    ) -> Result<usize, String> {
-        let model = crate::vdt::VdtModel::load(path).map_err(|e| e.to_string())?;
+    ) -> Result<usize, VdtError> {
+        let model = AnyModel::load(path)?;
         let n = model.n();
         self.register(name, Arc::new(model));
         Ok(n)
@@ -90,23 +89,26 @@ impl CoordinatorHandle {
     fn roundtrip(
         &self,
         make: impl FnOnce(mpsc::Sender<Response>) -> Request,
-    ) -> Result<Response, String> {
+    ) -> Result<Response, VdtError> {
+        fn gone(what: &str) -> VdtError {
+            VdtError::ServiceUnavailable(what.to_string())
+        }
         let (tx, rx) = mpsc::channel();
         self.inflight.fetch_add(1, Ordering::SeqCst);
         let sent = self.tx.send(make(tx));
         let out = match sent {
-            Err(_) => Err("coordinator down".to_string()),
-            Ok(()) => rx.recv().map_err(|_| "dropped".to_string()),
+            Err(_) => Err(gone("coordinator is shut down")),
+            Ok(()) => rx.recv().map_err(|_| gone("reply channel dropped")),
         };
         self.inflight.fetch_sub(1, Ordering::SeqCst);
         out
     }
 
-    pub fn matvec(&self, model: impl Into<String>, y: Matrix) -> Result<Matrix, String> {
+    pub fn matvec(&self, model: impl Into<String>, y: Matrix) -> Result<Matrix, VdtError> {
         match self.roundtrip(|resp| Request::Matvec { model: model.into(), y, resp })? {
             Response::Matrix(m) => Ok(m),
             Response::Error(e) => Err(e),
-            other => Err(format!("unexpected response {other:?}")),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
         }
     }
 
@@ -115,23 +117,29 @@ impl CoordinatorHandle {
         model: impl Into<String>,
         y0: Matrix,
         cfg: LpConfig,
-    ) -> Result<Matrix, String> {
+    ) -> Result<Matrix, VdtError> {
         match self.roundtrip(|resp| Request::LabelProp { model: model.into(), y0, cfg, resp })? {
             Response::Matrix(m) => Ok(m),
             Response::Error(e) => Err(e),
-            other => Err(format!("unexpected response {other:?}")),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
         }
     }
 
-    pub fn spectral(&self, model: impl Into<String>, m: usize) -> Result<Vec<(f64, f64)>, String> {
+    pub fn spectral(
+        &self,
+        model: impl Into<String>,
+        m: usize,
+    ) -> Result<Vec<(f64, f64)>, VdtError> {
         match self.roundtrip(|resp| Request::Spectral { model: model.into(), m, resp })? {
             Response::Eigenvalues(e) => Ok(e),
             Response::Error(e) => Err(e),
-            other => Err(format!("unexpected response {other:?}")),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
         }
     }
 
-    pub fn list_models(&self) -> Vec<ModelInfo> {
+    /// Structured cards of every registered model (name-sorted; each
+    /// card's `name` is the registration key).
+    pub fn list_models(&self) -> Vec<ModelCard> {
         let (tx, rx) = mpsc::channel();
         if self.tx.send(Request::ListModels { resp: tx }).is_err() {
             return Vec::new();
@@ -266,14 +274,14 @@ impl Coordinator {
                         match models.get(&model) {
                             None => {
                                 let _ = resp
-                                    .send(Response::Error(format!("unknown model {model}")));
+                                    .send(Response::Error(VdtError::UnknownModel(model)));
                             }
                             Some(op) if y0.rows != op.n() => {
-                                let _ = resp.send(Response::Error(format!(
-                                    "Y0 rows {} != N {}",
-                                    y0.rows,
-                                    op.n()
-                                )));
+                                let _ = resp.send(Response::Error(VdtError::ShapeMismatch {
+                                    what: "Y0",
+                                    expected: op.n(),
+                                    got: y0.rows,
+                                }));
                             }
                             Some(op) => {
                                 work.push(Work::LabelProp { op: op.clone(), y0, cfg, resp });
@@ -285,22 +293,22 @@ impl Coordinator {
                         match models.get(&model) {
                             None => {
                                 let _ = resp
-                                    .send(Response::Error(format!("unknown model {model}")));
+                                    .send(Response::Error(VdtError::UnknownModel(model)));
                             }
                             Some(op) => work.push(Work::Spectral { op: op.clone(), m, resp }),
                         }
                     }
                     Request::ListModels { resp } => {
-                        let infos = models
+                        let mut cards: Vec<ModelCard> = models
                             .iter()
-                            .map(|(name, op)| ModelInfo {
-                                name: name.clone(),
-                                backend: op.name().to_string(),
-                                divergence: op.divergence().to_string(),
-                                n: op.n(),
+                            .map(|(name, op)| {
+                                let mut card = op.card();
+                                card.name = name.clone();
+                                card
                             })
                             .collect();
-                        let _ = resp.send(infos);
+                        cards.sort_by_key(|c| c.name.clone());
+                        let _ = resp.send(cards);
                     }
                     Request::Stats { resp } => {
                         let _ = resp.send((served, fused_cols, batches));
@@ -319,7 +327,8 @@ impl Coordinator {
                     Some(op) => op.clone(),
                     None => {
                         for (_, resp) in group {
-                            let _ = resp.send(Response::Error(format!("unknown model {model}")));
+                            let _ = resp
+                                .send(Response::Error(VdtError::UnknownModel(model.clone())));
                         }
                         continue;
                     }
@@ -334,7 +343,11 @@ impl Coordinator {
                     }
                 }
                 for (y, resp) in bad {
-                    let _ = resp.send(Response::Error(format!("Y rows {} != N {}", y.rows, n)));
+                    let _ = resp.send(Response::Error(VdtError::ShapeMismatch {
+                        what: "Y",
+                        expected: n,
+                        got: y.rows,
+                    }));
                 }
                 if ok.is_empty() {
                     continue;
@@ -413,12 +426,15 @@ mod tests {
         assert_eq!(got.data, want.data, "warm-started serving drifted from the fit");
         let infos = handle.list_models();
         assert_eq!(infos.len(), 1);
-        assert_eq!(infos[0].backend, "variational-dt");
-        // a missing file is a clean error, not a panic
+        assert_eq!(infos[0].backend, crate::core::op::Backend::Vdt);
+        // snapshot meta_name round-trips into the served card's provenance
+        assert_eq!(infos[0].provenance.as_deref(), Some(ds.name.as_str()));
+        // a missing file is a clean typed error, not a panic
         let err = handle
             .register_snapshot("nope", std::path::Path::new("/no/such/model.vdt"))
             .unwrap_err();
-        assert!(err.contains("model.vdt"), "{err}");
+        assert!(matches!(err, crate::core::VdtError::Snapshot(_)), "{err}");
+        assert!(err.to_string().contains("model.vdt"), "{err}");
         handle.shutdown();
         std::fs::remove_file(&path).ok();
     }
@@ -427,7 +443,8 @@ mod tests {
     fn unknown_model_errors() {
         let handle = Coordinator::spawn();
         let err = handle.matvec("nope", Matrix::zeros(4, 1)).unwrap_err();
-        assert!(err.contains("unknown model"));
+        assert!(matches!(&err, crate::core::VdtError::UnknownModel(name) if name == "nope"));
+        assert!(err.to_string().contains("unknown model"));
         handle.shutdown();
     }
 
@@ -437,7 +454,10 @@ mod tests {
         let (op, _) = model(30, 2);
         handle.register("m", op);
         let err = handle.matvec("m", Matrix::zeros(7, 1)).unwrap_err();
-        assert!(err.contains("rows"));
+        assert!(matches!(
+            err,
+            crate::core::VdtError::ShapeMismatch { expected: 30, got: 7, .. }
+        ));
         handle.shutdown();
     }
 
@@ -493,9 +513,12 @@ mod tests {
         // it observes the registration
         let infos = handle.list_models();
         assert_eq!(infos.len(), 1);
-        assert_eq!(infos[0].backend, "variational-dt");
+        assert_eq!(infos[0].name, "a");
+        assert_eq!(infos[0].backend, crate::core::op::Backend::Vdt);
+        assert_eq!(infos[0].backend.label(), "variational-dt");
         assert_eq!(infos[0].divergence, "sq_euclidean");
         assert_eq!(infos[0].n, 20);
+        assert!(infos[0].params >= 2 * (20 - 1), "card should report |B|");
         handle.shutdown();
     }
 

@@ -1,0 +1,112 @@
+//! [`VdtError`] — the one typed error enum of the public build/serve
+//! surface.
+//!
+//! Everything a *user* can get wrong — an out-of-domain dataset for the
+//! chosen divergence, a nonsensical spec, an unsupported backend
+//! combination, a wrong-shape request, an unknown model name, a corrupt
+//! snapshot — comes back as a variant of this enum instead of a `String`,
+//! a `panic!`, or an `anyhow` blob. Internal invariant violations (bugs)
+//! still panic; this type is for input errors a caller is expected to
+//! handle.
+//!
+//! The enum is `Send + Sync` so the coordinator can carry it across its
+//! reply channels, and it implements [`std::error::Error`] so `?` works in
+//! `anyhow`-returning binaries (the vendored shim's blanket conversion
+//! picks it up).
+
+use std::fmt;
+
+/// Typed error for the model build / serve surface. See the module docs.
+#[derive(Debug)]
+pub enum VdtError {
+    /// A build parameter is out of range or inconsistent (`k = 0`, empty
+    /// dataset, non-positive `sigma`, mismatched Mahalanobis weights, …).
+    InvalidSpec(String),
+    /// A dataset row violates the domain of the selected divergence
+    /// (e.g. negative coordinates under KL).
+    Domain {
+        /// Stable divergence identifier ([`crate::core::divergence`]).
+        divergence: &'static str,
+        /// First offending row.
+        row: usize,
+        /// What the domain check rejected.
+        reason: String,
+    },
+    /// The requested backend × divergence × deployment combination is not
+    /// supported (e.g. `exact-xla` under a non-Euclidean divergence, or
+    /// snapshotting a backend without a persistence format).
+    Unsupported(String),
+    /// An operand's shape disagrees with the operator (`Y.rows != N`).
+    ShapeMismatch {
+        /// What was mis-shaped (e.g. `"Y"`, `"Y0"`).
+        what: &'static str,
+        /// Rows the operator expects (its N).
+        expected: usize,
+        /// Rows actually provided.
+        got: usize,
+    },
+    /// The coordinator has no model registered under this name.
+    UnknownModel(String),
+    /// A model snapshot failed to read, decode, validate, or write.
+    Snapshot(String),
+    /// The XLA/PJRT runtime is unavailable or failed (artifact path).
+    Runtime(String),
+    /// The coordinator is shut down or dropped the reply channel.
+    ServiceUnavailable(String),
+    /// Protocol-level surprise (e.g. a response of the wrong kind) — a
+    /// bug if it ever surfaces, reported instead of panicking a client.
+    Internal(String),
+}
+
+impl fmt::Display for VdtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VdtError::InvalidSpec(m) => write!(f, "invalid model spec: {m}"),
+            VdtError::Domain { divergence, row, reason } => write!(
+                f,
+                "dataset is outside the {divergence} domain (row {row}: {reason}); \
+                 pick a compatible dataset/divergence pair"
+            ),
+            VdtError::Unsupported(m) => write!(f, "unsupported configuration: {m}"),
+            VdtError::ShapeMismatch { what, expected, got } => write!(
+                f,
+                "shape mismatch: {what} has {got} rows but the operator expects N = {expected}"
+            ),
+            VdtError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            VdtError::Snapshot(m) => write!(f, "snapshot error: {m}"),
+            VdtError::Runtime(m) => write!(f, "XLA runtime error: {m}"),
+            VdtError::ServiceUnavailable(m) => write!(f, "coordinator unavailable: {m}"),
+            VdtError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for VdtError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = VdtError::Domain {
+            divergence: "kl",
+            row: 3,
+            reason: "KL domain violated at coord 0: -1".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("kl") && s.contains("row 3"), "{s}");
+
+        let e = VdtError::ShapeMismatch { what: "Y", expected: 10, got: 7 };
+        assert!(e.to_string().contains("rows"), "{e}");
+
+        let e = VdtError::UnknownModel("nope".into());
+        assert!(e.to_string().contains("unknown model"), "{e}");
+    }
+
+    #[test]
+    fn error_is_send_sync_and_std_error() {
+        fn assert_bounds<T: std::error::Error + Send + Sync + 'static>() {}
+        assert_bounds::<VdtError>();
+    }
+}

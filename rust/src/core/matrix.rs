@@ -60,8 +60,23 @@ impl Matrix {
     /// `self @ other` — naive triple loop with row-major streaming; used by
     /// the pure-Rust exact fallback and tests (N is small there).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// `out = self · other`, reusing a caller-owned buffer (the
+    /// allocation-free serving primitive behind
+    /// [`crate::core::op::TransitionOp::matvec_into`]). `out` is fully
+    /// overwritten; it must be pre-sized to `self.rows × other.cols`.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, other.cols),
+            "matmul output shape mismatch"
+        );
+        out.data.fill(0.0);
         for i in 0..self.rows {
             let a_row = self.row(i);
             let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
@@ -75,7 +90,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// Elementwise `self = a*self + b*other`. Large matrices split over

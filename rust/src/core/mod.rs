@@ -1,12 +1,16 @@
-//! Core substrates: dense row-major matrices, vector math, metrics/timing,
-//! a seedable RNG, the bench harness, and the [`par`] data-parallel
-//! execution layer (this is an offline build — no external crates beyond
-//! the vendored `xla`/`anyhow` stand-ins, so these are all in-tree).
+//! Core substrates: the [`op`] transition-operator layer (the crate's
+//! central abstraction) and its typed [`error`] enum, dense row-major
+//! matrices, vector math, metrics/timing, a seedable RNG, the bench
+//! harness, and the [`par`] data-parallel execution layer (this is an
+//! offline build — no external crates beyond the vendored `xla`/`anyhow`
+//! stand-ins, so these are all in-tree).
 
 pub mod bench;
 pub mod divergence;
+pub mod error;
 pub mod matrix;
 pub mod metrics;
+pub mod op;
 pub mod par;
 pub mod rng;
 pub mod vecmath;
@@ -14,6 +18,8 @@ pub mod vecmath;
 pub use divergence::{
     DiagMahalanobis, Divergence, DivergenceKind, ItakuraSaito, KlSimplex, NodeStats, SqEuclidean,
 };
+pub use error::VdtError;
 pub use matrix::Matrix;
 pub use metrics::{Stats, Timer};
+pub use op::{AnyModel, Backend, ModelCard, TransitionOp};
 pub use rng::Rng;

@@ -1,0 +1,381 @@
+//! The first-class transition-operator layer — the crate's central
+//! abstraction.
+//!
+//! The paper's pipeline only ever needs one thing from a model: a fast
+//! row-stochastic multiply `Ŷ = P·Y` (label propagation Eq. 15, Arnoldi /
+//! subspace spectral inference, link analysis). [`TransitionOp`] is that
+//! interface; every backend — the variational dual-tree `Q` of §4
+//! ([`crate::vdt::VdtModel`]), the fast-kNN baseline
+//! ([`crate::knn::KnnGraph`]), and the exact Eq. 3 matrix
+//! ([`crate::exact::ExactModel`], optionally XLA-accelerated via
+//! [`crate::exact::XlaExactModel`]) — implements it, so everything
+//! downstream is backend-agnostic.
+//!
+//! Around the trait this module provides:
+//!
+//! - [`Backend`] — the closed set of in-tree backend kinds, with the CLI
+//!   token / display-label mappings in one place.
+//! - [`ModelCard`] — structured model metadata (backend kind, divergence,
+//!   N, parameter count, bandwidth, dataset provenance) replacing the
+//!   stringly-typed `ModelInfo` the coordinator used to report.
+//! - [`AnyModel`] — a `Send + Sync` enum over the serving-grade backends,
+//!   so registries and snapshots can hold *any* backend, not just VDT.
+//!
+//! Construction goes through [`crate::api::ModelBuilder`]; errors through
+//! [`crate::core::error::VdtError`]. The trait used to live at
+//! `labelprop::TransitionOp` — a re-export remains there (deprecated) for
+//! one release of warning.
+
+use std::path::Path;
+
+use super::error::VdtError;
+use super::matrix::Matrix;
+
+/// The closed set of transition-matrix backends this crate ships.
+///
+/// `token()` is the CLI/config spelling (`--method`), `label()` the
+/// human-readable name used in logs and reports (kept identical to the
+/// historical `TransitionOp::name()` strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Variational dual-tree Q (paper §4) — `O(|B|)` memory and matvec.
+    Vdt,
+    /// Fast-kNN sparse baseline (paper §5.1) — `kN` parameters.
+    Knn,
+    /// Exact dense Eq. 3 matrix — `O(N²)`, pure Rust.
+    Exact,
+    /// Exact dense matrix executed through the AOT XLA artifacts.
+    ExactXla,
+    /// An out-of-tree operator (third-party [`TransitionOp`] impls).
+    Custom(&'static str),
+}
+
+impl Backend {
+    /// Parse a CLI/config token (`vdt` | `knn` | `exact` | `exact-xla`).
+    pub fn parse(s: &str) -> Result<Backend, VdtError> {
+        match s.to_ascii_lowercase().as_str() {
+            "vdt" => Ok(Backend::Vdt),
+            "knn" => Ok(Backend::Knn),
+            "exact" => Ok(Backend::Exact),
+            "exact-xla" | "exact_xla" | "xla" => Ok(Backend::ExactXla),
+            other => Err(VdtError::InvalidSpec(format!(
+                "unknown method {other}; expected vdt|knn|exact|exact-xla"
+            ))),
+        }
+    }
+
+    /// The canonical CLI/config token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Backend::Vdt => "vdt",
+            Backend::Knn => "knn",
+            Backend::Exact => "exact",
+            Backend::ExactXla => "exact-xla",
+            Backend::Custom(s) => s,
+        }
+    }
+
+    /// Human-readable backend label for logs and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Vdt => "variational-dt",
+            Backend::Knn => "fast-knn",
+            Backend::Exact => "exact-dense",
+            Backend::ExactXla => "exact-xla",
+            Backend::Custom(s) => s,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Structured metadata for a fitted transition operator.
+///
+/// Replaces the ad-hoc string triple the coordinator's old `ModelInfo`
+/// carried: the backend is the typed [`Backend`] enum, and the card also
+/// records the parameter count (the paper's `|B|` / `kN` / `N(N−1)`), the
+/// fitted bandwidth, and dataset provenance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCard {
+    /// Registry/serving name. Empty until the model is registered with a
+    /// coordinator (which fills it with the registration key).
+    pub name: String,
+    /// Which backend realizes the operator.
+    pub backend: Backend,
+    /// Stable identifier of the Bregman geometry the model was fitted
+    /// under (see [`crate::core::divergence`]).
+    pub divergence: String,
+    /// Number of data points N (rows/cols of the operator).
+    pub n: usize,
+    /// Stored parameters: `|B|` blocks (vdt), nonzero edges (knn), or
+    /// dense entries (exact).
+    pub params: usize,
+    /// Learned or fixed kernel bandwidth σ, when the backend has one.
+    pub sigma: Option<f64>,
+    /// What the model was fitted on (dataset name recorded at build /
+    /// snapshot-save time), when known.
+    pub provenance: Option<String>,
+}
+
+impl ModelCard {
+    /// Card for an anonymous out-of-tree operator (the trait default).
+    pub fn custom(label: &'static str, n: usize) -> ModelCard {
+        ModelCard {
+            name: String::new(),
+            backend: Backend::Custom(label),
+            divergence: "sq_euclidean".to_string(),
+            n,
+            params: 0,
+            sigma: None,
+            provenance: None,
+        }
+    }
+
+    /// One-line rendering for logs / the CLI (the registration name is
+    /// omitted while the card is unregistered).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        if !self.name.is_empty() {
+            s.push_str(&self.name);
+            s.push(' ');
+        }
+        s.push_str(&format!(
+            "backend={} divergence={} N={} params={}",
+            self.backend, self.divergence, self.n, self.params
+        ));
+        if let Some(sig) = self.sigma {
+            s.push_str(&format!(" sigma={sig:.4}"));
+        }
+        if let Some(p) = &self.provenance {
+            s.push_str(&format!(" fitted-on={p}"));
+        }
+        s
+    }
+}
+
+/// Anything that can multiply a dense N×C matrix by its (approximate)
+/// transition matrix — the single interface label propagation, link
+/// analysis and the Arnoldi/subspace iterations need.
+///
+/// `matvec_into` is the primitive (allocation-free serving: steady-state
+/// request loops reuse one output buffer); `matvec` is the allocating
+/// convenience, and [`TransitionOp::card`] reports structured metadata.
+pub trait TransitionOp {
+    /// Number of data points N (rows/cols of the operator).
+    fn n(&self) -> usize;
+
+    /// Ŷ = P·Y (or Q·Y), written into `out`.
+    ///
+    /// `out` must be pre-sized to `n() × y.cols`; every entry is
+    /// overwritten (callers need not zero it). Shape violations are
+    /// programming errors and panic — user-facing request paths validate
+    /// shapes first and report [`VdtError::ShapeMismatch`].
+    fn matvec_into(&self, y: &Matrix, out: &mut Matrix);
+
+    /// Ŷ = P·Y, allocating the output.
+    fn matvec(&self, y: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.n(), y.cols);
+        self.matvec_into(y, &mut out);
+        out
+    }
+
+    /// Structured metadata: backend kind, divergence, size, parameter
+    /// count, bandwidth, provenance.
+    fn card(&self) -> ModelCard {
+        ModelCard::custom("op", self.n())
+    }
+}
+
+/// A fitted model of any serving-grade backend, as one `Send + Sync`
+/// value — what [`crate::api::ModelBuilder::build`] returns and what
+/// snapshot loading produces, so registries (the coordinator) and
+/// persistence can handle every backend uniformly.
+///
+/// [`crate::exact::XlaExactModel`] is deliberately *not* a variant: it
+/// owns a thread-local PJRT runtime (`!Send`), so it is built via
+/// [`crate::api::ModelBuilder::build_boxed`] and served single-threaded.
+pub enum AnyModel {
+    /// Variational dual-tree model (paper §4).
+    Vdt(crate::vdt::VdtModel),
+    /// Fast-kNN sparse graph (paper §5.1).
+    Knn(crate::knn::KnnGraph),
+    /// Exact dense Eq. 3 matrix (pure Rust).
+    Exact(crate::exact::ExactModel),
+}
+
+impl AnyModel {
+    /// Which backend this model is.
+    pub fn backend(&self) -> Backend {
+        match self {
+            AnyModel::Vdt(_) => Backend::Vdt,
+            AnyModel::Knn(_) => Backend::Knn,
+            AnyModel::Exact(_) => Backend::Exact,
+        }
+    }
+
+    /// Number of data points N.
+    pub fn n(&self) -> usize {
+        self.as_op().n()
+    }
+
+    /// Ŷ = P·Y (allocating).
+    pub fn matvec(&self, y: &Matrix) -> Matrix {
+        self.as_op().matvec(y)
+    }
+
+    /// Ŷ = P·Y into a caller-owned buffer (allocation-free serving).
+    pub fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.as_op().matvec_into(y, out);
+    }
+
+    /// Structured metadata card.
+    pub fn card(&self) -> ModelCard {
+        self.as_op().card()
+    }
+
+    /// Borrow as a dynamic operator (what the delegations above use).
+    pub fn as_op(&self) -> &dyn TransitionOp {
+        match self {
+            AnyModel::Vdt(m) => m,
+            AnyModel::Knn(m) => m,
+            AnyModel::Exact(m) => m,
+        }
+    }
+
+    /// Downcast accessors for backend-specific APIs (refinement, ℓ(D),
+    /// memory accounting, …).
+    pub fn as_vdt(&self) -> Option<&crate::vdt::VdtModel> {
+        match self {
+            AnyModel::Vdt(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Mutable VDT access (e.g. further [`crate::vdt::VdtModel::refine_to`]).
+    pub fn as_vdt_mut(&mut self) -> Option<&mut crate::vdt::VdtModel> {
+        match self {
+            AnyModel::Vdt(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_knn(&self) -> Option<&crate::knn::KnnGraph> {
+        match self {
+            AnyModel::Knn(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_exact(&self) -> Option<&crate::exact::ExactModel> {
+        match self {
+            AnyModel::Exact(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Persist the model as a versioned binary snapshot (see
+    /// [`crate::runtime::snapshot`]). `meta_name` records dataset
+    /// provenance in the file. Currently only the VDT backend has a
+    /// snapshot format; other backends return
+    /// [`VdtError::Unsupported`] — typed, so callers can fall back to
+    /// refitting.
+    pub fn save(&self, path: &Path, meta_name: &str) -> Result<(), VdtError> {
+        match self {
+            AnyModel::Vdt(m) => {
+                m.save(path, meta_name).map_err(|e| VdtError::Snapshot(e.to_string()))
+            }
+            other => Err(VdtError::Unsupported(format!(
+                "{} models have no snapshot format yet; only vdt snapshots are supported",
+                other.backend()
+            ))),
+        }
+    }
+
+    /// Load a model snapshot. This is the single format-dispatch point:
+    /// today every snapshot file is a VDT model (magic `VDTSNAP\0`);
+    /// future backend formats plug in here without touching callers.
+    pub fn load(path: &Path) -> Result<AnyModel, VdtError> {
+        let m = crate::vdt::VdtModel::load(path).map_err(|e| VdtError::Snapshot(e.to_string()))?;
+        Ok(AnyModel::Vdt(m))
+    }
+}
+
+impl TransitionOp for AnyModel {
+    fn n(&self) -> usize {
+        self.as_op().n()
+    }
+    fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.as_op().matvec_into(y, out);
+    }
+    fn matvec(&self, y: &Matrix) -> Matrix {
+        self.as_op().matvec(y)
+    }
+    fn card(&self) -> ModelCard {
+        self.as_op().card()
+    }
+}
+
+impl From<crate::vdt::VdtModel> for AnyModel {
+    fn from(m: crate::vdt::VdtModel) -> AnyModel {
+        AnyModel::Vdt(m)
+    }
+}
+
+impl From<crate::knn::KnnGraph> for AnyModel {
+    fn from(m: crate::knn::KnnGraph) -> AnyModel {
+        AnyModel::Knn(m)
+    }
+}
+
+impl From<crate::exact::ExactModel> for AnyModel {
+    fn from(m: crate::exact::ExactModel) -> AnyModel {
+        AnyModel::Exact(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_token_label_roundtrip() {
+        for b in [Backend::Vdt, Backend::Knn, Backend::Exact, Backend::ExactXla] {
+            assert_eq!(Backend::parse(b.token()).unwrap(), b);
+        }
+        assert_eq!(Backend::Vdt.label(), "variational-dt");
+        assert_eq!(Backend::Knn.label(), "fast-knn");
+        assert_eq!(Backend::Exact.label(), "exact-dense");
+        assert_eq!(Backend::ExactXla.label(), "exact-xla");
+        assert!(matches!(Backend::parse("cosine"), Err(VdtError::InvalidSpec(_))));
+    }
+
+    #[test]
+    fn any_model_is_send_sync() {
+        fn assert_bounds<T: Send + Sync>() {}
+        assert_bounds::<AnyModel>();
+    }
+
+    #[test]
+    fn default_matvec_delegates_to_matvec_into() {
+        struct Identity(usize);
+        impl TransitionOp for Identity {
+            fn n(&self) -> usize {
+                self.0
+            }
+            fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+                out.data.copy_from_slice(&y.data);
+            }
+        }
+        let op = Identity(3);
+        let y = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(op.matvec(&y).data, y.data);
+        let card = op.card();
+        assert_eq!(card.backend, Backend::Custom("op"));
+        assert_eq!(card.n, 3);
+        assert_eq!(card.summary(), "backend=op divergence=sq_euclidean N=3 params=0");
+    }
+}

@@ -2,12 +2,14 @@
 //! O(N²) construction, memory and multiplication (paper Table 1).
 //!
 //! Two interchangeable backends:
-//! - [`dense`]: pure Rust (the semantic reference; mirrors
-//!   `python/compile/kernels/ref.py`).
-//! - XLA: the AOT Pallas/JAX artifacts executed via [`crate::runtime`] —
-//!   the L1/L2 compute path. [`ExactModel::build_xla`] keeps P in padded
+//! - [`ExactModel`] ([`dense`] underneath): pure Rust (the semantic
+//!   reference; mirrors `python/compile/kernels/ref.py`). `Send + Sync`,
+//!   so it slots into [`crate::core::op::AnyModel`] and the coordinator.
+//! - [`XlaExactModel`]: the AOT Pallas/JAX artifacts executed via
+//!   [`crate::runtime`] — the L1/L2 compute path. P is kept in padded
 //!   form so LP chunks and matvecs run entirely inside compiled XLA
-//!   programs.
+//!   programs. It owns a thread-local PJRT runtime (`!Send` by design),
+//!   so it is served single-threaded and stays outside `AnyModel`.
 
 pub mod dense;
 
@@ -16,20 +18,18 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use crate::core::Matrix;
-use crate::labelprop::TransitionOp;
+use crate::core::op::{Backend, ModelCard, TransitionOp};
 use crate::runtime::Runtime;
 
-/// Dense exact transition model.
+/// Dense exact transition model (pure Rust).
 pub struct ExactModel {
-    /// Unpadded N×N row-stochastic P.
+    /// N×N row-stochastic P.
     pub p: Matrix,
     sigma: f64,
-    /// XLA execution state: runtime + padded P (kept padded so the
-    /// lp_chunk/matvec artifacts can be dispatched without re-padding).
-    xla: Option<(Rc<Runtime>, Matrix)>,
-    backend: &'static str,
     /// Geometry name for registry listings.
     div_name: &'static str,
+    /// Dataset the model was fitted on (for [`ModelCard::provenance`]).
+    provenance: Option<String>,
 }
 
 impl ExactModel {
@@ -39,7 +39,7 @@ impl ExactModel {
         let d2 = dense::pairwise_sq_dists(x);
         let sigma = sigma.unwrap_or_else(|| dense::fit_sigma(&d2, x.cols, 1e-6, 100));
         let p = dense::transition_from_d2(&d2, sigma);
-        ExactModel { p, sigma, xla: None, backend: "exact-dense", div_name: "sq_euclidean" }
+        ExactModel { p, sigma, div_name: "sq_euclidean", provenance: None }
     }
 
     /// Pure-Rust build under an arbitrary Bregman geometry: pairwise
@@ -59,27 +59,7 @@ impl ExactModel {
         let d2 = dense::pairwise_divergences(x, div.as_ref());
         let sigma = sigma.unwrap_or_else(|| dense::fit_sigma(&d2, x.cols, 1e-6, 100));
         let p = dense::transition_from_d2(&d2, sigma);
-        ExactModel { p, sigma, xla: None, backend: "exact-dense", div_name: div.name() }
-    }
-
-    /// XLA build: P computed by the AOT transition artifact (Pallas kernel
-    /// inside), σ fitted on the Rust side first (cheap relative to the
-    /// O(N²·d) kernel evaluation, and identical math).
-    pub fn build_xla(x: &Matrix, sigma: Option<f64>, rt: Rc<Runtime>) -> Result<ExactModel> {
-        let sigma = sigma.unwrap_or_else(|| {
-            let d2 = dense::pairwise_sq_dists(x);
-            dense::fit_sigma(&d2, x.cols, 1e-6, 100)
-        });
-        let (p_padded, n_pad) = rt.transition_padded(x, sigma as f32)?;
-        let p = p_padded.sliced(x.rows, x.rows);
-        let _ = n_pad;
-        Ok(ExactModel {
-            p,
-            sigma,
-            xla: Some((rt, p_padded)),
-            backend: "exact-xla",
-            div_name: "sq_euclidean",
-        })
+        ExactModel { p, sigma, div_name: div.name(), provenance: None }
     }
 
     #[inline]
@@ -87,37 +67,28 @@ impl ExactModel {
         self.sigma
     }
 
-    /// Label propagation T steps via the XLA lp_chunk artifact when
-    /// available (⌈T/steps_per_chunk⌉ dispatches), dense loop otherwise.
+    /// Record what the model was fitted on (shown in the [`ModelCard`];
+    /// the builder sets this from the dataset name).
+    pub fn set_provenance(&mut self, name: impl Into<String>) {
+        self.provenance = Some(name.into());
+    }
+
+    /// Dataset provenance, when recorded.
+    pub fn provenance(&self) -> Option<&str> {
+        self.provenance.as_deref()
+    }
+
+    /// Label propagation T steps with the dense loop. (Kept `Result` for
+    /// signature parity with [`XlaExactModel::lp_run`]; the dense path
+    /// itself cannot fail.)
     pub fn lp_run(&self, y0: &Matrix, alpha: f32, steps: usize) -> Result<Matrix> {
-        if let Some((rt, p_pad)) = &self.xla {
-            let n_pad = p_pad.rows;
-            let c_pad = rt.lp_classes();
-            assert!(y0.cols <= c_pad, "more classes than the artifact supports");
-            let y0p = y0.padded(n_pad, c_pad);
-            let mut y = y0p.clone();
-            let chunk = rt.lp_chunk_steps();
-            let full_chunks = steps / chunk;
-            for _ in 0..full_chunks {
-                y = rt.lp_chunk(p_pad, &y, &y0p, alpha)?;
-            }
-            // leftover steps (steps % chunk) done densely on the slice
-            let mut y_out = y.sliced(self.p.rows, y0.cols);
-            for _ in 0..steps % chunk {
-                let mut py = self.p.matmul(&y_out);
-                py.scale_add(alpha, 1.0 - alpha, y0);
-                y_out = py;
-            }
-            Ok(y_out)
-        } else {
-            let mut y = y0.clone();
-            for _ in 0..steps {
-                let mut py = self.p.matmul(&y);
-                py.scale_add(alpha, 1.0 - alpha, y0);
-                y = py;
-            }
-            Ok(y)
+        let mut y = y0.clone();
+        for _ in 0..steps {
+            let mut py = self.p.matmul(&y);
+            py.scale_add(alpha, 1.0 - alpha, y0);
+            y = py;
         }
+        Ok(y)
     }
 }
 
@@ -126,26 +97,119 @@ impl TransitionOp for ExactModel {
         self.p.rows
     }
 
-    fn matvec(&self, y: &Matrix) -> Matrix {
-        if let Some((rt, p_pad)) = &self.xla {
-            let c_pad = rt.lp_classes();
-            if y.cols <= c_pad {
-                let yp = y.padded(p_pad.rows, c_pad);
-                if let Ok(out) = rt.matvec(p_pad, &yp) {
-                    return out.sliced(self.p.rows, y.cols);
-                }
-            }
-            // fall through to dense on any mismatch
+    fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.p.matmul_into(y, out);
+    }
+
+    fn card(&self) -> ModelCard {
+        ModelCard {
+            name: String::new(),
+            backend: Backend::Exact,
+            divergence: self.div_name.to_string(),
+            n: self.p.rows,
+            params: self.p.rows * self.p.rows.saturating_sub(1),
+            sigma: Some(self.sigma),
+            provenance: self.provenance.clone(),
         }
-        self.p.matmul(y)
+    }
+}
+
+/// Exact dense model accelerated by the AOT XLA artifacts: P is computed
+/// by the compiled transition kernel and kept padded, so LP chunks and
+/// matvecs dispatch straight into compiled programs. Falls back to the
+/// embedded dense model on any artifact/shape mismatch.
+pub struct XlaExactModel {
+    /// The unpadded dense model — also the fallback compute path.
+    pub dense: ExactModel,
+    rt: Rc<Runtime>,
+    /// P at the artifact's padded size (kept so lp_chunk/matvec dispatch
+    /// without re-padding).
+    p_padded: Matrix,
+}
+
+impl XlaExactModel {
+    /// XLA build: P computed by the AOT transition artifact (Pallas kernel
+    /// inside), σ fitted on the Rust side first (cheap relative to the
+    /// O(N²·d) kernel evaluation, and identical math). Squared-Euclidean
+    /// geometry only — that is what the artifacts are lowered for.
+    pub fn build(x: &Matrix, sigma: Option<f64>, rt: Rc<Runtime>) -> Result<XlaExactModel> {
+        let sigma = sigma.unwrap_or_else(|| {
+            let d2 = dense::pairwise_sq_dists(x);
+            dense::fit_sigma(&d2, x.cols, 1e-6, 100)
+        });
+        let (p_padded, _n_pad) = rt.transition_padded(x, sigma as f32)?;
+        let p = p_padded.sliced(x.rows, x.rows);
+        Ok(XlaExactModel {
+            dense: ExactModel { p, sigma, div_name: "sq_euclidean", provenance: None },
+            rt,
+            p_padded,
+        })
     }
 
-    fn name(&self) -> &str {
-        self.backend
+    /// The unpadded N×N row-stochastic P.
+    #[inline]
+    pub fn p(&self) -> &Matrix {
+        &self.dense.p
     }
 
-    fn divergence(&self) -> &str {
-        self.div_name
+    #[inline]
+    pub fn sigma(&self) -> f64 {
+        self.dense.sigma
+    }
+
+    /// See [`ExactModel::set_provenance`].
+    pub fn set_provenance(&mut self, name: impl Into<String>) {
+        self.dense.set_provenance(name);
+    }
+
+    /// Label propagation T steps via the XLA lp_chunk artifact
+    /// (⌈T/steps_per_chunk⌉ dispatches), with leftover steps done densely.
+    pub fn lp_run(&self, y0: &Matrix, alpha: f32, steps: usize) -> Result<Matrix> {
+        let n_pad = self.p_padded.rows;
+        let c_pad = self.rt.lp_classes();
+        assert!(y0.cols <= c_pad, "more classes than the artifact supports");
+        let y0p = y0.padded(n_pad, c_pad);
+        let mut y = y0p.clone();
+        let chunk = self.rt.lp_chunk_steps();
+        let full_chunks = steps / chunk;
+        for _ in 0..full_chunks {
+            y = self.rt.lp_chunk(&self.p_padded, &y, &y0p, alpha)?;
+        }
+        // leftover steps (steps % chunk) done densely on the slice
+        let mut y_out = y.sliced(self.dense.p.rows, y0.cols);
+        for _ in 0..steps % chunk {
+            let mut py = self.dense.p.matmul(&y_out);
+            py.scale_add(alpha, 1.0 - alpha, y0);
+            y_out = py;
+        }
+        Ok(y_out)
+    }
+}
+
+impl TransitionOp for XlaExactModel {
+    fn n(&self) -> usize {
+        self.dense.p.rows
+    }
+
+    fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        let n = self.dense.p.rows;
+        assert_eq!((out.rows, out.cols), (n, y.cols), "output shape mismatch");
+        let c_pad = self.rt.lp_classes();
+        if y.cols <= c_pad {
+            let yp = y.padded(self.p_padded.rows, c_pad);
+            if let Ok(full) = self.rt.matvec(&self.p_padded, &yp) {
+                for r in 0..n {
+                    out.row_mut(r).copy_from_slice(&full.row(r)[..y.cols]);
+                }
+                return;
+            }
+        }
+        // fall through to dense on any mismatch
+        self.dense.p.matmul_into(y, out);
+    }
+
+    fn card(&self) -> ModelCard {
+        ModelCard { backend: Backend::ExactXla, ..self.dense.card() }
     }
 }
 
@@ -165,6 +229,9 @@ mod tests {
             assert_eq!(m.p.get(i, i), 0.0);
         }
         assert!(m.sigma() > 0.0);
+        let card = m.card();
+        assert_eq!(card.backend, Backend::Exact);
+        assert_eq!(card.params, 40 * 39);
     }
 
     #[test]
@@ -180,5 +247,16 @@ mod tests {
             &crate::labelprop::LpConfig { alpha: 0.3, steps: 23 },
         );
         assert!(via_lp_run.max_abs_diff(&via_generic) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_into_matches_matvec() {
+        let ds = synthetic::two_moons(25, 0.07, 3);
+        let m = ExactModel::build_dense(&ds.x, Some(0.4));
+        let y = Matrix::from_fn(25, 3, |r, c| ((r * 3 + c) % 5) as f32 - 2.0);
+        let want = m.matvec(&y);
+        let mut out = Matrix::from_fn(25, 3, |_, _| 7.0); // pre-filled garbage
+        m.matvec_into(&y, &mut out);
+        assert_eq!(out.data, want.data);
     }
 }

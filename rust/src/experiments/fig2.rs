@@ -9,11 +9,12 @@
 //! |B| = kN for k = 2..⌈log N⌉, with 10 and 100 labeled points.
 
 use crate::core::divergence::DivergenceKind;
+use crate::core::op::TransitionOp;
 use crate::core::{metrics::Timer, Matrix};
 use crate::data::{synthetic, Dataset};
 use crate::exact::ExactModel;
 use crate::knn::{KnnConfig, KnnGraph};
-use crate::labelprop::{self, LpConfig, TransitionOp};
+use crate::labelprop::{self, LpConfig};
 use crate::vdt::{VdtConfig, VdtModel};
 
 use super::{f, Table};

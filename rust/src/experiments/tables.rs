@@ -2,9 +2,10 @@
 //! wall-clock) reproductions.
 
 use crate::core::metrics::{loglog_slope, Timer};
+use crate::core::op::TransitionOp;
 use crate::data::synthetic;
 use crate::knn::{KnnConfig, KnnGraph};
-use crate::labelprop::{self, LpConfig, TransitionOp};
+use crate::labelprop::{self, LpConfig};
 use crate::vdt::{VdtConfig, VdtModel};
 
 use super::{f, Table};

@@ -14,7 +14,7 @@
 
 use crate::core::divergence::DivergenceKind;
 use crate::core::Matrix;
-use crate::labelprop::TransitionOp;
+use crate::core::op::{Backend, ModelCard, TransitionOp};
 use crate::sparse::Csr;
 use crate::tree::{build_tree, build_tree_with, BuildConfig, PartitionTree};
 
@@ -60,6 +60,8 @@ pub struct KnnGraph {
     tree: PartitionTree,
     x: Matrix,
     parallel: bool,
+    /// Dataset the graph was fitted on (for [`ModelCard::provenance`]).
+    provenance: Option<String>,
 }
 
 impl KnnGraph {
@@ -89,6 +91,7 @@ impl KnnGraph {
             tree,
             x: x.clone(),
             parallel: cfg.parallel,
+            provenance: None,
         };
         g.search_all(cfg.k);
         g.fit_sigma(cfg.sigma, cfg.sigma_tol, cfg.sigma_max_iters);
@@ -175,6 +178,17 @@ impl KnnGraph {
         self.sigma
     }
 
+    /// Record what the graph was fitted on (shown in the [`ModelCard`];
+    /// the builder sets this from the dataset name).
+    pub fn set_provenance(&mut self, name: impl Into<String>) {
+        self.provenance = Some(name.into());
+    }
+
+    /// Dataset provenance, when recorded.
+    pub fn provenance(&self) -> Option<&str> {
+        self.provenance.as_deref()
+    }
+
     /// Number of stored parameters (nonzero edges) — the paper's `kN`.
     pub fn num_params(&self) -> usize {
         self.p.nnz()
@@ -189,14 +203,25 @@ impl TransitionOp for KnnGraph {
     fn n(&self) -> usize {
         self.x.rows
     }
+
+    fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.p.matmul_dense_into(y, out);
+    }
+
     fn matvec(&self, y: &Matrix) -> Matrix {
         self.p.matmul_dense(y)
     }
-    fn name(&self) -> &str {
-        "fast-knn"
-    }
-    fn divergence(&self) -> &str {
-        self.tree.div.name()
+
+    fn card(&self) -> ModelCard {
+        ModelCard {
+            name: String::new(),
+            backend: Backend::Knn,
+            divergence: self.tree.div.name().to_string(),
+            n: self.x.rows,
+            params: self.p.nnz(),
+            sigma: Some(self.sigma),
+            provenance: self.provenance.clone(),
+        }
     }
 }
 

@@ -13,7 +13,7 @@
 
 use crate::core::Matrix;
 
-use super::TransitionOp;
+use crate::core::op::TransitionOp;
 
 /// Configuration for [`propagate_harmonic`].
 #[derive(Clone, Debug)]

@@ -7,49 +7,14 @@ pub mod harmonic;
 
 use crate::core::{Matrix, Rng};
 
-/// Anything that can multiply a dense N×C matrix by its (approximate)
-/// transition matrix — the single interface LP, link analysis and the
-/// Arnoldi iteration need.
-pub trait TransitionOp {
-    /// Number of data points N (rows/cols of the operator).
-    fn n(&self) -> usize;
-    /// Ŷ = P·Y (or Q·Y).
-    fn matvec(&self, y: &Matrix) -> Matrix;
-    /// Backend name for logs/reports.
-    fn name(&self) -> &str {
-        "op"
-    }
-    /// Name of the Bregman geometry the operator was fitted under (for
-    /// registry listings; see [`crate::core::divergence`]).
-    fn divergence(&self) -> &str {
-        "sq_euclidean"
-    }
-}
-
-impl TransitionOp for crate::vdt::VdtModel {
-    fn n(&self) -> usize {
-        VdtModelExt::n(self)
-    }
-    fn matvec(&self, y: &Matrix) -> Matrix {
-        self.matvec(y)
-    }
-    fn name(&self) -> &str {
-        "variational-dt"
-    }
-    fn divergence(&self) -> &str {
-        self.tree.div.name()
-    }
-}
-
-// Helper to disambiguate the inherent `n` from the trait method.
-trait VdtModelExt {
-    fn n(&self) -> usize;
-}
-impl VdtModelExt for crate::vdt::VdtModel {
-    fn n(&self) -> usize {
-        self.tree.n
-    }
-}
+/// Deprecated re-export — [`TransitionOp`] is now defined in
+/// [`crate::core::op`] (with `matvec_into`, structured
+/// [`crate::core::op::ModelCard`] metadata, and the
+/// [`crate::core::op::AnyModel`] registry enum). Import it from
+/// `vdt::core::op` (or the crate root); this alias remains for one
+/// release of warning and will be removed.
+#[deprecated(note = "moved to vdt::core::op (also re-exported at the crate root)")]
+pub use crate::core::op::TransitionOp;
 
 /// LP hyper-parameters. Paper §5: T = 500, α = 0.01 (kept deliberately —
 /// the experiments compare methods under identical settings, not tuned
@@ -114,7 +79,13 @@ pub fn choose_labeled(labels: &[usize], n_classes: usize, count: usize, seed: u6
 }
 
 /// Run label propagation: `Y ← α·P·Y + (1−α)·Y⁰`, `steps` times.
-pub fn propagate(op: &dyn TransitionOp, y0: &Matrix, cfg: &LpConfig) -> Matrix {
+/// (Signatures name the canonical `core::op` path so the deprecated
+/// re-export above stays warning-free inside the crate.)
+pub fn propagate(
+    op: &dyn crate::core::op::TransitionOp,
+    y0: &Matrix,
+    cfg: &LpConfig,
+) -> Matrix {
     assert_eq!(y0.rows, op.n(), "Y0 rows must equal N");
     let mut y = y0.clone();
     for _ in 0..cfg.steps {
@@ -148,7 +119,7 @@ pub fn ccr(y: &Matrix, labels: &[usize], labeled: &[usize]) -> f64 {
 
 /// End-to-end convenience: seed, propagate, score.
 pub fn run_ssl(
-    op: &dyn TransitionOp,
+    op: &dyn crate::core::op::TransitionOp,
     labels: &[usize],
     n_classes: usize,
     labeled: &[usize],
@@ -163,6 +134,9 @@ pub fn run_ssl(
 #[cfg(test)]
 mod tests {
     use super::*;
+    // shadows the deprecated glob-imported re-export with the canonical
+    // path, keeping the test warning-free
+    use crate::core::op::TransitionOp;
     use crate::data::synthetic;
     use crate::vdt::{VdtConfig, VdtModel};
 
@@ -171,8 +145,8 @@ mod tests {
         fn n(&self) -> usize {
             self.0.rows
         }
-        fn matvec(&self, y: &Matrix) -> Matrix {
-            self.0.matmul(y)
+        fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+            self.0.matmul_into(y, out);
         }
     }
 

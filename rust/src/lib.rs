@@ -4,7 +4,66 @@
 //! Large-Scale Transition Matrix Approximation"* (Amizadeh, Thiesson,
 //! Hauskrecht, UAI 2012).
 //!
-//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//! ## The operator API
+//!
+//! Everything downstream of a fit — label propagation (Eq. 15), Arnoldi /
+//! subspace spectral inference, link analysis, the serving coordinator —
+//! needs exactly one capability: a fast row-stochastic multiply `Ŷ = P·Y`.
+//! That capability is [`core::op::TransitionOp`] (with an allocation-free
+//! [`core::op::TransitionOp::matvec_into`] for steady-state serving), and
+//! three backend families implement it: the paper's variational dual-tree
+//! `Q` ([`vdt::VdtModel`]), the fast-kNN baseline ([`knn::KnnGraph`]), and
+//! the exact Eq. 3 matrix ([`exact::ExactModel`], optionally
+//! XLA-accelerated as [`exact::XlaExactModel`]).
+//!
+//! Models are constructed through the one canonical entry point,
+//! [`api::ModelBuilder`] — backend × divergence × dataset as a single
+//! composable surface, returning [`core::op::AnyModel`] (a `Send + Sync`
+//! enum the coordinator and snapshot layer accept for *any* backend) and
+//! typed [`VdtError`]s instead of panics or strings:
+//!
+//! ```no_run
+//! use vdt::api::ModelBuilder;
+//! use vdt::core::op::Backend;
+//! use vdt::data::synthetic;
+//! use vdt::labelprop;
+//!
+//! # fn main() -> Result<(), vdt::VdtError> {
+//! let ds = synthetic::digit1_like(1500, 7);
+//! let model = ModelBuilder::from_dataset(&ds)
+//!     .backend(Backend::Vdt)      // or Knn / Exact / ExactXla
+//!     .k(6)                        // refine to |B| = 6N
+//!     .build()?;
+//! let y = labelprop::one_hot_labels(&ds.labels, ds.n_classes);
+//! let yhat = model.matvec(&y);     // Q·Y in O(|B|)
+//! assert_eq!(yhat.rows, ds.n());
+//! println!("{}", model.card().summary());
+//! # Ok(()) }
+//! ```
+//!
+//! Errors are a single typed enum, [`VdtError`] — domain violations,
+//! invalid specs, unsupported combinations, unknown models, bad
+//! snapshots — so callers can match instead of parsing strings:
+//!
+//! ```
+//! use vdt::api::ModelBuilder;
+//! use vdt::core::divergence::DivergenceKind;
+//! use vdt::data::synthetic;
+//! use vdt::VdtError;
+//!
+//! let ds = synthetic::two_moons(40, 0.08, 1);   // has negative coords
+//! let err = ModelBuilder::from_dataset(&ds)
+//!     .divergence(DivergenceKind::Kl)            // KL needs x ≥ 0
+//!     .build()
+//!     .unwrap_err();
+//! assert!(matches!(err, VdtError::Domain { divergence: "kl", .. }));
+//! ```
+//!
+//! **Deprecated paths** (one release of warning): `labelprop::TransitionOp`
+//! re-exports the moved trait, and `coordinator::ModelInfo` aliases the
+//! structured [`core::op::ModelCard`] that replaced it.
+//!
+//! ## The three-layer stack
 //!
 //! - **L3 (this crate)**: the paper's contribution — anchor partition tree,
 //!   marked-partition-tree block model, O(|B|) variational optimizer, greedy
@@ -35,50 +94,41 @@
 //! bit-exact with the original paper pipeline), generalized KL for
 //! histogram/simplex data, Itakura–Saito for strictly positive spectra,
 //! and diagonal Mahalanobis for heteroscedastic features. Select with
-//! [`vdt::VdtConfig::divergence`] / [`knn::KnnConfig::divergence`] (a
-//! [`core::DivergenceKind`]), or pass an instance to
-//! [`vdt::VdtModel::build_with`]:
+//! [`api::ModelBuilder::divergence`] (a [`core::DivergenceKind`]) — every
+//! backend accepts every divergence through the same call:
 //!
 //! ```no_run
-//! use vdt::core::divergence::{DivergenceKind, KlSimplex};
+//! use vdt::api::ModelBuilder;
+//! use vdt::core::divergence::DivergenceKind;
+//! use vdt::core::op::Backend;
 //! use vdt::data::synthetic;
-//! use vdt::vdt::{VdtConfig, VdtModel};
 //!
+//! # fn main() -> Result<(), vdt::VdtError> {
 //! // text-like histograms: strictly positive rows summing to 1
 //! let ds = synthetic::topic_histograms(2000, 64, 2, 4, 120, 7);
-//! let cfg = VdtConfig { divergence: DivergenceKind::Kl, ..Default::default() };
-//! let mut model = VdtModel::build(&ds.x, &cfg);      // enum-driven …
-//! let same = VdtModel::build_with(&ds.x, &cfg, KlSimplex); // … or generic
-//! model.refine_to(6 * ds.n());
-//! assert_eq!(model.divergence_name(), "kl");
-//! # let _ = same;
+//! for backend in [Backend::Vdt, Backend::Knn, Backend::Exact] {
+//!     let m = ModelBuilder::from_dataset(&ds)
+//!         .backend(backend)
+//!         .divergence(DivergenceKind::Kl)
+//!         .k(6)
+//!         .build()?;
+//!     assert_eq!(m.card().divergence, "kl");
+//! }
+//! # Ok(()) }
 //! ```
 //!
 //! Every geometry yields a valid row-stochastic Q (pinned by
-//! `rust/tests/divergence_conformance.rs`); the Euclidean path is pinned
-//! bitwise against the pre-refactor formulas by
+//! `rust/tests/divergence_conformance.rs` and the backend × divergence
+//! grid of `rust/tests/backend_conformance.rs`); the Euclidean path is
+//! pinned bitwise against the pre-refactor formulas by
 //! `rust/tests/fig2_golden.rs`. See `examples/bregman.rs` for a runnable
-//! KL quickstart.
-//!
-//! ## Quick start
-//!
-//! ```no_run
-//! use vdt::data::synthetic;
-//! use vdt::vdt::VdtModel;
-//! use vdt::labelprop::{self, TransitionOp};
-//!
-//! let ds = synthetic::digit1_like(1500, 7);
-//! let mut model = VdtModel::build(&ds.x, &Default::default());
-//! model.refine_to(6 * ds.n());                  // |B| = 6N
-//! let y = labelprop::one_hot_labels(&ds.labels, ds.n_classes);
-//! let yhat = model.matvec(&y);                  // Q·Y in O(|B|)
-//! assert_eq!(yhat.rows, ds.n());
-//! ```
+//! KL quickstart and `examples/serve.rs` for multi-backend serving.
 
 // Index-driven loops mirror the paper's pseudocode and the arena layout;
 // the module path `vdt::vdt` is the crate's published API shape.
 #![allow(clippy::needless_range_loop, clippy::type_complexity, clippy::module_inception)]
 
+pub mod api;
 pub mod coordinator;
 pub mod core;
 pub mod data;
@@ -93,5 +143,7 @@ pub mod spectral;
 pub mod tree;
 pub mod vdt;
 
+pub use crate::api::{ModelBuilder, ModelSpec};
+pub use crate::core::error::VdtError;
 pub use crate::core::matrix::Matrix;
-pub use crate::labelprop::TransitionOp;
+pub use crate::core::op::{AnyModel, Backend, ModelCard, TransitionOp};

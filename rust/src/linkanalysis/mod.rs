@@ -14,7 +14,7 @@
 //! only needs the forward matvec the framework provides.
 
 use crate::core::Matrix;
-use crate::labelprop::TransitionOp;
+use crate::core::op::TransitionOp;
 
 /// Result of a random-walk scoring run.
 #[derive(Clone, Debug)]

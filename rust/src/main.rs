@@ -5,20 +5,27 @@
 //! paper (`vdt exp <id>`), serves models over the threaded coordinator,
 //! and self-tests the PJRT artifact path.
 //!
+//! Every model-building command (`build`, `lp`, `spectral`, `save`,
+//! `serve`) routes through the one canonical
+//! [`vdt::api::ModelBuilder`] — backend, divergence, k and σ are parsed
+//! once into a spec, validated once, and errors surface as typed
+//! [`vdt::VdtError`]s.
+//!
 //! (Offline build: argument parsing is a small in-tree parser, not clap.)
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use vdt::api::ModelBuilder;
 use vdt::core::divergence::DivergenceKind;
 use vdt::core::metrics::Timer;
+use vdt::core::op::{Backend, ModelCard};
 use vdt::data::{io, synthetic, Dataset};
-use vdt::exact::ExactModel;
+use vdt::exact::XlaExactModel;
 use vdt::experiments::{fig2, tables, Table};
-use vdt::knn::{KnnConfig, KnnGraph};
-use vdt::labelprop::{self, LpConfig, TransitionOp};
-use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::VdtModel;
 
 const USAGE: &str = "\
 vdt — Variational Dual-Tree transition-matrix framework (UAI 2012 reproduction)
@@ -26,7 +33,7 @@ vdt — Variational Dual-Tree transition-matrix framework (UAI 2012 reproduction
 USAGE: vdt <command> [--flag value ...]
 
 COMMANDS
-  build     build a transition model and print statistics
+  build     build a transition model and print its model card
             --dataset secstr|digit1|usps|alpha|ocr|moons|simplex|topics|spectra  (digit1)
             --n <int> (1500)  --method vdt|knn|exact|exact-xla (vdt)
             --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
@@ -51,6 +58,7 @@ COMMANDS
             --artifacts <dir> (artifacts)
   serve     run the coordinator and a demo client burst
             --dataset ... --n <int> (1500) --k <int> (6)
+            --method vdt|knn|exact (vdt)
             --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --requests <int> (32)
             --model-path <p1[,p2,...]>  warm-start from snapshots instead
@@ -75,6 +83,14 @@ impl Args {
                 let val = argv
                     .get(i + 1)
                     .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                // `--csv --seed 3` must not silently consume `--seed` as
+                // the csv path: a flag-shaped value means the real value
+                // was forgotten
+                if val.starts_with("--") {
+                    return Err(anyhow!(
+                        "flag --{key} needs a value, but found the flag '{val}' instead"
+                    ));
+                }
                 flags.insert(key.replace('-', "_"), val.clone());
                 i += 2;
             } else {
@@ -118,65 +134,30 @@ fn make_dataset(kind: &str, n: usize, seed: u64) -> Result<Dataset> {
     })
 }
 
-/// Reject out-of-domain dataset/divergence combinations with a clean CLI
-/// error before the library's fail-fast gate turns them into a panic
-/// (e.g. `--dataset moons --divergence kl`: moons has negative rows).
-fn check_domain(ds: &Dataset, divergence: &DivergenceKind) -> Result<()> {
-    let div = divergence.instantiate(&ds.x);
-    for i in 0..ds.n() {
-        if let Err(e) = div.check_point(ds.x.row(i)) {
-            return Err(anyhow!(
-                "dataset {} is outside the {} domain (row {i}: {e}); \
-                 pick a compatible --dataset/--divergence pair",
-                ds.name,
-                div.name()
-            ));
-        }
-    }
-    Ok(())
-}
-
-/// The one vdt build recipe shared by every CLI path (`build_op` and the
-/// `build` command's stats fast path), so the two cannot drift.
-fn build_vdt(ds: &Dataset, k: usize, divergence: &DivergenceKind) -> VdtModel {
-    let cfg = VdtConfig { divergence: divergence.clone(), ..VdtConfig::default() };
-    let mut m = VdtModel::build(&ds.x, &cfg);
-    if k > 2 {
-        m.refine_to(k * ds.n());
-    }
-    m
-}
-
-fn build_op(
-    method: &str,
-    ds: &Dataset,
-    k: usize,
-    divergence: &DivergenceKind,
-) -> Result<Box<dyn TransitionOp>> {
-    check_domain(ds, divergence)?;
-    Ok(match method {
-        "vdt" => Box::new(build_vdt(ds, k, divergence)),
-        "knn" => Box::new(KnnGraph::build(
-            &ds.x,
-            &KnnConfig { k: k.max(1), divergence: divergence.clone(), ..Default::default() },
-        )),
-        "exact" => Box::new(ExactModel::build_dense_div(&ds.x, None, divergence)),
-        "exact-xla" => {
-            if *divergence != DivergenceKind::SqEuclidean {
-                return Err(anyhow!("exact-xla only supports the euclidean divergence"));
-            }
-            let rt = std::rc::Rc::new(vdt::runtime::Runtime::load_default()?);
-            Box::new(ExactModel::build_xla(&ds.x, None, rt)?)
-        }
-        other => return Err(anyhow!("unknown method {other}")),
-    })
-}
-
 fn parse_divergence(args: &Args) -> Result<DivergenceKind> {
     match args.opt_str("divergence") {
         None => Ok(DivergenceKind::SqEuclidean),
         Some(s) => DivergenceKind::parse(&s).map_err(|e| anyhow!("{e}")),
     }
+}
+
+/// The one model recipe shared by every CLI command: method, divergence
+/// and k flags become a [`ModelBuilder`] spec over the dataset. Also
+/// returns the parsed backend so commands can branch without re-parsing.
+fn model_builder<'a>(
+    ds: &'a Dataset,
+    args: &Args,
+    default_k: usize,
+) -> Result<(ModelBuilder<'a>, Backend)> {
+    let backend = Backend::parse(&args.get_str("method", "vdt"))?;
+    let divergence = parse_divergence(args)?;
+    let k = args.get("k", default_k)?;
+    let builder = ModelBuilder::from_dataset(ds).backend(backend).divergence(divergence).k(k);
+    Ok((builder, backend))
+}
+
+fn print_card(card: &ModelCard) {
+    println!("model card: {}", card.summary());
 }
 
 fn print_and_save(t: &Table, out: &str, id: &str) {
@@ -239,52 +220,47 @@ fn main() -> Result<()> {
         "build" => {
             let n = args.get("n", 1500usize)?;
             let seed = args.get("seed", 0u64)?;
-            let k = args.get("k", 2usize)?;
-            let method = args.get_str("method", "vdt");
             let ds = match args.opt_str("csv") {
                 Some(path) => io::load_csv(&path)?,
                 None => make_dataset(&args.get_str("dataset", "digit1"), n, seed)?,
             };
-            let divergence = parse_divergence(&args)?;
             println!(
-                "dataset: {} (N={}, d={}, classes={})   divergence: {}",
+                "dataset: {} (N={}, d={}, classes={})",
                 ds.name,
                 ds.n(),
                 ds.d(),
-                ds.n_classes,
-                divergence.name()
+                ds.n_classes
             );
+            let (builder, backend) = model_builder(&ds, &args, 2)?;
             let t = Timer::start();
-            if method == "vdt" {
-                // build once; print both the timing and the model stats
-                check_domain(&ds, &divergence)?;
-                let m = build_vdt(&ds, k, &divergence);
-                println!("built variational-dt in {:.1} ms", t.ms());
-                println!(
-                    "σ = {:.4}   |B| = {}   ℓ(D) = {:.2}   memory ≈ {:.1} MiB",
-                    m.sigma(),
-                    m.num_blocks(),
-                    m.loglik(),
-                    m.memory_bytes() as f64 / (1024.0 * 1024.0)
-                );
+            if backend == Backend::ExactXla {
+                // exact-xla owns a thread-local PJRT runtime — boxed path
+                let op = builder.build_boxed()?;
+                println!("built {} in {:.1} ms", op.card().backend, t.ms());
+                print_card(&op.card());
             } else {
-                let op = build_op(&method, &ds, k, &divergence)?;
-                println!("built {} in {:.1} ms", op.name(), t.ms());
+                let m = builder.build()?;
+                println!("built {} in {:.1} ms", m.card().backend, t.ms());
+                print_card(&m.card());
+                if let Some(v) = m.as_vdt() {
+                    println!(
+                        "ℓ(D) = {:.2}   memory ≈ {:.1} MiB",
+                        v.loglik(),
+                        v.memory_bytes() as f64 / (1024.0 * 1024.0)
+                    );
+                }
             }
         }
         "lp" => {
             let n = args.get("n", 1500usize)?;
             let seed = args.get("seed", 0u64)?;
-            let k = args.get("k", 2usize)?;
             let labeled = args.get("labeled", 0usize)?;
             let alpha = args.get("alpha", 0.01f32)?;
             let steps = args.get("steps", 500usize)?;
-            let method = args.get_str("method", "vdt");
             let ds = make_dataset(&args.get_str("dataset", "digit1"), n, seed)?;
-            let divergence = parse_divergence(&args)?;
             let count = if labeled == 0 { (n / 10).max(2) } else { labeled };
             let t = Timer::start();
-            let op = build_op(&method, &ds, k, &divergence)?;
+            let op = model_builder(&ds, &args, 2)?.0.build_boxed()?;
             let build_ms = t.ms();
             let chosen = labelprop::choose_labeled(&ds.labels, ds.n_classes, count, seed);
             let t2 = Timer::start();
@@ -297,7 +273,7 @@ fn main() -> Result<()> {
             );
             println!(
                 "{} on {}: build {:.1} ms, propagate {:.1} ms, CCR = {:.4} ({} labeled)",
-                op.name(),
+                op.card().backend,
                 ds.name,
                 build_ms,
                 t2.ms(),
@@ -308,14 +284,11 @@ fn main() -> Result<()> {
         "spectral" => {
             let n = args.get("n", 500usize)?;
             let seed = args.get("seed", 0u64)?;
-            let k = args.get("k", 2usize)?;
             let m = args.get("m", 20usize)?;
-            let method = args.get_str("method", "vdt");
             let ds = make_dataset(&args.get_str("dataset", "moons"), n, seed)?;
-            let divergence = parse_divergence(&args)?;
-            let op = build_op(&method, &ds, k, &divergence)?;
+            let op = model_builder(&ds, &args, 2)?.0.build_boxed()?;
             let r = vdt::spectral::arnoldi_eigenvalues(op.as_ref(), m, seed);
-            println!("top Ritz values of P ({}):", op.name());
+            println!("top Ritz values of P ({}):", op.card().backend);
             for (i, (re, im)) in r.eigenvalues.iter().take(10).enumerate() {
                 println!(
                     "  λ{i} = {re:.6} {} {:.6}i",
@@ -351,26 +324,37 @@ fn main() -> Result<()> {
         "save" => {
             let n = args.get("n", 1500usize)?;
             let seed = args.get("seed", 0u64)?;
-            let k = args.get("k", 6usize)?;
             let out = args.get_str("out", "model.vdt");
             let ds = match args.opt_str("csv") {
                 Some(path) => io::load_csv(&path)?,
                 None => make_dataset(&args.get_str("dataset", "digit1"), n, seed)?,
             };
-            let divergence = parse_divergence(&args)?;
-            check_domain(&ds, &divergence)?;
+            let (builder, backend) = model_builder(&ds, &args, 6)?;
+            // snapshotability is knowable from the spec — reject before
+            // paying for a (possibly O(N²)) fit that cannot be saved
+            if backend != Backend::Vdt {
+                return Err(vdt::VdtError::Unsupported(format!(
+                    "save: only vdt models have a snapshot format (got --method {})",
+                    backend.token()
+                ))
+                .into());
+            }
             let t = Timer::start();
-            let m = build_vdt(&ds, k, &divergence);
+            let m = builder.build()?;
             let fit_ms = t.ms();
             let t = Timer::start();
-            m.save(&out, &ds.name)?;
+            m.save(std::path::Path::new(&out), &ds.name)?;
             let bytes = std::fs::metadata(&out).map(|md| md.len()).unwrap_or(0);
+            let card = m.card();
+            let sigma = match card.sigma {
+                Some(s) => format!("{s:.4}"),
+                None => "-".to_string(),
+            };
             println!(
-                "fitted {} (N={}, σ={:.4}, |B|={}) in {fit_ms:.1} ms",
+                "fitted {} (N={}, σ={sigma}, params={}) in {fit_ms:.1} ms",
                 ds.name,
                 ds.n(),
-                m.sigma(),
-                m.num_blocks()
+                card.params
             );
             println!(
                 "snapshot {} ({:.1} KiB) written in {:.1} ms — serve it with \
@@ -409,9 +393,9 @@ fn main() -> Result<()> {
             rt.self_test()?;
             println!("sq_norms round trip: OK");
             let ds = synthetic::two_moons(100, 0.08, 7);
-            let xla = ExactModel::build_xla(&ds.x, Some(0.5), rt)?;
-            let dense = ExactModel::build_dense(&ds.x, Some(0.5));
-            let diff = xla.p.max_abs_diff(&dense.p);
+            let xla = XlaExactModel::build(&ds.x, Some(0.5), rt)?;
+            let dense = vdt::exact::ExactModel::build_dense(&ds.x, Some(0.5));
+            let diff = xla.p().max_abs_diff(&dense.p);
             println!("exact-xla vs exact-dense: max |ΔP| = {diff:.2e}");
             if diff > 1e-4 {
                 return Err(anyhow!("XLA/dense mismatch {diff}"));
@@ -425,6 +409,16 @@ fn main() -> Result<()> {
             let (demo_name, demo_n) = match args.opt_str("model_path") {
                 // warm start: register pre-fitted snapshots, no refit
                 Some(paths) => {
+                    // fit-time flags would silently do nothing against
+                    // already-fitted snapshots — reject the conflict
+                    for flag in ["method", "divergence", "k", "dataset", "n"] {
+                        if args.flags.contains_key(flag) {
+                            return Err(anyhow!(
+                                "--{flag} conflicts with --model-path: snapshots are \
+                                 already fitted (refit and re-save to change the model)"
+                            ));
+                        }
+                    }
                     let t = Timer::start();
                     let mut first: Option<(String, usize)> = None;
                     let mut seen = std::collections::HashSet::new();
@@ -443,9 +437,7 @@ fn main() -> Result<()> {
                                  rename one file (the stem is the model name)"
                             ));
                         }
-                        let n = handle
-                            .register_snapshot(name.clone(), path)
-                            .map_err(|e| anyhow!("{e}"))?;
+                        let n = handle.register_snapshot(name.clone(), path)?;
                         if first.is_none() {
                             first = Some((name, n));
                         }
@@ -457,22 +449,17 @@ fn main() -> Result<()> {
                 // cold start: fit from raw points (the pre-snapshot path)
                 None => {
                     let n = args.get("n", 1500usize)?;
-                    let k = args.get("k", 6usize)?;
                     let ds = make_dataset(&args.get_str("dataset", "digit1"), n, 0)?;
-                    let divergence = parse_divergence(&args)?;
-                    check_domain(&ds, &divergence)?;
                     let t = Timer::start();
-                    let m = build_vdt(&ds, k, &divergence);
+                    // any Send+Sync backend serves: vdt, knn, exact
+                    let m = model_builder(&ds, &args, 6)?.0.build()?;
                     println!("cold-fitted {} in {:.1} ms", ds.name, t.ms());
                     handle.register("default", Arc::new(m));
                     ("default".to_string(), n)
                 }
             };
-            for info in handle.list_models() {
-                println!(
-                    "model {:<10} backend={} divergence={} N={}",
-                    info.name, info.backend, info.divergence, info.n
-                );
+            for card in handle.list_models() {
+                println!("  {}", card.summary());
             }
             println!("coordinator up; issuing {requests} demo matvec requests");
             let t = Timer::start();
@@ -502,4 +489,42 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::parse(&argv(&["fig2abc", "--n", "100", "--alpha-n", "5"])).unwrap();
+        assert_eq!(a.positional, vec!["fig2abc"]);
+        assert_eq!(a.get("n", 0usize).unwrap(), 100);
+        assert_eq!(a.get("alpha_n", 0usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value_errors() {
+        let err = Args::parse(&argv(&["--csv"])).unwrap_err();
+        assert!(err.to_string().contains("--csv"), "{err}");
+    }
+
+    #[test]
+    fn flag_shaped_value_is_rejected_not_consumed() {
+        // `--csv --seed 3`: the old parser swallowed `--seed` as the csv
+        // path and silently dropped the seed
+        let err = Args::parse(&argv(&["--csv", "--seed", "3"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--csv") && msg.contains("--seed"), "{msg}");
+    }
+
+    #[test]
+    fn negative_numbers_are_still_valid_values() {
+        let a = Args::parse(&argv(&["--shift", "-3"])).unwrap();
+        assert_eq!(a.get("shift", 0i64).unwrap(), -3);
+    }
 }

@@ -67,9 +67,20 @@ impl Csr {
 
     /// `self @ dense` for a dense `cols x c` right-hand side.
     pub fn matmul_dense(&self, y: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, y.cols);
+        self.matmul_dense_into(y, &mut out);
+        out
+    }
+
+    /// `out = self @ dense`, reusing a caller-owned buffer (the
+    /// allocation-free serving primitive behind
+    /// [`crate::core::op::TransitionOp::matvec_into`]). `out` is fully
+    /// overwritten; it must be pre-sized to `rows × y.cols`.
+    pub fn matmul_dense_into(&self, y: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, y.rows, "shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.rows, y.cols), "output shape mismatch");
         let c = y.cols;
-        let mut out = Matrix::zeros(self.rows, c);
+        out.data.fill(0.0);
         for r in 0..self.rows {
             let (idx, vals) = self.row(r);
             let out_row = &mut out.data[r * c..(r + 1) * c];
@@ -80,7 +91,6 @@ impl Csr {
                 }
             }
         }
-        out
     }
 
     /// Materialize as dense (tests / tiny matrices only).

@@ -9,7 +9,7 @@
 pub mod eig;
 
 use crate::core::Matrix;
-use crate::labelprop::TransitionOp;
+use crate::core::op::TransitionOp;
 
 use eig::SmallMat;
 

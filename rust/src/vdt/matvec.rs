@@ -112,9 +112,25 @@ pub fn matvec(
     y: &Matrix,
     scratch: &mut MatvecScratch,
 ) -> Matrix {
+    let mut out = Matrix::zeros(tree.n, y.cols);
+    matvec_into(tree, part, y, scratch, &mut out);
+    out
+}
+
+/// Ŷ = Q·Y written into a caller-owned `out` (`n × y.cols`, fully
+/// overwritten) — the allocation-free serving primitive: steady-state
+/// request loops reuse both the scratch lanes *and* the output buffer.
+pub fn matvec_into(
+    tree: &PartitionTree,
+    part: &BlockPartition,
+    y: &Matrix,
+    scratch: &mut MatvecScratch,
+    out: &mut Matrix,
+) {
     assert_eq!(y.rows, tree.n, "Y rows must equal N");
     let c = y.cols;
     let n = tree.n;
+    assert_eq!((out.rows, out.cols), (n, c), "output shape mismatch");
     let workers = par::effective_threads().min(c);
     if workers <= 1 || n * c < 8192 {
         // serial lane: the whole column range in one sweep, straight into
@@ -122,10 +138,9 @@ pub fn matvec(
         if scratch.lanes.is_empty() {
             scratch.lanes.push(Lane::default());
         }
-        let mut out = Matrix::zeros(n, c);
         let lane = &mut scratch.lanes[0];
         sweep_columns(tree, part, y, 0, c, &mut lane.t, &mut lane.acc, &mut out.data);
-        return out;
+        return;
     }
 
     // column-blocked: worker w owns columns w*cb .. min((w+1)*cb, c),
@@ -150,7 +165,6 @@ pub fn matvec(
     });
 
     // interleave the column blocks back into one row-major matrix
-    let mut out = Matrix::zeros(n, c);
     for (w, lane) in scratch.lanes.iter().enumerate().take(n_blocks) {
         let c0 = w * cb;
         let width = lane.out.len() / n;
@@ -159,7 +173,6 @@ pub fn matvec(
                 .copy_from_slice(&lane.out[r * width..(r + 1) * width]);
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -11,10 +11,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::core::divergence::{Divergence, DivergenceKind};
 use crate::core::Matrix;
+use crate::core::op::{Backend, ModelCard, TransitionOp};
 use crate::runtime::snapshot::{instantiate_divergence, Snapshot};
 use crate::tree::{build_tree_with, BuildConfig, PartitionTree, NONE};
 
-use super::matvec::{matvec, MatvecScratch};
+use super::matvec::{matvec, matvec_into, MatvecScratch};
 use super::optimize::loglik;
 use super::partition::{Block, BlockPartition};
 use super::refine::Refiner;
@@ -64,6 +65,9 @@ pub struct VdtModel {
     /// the lock is held only for the pop/push, never the sweep. Steady
     /// state (e.g. LP iterations) allocates nothing per call.
     scratch_pool: std::sync::Mutex<Vec<MatvecScratch>>,
+    /// Dataset the model was fitted on (recorded by the builder / loaded
+    /// from a snapshot's meta section), for [`ModelCard::provenance`].
+    provenance: Option<String>,
 }
 
 impl VdtModel {
@@ -115,6 +119,7 @@ impl VdtModel {
             sigma,
             refiner: None,
             scratch_pool: std::sync::Mutex::new(Vec::new()),
+            provenance: None,
         }
     }
 
@@ -156,16 +161,44 @@ impl VdtModel {
         refiner.refine_to(&self.tree, &mut self.partition, target)
     }
 
+    /// Pop/push access to the scratch pool that survives a poisoned lock:
+    /// the scratch buffers hold no invariants across calls (every sweep
+    /// fully re-initializes its lanes), so if a worker thread panicked
+    /// while holding the lock we take the inner value rather than wedging
+    /// every later matvec behind a `PoisonError`.
+    fn pool(&self) -> std::sync::MutexGuard<'_, Vec<MatvecScratch>> {
+        self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Ŷ = Q·Y via Algorithm 1, O((N+|B|)·C). Thread-safe through `&self`:
     /// each call borrows a scratch from the pool (allocating one only the
     /// first time a new concurrency level is reached) and returns it after
     /// the sweep, so concurrent callers never serialize on the buffers.
     pub fn matvec(&self, y: &Matrix) -> Matrix {
-        let mut scratch =
-            self.scratch_pool.lock().unwrap().pop().unwrap_or_default();
+        let mut scratch = self.pool().pop().unwrap_or_default();
         let out = matvec(&self.tree, &self.partition, y, &mut scratch);
-        self.scratch_pool.lock().unwrap().push(scratch);
+        self.pool().push(scratch);
         out
+    }
+
+    /// Ŷ = Q·Y into a caller-owned buffer (`n × y.cols`, fully
+    /// overwritten): the allocation-free serving path — steady state
+    /// reuses the pooled scratch lanes *and* the caller's output matrix.
+    pub fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        let mut scratch = self.pool().pop().unwrap_or_default();
+        matvec_into(&self.tree, &self.partition, y, &mut scratch, out);
+        self.pool().push(scratch);
+    }
+
+    /// Record what the model was fitted on (shown in the
+    /// [`ModelCard`]; the builder sets this from the dataset name).
+    pub fn set_provenance(&mut self, name: impl Into<String>) {
+        self.provenance = Some(name.into());
+    }
+
+    /// Dataset provenance, when recorded.
+    pub fn provenance(&self) -> Option<&str> {
+        self.provenance.as_deref()
     }
 
     /// Dense materialization of Q (tests / tiny N).
@@ -334,6 +367,7 @@ impl VdtModel {
             sigma: s.sigma,
             refiner: None,
             scratch_pool: std::sync::Mutex::new(Vec::new()),
+            provenance: if s.meta_name.is_empty() { None } else { Some(s.meta_name) },
         })
     }
 
@@ -359,6 +393,32 @@ impl VdtModel {
         let marks: usize =
             self.partition.marks.iter().map(|m| m.len() * 4 + 24).sum::<usize>();
         tree + blocks + marks
+    }
+}
+
+impl TransitionOp for VdtModel {
+    fn n(&self) -> usize {
+        self.tree.n
+    }
+
+    fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        VdtModel::matvec_into(self, y, out);
+    }
+
+    fn matvec(&self, y: &Matrix) -> Matrix {
+        VdtModel::matvec(self, y)
+    }
+
+    fn card(&self) -> ModelCard {
+        ModelCard {
+            name: String::new(),
+            backend: Backend::Vdt,
+            divergence: self.tree.div.name().to_string(),
+            n: self.tree.n,
+            params: self.num_blocks(),
+            sigma: Some(self.sigma),
+            provenance: self.provenance.clone(),
+        }
     }
 }
 

@@ -1,0 +1,258 @@
+//! Backend × divergence conformance over the unified operator API.
+//!
+//! Everything goes through the one canonical path —
+//! [`vdt::api::ModelBuilder`] — and the suite asserts, for every backend
+//! (vdt, knn, exact) under every in-tree divergence:
+//!
+//! - the build succeeds and the [`ModelCard`] is truthful (backend kind,
+//!   divergence name, N, params),
+//! - the operator is row-stochastic (`P·1 ≈ 1`),
+//! - `matvec_into` is bit-identical to `matvec` (allocation-free serving
+//!   cannot drift),
+//! - results are bit-identical to the old per-backend entry points
+//!   (`VdtModel::build` + `refine_to`, `KnnGraph::build`,
+//!   `ExactModel::build_dense_div`), including label-propagation CCR,
+//! - the coordinator registers and serves non-VDT backends end-to-end,
+//!   side by side with a snapshot-loaded VDT model,
+//! - invalid input comes back as typed [`VdtError`]s, not panics.
+
+use std::sync::Arc;
+
+use vdt::api::ModelBuilder;
+use vdt::coordinator::Coordinator;
+use vdt::core::divergence::DivergenceKind;
+use vdt::core::op::{Backend, TransitionOp};
+use vdt::data::{synthetic, Dataset};
+use vdt::exact::ExactModel;
+use vdt::knn::{KnnConfig, KnnGraph};
+use vdt::labelprop::{self, LpConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::{Matrix, VdtError};
+
+const N: usize = 140;
+
+fn all_divergences() -> Vec<DivergenceKind> {
+    vec![
+        DivergenceKind::SqEuclidean,
+        DivergenceKind::Kl,
+        DivergenceKind::ItakuraSaito,
+        DivergenceKind::Mahalanobis(None),
+    ]
+}
+
+/// An in-domain dataset for each geometry.
+fn dataset_for(kind: &DivergenceKind) -> Dataset {
+    match kind {
+        DivergenceKind::Kl => synthetic::simplex_mixture(N, 32, 2, 3, 4.0, 11, "simplex"),
+        DivergenceKind::ItakuraSaito => synthetic::positive_spectra(N, 24, 2, 11),
+        _ => synthetic::gaussian_mixture(N, 8, 2, 2, 2.5, 11, "gauss"),
+    }
+}
+
+fn probe_y(n: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(n, cols, |r, c| (((r * 13 + c * 7) % 9) as f32 - 4.0) * 0.25)
+}
+
+#[test]
+fn every_backend_every_divergence_builds_and_is_row_stochastic() {
+    for kind in all_divergences() {
+        let ds = dataset_for(&kind);
+        for backend in [Backend::Vdt, Backend::Knn, Backend::Exact] {
+            let tag = format!("{}/{}", backend.token(), kind.name());
+            let m = ModelBuilder::from_dataset(&ds)
+                .backend(backend)
+                .divergence(kind.clone())
+                .k(if backend == Backend::Knn { 3 } else { 4 })
+                .build()
+                .unwrap_or_else(|e| panic!("{tag}: build failed: {e}"));
+
+            // truthful card
+            let card = m.card();
+            assert_eq!(card.backend, backend, "{tag}");
+            assert_eq!(card.divergence, kind.name(), "{tag}");
+            assert_eq!(card.n, N, "{tag}");
+            assert!(card.params > 0, "{tag}: params missing");
+            assert_eq!(card.provenance.as_deref(), Some(ds.name.as_str()), "{tag}");
+            assert!(card.sigma.unwrap_or(0.0) > 0.0, "{tag}: sigma missing");
+
+            // row-stochastic: P·1 = 1
+            let ones = Matrix::from_fn(N, 1, |_, _| 1.0);
+            for (r, &v) in m.matvec(&ones).data.iter().enumerate() {
+                assert!((v - 1.0).abs() < 2e-4, "{tag}: row {r} sums to {v}");
+            }
+
+            // allocation-free path is bit-identical, even over a dirty
+            // reused buffer
+            let y = probe_y(N, 3);
+            let want = m.matvec(&y);
+            let mut buf = Matrix::from_fn(N, 3, |_, _| f32::NAN);
+            m.matvec_into(&y, &mut buf);
+            assert_eq!(buf.data, want.data, "{tag}: matvec_into drifted");
+        }
+    }
+}
+
+#[test]
+fn builder_is_bit_identical_to_the_old_entry_points() {
+    for kind in all_divergences() {
+        let ds = dataset_for(&kind);
+        let y = probe_y(N, 2);
+        let tag = kind.name();
+
+        // vdt: ModelBuilder == VdtModel::build + refine_to
+        let built = ModelBuilder::from_dataset(&ds)
+            .divergence(kind.clone())
+            .k(4)
+            .build()
+            .unwrap();
+        let cfg = VdtConfig { divergence: kind.clone(), ..VdtConfig::default() };
+        let mut direct = VdtModel::build(&ds.x, &cfg);
+        direct.refine_to(4 * N);
+        assert_eq!(built.matvec(&y).data, direct.matvec(&y).data, "vdt/{tag}");
+
+        // knn: ModelBuilder == KnnGraph::build
+        let built_knn = ModelBuilder::from_dataset(&ds)
+            .backend(Backend::Knn)
+            .divergence(kind.clone())
+            .k(3)
+            .build()
+            .unwrap();
+        let direct_knn = KnnGraph::build(
+            &ds.x,
+            &KnnConfig { k: 3, divergence: kind.clone(), ..KnnConfig::default() },
+        );
+        assert_eq!(built_knn.matvec(&y).data, direct_knn.matvec(&y).data, "knn/{tag}");
+
+        // exact: ModelBuilder == ExactModel::build_dense_div
+        let built_exact = ModelBuilder::from_dataset(&ds)
+            .backend(Backend::Exact)
+            .divergence(kind.clone())
+            .build()
+            .unwrap();
+        let direct_exact = ExactModel::build_dense_div(&ds.x, None, &kind);
+        assert_eq!(
+            built_exact.matvec(&y).data,
+            direct_exact.matvec(&y).data,
+            "exact/{tag}"
+        );
+
+        // LP CCR parity: the canonical path reproduces the old score
+        let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, 14, 5);
+        let lp = LpConfig { alpha: 0.1, steps: 60 };
+        let (_, score_built) =
+            labelprop::run_ssl(built.as_op(), &ds.labels, ds.n_classes, &labeled, &lp);
+        let (_, score_direct) =
+            labelprop::run_ssl(&direct, &ds.labels, ds.n_classes, &labeled, &lp);
+        assert_eq!(score_built, score_direct, "vdt LP CCR drifted under {tag}");
+    }
+}
+
+#[test]
+fn coordinator_serves_snapshot_and_knn_side_by_side() {
+    let ds = synthetic::gaussian_mixture(N, 8, 2, 2, 2.5, 21, "serve");
+
+    // fit once, snapshot, and warm-start the coordinator from the file
+    let vdt_model = ModelBuilder::from_dataset(&ds).k(4).build().unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("vdt_backend_conformance_{}.vdt", std::process::id()));
+    vdt_model.save(&path, &ds.name).unwrap();
+
+    // a second, non-VDT backend in the same registry
+    let knn_model =
+        ModelBuilder::from_dataset(&ds).backend(Backend::Knn).k(4).build().unwrap();
+    let y = probe_y(N, 2);
+    let want_vdt = vdt_model.matvec(&y);
+    let want_knn = knn_model.matvec(&y);
+
+    let handle = Coordinator::spawn();
+    let n = handle.register_snapshot("warm/vdt", &path).unwrap();
+    assert_eq!(n, N);
+    handle.register("live/knn", Arc::new(knn_model));
+
+    // both models answer, each with its own backend's numbers
+    let got_vdt = handle.matvec("warm/vdt", y.clone()).unwrap();
+    assert_eq!(got_vdt.data, want_vdt.data, "snapshot-loaded vdt drifted");
+    let got_knn = handle.matvec("live/knn", y.clone()).unwrap();
+    assert_eq!(got_knn.data, want_knn.data, "knn through the coordinator drifted");
+
+    // a full LP run against the non-VDT backend, through the service
+    let labeled = labelprop::choose_labeled(&ds.labels, ds.n_classes, 14, 5);
+    let y0 = labelprop::seed_matrix(&ds.labels, &labeled, ds.n_classes);
+    let served = handle
+        .label_prop("live/knn", y0.clone(), LpConfig { alpha: 0.2, steps: 40 })
+        .unwrap();
+    assert_eq!(served.rows, N);
+
+    // the registry reports both, name-sorted, with typed backends and
+    // snapshot provenance surviving the round trip
+    let cards = handle.list_models();
+    assert_eq!(cards.len(), 2);
+    assert_eq!(cards[0].name, "live/knn");
+    assert_eq!(cards[0].backend, Backend::Knn);
+    assert_eq!(cards[1].name, "warm/vdt");
+    assert_eq!(cards[1].backend, Backend::Vdt);
+    assert_eq!(cards[1].provenance.as_deref(), Some(ds.name.as_str()));
+
+    // typed serve-path errors
+    let err = handle.matvec("nope", probe_y(N, 1)).unwrap_err();
+    assert!(matches!(err, VdtError::UnknownModel(_)), "{err}");
+    let err = handle.matvec("live/knn", probe_y(N + 1, 1)).unwrap_err();
+    assert!(
+        matches!(err, VdtError::ShapeMismatch { expected, got, .. }
+            if expected == N && got == N + 1),
+        "{err}"
+    );
+
+    handle.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn snapshots_of_non_vdt_backends_are_typed_unsupported() {
+    let ds = synthetic::gaussian_mixture(40, 6, 2, 2, 2.5, 3, "g");
+    let knn = ModelBuilder::from_dataset(&ds).backend(Backend::Knn).k(2).build().unwrap();
+    let err = knn.save(std::path::Path::new("/tmp/never-written.vdt"), "g").unwrap_err();
+    assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+}
+
+#[test]
+fn exact_xla_is_reachable_through_the_builder_with_typed_errors() {
+    let ds = synthetic::gaussian_mixture(40, 6, 2, 2, 2.5, 4, "g");
+    // AnyModel cannot hold the thread-local PJRT runtime: typed, not a panic
+    let err = ModelBuilder::from_dataset(&ds).backend(Backend::ExactXla).build().unwrap_err();
+    assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+
+    // the boxed path builds when artifacts exist, and reports a typed
+    // Runtime error when they don't (the offline-stub default)
+    match ModelBuilder::from_dataset(&ds).backend(Backend::ExactXla).build_boxed() {
+        Ok(op) => {
+            assert_eq!(op.card().backend, Backend::ExactXla);
+            let ones = Matrix::from_fn(40, 1, |_, _| 1.0);
+            for &v in &op.matvec(&ones).data {
+                assert!((v - 1.0).abs() < 2e-4);
+            }
+        }
+        Err(e) => assert!(matches!(e, VdtError::Runtime(_)), "{e}"),
+    }
+}
+
+#[test]
+fn out_of_domain_data_is_a_typed_error_for_every_backend() {
+    // moons has negative coordinates: outside both KL and IS domains
+    let ds = synthetic::two_moons(50, 0.08, 9);
+    for backend in [Backend::Vdt, Backend::Knn, Backend::Exact] {
+        for kind in [DivergenceKind::Kl, DivergenceKind::ItakuraSaito] {
+            let err = ModelBuilder::from_dataset(&ds)
+                .backend(backend)
+                .divergence(kind.clone())
+                .build()
+                .unwrap_err();
+            assert!(
+                matches!(err, VdtError::Domain { .. }),
+                "{}/{}: {err}",
+                backend.token(),
+                kind.name()
+            );
+        }
+    }
+}

@@ -2,9 +2,10 @@
 //! artifacts, empty label sets — the paths a downstream user hits first.
 
 use vdt::core::Matrix;
+use vdt::core::op::TransitionOp;
 use vdt::data::synthetic;
 use vdt::knn::{KnnConfig, KnnGraph};
-use vdt::labelprop::{self, LpConfig, TransitionOp};
+use vdt::labelprop::{self, LpConfig};
 use vdt::runtime::Manifest;
 use vdt::vdt::{VdtConfig, VdtModel};
 

@@ -8,9 +8,10 @@
 use std::rc::Rc;
 
 use vdt::core::Matrix;
+use vdt::core::op::TransitionOp;
 use vdt::data::synthetic;
-use vdt::exact::{dense, ExactModel};
-use vdt::labelprop::{self, LpConfig, TransitionOp};
+use vdt::exact::{dense, ExactModel, XlaExactModel};
+use vdt::labelprop::{self, LpConfig};
 use vdt::runtime::Runtime;
 
 fn runtime() -> Option<Rc<Runtime>> {
@@ -55,10 +56,10 @@ fn transition_artifact_matches_dense_oracle() {
 fn matvec_artifact_matches_dense() {
     let Some(rt) = runtime() else { return };
     let ds = synthetic::two_moons(80, 0.08, 5);
-    let m = ExactModel::build_xla(&ds.x, Some(0.4), rt).expect("build");
+    let m = XlaExactModel::build(&ds.x, Some(0.4), rt).expect("build");
     let y = labelprop::one_hot_labels(&ds.labels, 2);
     let via_xla = m.matvec(&y); // dispatches the matvec artifact
-    let via_dense = m.p.matmul(&y);
+    let via_dense = m.p().matmul(&y);
     assert!(via_xla.max_abs_diff(&via_dense) < 1e-4);
 }
 
@@ -66,7 +67,7 @@ fn matvec_artifact_matches_dense() {
 fn lp_chunk_artifact_matches_dense_iteration() {
     let Some(rt) = runtime() else { return };
     let ds = synthetic::two_moons(60, 0.08, 6);
-    let m = ExactModel::build_xla(&ds.x, Some(0.4), rt.clone()).expect("build");
+    let m = XlaExactModel::build(&ds.x, Some(0.4), rt.clone()).expect("build");
     let labeled = labelprop::choose_labeled(&ds.labels, 2, 8, 1);
     let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
     // 30 steps = 3 lp_chunk dispatches
@@ -125,7 +126,7 @@ fn sentinel_row_padding_is_inert_for_small_inputs() {
 fn xla_exact_end_to_end_ssl() {
     let Some(rt) = runtime() else { return };
     let ds = synthetic::two_moons(120, 0.07, 8);
-    let m = ExactModel::build_xla(&ds.x, None, rt).expect("build");
+    let m = XlaExactModel::build(&ds.x, None, rt).expect("build");
     let labeled = labelprop::choose_labeled(&ds.labels, 2, 12, 3);
     let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
     let y = m.lp_run(&y0, 0.5, 100).expect("lp");
