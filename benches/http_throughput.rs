@@ -1,0 +1,232 @@
+//! HTTP serving throughput: batched vs unbatched, concurrency 32.
+//!
+//! Spins the full serving stack twice over one fitted VDT model
+//! (BENCH_N, default 8000 points, |B| = 6N):
+//!
+//! - **batched**: default coordinator (burst fusion on) + the server's
+//!   micro-batcher (1 ms window, 64-request cap) — concurrent same-model
+//!   requests coalesce into one fused sweep;
+//! - **unbatched**: no coalescing anywhere — the coordinator is spawned
+//!   with fusion off and a zero burst window, the server calls it once
+//!   per request. This is the true per-request baseline the batching
+//!   subsystem exists to beat.
+//!
+//! 32 keep-alive clients hammer `POST matvec` (one column each) and
+//! `POST query` (one out-of-sample point each); we record req/s and
+//! p50/p99 latency per endpoint per mode and emit `BENCH_http.json`
+//! (consumed by the CI bench job next to `BENCH_parallel.json` /
+//! `BENCH_serve.json`).
+//!
+//! Correctness gate: a served matvec response must decode to the exact
+//! bits of a direct `TransitionOp::matvec` — a throughput number from a
+//! server that rounds floats would be worthless.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use vdt::coordinator::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+use vdt::core::json::Json;
+use vdt::data::synthetic;
+use vdt::runtime::server::client::HttpClient;
+use vdt::runtime::server::{matrix_body, matrix_from_json, Server, ServerConfig};
+use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::Matrix;
+
+const CONCURRENCY: usize = 32;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[derive(Clone, Copy)]
+struct ModeResult {
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run `rounds` requests from each of [`CONCURRENCY`] keep-alive clients
+/// against `path`, bodies produced per (client, round). Returns req/s and
+/// latency percentiles.
+fn hammer(
+    addr: std::net::SocketAddr,
+    path: &str,
+    rounds: usize,
+    body_of: &(impl Fn(usize, usize) -> String + Sync),
+) -> ModeResult {
+    let wall = Instant::now();
+    let mut lats: Vec<f64> = Vec::with_capacity(CONCURRENCY * rounds);
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for client in 0..CONCURRENCY {
+            joins.push(s.spawn(move || {
+                let mut http = HttpClient::connect(addr).expect("connect");
+                let mut lat = Vec::with_capacity(rounds);
+                for round in 0..rounds {
+                    let body = body_of(client, round);
+                    let t = Instant::now();
+                    let (status, resp) = http.post(path, &body).expect("post");
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    assert_eq!(status, 200, "{resp}");
+                }
+                lat
+            }));
+        }
+        for j in joins {
+            lats.extend(j.join().expect("client panicked"));
+        }
+    });
+    let wall_s = wall.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    ModeResult {
+        rps: lats.len() as f64 / wall_s,
+        p50_ms: percentile(&lats, 50.0),
+        p99_ms: percentile(&lats, 99.0),
+    }
+}
+
+struct Stack {
+    handle: CoordinatorHandle,
+    server: vdt::runtime::server::ServerHandle,
+}
+
+fn spawn_stack(model: &Arc<VdtModel>, batched: bool) -> Stack {
+    let handle = if batched {
+        Coordinator::spawn()
+    } else {
+        Coordinator::spawn_with(CoordinatorConfig {
+            burst_window: Duration::ZERO,
+            fuse: false,
+        })
+    };
+    handle.register("bench", model.clone());
+    let cfg = ServerConfig {
+        workers: CONCURRENCY + 4,
+        queue_depth: CONCURRENCY * 2,
+        batch_window: Duration::from_millis(1),
+        max_batch: CONCURRENCY * 2,
+        batching: batched,
+        ..ServerConfig::default()
+    };
+    let server = Server::bind(handle.clone(), "127.0.0.1:0", cfg).expect("bind");
+    Stack { handle, server }
+}
+
+fn main() {
+    let n = env_usize("BENCH_N", 8000);
+    let rounds = env_usize("BENCH_HTTP_REQS", 8);
+    println!("# http_throughput: N={n}, concurrency={CONCURRENCY}, {rounds} reqs/client");
+
+    let ds = synthetic::digit1_like(n, 1);
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    m.refine_to(6 * n);
+    let model = Arc::new(m);
+    let d = ds.x.cols;
+
+    let matvec_body = move |client: usize, round: usize| {
+        let tag = client * 1000 + round;
+        let y =
+            Matrix::from_fn(n, 1, move |r, _| (((r * 31 + tag * 7) % 19) as f32 - 9.0) * 0.1);
+        matrix_body("y", &y)
+    };
+    let query_body = {
+        let x = ds.x.clone();
+        move |client: usize, round: usize| {
+            let row = (client * 131 + round * 17) % x.rows;
+            let q = Matrix::from_vec(x.row(row).to_vec(), 1, d);
+            matrix_body("x", &q)
+        }
+    };
+
+    let mut results: Vec<(String, ModeResult)> = Vec::new();
+    for batched in [true, false] {
+        let mode = if batched { "batched" } else { "unbatched" };
+        let stack = spawn_stack(&model, batched);
+        let addr = stack.server.addr();
+
+        // correctness gate before any timing
+        {
+            let mut http = HttpClient::connect(addr).expect("connect");
+            let y = Matrix::from_fn(n, 1, |r, _| ((r % 13) as f32 - 6.0) * 0.2);
+            let (status, body) =
+                http.post("/v1/models/bench/matvec", &matrix_body("y", &y)).expect("post");
+            assert_eq!(status, 200, "{body}");
+            let got = matrix_from_json(
+                Json::parse(&body).expect("json").get("yhat").expect("yhat"),
+                "yhat",
+            )
+            .expect("decode");
+            assert_eq!(
+                got.data,
+                model.matvec(&y).data,
+                "{mode} serving is not bit-identical to the in-process operator"
+            );
+        }
+
+        // brief warmup so thread pools and scratch lanes exist
+        let _ = hammer(addr, "/v1/models/bench/matvec", 2, &matvec_body);
+
+        let mv = hammer(addr, "/v1/models/bench/matvec", rounds, &matvec_body);
+        println!(
+            "# {mode}/matvec: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+            mv.rps, mv.p50_ms, mv.p99_ms
+        );
+        results.push((format!("{mode}/matvec"), mv));
+
+        let q = hammer(addr, "/v1/models/bench/query", rounds, &query_body);
+        println!(
+            "# {mode}/query: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+            q.rps, q.p50_ms, q.p99_ms
+        );
+        results.push((format!("{mode}/query"), q));
+
+        let http_stats = stack.server.stats();
+        println!(
+            "# {mode}: {} http requests, {} micro-batches carrying {} requests",
+            http_stats.requests, http_stats.batches, http_stats.batched_requests
+        );
+        stack.server.shutdown();
+        stack.handle.shutdown();
+    }
+
+    let get = |k: &str| results.iter().find(|(name, _)| name == k).expect("mode ran").1;
+    let mv_speedup = get("batched/matvec").rps / get("unbatched/matvec").rps;
+    let q_speedup = get("batched/query").rps / get("unbatched/query").rps;
+    println!("# speedup batched/unbatched: matvec {mv_speedup:.2}x, query {q_speedup:.2}x");
+
+    // ---- emit BENCH_http.json ----
+    // schema matches benches/check_regression.py: entries under "paths",
+    // keyed by "path", with gated timings in *_ms fields (rps is recorded
+    // but not gated — the p50/p99 latencies are)
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"http_throughput\",\n  \"n\": {n},\n  \"concurrency\": {CONCURRENCY},\n  \"requests_per_client\": {rounds},\n  \"paths\": [\n"
+    ));
+    for (i, (name, r)) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"path\": \"{name}\", \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}{}\n",
+            r.rps,
+            r.p50_ms,
+            r.p99_ms,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"matvec_batching_speedup\": {mv_speedup:.3},\n  \"query_batching_speedup\": {q_speedup:.3}\n}}\n"
+    ));
+    if let Err(e) = std::fs::write("BENCH_http.json", &json) {
+        eprintln!("warn: could not write BENCH_http.json: {e}");
+    } else {
+        println!(
+            "# wrote BENCH_http.json (batched {mv_speedup:.1}x matvec, {q_speedup:.1}x query vs unbatched)"
+        );
+    }
+}

@@ -1,6 +1,8 @@
 //! Serving demo: the threaded coordinator routing concurrent inference
 //! requests (matvec / LP / spectral) against a registry of fitted models,
-//! with automatic column-batching of concurrent matvecs.
+//! with automatic column-batching of concurrent matvecs — then the same
+//! registry served **over HTTP** through `runtime::server`, including an
+//! inductive out-of-sample query.
 //!
 //! Every model is built through the one canonical
 //! [`vdt::api::ModelBuilder`] and registered as a
@@ -15,10 +17,12 @@ use std::sync::Arc;
 
 use vdt::api::ModelBuilder;
 use vdt::coordinator::Coordinator;
+use vdt::core::json::Json;
 use vdt::core::metrics::Timer;
 use vdt::core::op::Backend;
 use vdt::data::synthetic;
 use vdt::labelprop::{self, LpConfig};
+use vdt::runtime::server::{client::HttpClient, matrix_body, Server, ServerConfig};
 use vdt::VdtError;
 
 fn main() -> Result<(), VdtError> {
@@ -50,9 +54,12 @@ fn main() -> Result<(), VdtError> {
     for j in joins {
         j.join().unwrap();
     }
-    let (served, cols, batches) = handle.stats();
+    let s = handle.stats();
     println!(
-        "matvec burst: {served} requests / {cols} columns fused into {batches} batches in {:.1} ms",
+        "matvec burst: {} requests / {} columns fused into {} batches in {:.1} ms",
+        s.requests,
+        s.fused_cols,
+        s.fused_batches,
         t.ms()
     );
 
@@ -74,7 +81,51 @@ fn main() -> Result<(), VdtError> {
     let err = handle.matvec("nope", vdt::Matrix::zeros(4, 1)).unwrap_err();
     assert!(matches!(err, VdtError::UnknownModel(_)));
 
+    // ---- the same registry over HTTP (runtime::server) ----
+    // micro-batching on: concurrent same-model requests coalesce into one
+    // fused coordinator call, bit-identical to unbatched serving
+    let server = Server::bind(handle.clone(), "127.0.0.1:0", ServerConfig::default())?;
+    println!("http server on {}", server.addr());
+
+    let addr = server.addr();
+    let mut http_joins = Vec::new();
+    for c in 0..8usize {
+        http_joins.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(addr).expect("connect");
+            let y = vdt::Matrix::from_fn(800, 1, move |r, _| ((r * 7 + c) % 5) as f32);
+            let (status, body) = client
+                .post("/v1/models/moons/vdt/matvec", &matrix_body("y", &y))
+                .expect("matvec over http");
+            assert_eq!(status, 200, "{body}");
+        }));
+    }
+    for j in http_joins {
+        j.join().unwrap();
+    }
+
+    // inductive out-of-sample query: a brand-new point gets a posterior
+    // row over the 800 training points without refitting anything
+    let mut client = HttpClient::connect(addr).expect("connect");
+    let x = vdt::Matrix::from_fn(1, 2, |_, c| if c == 0 { 0.4 } else { 0.1 });
+    let (status, body) = client
+        .post("/v1/models/moons/vdt/query", &matrix_body("x", &x))
+        .expect("query over http");
+    assert_eq!(status, 200, "{body}");
+    let row = Json::parse(&body).expect("json");
+    let mass: f64 = row.get("rows").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0))
+        .sum();
+    println!("inductive query over http: posterior mass {mass:.6} (≈ 1)");
+
+    let (_, stats) = client.get("/stats").expect("stats");
+    println!("stats: {stats}");
+
+    server.shutdown();
     assert!(ccr > 0.8);
+    assert!((mass - 1.0).abs() < 1e-4);
     handle.shutdown();
     println!("serve OK");
     Ok(())

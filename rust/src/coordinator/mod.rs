@@ -12,7 +12,9 @@
 
 pub mod service;
 
-pub use service::{Coordinator, CoordinatorHandle, Request, Response, SharedOp};
+pub use service::{
+    Coordinator, CoordinatorConfig, CoordinatorHandle, Request, Response, ServiceStats, SharedOp,
+};
 
 // Deprecated path: `ModelInfo` is now the structured
 // `core::op::ModelCard`; this re-export keeps old imports compiling for

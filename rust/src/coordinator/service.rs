@@ -4,19 +4,27 @@
 //! over per-request oneshot channels).
 //!
 //! Execution is **off the owner thread**: each burst's work items (fused
-//! matvec batches, label-propagation runs, spectral queries) run on scoped
-//! worker threads — at most [`crate::core::par::max_threads`] at a time —
-//! so the items of a burst execute concurrently instead of queueing behind
-//! each other on the owner thread. Workers send responses directly to the
-//! waiting clients; the owner thread only routes, fuses and counts. (The
-//! owner still joins a burst before draining the next one, so a very long
-//! item delays requests that arrive *after* its burst formed — same
-//! ordering as the previous inline execution, minus the within-burst
-//! serialization.)
+//! matvec batches, inductive query batches, label-propagation runs,
+//! spectral queries) run on scoped worker threads — at most
+//! [`crate::core::par::max_threads`] at a time — so the items of a burst
+//! execute concurrently instead of queueing behind each other on the
+//! owner thread. Workers send responses directly to the waiting clients;
+//! the owner thread only routes, fuses and counts. (The owner still joins
+//! a burst before draining the next one, so a very long item delays
+//! requests that arrive *after* its burst formed — same ordering as the
+//! previous inline execution, minus the within-burst serialization.)
+//!
+//! **Shutdown is a drain, not a guillotine**: every request enqueued
+//! before the `Shutdown` message is still routed, executed and answered
+//! before the owner thread exits — a client that got its `send` in never
+//! observes a hung-up reply channel (`shutdown_drains_*` regression
+//! tests). Requests sent *after* shutdown fail fast with a typed
+//! [`VdtError::ServiceUnavailable`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::core::error::VdtError;
 use crate::core::Matrix;
@@ -33,20 +41,66 @@ pub type SharedOp = Arc<dyn TransitionOp + Send + Sync>;
 #[deprecated(note = "use core::op::ModelCard — list_models() now returns structured cards")]
 pub type ModelInfo = ModelCard;
 
+/// Named service counters — replaces the bare `(u64, u64, u64)` tuple
+/// [`CoordinatorHandle::stats`] used to return, so `/stats` and callers
+/// stop guessing field order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests routed (matvec, query, labelprop, spectral), including
+    /// ones answered with an error.
+    pub requests: u64,
+    /// Matvec columns that went through fused batches.
+    pub fused_cols: u64,
+    /// Fused matvec batches executed (one batch may carry many requests).
+    pub fused_batches: u64,
+    /// Requests answered with a typed error.
+    pub errors: u64,
+}
+
+/// Owner-loop tuning. [`Coordinator::spawn`] uses the defaults; the
+/// fusion-ablation benches spawn an unbatched coordinator
+/// (`burst_window = 0`, `fuse = false`) to quantify the batching win.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// After the first request of a burst arrives the owner waits this
+    /// long so concurrent clients land in the same burst (and therefore
+    /// the same fused batch).
+    pub burst_window: Duration,
+    /// Fuse same-model matvec groups into one multi-column sweep and
+    /// same-model query groups into one batch item. `false` = every
+    /// request is its own work item (the no-batching baseline).
+    pub fuse: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { burst_window: Duration::from_micros(200), fuse: true }
+    }
+}
+
+/// Upper bound on the post-shutdown drain: requests enqueued before the
+/// shutdown are normally all answered well within this, but a client
+/// that keeps sending *new* requests after `shutdown()` must not keep
+/// the owner thread alive indefinitely.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(10);
+
 /// Requests accepted by the coordinator.
 pub enum Request {
     /// Register a model under a name (replaces any previous binding).
     Register { name: String, op: SharedOp },
     /// Ŷ = P·Y against a registered model. Batchable.
     Matvec { model: String, y: Matrix, resp: mpsc::Sender<Response> },
+    /// Inductive out-of-sample rows: one query point per row of `x`
+    /// (`q × d`), answered as the `q × N` posterior matrix. Batchable.
+    Query { model: String, x: Matrix, resp: mpsc::Sender<Response> },
     /// Full label propagation run.
     LabelProp { model: String, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
     /// Top-m Ritz values via Arnoldi.
     Spectral { model: String, m: usize, resp: mpsc::Sender<Response> },
     /// Structured cards of every registered model, name-sorted.
     ListModels { resp: mpsc::Sender<Vec<ModelCard>> },
-    /// Counters: (requests served, matvec columns fused, batches run).
-    Stats { resp: mpsc::Sender<(u64, u64, u64)> },
+    /// Named service counters.
+    Stats { resp: mpsc::Sender<ServiceStats> },
     Shutdown,
 }
 
@@ -94,9 +148,11 @@ impl CoordinatorHandle {
             VdtError::ServiceUnavailable(what.to_string())
         }
         let (tx, rx) = mpsc::channel();
+        // count *before* the send: the owner's shutdown drain keeps
+        // sweeping while `inflight > 0`, so a request whose send lands
+        // is (almost always — see `shutdown`) swept up and answered
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let sent = self.tx.send(make(tx));
-        let out = match sent {
+        let out = match self.tx.send(make(tx)) {
             Err(_) => Err(gone("coordinator is shut down")),
             Ok(()) => rx.recv().map_err(|_| gone("reply channel dropped")),
         };
@@ -104,8 +160,26 @@ impl CoordinatorHandle {
         out
     }
 
+    /// Requests currently mid-roundtrip through this handle's
+    /// coordinator (every clone shares the counter): counted from just
+    /// before the send until the reply is consumed.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
     pub fn matvec(&self, model: impl Into<String>, y: Matrix) -> Result<Matrix, VdtError> {
         match self.roundtrip(|resp| Request::Matvec { model: model.into(), y, resp })? {
+            Response::Matrix(m) => Ok(m),
+            Response::Error(e) => Err(e),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Inductive posterior rows for out-of-sample points: `x` is `q × d`
+    /// (one query per row), the result `q × N`. Backends without an
+    /// inductive path answer [`VdtError::Unsupported`].
+    pub fn query(&self, model: impl Into<String>, x: Matrix) -> Result<Matrix, VdtError> {
+        match self.roundtrip(|resp| Request::Query { model: model.into(), x, resp })? {
             Response::Matrix(m) => Ok(m),
             Response::Error(e) => Err(e),
             other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
@@ -147,12 +221,13 @@ impl CoordinatorHandle {
         rx.recv().unwrap_or_default()
     }
 
-    pub fn stats(&self) -> (u64, u64, u64) {
+    /// Named service counters (zeros once the coordinator is gone).
+    pub fn stats(&self) -> ServiceStats {
         let (tx, rx) = mpsc::channel();
         if self.tx.send(Request::Stats { resp: tx }).is_err() {
-            return (0, 0, 0);
+            return ServiceStats::default();
         }
-        rx.recv().unwrap_or((0, 0, 0))
+        rx.recv().unwrap_or_default()
     }
 
     pub fn shutdown(&self) {
@@ -164,6 +239,12 @@ impl CoordinatorHandle {
 enum Work {
     /// One fused multi-column matvec batch against a single model.
     MatvecBatch { op: SharedOp, group: Vec<(Matrix, mpsc::Sender<Response>)> },
+    /// One batch of inductive query requests against a single model.
+    QueryBatch {
+        op: SharedOp,
+        group: Vec<(Matrix, mpsc::Sender<Response>)>,
+        errors: Arc<AtomicU64>,
+    },
     /// A full label-propagation run.
     LabelProp { op: SharedOp, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
     /// Top-m Ritz values via Arnoldi.
@@ -175,6 +256,7 @@ impl Work {
     fn execute(self) {
         match self {
             Work::MatvecBatch { op, group } => run_matvec_batch(op, group),
+            Work::QueryBatch { op, group, errors } => run_query_batch(op, group, &errors),
             Work::LabelProp { op, y0, cfg, resp } => {
                 let _ = resp.send(Response::Matrix(labelprop::propagate(op.as_ref(), &y0, &cfg)));
             }
@@ -189,7 +271,9 @@ impl Work {
 
 /// Execute one fused batch: concatenate the requests' columns, run a
 /// single multi-column sweep (itself column-parallel on the model side),
-/// and split the result back per request.
+/// and split the result back per request. Per-request results are
+/// bit-identical to unfused calls: every column of the underlying
+/// matvec is an independent scalar sequence.
 fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>)>) {
     let n = op.n();
     if group.len() == 1 {
@@ -222,163 +306,355 @@ fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>
     }
 }
 
+/// Per-request ceiling on a query response's `rows × N` f32 elements
+/// (16M ≈ 64 MiB raw — budgeted small because the HTTP layer then JSON-
+/// encodes the result at roughly 10 bytes per element). The serving
+/// layer caps the row count, but only here is the model's real N known —
+/// without this, 1024 rows against a million-point model would demand a
+/// multi-GiB response allocation.
+pub const MAX_QUERY_OUT_ELEMS: usize = 1 << 24;
+
+/// Execute one query batch: each request's rows are independent inductive
+/// posteriors, so batching changes scheduling only, never bits. A request
+/// whose query point is rejected (e.g. out of the divergence domain) gets
+/// its own typed error; co-batched requests are unaffected.
+fn run_query_batch(
+    op: SharedOp,
+    group: Vec<(Matrix, mpsc::Sender<Response>)>,
+    errors: &AtomicU64,
+) {
+    let n = op.n();
+    for (x, resp) in group {
+        if x.rows.saturating_mul(n) > MAX_QUERY_OUT_ELEMS {
+            errors.fetch_add(1, Ordering::Relaxed);
+            let _ = resp.send(Response::Error(VdtError::InvalidSpec(format!(
+                "query response would be {} × {n} values (cap {MAX_QUERY_OUT_ELEMS}); \
+                 send fewer rows per request",
+                x.rows
+            ))));
+            continue;
+        }
+        let mut out = Matrix::zeros(x.rows, n);
+        let mut failed = None;
+        for r in 0..x.rows {
+            if let Err(e) = op.inductive_into(x.row(r), out.row_mut(r)) {
+                // try_inductive_row reports row 0 for a single point;
+                // remap to the row index within this request
+                failed = Some(match e {
+                    VdtError::Domain { divergence, reason, .. } => {
+                        VdtError::Domain { divergence, row: r, reason }
+                    }
+                    other => other,
+                });
+                break;
+            }
+        }
+        match failed {
+            Some(e) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+                let _ = resp.send(Response::Error(e));
+            }
+            None => {
+                let _ = resp.send(Response::Matrix(out));
+            }
+        }
+    }
+}
+
+/// Owner-thread state: the model registry plus counters.
+struct Owner {
+    models: HashMap<String, SharedOp>,
+    requests: u64,
+    fused_cols: u64,
+    fused_batches: u64,
+    /// Shared with query workers, which count per-request errors.
+    errors: Arc<AtomicU64>,
+    fuse: bool,
+}
+
+impl Owner {
+    fn error(&self, resp: &mpsc::Sender<Response>, e: VdtError) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = resp.send(Response::Error(e));
+    }
+
+    /// Route, validate and execute one burst. Returns true when the burst
+    /// contained a `Shutdown`. Nothing in the burst is dropped — requests
+    /// that arrived after the shutdown message are still served (the
+    /// graceful-drain contract).
+    fn process_burst(&mut self, burst: Vec<Request>) -> bool {
+        let mut matvec_groups: HashMap<String, Vec<(Matrix, mpsc::Sender<Response>)>> =
+            HashMap::new();
+        let mut query_groups: HashMap<String, Vec<(Matrix, mpsc::Sender<Response>)>> =
+            HashMap::new();
+        let mut work: Vec<Work> = Vec::new();
+        let mut shutdown = false;
+        for req in burst {
+            match req {
+                Request::Register { name, op } => {
+                    self.models.insert(name, op);
+                }
+                Request::Matvec { model, y, resp } => {
+                    matvec_groups.entry(model).or_default().push((y, resp));
+                }
+                Request::Query { model, x, resp } => {
+                    query_groups.entry(model).or_default().push((x, resp));
+                }
+                Request::LabelProp { model, y0, cfg, resp } => {
+                    self.requests += 1;
+                    match self.models.get(&model) {
+                        None => self.error(&resp, VdtError::UnknownModel(model)),
+                        Some(op) if y0.rows != op.n() => {
+                            let expected = op.n();
+                            self.error(
+                                &resp,
+                                VdtError::ShapeMismatch { what: "Y0", expected, got: y0.rows },
+                            );
+                        }
+                        Some(op) => {
+                            work.push(Work::LabelProp { op: op.clone(), y0, cfg, resp });
+                        }
+                    }
+                }
+                Request::Spectral { model, m, resp } => {
+                    self.requests += 1;
+                    match self.models.get(&model) {
+                        None => self.error(&resp, VdtError::UnknownModel(model)),
+                        Some(op) => work.push(Work::Spectral { op: op.clone(), m, resp }),
+                    }
+                }
+                Request::ListModels { resp } => {
+                    let mut cards: Vec<ModelCard> = self
+                        .models
+                        .iter()
+                        .map(|(name, op)| {
+                            let mut card = op.card();
+                            card.name = name.clone();
+                            card
+                        })
+                        .collect();
+                    cards.sort_by_key(|c| c.name.clone());
+                    let _ = resp.send(cards);
+                }
+                Request::Stats { resp } => {
+                    let _ = resp.send(ServiceStats {
+                        requests: self.requests,
+                        fused_cols: self.fused_cols,
+                        fused_batches: self.fused_batches,
+                        errors: self.errors.load(Ordering::Relaxed),
+                    });
+                }
+                Request::Shutdown => {
+                    // keep routing: everything already accepted into this
+                    // burst must still be answered before the owner exits
+                    shutdown = true;
+                }
+            }
+        }
+
+        // fuse matvec groups per model; shape errors answered here
+        for (model, group) in matvec_groups {
+            self.requests += group.len() as u64;
+            let op = match self.models.get(&model) {
+                Some(op) => op.clone(),
+                None => {
+                    for (_, resp) in group {
+                        self.error(&resp, VdtError::UnknownModel(model.clone()));
+                    }
+                    continue;
+                }
+            };
+            let n = op.n();
+            let (mut ok, mut bad): (Vec<_>, Vec<_>) = (Vec::new(), Vec::new());
+            for item in group {
+                if item.0.rows == n {
+                    ok.push(item);
+                } else {
+                    bad.push(item);
+                }
+            }
+            for (y, resp) in bad {
+                self.error(&resp, VdtError::ShapeMismatch { what: "Y", expected: n, got: y.rows });
+            }
+            if ok.is_empty() {
+                continue;
+            }
+            if self.fuse {
+                self.fused_batches += 1;
+                self.fused_cols += ok.iter().map(|(y, _)| y.cols as u64).sum::<u64>();
+                work.push(Work::MatvecBatch { op, group: ok });
+            } else {
+                // no-batching baseline: one work item (and one sweep) per
+                // request
+                for item in ok {
+                    work.push(Work::MatvecBatch { op: op.clone(), group: vec![item] });
+                }
+            }
+        }
+
+        // validate query groups; dim errors answered here, domain errors
+        // per request on the worker
+        for (model, group) in query_groups {
+            self.requests += group.len() as u64;
+            let op = match self.models.get(&model) {
+                Some(op) => op.clone(),
+                None => {
+                    for (_, resp) in group {
+                        self.error(&resp, VdtError::UnknownModel(model.clone()));
+                    }
+                    continue;
+                }
+            };
+            let d = match op.query_dim() {
+                Some(d) => d,
+                None => {
+                    for (_, resp) in group {
+                        self.error(
+                            &resp,
+                            VdtError::Unsupported(format!(
+                                "the {} backend is transductive: it has no inductive \
+                                 out-of-sample path (only vdt models do)",
+                                op.card().backend
+                            )),
+                        );
+                    }
+                    continue;
+                }
+            };
+            let (mut ok, mut bad): (Vec<_>, Vec<_>) = (Vec::new(), Vec::new());
+            for item in group {
+                if item.0.cols == d {
+                    ok.push(item);
+                } else {
+                    bad.push(item);
+                }
+            }
+            for (x, resp) in bad {
+                self.error(
+                    &resp,
+                    VdtError::ShapeMismatch { what: "query", expected: d, got: x.cols },
+                );
+            }
+            if ok.is_empty() {
+                continue;
+            }
+            if self.fuse {
+                work.push(Work::QueryBatch { op, group: ok, errors: self.errors.clone() });
+            } else {
+                for item in ok {
+                    work.push(Work::QueryBatch {
+                        op: op.clone(),
+                        group: vec![item],
+                        errors: self.errors.clone(),
+                    });
+                }
+            }
+        }
+
+        // ---- execute the burst on scoped worker threads ----
+        // waves are capped at the thread budget and each worker runs
+        // its item with nested par regions serialized, so a client
+        // backlog translates into at most `cap` OS threads total; a
+        // lone item runs inline on the owner with full internal
+        // parallelism instead
+        let cap = crate::core::par::max_threads().max(1);
+        while !work.is_empty() {
+            if work.len() == 1 {
+                work.pop().expect("non-empty").execute();
+                break;
+            }
+            let wave: Vec<Work> = work.drain(..work.len().min(cap)).collect();
+            std::thread::scope(|s| {
+                for w in wave {
+                    s.spawn(move || crate::core::par::with_nested_serial(|| w.execute()));
+                }
+            });
+        }
+
+        shutdown
+    }
+}
+
 /// The coordinator service. `spawn` starts the owner thread and returns a
 /// handle; the owner drains bursts of requests, fuses same-model matvecs
-/// into one multi-column sweep, and executes the burst on scoped worker
-/// threads.
+/// into one multi-column sweep (and same-model queries into one batch),
+/// and executes the burst on scoped worker threads.
 pub struct Coordinator;
 
 impl Coordinator {
     pub fn spawn() -> CoordinatorHandle {
+        Self::spawn_with(CoordinatorConfig::default())
+    }
+
+    /// Spawn with explicit [`CoordinatorConfig`] (the benches use this to
+    /// compare batched vs unbatched serving in one process).
+    pub fn spawn_with(cfg: CoordinatorConfig) -> CoordinatorHandle {
         let (tx, rx) = mpsc::channel();
         let inflight = Arc::new(AtomicU64::new(0));
+        let drain_gauge = inflight.clone();
         std::thread::Builder::new()
             .name("vdt-coordinator".into())
-            .spawn(move || Self::run(rx))
+            .spawn(move || Self::run(rx, cfg, drain_gauge))
             .expect("spawn coordinator");
         CoordinatorHandle { tx, inflight }
     }
 
-    fn run(rx: mpsc::Receiver<Request>) {
-        let mut models: HashMap<String, SharedOp> = HashMap::new();
-        let (mut served, mut fused_cols, mut batches) = (0u64, 0u64, 0u64);
+    fn run(rx: mpsc::Receiver<Request>, cfg: CoordinatorConfig, inflight: Arc<AtomicU64>) {
+        let mut owner = Owner {
+            models: HashMap::new(),
+            requests: 0,
+            fused_cols: 0,
+            fused_batches: 0,
+            errors: Arc::new(AtomicU64::new(0)),
+            fuse: cfg.fuse,
+        };
 
         while let Ok(first) = rx.recv() {
             // drain whatever is already queued — this burst forms a batch
             let mut burst = vec![first];
             // brief batching window so concurrent clients can land in the
             // same burst (the fusion ablation bench quantifies the win)
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            if cfg.burst_window > Duration::ZERO {
+                std::thread::sleep(cfg.burst_window);
+            }
             while let Ok(req) = rx.try_recv() {
                 burst.push(req);
             }
-
-            // ---- route & validate on the owner thread ----
-            let mut matvec_groups: HashMap<String, Vec<(Matrix, mpsc::Sender<Response>)>> =
-                HashMap::new();
-            let mut work: Vec<Work> = Vec::new();
-            // Shutdown stops routing (later requests in the burst are
-            // dropped, as before) but work already accepted from this
-            // burst still executes and answers its clients before exit
-            let mut shutdown = false;
-            for req in burst {
-                match req {
-                    Request::Register { name, op } => {
-                        models.insert(name, op);
+            if owner.process_burst(burst) {
+                // graceful drain: requests already enqueued when the
+                // shutdown message was processed are served before the
+                // receiver drops, and `inflight` (counted before each
+                // send) keeps the sweep alive while any roundtrip is in
+                // progress. The drain is deadline-bounded: a handle
+                // clone that *keeps issuing* requests after shutdown
+                // must not pin the owner alive forever — once the
+                // deadline passes, remaining/late senders get the typed
+                // post-shutdown ServiceUnavailable instead. Either way a
+                // send racing the final sweep sees a typed error, never
+                // a hang (`shutdown_drains_*` pins both sides).
+                let drain_until = Instant::now() + DRAIN_DEADLINE;
+                loop {
+                    let mut rest = Vec::new();
+                    while let Ok(req) = rx.try_recv() {
+                        rest.push(req);
                     }
-                    Request::Matvec { model, y, resp } => {
-                        matvec_groups.entry(model).or_default().push((y, resp));
-                    }
-                    Request::LabelProp { model, y0, cfg, resp } => {
-                        served += 1;
-                        match models.get(&model) {
-                            None => {
-                                let _ = resp
-                                    .send(Response::Error(VdtError::UnknownModel(model)));
-                            }
-                            Some(op) if y0.rows != op.n() => {
-                                let _ = resp.send(Response::Error(VdtError::ShapeMismatch {
-                                    what: "Y0",
-                                    expected: op.n(),
-                                    got: y0.rows,
-                                }));
-                            }
-                            Some(op) => {
-                                work.push(Work::LabelProp { op: op.clone(), y0, cfg, resp });
-                            }
+                    if rest.is_empty() {
+                        if inflight.load(Ordering::SeqCst) == 0
+                            || Instant::now() >= drain_until
+                        {
+                            return;
                         }
-                    }
-                    Request::Spectral { model, m, resp } => {
-                        served += 1;
-                        match models.get(&model) {
-                            None => {
-                                let _ = resp
-                                    .send(Response::Error(VdtError::UnknownModel(model)));
-                            }
-                            Some(op) => work.push(Work::Spectral { op: op.clone(), m, resp }),
-                        }
-                    }
-                    Request::ListModels { resp } => {
-                        let mut cards: Vec<ModelCard> = models
-                            .iter()
-                            .map(|(name, op)| {
-                                let mut card = op.card();
-                                card.name = name.clone();
-                                card
-                            })
-                            .collect();
-                        cards.sort_by_key(|c| c.name.clone());
-                        let _ = resp.send(cards);
-                    }
-                    Request::Stats { resp } => {
-                        let _ = resp.send((served, fused_cols, batches));
-                    }
-                    Request::Shutdown => {
-                        shutdown = true;
-                        break;
-                    }
-                }
-            }
-
-            // fuse matvec groups per model; shape errors answered here
-            for (model, group) in matvec_groups {
-                served += group.len() as u64;
-                let op = match models.get(&model) {
-                    Some(op) => op.clone(),
-                    None => {
-                        for (_, resp) in group {
-                            let _ = resp
-                                .send(Response::Error(VdtError::UnknownModel(model.clone())));
-                        }
+                        // senders mid-roundtrip: their message is about
+                        // to land (or they're consuming a reply) — yield
+                        // and sweep again
+                        std::thread::yield_now();
                         continue;
                     }
-                };
-                let n = op.n();
-                let (mut ok, mut bad): (Vec<_>, Vec<_>) = (Vec::new(), Vec::new());
-                for item in group {
-                    if item.0.rows == n {
-                        ok.push(item);
-                    } else {
-                        bad.push(item);
+                    owner.process_burst(rest);
+                    if Instant::now() >= drain_until {
+                        return;
                     }
                 }
-                for (y, resp) in bad {
-                    let _ = resp.send(Response::Error(VdtError::ShapeMismatch {
-                        what: "Y",
-                        expected: n,
-                        got: y.rows,
-                    }));
-                }
-                if ok.is_empty() {
-                    continue;
-                }
-                batches += 1;
-                fused_cols += ok.iter().map(|(y, _)| y.cols as u64).sum::<u64>();
-                work.push(Work::MatvecBatch { op, group: ok });
-            }
-
-            // ---- execute the burst on scoped worker threads ----
-            // waves are capped at the thread budget and each worker runs
-            // its item with nested par regions serialized, so a client
-            // backlog translates into at most `cap` OS threads total; a
-            // lone item runs inline on the owner with full internal
-            // parallelism instead
-            let cap = crate::core::par::max_threads().max(1);
-            while !work.is_empty() {
-                if work.len() == 1 {
-                    work.pop().expect("non-empty").execute();
-                    break;
-                }
-                let wave: Vec<Work> = work.drain(..work.len().min(cap)).collect();
-                std::thread::scope(|s| {
-                    for w in wave {
-                        s.spawn(move || crate::core::par::with_nested_serial(|| w.execute()));
-                    }
-                });
-            }
-
-            if shutdown {
-                break;
             }
         }
     }
@@ -449,7 +725,7 @@ mod tests {
     }
 
     #[test]
-    fn shape_mismatch_errors() {
+    fn shape_mismatch_errors_and_are_counted() {
         let handle = Coordinator::spawn();
         let (op, _) = model(30, 2);
         handle.register("m", op);
@@ -458,6 +734,10 @@ mod tests {
             err,
             crate::core::VdtError::ShapeMismatch { expected: 30, got: 7, .. }
         ));
+        let s = handle.stats();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.fused_batches, 0);
         handle.shutdown();
     }
 
@@ -480,10 +760,85 @@ mod tests {
             let want = op.matvec(&y);
             assert!(got.max_abs_diff(&want) < 1e-5, "request {c}");
         }
-        let (served, cols, batches) = handle.stats();
-        assert_eq!(served, 16);
-        assert_eq!(cols, 16);
-        assert!(batches <= 16);
+        let s = handle.stats();
+        assert_eq!(s.requests, 16);
+        assert_eq!(s.fused_cols, 16);
+        assert!(s.fused_batches <= 16);
+        assert_eq!(s.errors, 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn inductive_query_via_service_matches_direct_rows() {
+        let ds = synthetic::two_moons(80, 0.07, 11);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(5 * 80);
+        let m = Arc::new(m);
+        let handle = Coordinator::spawn();
+        handle.register("m", m.clone());
+
+        // three in-sample points as "unseen" queries, one request
+        let x = Matrix::from_fn(3, 2, |r, c| ds.x.get(r * 7, c));
+        let got = handle.query("m", x.clone()).unwrap();
+        assert_eq!((got.rows, got.cols), (3, 80));
+        for r in 0..3 {
+            let want = crate::vdt::induct::inductive_row(&m, x.row(r)).expand(&m.tree);
+            assert_eq!(got.row(r), &want[..], "query row {r}");
+            let sum: f64 = got.row(r).iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+        }
+
+        // wrong query dimension is a typed shape mismatch
+        let err = handle.query("m", Matrix::zeros(1, 5)).unwrap_err();
+        assert!(
+            matches!(err, VdtError::ShapeMismatch { what: "query", expected: 2, got: 5 }),
+            "{err}"
+        );
+        // unknown model stays typed
+        let err = handle.query("nope", Matrix::zeros(1, 2)).unwrap_err();
+        assert!(matches!(err, VdtError::UnknownModel(_)), "{err}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn inductive_query_on_transductive_backend_is_unsupported() {
+        let ds = synthetic::two_moons(40, 0.07, 12);
+        let g = crate::knn::KnnGraph::build(
+            &ds.x,
+            &crate::knn::KnnConfig { k: 3, ..Default::default() },
+        );
+        let handle = Coordinator::spawn();
+        handle.register("knn", Arc::new(g));
+        let err = handle.query("knn", Matrix::zeros(1, 2)).unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+        assert!(err.to_string().contains("transductive"), "{err}");
+        let s = handle.stats();
+        assert_eq!((s.requests, s.errors), (1, 1));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn one_bad_query_point_does_not_poison_the_batch() {
+        let (op, _) = model(40, 13);
+        let handle = Coordinator::spawn();
+        handle.register("m", op.clone());
+        // request 1 is fine, request 2 has a NaN query point; both are in
+        // flight concurrently and may land in the same burst
+        let h1 = handle.clone();
+        let good = std::thread::spawn(move || {
+            h1.query("m", Matrix::from_fn(1, 2, |_, _| 0.1))
+        });
+        let h2 = handle.clone();
+        let bad = std::thread::spawn(move || {
+            let mut x = Matrix::from_fn(2, 2, |_, _| 0.1);
+            x.set(1, 0, f32::NAN);
+            h2.query("m", x)
+        });
+        let ok = good.join().unwrap().unwrap();
+        assert_eq!((ok.rows, ok.cols), (1, 40));
+        let err = bad.join().unwrap().unwrap_err();
+        // the failing row index is reported relative to the request
+        assert!(matches!(err, VdtError::Domain { row: 1, .. }), "{err}");
         handle.shutdown();
     }
 
@@ -530,5 +885,95 @@ mod tests {
         let eigs = handle.spectral("m", 10).unwrap();
         assert!((eigs[0].0 - 1.0).abs() < 1e-3, "top eig {:?}", eigs[0]);
         handle.shutdown();
+    }
+
+    #[test]
+    fn unbatched_coordinator_is_bit_identical_to_batched() {
+        let (op, _) = model(60, 14);
+        let batched = Coordinator::spawn();
+        let unbatched = Coordinator::spawn_with(CoordinatorConfig {
+            burst_window: Duration::ZERO,
+            fuse: false,
+        });
+        batched.register("m", op.clone());
+        unbatched.register("m", op.clone());
+        let y = Matrix::from_fn(60, 3, |r, c| ((r * 3 + c) % 7) as f32 - 3.0);
+        let a = batched.matvec("m", y.clone()).unwrap();
+        let b = unbatched.matvec("m", y.clone()).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.data, op.matvec(&y).data);
+        let s = unbatched.stats();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.fused_batches, 0, "unbatched mode must not count fusion");
+        batched.shutdown();
+        unbatched.shutdown();
+    }
+
+    /// Regression for the shutdown drain: requests that were already in
+    /// the owner's queue when `Shutdown` was processed used to observe a
+    /// hung-up reply channel; now they are all answered first.
+    #[test]
+    fn shutdown_drains_already_enqueued_requests() {
+        const K: usize = 32;
+        let handle = Coordinator::spawn();
+        let ds = synthetic::two_moons(200, 0.07, 15);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * 200);
+        let m: SharedOp = Arc::new(m);
+        handle.register("m", m.clone());
+        // occupy the owner with a slow burst so everything below queues
+        // up behind it (the pre-fix failure mode needs requests behind a
+        // Shutdown in the queue)
+        let slow = {
+            let h = handle.clone();
+            let y0 = crate::labelprop::one_hot_labels(&ds.labels, 2);
+            std::thread::spawn(move || {
+                h.label_prop("m", y0, LpConfig { alpha: 0.5, steps: 8000 })
+            })
+        };
+        // let the owner pick the slow job up before enqueueing the rest
+        std::thread::sleep(Duration::from_millis(20));
+        handle.shutdown();
+        let (rtx, rrx) = mpsc::channel();
+        for c in 0..K {
+            let y = Matrix::from_fn(200, 1, move |r, _| ((r + c) % 7) as f32);
+            handle
+                .tx
+                .send(Request::Matvec { model: "m".into(), y, resp: rtx.clone() })
+                .expect("owner is still draining, send must succeed");
+        }
+        drop(rtx);
+        let mut answered = 0usize;
+        while let Ok(resp) = rrx.recv() {
+            match resp {
+                Response::Matrix(out) => {
+                    assert_eq!(out.rows, 200);
+                    answered += 1;
+                }
+                Response::Error(e) => panic!("drained request answered with {e}"),
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        assert_eq!(answered, K, "every enqueued request must be answered before exit");
+        slow.join().unwrap().unwrap();
+        // post-drain sends fail fast with a typed error, not a hang (the
+        // owner may still be finishing its final drain sweep, in which
+        // case a last request can legitimately be served — retry until
+        // the channel is down)
+        let mut saw_unavailable = false;
+        for _ in 0..200 {
+            match handle.matvec("m", Matrix::zeros(200, 1)) {
+                Ok(out) => {
+                    assert_eq!(out.rows, 200);
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    assert!(matches!(e, VdtError::ServiceUnavailable(_)), "{e}");
+                    saw_unavailable = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_unavailable, "coordinator never finished shutting down");
     }
 }

@@ -17,7 +17,10 @@
 use std::fmt;
 
 /// Typed error for the model build / serve surface. See the module docs.
-#[derive(Debug)]
+///
+/// `Clone` because the serving layers fan one failure out to several
+/// waiters (e.g. every request fused into a failed batch gets the error).
+#[derive(Clone, Debug)]
 pub enum VdtError {
     /// A build parameter is out of range or inconsistent (`k = 0`, empty
     /// dataset, non-positive `sigma`, mismatched Mahalanobis weights, …).
@@ -56,6 +59,25 @@ pub enum VdtError {
     /// Protocol-level surprise (e.g. a response of the wrong kind) — a
     /// bug if it ever surfaces, reported instead of panicking a client.
     Internal(String),
+}
+
+impl VdtError {
+    /// Stable machine-readable tag for the variant — what the HTTP error
+    /// bodies report as `error.kind` so clients can match without parsing
+    /// the human-readable message.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            VdtError::InvalidSpec(_) => "invalid_spec",
+            VdtError::Domain { .. } => "domain",
+            VdtError::Unsupported(_) => "unsupported",
+            VdtError::ShapeMismatch { .. } => "shape_mismatch",
+            VdtError::UnknownModel(_) => "unknown_model",
+            VdtError::Snapshot(_) => "snapshot",
+            VdtError::Runtime(_) => "runtime",
+            VdtError::ServiceUnavailable(_) => "service_unavailable",
+            VdtError::Internal(_) => "internal",
+        }
+    }
 }
 
 impl fmt::Display for VdtError {
@@ -102,6 +124,19 @@ mod tests {
 
         let e = VdtError::UnknownModel("nope".into());
         assert!(e.to_string().contains("unknown model"), "{e}");
+    }
+
+    #[test]
+    fn kind_is_stable_and_clone_preserves_payload() {
+        let e = VdtError::UnknownModel("nope".into());
+        assert_eq!(e.kind(), "unknown_model");
+        let c = e.clone();
+        assert!(matches!(c, VdtError::UnknownModel(name) if name == "nope"));
+        assert_eq!(VdtError::ServiceUnavailable(String::new()).kind(), "service_unavailable");
+        assert_eq!(
+            VdtError::ShapeMismatch { what: "Y", expected: 1, got: 2 }.kind(),
+            "shape_mismatch"
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod divergence;
 pub mod error;
+pub mod json;
 pub mod matrix;
 pub mod metrics;
 pub mod op;
@@ -19,6 +20,7 @@ pub use divergence::{
     DiagMahalanobis, Divergence, DivergenceKind, ItakuraSaito, KlSimplex, NodeStats, SqEuclidean,
 };
 pub use error::VdtError;
+pub use json::Json;
 pub use matrix::Matrix;
 pub use metrics::{Stats, Timer};
 pub use op::{AnyModel, Backend, ModelCard, TransitionOp};

@@ -29,6 +29,7 @@
 use std::path::Path;
 
 use super::error::VdtError;
+use super::json::Json;
 use super::matrix::Matrix;
 
 /// The closed set of transition-matrix backends this crate ships.
@@ -135,6 +136,23 @@ impl ModelCard {
         }
     }
 
+    /// Structured JSON rendering — what `GET /v1/models` serves (see
+    /// [`crate::runtime::server`]). Absent optionals encode as `null`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("backend".to_string(), Json::Str(self.backend.token().to_string())),
+            ("divergence".to_string(), Json::Str(self.divergence.clone())),
+            ("n".to_string(), Json::Num(self.n as f64)),
+            ("params".to_string(), Json::Num(self.params as f64)),
+            ("sigma".to_string(), self.sigma.map_or(Json::Null, Json::Num)),
+            (
+                "provenance".to_string(),
+                self.provenance.clone().map_or(Json::Null, Json::Str),
+            ),
+        ])
+    }
+
     /// One-line rendering for logs / the CLI (the registration name is
     /// omitted while the card is unregistered).
     pub fn summary(&self) -> String {
@@ -187,6 +205,33 @@ pub trait TransitionOp {
     /// count, bandwidth, provenance.
     fn card(&self) -> ModelCard {
         ModelCard::custom("op", self.n())
+    }
+
+    /// Dimensionality `d` of inductive out-of-sample queries, when the
+    /// backend supports them (`None` — the default — means it does not).
+    /// The VDT backend routes unseen points down its partition tree
+    /// ([`crate::vdt::induct`]); the kNN and exact baselines are purely
+    /// transductive.
+    fn query_dim(&self) -> Option<usize> {
+        None
+    }
+
+    /// Inductive capability: write the dense length-N outgoing transition
+    /// row of an *unseen* query `x` into `out` (the paper's out-of-sample
+    /// extension, [`crate::vdt::induct::inductive_row`]).
+    ///
+    /// `x.len()` must equal [`TransitionOp::query_dim`] and `out.len()`
+    /// must be `n()`. Backends without an inductive path return
+    /// [`VdtError::Unsupported`]; a query outside the divergence domain
+    /// is [`VdtError::Domain`] — typed, never a panic, so the serving
+    /// layer can answer 4xx.
+    fn inductive_into(&self, x: &[f32], out: &mut [f32]) -> Result<(), VdtError> {
+        let _ = (x, out);
+        Err(VdtError::Unsupported(format!(
+            "the {} backend is transductive: it has no inductive out-of-sample path \
+             (only vdt models do)",
+            self.card().backend
+        )))
     }
 }
 
@@ -317,6 +362,12 @@ impl TransitionOp for AnyModel {
     fn card(&self) -> ModelCard {
         self.as_op().card()
     }
+    fn query_dim(&self) -> Option<usize> {
+        self.as_op().query_dim()
+    }
+    fn inductive_into(&self, x: &[f32], out: &mut [f32]) -> Result<(), VdtError> {
+        self.as_op().inductive_into(x, out)
+    }
 }
 
 impl From<crate::vdt::VdtModel> for AnyModel {
@@ -377,5 +428,32 @@ mod tests {
         assert_eq!(card.backend, Backend::Custom("op"));
         assert_eq!(card.n, 3);
         assert_eq!(card.summary(), "backend=op divergence=sq_euclidean N=3 params=0");
+        // the inductive capability defaults to a typed Unsupported
+        assert_eq!(op.query_dim(), None);
+        let mut row = vec![0.0f32; 3];
+        let err = op.inductive_into(&[0.0, 0.0], &mut row).unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+    }
+
+    #[test]
+    fn model_card_json_roundtrips_fields() {
+        let card = ModelCard {
+            name: "m".to_string(),
+            backend: Backend::Vdt,
+            divergence: "kl".to_string(),
+            n: 42,
+            params: 100,
+            sigma: Some(0.5),
+            provenance: None,
+        };
+        let j = card.to_json();
+        let parsed = Json::parse(&j.encode()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("m"));
+        assert_eq!(parsed.get("backend").unwrap().as_str(), Some("vdt"));
+        assert_eq!(parsed.get("divergence").unwrap().as_str(), Some("kl"));
+        assert_eq!(parsed.get("n").unwrap().as_usize(), Some(42));
+        assert_eq!(parsed.get("params").unwrap().as_usize(), Some(100));
+        assert_eq!(parsed.get("sigma").unwrap().as_f64(), Some(0.5));
+        assert_eq!(parsed.get("provenance"), Some(&Json::Null));
     }
 }

@@ -70,7 +70,9 @@
 //!   symmetric refinement, O(|B|) matvec (Algorithm 1), plus the fast-kNN
 //!   and exact baselines, label propagation, Arnoldi spectral inference, a
 //!   threaded serving coordinator, versioned model snapshots for
-//!   fit-once/serve-many warm starts ([`runtime::snapshot`]), and the
+//!   fit-once/serve-many warm starts ([`runtime::snapshot`]), a std-only
+//!   HTTP serving subsystem with request micro-batching and inductive
+//!   out-of-sample query endpoints ([`runtime::server`]), and the
 //!   experiment harness that regenerates every table/figure of the paper.
 //! - **L2 (python/compile/model.py)**: the dense exact-model compute graphs
 //!   (transition matrix of Eq. 3, LP chunks of Eq. 15) in JAX.

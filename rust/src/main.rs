@@ -18,6 +18,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use vdt::api::ModelBuilder;
+use vdt::coordinator::CoordinatorHandle;
 use vdt::core::divergence::DivergenceKind;
 use vdt::core::metrics::Timer;
 use vdt::core::op::{Backend, ModelCard};
@@ -25,6 +26,7 @@ use vdt::data::{io, synthetic, Dataset};
 use vdt::exact::XlaExactModel;
 use vdt::experiments::{fig2, tables, Table};
 use vdt::labelprop::{self, LpConfig};
+use vdt::runtime::server::{self, Server, ServerConfig};
 use vdt::vdt::VdtModel;
 
 const USAGE: &str = "\
@@ -56,13 +58,23 @@ COMMANDS
             --model-path <path> (model.vdt)
   selftest  verify the AOT artifact <-> PJRT round trip
             --artifacts <dir> (artifacts)
-  serve     run the coordinator and a demo client burst
+  serve     run the coordinator; by default a demo client burst, with
+            --http an HTTP/1.1 server until SIGTERM/SIGINT (clean drain)
             --dataset ... --n <int> (1500) --k <int> (6)
             --method vdt|knn|exact (vdt)
             --divergence euclidean|kl|itakura-saito|mahalanobis (euclidean)
             --requests <int> (32)
             --model-path <p1[,p2,...]>  warm-start from snapshots instead
             of fitting (each registers under its file stem)
+            --http <addr>            e.g. 0.0.0.0:8080; endpoints:
+                                     GET /healthz /stats /v1/models,
+                                     POST /v1/models/{name}/matvec|query|labelprop
+            --http-workers <int> (32)     connection-handler pool
+            --queue-depth <int> (64)      pending connections before 429
+            --max-body-bytes <int> (8MiB)  request payload cap (413)
+            --batching on|off (on)        micro-batch matvec/query
+            --batch-window-us <int> (500) batch coalescing deadline
+            --max-batch <int> (64)        requests fused per batch
   help      print this text
 ";
 
@@ -207,6 +219,53 @@ fn run_exp(id: &str, cfg: &fig2::ExpConfig, alpha_n: usize, ocr_n: usize, out: &
         }
         other => return Err(anyhow!("unknown experiment id {other}; see `vdt help`")),
     }
+    Ok(())
+}
+
+/// `vdt serve --http ADDR`: front the coordinator with the
+/// `runtime::server` HTTP subsystem and block until SIGTERM/SIGINT, then
+/// drain gracefully (in-flight requests finish; the CI smoke job pins
+/// the "drained cleanly" exit path).
+fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()> {
+    let defaults = ServerConfig::default();
+    let batching = match args.get_str("batching", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(anyhow!("bad value for --batching: {other} (want on|off)")),
+    };
+    let cfg = ServerConfig {
+        workers: args.get("http_workers", defaults.workers)?,
+        queue_depth: args.get("queue_depth", defaults.queue_depth)?,
+        max_body_bytes: args.get("max_body_bytes", defaults.max_body_bytes)?,
+        batch_window: std::time::Duration::from_micros(
+            args.get("batch_window_us", defaults.batch_window.as_micros() as u64)?,
+        ),
+        max_batch: args.get("max_batch", defaults.max_batch)?,
+        batching,
+    };
+    let server = Server::bind(handle.clone(), addr, cfg)?;
+    println!(
+        "listening on http://{} (batching {}); \
+         GET /healthz /stats /v1/models, POST /v1/models/{{name}}/matvec|query|labelprop",
+        server.addr(),
+        if batching { "on" } else { "off" }
+    );
+    let stop = server::install_shutdown_signals();
+    while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("signal received; draining in-flight requests...");
+    // order matters for accurate counts: the server drain joins every
+    // worker (so all HTTP-origin coordinator requests are answered and
+    // counted), then the coordinator counters are read, then it stops
+    let http = server.shutdown();
+    let coord = handle.stats();
+    handle.shutdown();
+    println!(
+        "drained cleanly: {} http requests ({} rejected), {} coordinator requests \
+         ({} errors) in {} fused batches",
+        http.requests, http.rejected, coord.requests, coord.errors, coord.fused_batches
+    );
     Ok(())
 }
 
@@ -420,29 +479,16 @@ fn main() -> Result<()> {
                         }
                     }
                     let t = Timer::start();
+                    // duplicate stems would silently shadow each other in
+                    // the registry — typed failure before anything binds
                     let mut first: Option<(String, usize)> = None;
-                    let mut seen = std::collections::HashSet::new();
-                    for p in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-                        let path = std::path::Path::new(p);
-                        let name = path
-                            .file_stem()
-                            .and_then(|s| s.to_str())
-                            .unwrap_or("model")
-                            .to_string();
-                        // names come from file stems; a silent overwrite
-                        // would serve the wrong model under the first name
-                        if !seen.insert(name.clone()) {
-                            return Err(anyhow!(
-                                "--model-path has two snapshots named '{name}'; \
-                                 rename one file (the stem is the model name)"
-                            ));
-                        }
-                        let n = handle.register_snapshot(name.clone(), path)?;
+                    for (name, path) in server::parse_model_paths(&paths)? {
+                        let n = handle.register_snapshot(name.clone(), &path)?;
                         if first.is_none() {
                             first = Some((name, n));
                         }
                     }
-                    let first = first.ok_or_else(|| anyhow!("--model-path lists no snapshots"))?;
+                    let first = first.expect("parse_model_paths yields at least one snapshot");
                     println!("warm-started from snapshot(s) in {:.1} ms", t.ms());
                     first
                 }
@@ -461,6 +507,10 @@ fn main() -> Result<()> {
             for card in handle.list_models() {
                 println!("  {}", card.summary());
             }
+            if let Some(addr) = args.opt_str("http") {
+                serve_http(&args, &handle, &addr)?;
+                return Ok(());
+            }
             println!("coordinator up; issuing {requests} demo matvec requests");
             let t = Timer::start();
             let mut joins = Vec::new();
@@ -475,9 +525,12 @@ fn main() -> Result<()> {
             for j in joins {
                 j.join().unwrap();
             }
-            let (served, cols, batches) = handle.stats();
+            let s = handle.stats();
             println!(
-                "served {served} requests ({cols} columns) in {batches} fused batches, {:.1} ms total",
+                "served {} requests ({} columns) in {} fused batches, {:.1} ms total",
+                s.requests,
+                s.fused_cols,
+                s.fused_batches,
                 t.ms()
             );
             handle.shutdown();

@@ -10,8 +10,13 @@
 //! Executables are compiled on first use and cached. The runtime is
 //! intentionally `!Sync` (the PJRT wrapper types are not thread-safe);
 //! the coordinator owns it from a single worker thread.
+//!
+//! Besides the PJRT bridge this module hosts the other two deployment
+//! substrates: versioned model persistence ([`snapshot`]) and the
+//! std-only HTTP serving subsystem ([`server`]).
 
 pub mod artifacts;
+pub mod server;
 pub mod snapshot;
 
 use std::cell::RefCell;

@@ -1,0 +1,427 @@
+//! Request micro-batching for the HTTP server: concurrent matvec / query
+//! requests against the same model coalesce into **one** coordinator
+//! call (and therefore one fused multi-column sweep or one query batch),
+//! bounded by a deadline (`batch_window`) and a size cap (`max_batch`).
+//!
+//! This builds on the coordinator's own burst fusion but acts one layer
+//! earlier: N HTTP workers produce one coordinator round-trip instead of
+//! N, so the owner thread routes once, the reply fan-out happens here,
+//! and the batch is as wide as the window allows rather than as wide as
+//! the owner's brief drain happened to catch.
+//!
+//! **Bit-parity**: fusing matvec requests concatenates columns, and every
+//! column of every backend's `matvec` is an independent scalar sequence;
+//! query requests concatenate rows, which are computed row-by-row. Either
+//! way each request's bytes are identical to an unbatched call — pinned
+//! by the soak test in `rust/tests/http_server.rs`.
+//!
+//! **Error isolation**: a fused call that fails (e.g. one co-batched
+//! query point outside the divergence domain) is replayed per request, so
+//! every client gets exactly the result/error it would have gotten alone.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::CoordinatorHandle;
+use crate::core::error::VdtError;
+use crate::core::Matrix;
+
+/// Which batched endpoint a job belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    /// `P·Y` — jobs fuse along columns.
+    Matvec,
+    /// Inductive rows — jobs fuse along rows.
+    Query,
+}
+
+/// Counters the server's `/stats` endpoint reports for the batching
+/// layer.
+#[derive(Default)]
+pub struct BatchCounters {
+    /// Batches flushed to the coordinator.
+    pub flushed: AtomicU64,
+    /// Requests that rode in those batches (≥ flushed; the difference is
+    /// the coalescing win).
+    pub coalesced: AtomicU64,
+}
+
+struct Job {
+    model: String,
+    kind: BatchKind,
+    m: Matrix,
+    resp: mpsc::Sender<Result<Matrix, VdtError>>,
+}
+
+/// Compatibility key: jobs fuse only within (model, kind, shape) — for
+/// matvec the row count (must equal N to concatenate columns), for query
+/// the column count (the query dimension d).
+fn key_of(j: &Job) -> (BatchKind, usize, &str) {
+    let dim = match j.kind {
+        BatchKind::Matvec => j.m.rows,
+        BatchKind::Query => j.m.cols,
+    };
+    (j.kind, dim, j.model.as_str())
+}
+
+fn same_key(a: &Job, b: &Job) -> bool {
+    key_of(a) == key_of(b)
+}
+
+/// Cap on the total *cost* one fused call may carry ([`fuse_cost`], in
+/// f32 elements). `max_batch` alone caps the request *count*; without
+/// this, 64 near-body-cap requests could coalesce into a multi-GiB
+/// allocation the per-request body cap was supposed to rule out.
+const MAX_FUSED_ELEMS: usize = 16 << 20; // ≈ 64 MiB of f32
+
+/// Scheduling-granularity estimate of fusing a job. For matvec the
+/// input and the result are both N × cols, so the input size is the
+/// right measure. A query's *result* is rows × N with N unknown at this
+/// layer — budget each query row at a generous nominal N; the hard
+/// memory bound lives in the coordinator
+/// (`coordinator::service::MAX_QUERY_OUT_ELEMS`), which knows the real
+/// N and rejects oversized requests with a typed error.
+fn fuse_cost(j: &Job) -> usize {
+    match j.kind {
+        BatchKind::Matvec => j.m.data.len(),
+        BatchKind::Query => j.m.data.len().max(j.m.rows * 8192),
+    }
+}
+
+/// Flush executors: while one fused call runs its coordinator
+/// round-trip, the next window keeps collecting and flushes on another
+/// worker. A fixed pool (not a thread per flush) keeps the hot path free
+/// of spawn cost and of the spawn-failure mode that would drop a batch.
+const FLUSH_WORKERS: usize = 8;
+
+/// Handle to the batching thread. Cloned into every HTTP worker;
+/// [`Batcher::submit`] blocks until the job's batch has executed.
+#[derive(Clone)]
+pub struct Batcher {
+    tx: mpsc::Sender<Job>,
+}
+
+impl Batcher {
+    /// Spawn the batching thread and its flush pool. `window` is the
+    /// coalescing deadline measured from the first job of a batch;
+    /// `max_batch` caps how many requests one flush may carry.
+    pub fn spawn(
+        handle: CoordinatorHandle,
+        window: Duration,
+        max_batch: usize,
+        counters: Arc<BatchCounters>,
+    ) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (flush_tx, flush_rx) = mpsc::channel::<Vec<Job>>();
+        let flush_rx = Arc::new(Mutex::new(flush_rx));
+        for w in 0..FLUSH_WORKERS {
+            let handle = handle.clone();
+            let flush_rx = flush_rx.clone();
+            std::thread::Builder::new()
+                .name(format!("vdt-http-flush-{w}"))
+                .spawn(move || loop {
+                    let group = {
+                        let rx = flush_rx.lock().unwrap_or_else(|e| e.into_inner());
+                        match rx.recv() {
+                            Ok(g) => g,
+                            Err(_) => return, // batcher gone
+                        }
+                    };
+                    flush(&handle, group);
+                })
+                .expect("spawn flush worker");
+        }
+        std::thread::Builder::new()
+            .name("vdt-http-batcher".into())
+            .spawn(move || run(rx, handle, window, max_batch.max(1), counters, flush_tx))
+            .expect("spawn batcher");
+        Batcher { tx }
+    }
+
+    /// Submit one request and wait for its slice of the batch result.
+    pub fn submit(&self, model: &str, kind: BatchKind, m: Matrix) -> Result<Matrix, VdtError> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Job { model: model.to_string(), kind, m, resp: rtx })
+            .map_err(|_| VdtError::ServiceUnavailable("batcher is shut down".to_string()))?;
+        rrx.recv()
+            .map_err(|_| VdtError::ServiceUnavailable("batcher dropped the reply".to_string()))?
+    }
+}
+
+fn run(
+    rx: mpsc::Receiver<Job>,
+    handle: CoordinatorHandle,
+    window: Duration,
+    max_batch: usize,
+    counters: Arc<BatchCounters>,
+    flush_tx: mpsc::Sender<Vec<Job>>,
+) {
+    // jobs that arrived during someone else's window but belong to a
+    // different (model, kind, shape) group — they seed the next batch
+    let mut parked: VecDeque<Job> = VecDeque::new();
+    loop {
+        let first = match parked.pop_front() {
+            Some(j) => j,
+            None => match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break, // every submitter is gone
+            },
+        };
+        let mut elems = fuse_cost(&first);
+        let mut group = vec![first];
+        // adopt parked jobs that fit this group (same key, payload room)
+        let mut i = 0;
+        while i < parked.len() && group.len() < max_batch {
+            if same_key(&parked[i], &group[0])
+                && elems + fuse_cost(&parked[i]) <= MAX_FUSED_ELEMS
+            {
+                let j = parked.remove(i).expect("index checked");
+                elems += fuse_cost(&j);
+                group.push(j);
+            } else {
+                i += 1;
+            }
+        }
+        // collect newcomers until the deadline, the size cap, or the
+        // payload cap
+        let deadline = Instant::now() + window;
+        while group.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) if same_key(&j, &group[0])
+                    && elems + fuse_cost(&j) <= MAX_FUSED_ELEMS =>
+                {
+                    elems += fuse_cost(&j);
+                    group.push(j);
+                }
+                // wrong key — or right key but no payload room: either
+                // way it seeds a later batch
+                Ok(j) => parked.push_back(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        counters.flushed.fetch_add(1, Ordering::Relaxed);
+        counters.coalesced.fetch_add(group.len() as u64, Ordering::Relaxed);
+        // execute on the flush pool so the next window opens immediately;
+        // the waiting HTTP workers are the backpressure. A send only
+        // fails if the pool died, in which case running inline is still
+        // correct — no path drops a group on the floor.
+        if let Err(mpsc::SendError(group)) = flush_tx.send(group) {
+            flush(&handle, group);
+        }
+    }
+}
+
+/// Execute one batch and answer every job in it.
+fn flush(handle: &CoordinatorHandle, mut group: Vec<Job>) {
+    if group.len() == 1 {
+        let Job { model, kind, m, resp } = group.pop().expect("non-empty");
+        let out = match kind {
+            BatchKind::Matvec => handle.matvec(model, m),
+            BatchKind::Query => handle.query(model, m),
+        };
+        let _ = resp.send(out);
+        return;
+    }
+    let fused = match group[0].kind {
+        BatchKind::Matvec => fuse_cols(&group),
+        BatchKind::Query => fuse_rows(&group),
+    };
+    match call(handle, &group[0], fused) {
+        Ok(out) => match group[0].kind {
+            BatchKind::Matvec => split_cols(&out, group),
+            BatchKind::Query => split_rows(&out, group),
+        },
+        // a fused failure is replayed per request so each client gets the
+        // exact result/error an unbatched call would produce (one bad
+        // co-batched query must not poison its neighbors)
+        Err(_) => {
+            for j in group {
+                let out = call(handle, &j, j.m.clone());
+                let _ = j.resp.send(out);
+            }
+        }
+    }
+}
+
+fn call(handle: &CoordinatorHandle, j: &Job, m: Matrix) -> Result<Matrix, VdtError> {
+    match j.kind {
+        BatchKind::Matvec => handle.matvec(j.model.clone(), m),
+        BatchKind::Query => handle.query(j.model.clone(), m),
+    }
+}
+
+fn fuse_cols(group: &[Job]) -> Matrix {
+    let n = group[0].m.rows;
+    let total: usize = group.iter().map(|j| j.m.cols).sum();
+    let mut fused = Matrix::zeros(n, total);
+    let mut off = 0usize;
+    for j in group {
+        for r in 0..n {
+            fused.data[r * total + off..r * total + off + j.m.cols].copy_from_slice(j.m.row(r));
+        }
+        off += j.m.cols;
+    }
+    fused
+}
+
+fn split_cols(out: &Matrix, group: Vec<Job>) {
+    let n = out.rows;
+    let total = out.cols;
+    let mut off = 0usize;
+    for j in group {
+        let mut part = Matrix::zeros(n, j.m.cols);
+        for r in 0..n {
+            part.row_mut(r)
+                .copy_from_slice(&out.data[r * total + off..r * total + off + j.m.cols]);
+        }
+        off += j.m.cols;
+        let _ = j.resp.send(Ok(part));
+    }
+}
+
+fn fuse_rows(group: &[Job]) -> Matrix {
+    let d = group[0].m.cols;
+    let total: usize = group.iter().map(|j| j.m.rows).sum();
+    let mut fused = Matrix::zeros(total, d);
+    let mut off = 0usize;
+    for j in group {
+        fused.data[off * d..(off + j.m.rows) * d].copy_from_slice(&j.m.data);
+        off += j.m.rows;
+    }
+    fused
+}
+
+fn split_rows(out: &Matrix, group: Vec<Job>) {
+    let cols = out.cols;
+    let mut off = 0usize;
+    for j in group {
+        let rows = j.m.rows;
+        let part = Matrix::from_vec(
+            out.data[off * cols..(off + rows) * cols].to_vec(),
+            rows,
+            cols,
+        );
+        off += rows;
+        let _ = j.resp.send(Ok(part));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn serve_model(n: usize, seed: u64) -> (CoordinatorHandle, Arc<VdtModel>) {
+        let ds = synthetic::two_moons(n, 0.07, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * n);
+        let m = Arc::new(m);
+        let handle = Coordinator::spawn();
+        handle.register("m", m.clone());
+        (handle, m)
+    }
+
+    #[test]
+    fn coalesced_matvecs_are_bit_identical_to_direct_calls() {
+        let (handle, model) = serve_model(60, 1);
+        let counters = Arc::new(BatchCounters::default());
+        let batcher = Batcher::spawn(
+            handle.clone(),
+            Duration::from_millis(20),
+            16,
+            counters.clone(),
+        );
+        let mut joins = Vec::new();
+        for c in 0..8usize {
+            let b = batcher.clone();
+            joins.push(std::thread::spawn(move || {
+                let y = Matrix::from_fn(60, 1, move |r, _| ((r * 3 + c) % 11) as f32 - 5.0);
+                (c, b.submit("m", BatchKind::Matvec, y).unwrap())
+            }));
+        }
+        for j in joins {
+            let (c, got) = j.join().unwrap();
+            let y = Matrix::from_fn(60, 1, move |r, _| ((r * 3 + c) % 11) as f32 - 5.0);
+            assert_eq!(got.data, model.matvec(&y).data, "client {c} drifted under batching");
+        }
+        let flushed = counters.flushed.load(Ordering::Relaxed);
+        let coalesced = counters.coalesced.load(Ordering::Relaxed);
+        assert_eq!(coalesced, 8);
+        assert!(flushed >= 1 && flushed <= 8, "flushed {flushed}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn mixed_kinds_and_models_do_not_cross_fuse() {
+        let (handle, model) = serve_model(40, 2);
+        let ds2 = synthetic::two_moons(30, 0.07, 3);
+        let mut m2 = VdtModel::build(&ds2.x, &VdtConfig::default());
+        m2.refine_to(4 * 30);
+        handle.register("m2", Arc::new(m2));
+        let counters = Arc::new(BatchCounters::default());
+        let batcher =
+            Batcher::spawn(handle.clone(), Duration::from_millis(10), 16, counters);
+        let mut joins = Vec::new();
+        for c in 0..4usize {
+            let b = batcher.clone();
+            joins.push(std::thread::spawn(move || {
+                let (model, rows) = if c % 2 == 0 { ("m", 40) } else { ("m2", 30) };
+                let y = Matrix::from_fn(rows, 1, move |r, _| ((r + c) % 5) as f32);
+                b.submit(model, BatchKind::Matvec, y).unwrap()
+            }));
+        }
+        // an inductive query rides alongside the matvecs
+        let bq = batcher.clone();
+        let q = std::thread::spawn(move || {
+            bq.submit("m", BatchKind::Query, Matrix::from_fn(1, 2, |_, _| 0.2))
+        });
+        for j in joins {
+            let out = j.join().unwrap();
+            assert!(out.rows == 40 || out.rows == 30);
+        }
+        let qrow = q.join().unwrap().unwrap();
+        assert_eq!((qrow.rows, qrow.cols), (1, 40));
+        let sum: f64 = qrow.data.iter().map(|&v| v as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-5, "query row sums to {sum}");
+        let _ = model;
+        handle.shutdown();
+    }
+
+    #[test]
+    fn fused_failure_replays_per_request() {
+        let (handle, model) = serve_model(40, 4);
+        let counters = Arc::new(BatchCounters::default());
+        let batcher = Batcher::spawn(
+            handle.clone(),
+            Duration::from_millis(30),
+            8,
+            counters,
+        );
+        // same shape key, one good and one out-of-domain query — they can
+        // fuse, the fused call fails, and the replay isolates the error
+        let b1 = batcher.clone();
+        let good = std::thread::spawn(move || {
+            b1.submit("m", BatchKind::Query, Matrix::from_fn(1, 2, |_, _| 0.3))
+        });
+        let b2 = batcher.clone();
+        let bad = std::thread::spawn(move || {
+            b2.submit("m", BatchKind::Query, Matrix::from_fn(1, 2, |_, _| f32::NAN))
+        });
+        let ok = good.join().unwrap().unwrap();
+        assert_eq!(ok.cols, 40);
+        let err = bad.join().unwrap().unwrap_err();
+        assert!(matches!(err, VdtError::Domain { .. }), "{err}");
+        let _ = model;
+        handle.shutdown();
+    }
+}

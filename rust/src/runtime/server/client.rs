@@ -1,0 +1,121 @@
+//! Minimal blocking HTTP/1.1 client over one keep-alive connection —
+//! just enough to talk to [`crate::runtime::server`] from the examples,
+//! the `http_throughput` bench and the wire-layer test suite without an
+//! external dependency. Not a general-purpose client: it sends
+//! `Content-Length` bodies, reads `Content-Length` responses, and
+//! assumes the server's `application/json` answers.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One keep-alive connection to the server.
+pub struct HttpClient {
+    stream: TcpStream,
+    /// Carry-over bytes read past the previous response (none in
+    /// practice — the server never pipelines — but correctness first).
+    leftover: Vec<u8>,
+}
+
+impl HttpClient {
+    /// Connect with a generous default timeout on reads.
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient { stream, leftover: Vec::new() })
+    }
+
+    /// `GET path` → (status, body).
+    pub fn get(&mut self, path: &str) -> std::io::Result<(u16, String)> {
+        let head = format!("GET {path} HTTP/1.1\r\nHost: vdt\r\n\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        self.read_response()
+    }
+
+    /// `POST path` with a JSON body → (status, body).
+    pub fn post(&mut self, path: &str, body: &str) -> std::io::Result<(u16, String)> {
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: vdt\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+        self.read_response()
+    }
+
+    /// Raw access for malformed-request tests.
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Read one response without sending anything first — for tests that
+    /// write a raw (malformed) request through [`HttpClient::stream_mut`]
+    /// and then assert on the server's typed answer.
+    pub fn read_reply(&mut self) -> std::io::Result<(u16, String)> {
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> std::io::Result<(u16, String)> {
+        let mut buf = std::mem::take(&mut self.leftover);
+        let mut tmp = [0u8; 8192];
+        // head
+        let head_end = loop {
+            if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break pos;
+            }
+            let k = self.stream.read(&mut tmp)?;
+            if k == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed before a full response head",
+                ));
+            }
+            buf.extend_from_slice(&tmp[..k]);
+        };
+        let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad status line '{status_line}'"),
+                )
+            })?;
+        let mut content_length = 0usize;
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().map_err(|_| {
+                        std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            "bad content-length in response",
+                        )
+                    })?;
+                }
+            }
+        }
+        // body
+        let mut body = buf.split_off(head_end + 4);
+        while body.len() < content_length {
+            let k = self.stream.read(&mut tmp)?;
+            if k == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                ));
+            }
+            body.extend_from_slice(&tmp[..k]);
+        }
+        self.leftover = body.split_off(content_length);
+        let body = String::from_utf8(body).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "non-UTF8 response body")
+        })?;
+        Ok((status, body))
+    }
+}

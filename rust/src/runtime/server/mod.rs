@@ -1,0 +1,925 @@
+//! `runtime::server` — a dependency-free HTTP/1.1 serving subsystem over
+//! the threaded [`crate::coordinator`].
+//!
+//! The paper's point is that the VDT approximation makes transition-matrix
+//! operations cheap enough to run *online*; this module is the network
+//! surface that cashes that in: a `std::net::TcpListener` acceptor thread
+//! feeding a bounded worker pool, fronting a [`CoordinatorHandle`] model
+//! registry (warm-started from snapshots via `vdt serve --http`).
+//!
+//! ## Endpoints
+//!
+//! | Route | Meaning |
+//! |---|---|
+//! | `POST /v1/models/{name}/matvec` | `{"y": [[..], ..]}` → `{"yhat": [[..], ..]}` (Ŷ = P·Y) |
+//! | `POST /v1/models/{name}/query` | `{"x": [[..], ..]}` → `{"rows": [[..], ..]}` — **inductive** posterior rows for out-of-sample points |
+//! | `POST /v1/models/{name}/labelprop` | `{"y0": [[..], ..], "alpha": a, "steps": s}` → `{"y": [[..], ..]}` |
+//! | `GET /v1/models` | registered [`crate::core::op::ModelCard`]s as JSON |
+//! | `GET /healthz` | liveness |
+//! | `GET /stats` | coordinator + HTTP + batching counters |
+//!
+//! Model names may contain `/` (e.g. `moons/vdt`): the action is the last
+//! path segment, everything between `/v1/models/` and it is the name.
+//!
+//! ## Batching knobs
+//!
+//! - [`ServerConfig::batching`] — route matvec/query requests through the
+//!   micro-batcher, which coalesces concurrent same-model requests into
+//!   one fused coordinator call. Responses are **bit-identical** to
+//!   unbatched serving (columns/rows are independent scalar sequences).
+//! - [`ServerConfig::batch_window`] — how long a batch waits for company
+//!   after its first request (the latency the throughput is bought with).
+//! - [`ServerConfig::max_batch`] — requests per flush cap.
+//!
+//! ## Backpressure knobs
+//!
+//! - [`ServerConfig::workers`] — connection-handler pool size; also the
+//!   maximum number of concurrently-served connections.
+//! - [`ServerConfig::queue_depth`] — accepted connections waiting for a
+//!   worker. When the queue is full the acceptor answers **429** with a
+//!   typed `service_unavailable` body instead of letting latency grow
+//!   unboundedly.
+//! - [`ServerConfig::max_body_bytes`] — request payload cap (**413**).
+//!
+//! Connections that sit silent for [`http::IDLE_TIMEOUT`] between
+//! requests are closed, so idle (or deliberately mute) clients can't
+//! hold the whole worker pool hostage; a request that stalls mid-read
+//! hits the per-request deadline (**408**) instead, and a client that
+//! stops *reading* its response trips a write timeout and is dropped.
+//!
+//! Shutdown is a graceful drain: the acceptor stops, in-flight requests
+//! finish (keep-alive connections are closed at the next request
+//! boundary), then the coordinator's own drain guarantees every accepted
+//! request is answered. `vdt serve --http` wires this to SIGTERM/SIGINT.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use vdt::api::ModelBuilder;
+//! use vdt::coordinator::Coordinator;
+//! use vdt::data::synthetic;
+//! use vdt::runtime::server::{client::HttpClient, Server, ServerConfig};
+//!
+//! # fn main() -> Result<(), vdt::VdtError> {
+//! let ds = synthetic::two_moons(40, 0.08, 1);
+//! let handle = Coordinator::spawn();
+//! handle.register("moons", Arc::new(ModelBuilder::from_dataset(&ds).k(4).build()?));
+//!
+//! let server = Server::bind(handle.clone(), "127.0.0.1:0", ServerConfig::default())?;
+//! let mut client = HttpClient::connect(server.addr()).expect("connect");
+//! let (status, body) = client.get("/healthz").expect("healthz");
+//! assert_eq!(status, 200);
+//! assert!(body.contains("ok"));
+//!
+//! server.shutdown();
+//! handle.shutdown();
+//! # Ok(()) }
+//! ```
+
+pub mod client;
+pub mod http;
+
+mod batch;
+
+use std::collections::HashSet;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::CoordinatorHandle;
+use crate::core::error::VdtError;
+use crate::core::json::{self, Json};
+use crate::core::Matrix;
+use crate::labelprop::LpConfig;
+
+use batch::{BatchCounters, BatchKind, Batcher};
+
+/// Server-side ceiling on the `steps` a labelprop request may ask for
+/// (LP converges in tens-to-hundreds of steps; this is pure DoS margin).
+pub const MAX_LP_STEPS: usize = 100_000;
+
+/// Ceiling on a labelprop request's total work, measured as
+/// `steps × y0 elements`. Capping `steps` alone is not enough: per-step
+/// cost scales with y0's column count, so a wide-y0 request at the step
+/// cap could still occupy the coordinator for hours.
+pub const MAX_LP_WORK: u64 = 10_000_000_000;
+
+/// Per-request ceiling on inductive query rows. Each query row
+/// materializes a dense length-N posterior, so the *output* is q × N —
+/// without this cap a ~30 MiB body of low-dimensional points (well under
+/// the body cap) could demand a 100+ GiB response allocation.
+pub const MAX_QUERY_ROWS: usize = 1024;
+
+/// Tuning for [`Server::bind`] — see the module docs for what each knob
+/// buys.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Connection-handler threads (= max concurrently served
+    /// connections). Keep-alive clients hold a worker while connected.
+    pub workers: usize,
+    /// Accepted connections that may wait for a free worker before the
+    /// acceptor starts answering 429.
+    pub queue_depth: usize,
+    /// Request body cap in bytes (larger declared bodies get 413).
+    ///
+    /// Size this for your deployment's memory budget: a JSON body parses
+    /// into a DOM roughly an order of magnitude larger than its bytes
+    /// (every `0,` token becomes a boxed value), and up to [`workers`]
+    /// bodies parse concurrently. The 8 MiB default keeps worst-case
+    /// transient parse memory in the low GiB on a default-sized pool.
+    ///
+    /// [`workers`]: ServerConfig::workers
+    pub max_body_bytes: usize,
+    /// Micro-batch coalescing window (from the first request of a batch).
+    pub batch_window: Duration,
+    /// Maximum requests fused into one coordinator call.
+    pub max_batch: usize,
+    /// Route matvec/query through the micro-batcher. Off = one
+    /// coordinator round-trip per request (the unbatched baseline the
+    /// `http_throughput` bench compares against).
+    pub batching: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 32,
+            queue_depth: 64,
+            max_body_bytes: 8 << 20,
+            batch_window: Duration::from_micros(500),
+            max_batch: 64,
+            batching: true,
+        }
+    }
+}
+
+/// Snapshot of the server-side counters (`GET /stats` serves these next
+/// to the coordinator's [`crate::coordinator::ServiceStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HttpStats {
+    /// Complete HTTP requests parsed and routed.
+    pub requests: u64,
+    /// Responses with status ≥ 400 served by the worker pool (protocol
+    /// rejections included). Acceptor-side admission-control 429s are
+    /// counted in [`HttpStats::rejected`] only, not here.
+    pub errors: u64,
+    /// Connections answered 429 by the acceptor (queue full).
+    pub rejected: u64,
+    /// Micro-batches flushed to the coordinator.
+    pub batches: u64,
+    /// Requests that rode in those batches.
+    pub batched_requests: u64,
+    /// Connections currently held by workers.
+    pub active_connections: u64,
+}
+
+struct Shared {
+    handle: CoordinatorHandle,
+    batcher: Option<Batcher>,
+    cfg: ServerConfig,
+    shutdown: AtomicBool,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    rejected: AtomicU64,
+    active: AtomicU64,
+    /// 429-writer threads currently alive (bounded by
+    /// [`MAX_REJECT_THREADS`] so a connection flood can't amplify into a
+    /// thread flood).
+    rejects_inflight: AtomicU64,
+    batch_counters: Arc<BatchCounters>,
+}
+
+/// Cap on concurrent 429-writer threads. Beyond this the acceptor drops
+/// the connection unanswered — under that much overload, shedding load
+/// cheaply matters more than the courtesy body.
+const MAX_REJECT_THREADS: u64 = 32;
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// One snapshot of the HTTP counters — the single source for both
+    /// [`ServerHandle::stats`] and the `/stats` endpoint.
+    fn http_stats(&self) -> HttpStats {
+        HttpStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batch_counters.flushed.load(Ordering::Relaxed),
+            batched_requests: self.batch_counters.coalesced.load(Ordering::Relaxed),
+            active_connections: self.active.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The serving subsystem. [`Server::bind`] starts the acceptor and worker
+/// pool and returns a [`ServerHandle`]; dropping the handle (or calling
+/// [`ServerHandle::shutdown`]) drains and stops everything.
+pub struct Server;
+
+impl Server {
+    /// Bind `addr` (e.g. `"0.0.0.0:8080"`, or `"127.0.0.1:0"` for an
+    /// ephemeral test port) and start serving the models registered with
+    /// `handle`.
+    pub fn bind(
+        handle: CoordinatorHandle,
+        addr: &str,
+        cfg: ServerConfig,
+    ) -> Result<ServerHandle, VdtError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| VdtError::Runtime(format!("bind {addr}: {e}")))?;
+        Self::serve(handle, listener, cfg)
+    }
+
+    /// Serve on an already-bound listener.
+    pub fn serve(
+        handle: CoordinatorHandle,
+        listener: TcpListener,
+        cfg: ServerConfig,
+    ) -> Result<ServerHandle, VdtError> {
+        let addr = listener
+            .local_addr()
+            .map_err(|e| VdtError::Runtime(format!("local_addr: {e}")))?;
+        let batch_counters = Arc::new(BatchCounters::default());
+        let batcher = if cfg.batching {
+            Some(Batcher::spawn(
+                handle.clone(),
+                cfg.batch_window,
+                cfg.max_batch,
+                batch_counters.clone(),
+            ))
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
+            handle,
+            batcher,
+            cfg: cfg.clone(),
+            shutdown: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            rejects_inflight: AtomicU64::new(0),
+            batch_counters,
+        });
+
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.queue_depth.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for w in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let conn_rx = conn_rx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("vdt-http-worker-{w}"))
+                    .spawn(move || worker_loop(&shared, &conn_rx))
+                    .map_err(|e| VdtError::Runtime(format!("spawn worker: {e}")))?,
+            );
+        }
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("vdt-http-acceptor".into())
+                .spawn(move || acceptor_loop(&shared, &listener, conn_tx))
+                .map_err(|e| VdtError::Runtime(format!("spawn acceptor: {e}")))?
+        };
+        Ok(ServerHandle { addr, shared, acceptor: Some(acceptor), workers })
+    }
+}
+
+/// Running-server handle: address, live counters, graceful shutdown.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the HTTP-side counters.
+    pub fn stats(&self) -> HttpStats {
+        self.shared.http_stats()
+    }
+
+    /// Graceful drain: stop accepting, finish every in-flight request,
+    /// close keep-alive connections at their next request boundary, join
+    /// all threads. Idempotent; also runs on drop. Returns the final
+    /// counters — sampled *after* the drain, so requests completed while
+    /// draining are included.
+    pub fn shutdown(mut self) -> HttpStats {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(acceptor) = self.acceptor.take() {
+            // wake the acceptor out of accept(2)
+            let _ = TcpStream::connect(self.addr);
+            let _ = acceptor.join();
+            // the acceptor owned the connection sender: workers drain the
+            // queued connections, then see the disconnect and exit
+            for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn acceptor_loop(
+    shared: &Arc<Shared>,
+    listener: &TcpListener,
+    conn_tx: mpsc::SyncSender<TcpStream>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.stopping() {
+                    return;
+                }
+                // transient accept failure (e.g. fd exhaustion): back off
+                // briefly instead of spinning
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.stopping() {
+            return; // (also catches the self-connect wake-up)
+        }
+        match conn_tx.try_send(stream) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(stream)) => {
+                // admission control: reject now rather than queue forever
+                shared.rejected.fetch_add(1, Ordering::Relaxed);
+                reject_connection(shared, stream);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+/// Answer a rejected connection with the typed 429 body — off the
+/// acceptor thread, because the write plus the bounded drain (which
+/// keeps the close from RSTing the body off the wire) can take ~100 ms
+/// and the acceptor must keep accepting exactly when the server is
+/// overloaded. Reject threads are capped: past [`MAX_REJECT_THREADS`]
+/// the connection is dropped unanswered rather than amplifying a
+/// connection flood into a thread flood.
+fn reject_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
+    if shared.rejects_inflight.fetch_add(1, Ordering::SeqCst) >= MAX_REJECT_THREADS {
+        shared.rejects_inflight.fetch_sub(1, Ordering::SeqCst);
+        return; // drop: close without a body, cheapest possible shed
+    }
+    let body = error_body(&VdtError::ServiceUnavailable(format!(
+        "server at capacity ({} workers busy, {} connections queued)",
+        shared.cfg.workers, shared.cfg.queue_depth
+    )));
+    let s = shared.clone();
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let spawned = std::thread::Builder::new()
+        .name("vdt-http-reject".into())
+        .spawn(move || {
+            let _ = http::write_response(&mut stream, 429, &body, false);
+            http::drain_before_close(&mut stream);
+            s.rejects_inflight.fetch_sub(1, Ordering::SeqCst);
+        });
+    if spawned.is_err() {
+        // thread exhaustion: the closure (and its counter decrement)
+        // never ran — undo here; the connection closed when the closure
+        // was dropped
+        shared.rejects_inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn worker_loop(shared: &Shared, conn_rx: &Mutex<mpsc::Receiver<TcpStream>>) {
+    loop {
+        // holding the lock while blocked in recv is fine: the holder is
+        // the one worker entitled to the next connection anyway
+        let stream = {
+            let guard = conn_rx.lock().unwrap_or_else(|e| e.into_inner());
+            match guard.recv() {
+                Ok(s) => s,
+                Err(_) => return, // acceptor gone and queue drained
+            }
+        };
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        serve_connection(shared, stream);
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn serve_connection(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // short poll so the shutdown flag is observed between reads
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    // a client that stops *reading* must not hold the worker either:
+    // without this, write_all on a response larger than the socket
+    // buffer blocks forever and even shutdown's worker join hangs
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let stop = || shared.stopping();
+    loop {
+        // protocol rejections close with a bounded drain of whatever the
+        // peer already sent: without it the close RSTs the error body
+        // off the wire and the client sees "connection reset", not JSON
+        match http::read_request(&mut stream, shared.cfg.max_body_bytes, &stop) {
+            http::ReadOutcome::Closed => return,
+            http::ReadOutcome::Bad(msg) => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                let body = error_body(&VdtError::InvalidSpec(msg));
+                let _ = http::write_response(&mut stream, 400, &body, false);
+                http::drain_before_close(&mut stream);
+                return;
+            }
+            http::ReadOutcome::TooLarge { limit } => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                let body = error_body(&VdtError::InvalidSpec(format!(
+                    "request body exceeds the {limit}-byte cap"
+                )));
+                let _ = http::write_response(&mut stream, 413, &body, false);
+                http::drain_before_close(&mut stream);
+                return;
+            }
+            http::ReadOutcome::TimedOut => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                // a distinct kind: clients matching on error.kind must
+                // not confuse "your upload stalled" (408, retry the
+                // request) with server overload (429/503, back off)
+                let body = kind_body("timeout", "request read timed out");
+                let _ = http::write_response(&mut stream, 408, &body, false);
+                http::drain_before_close(&mut stream);
+                return;
+            }
+            http::ReadOutcome::Request(req) => {
+                shared.requests.fetch_add(1, Ordering::Relaxed);
+                let (status, body) = route(shared, &req);
+                if status >= 400 {
+                    shared.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let keep = req.keep_alive && !stop();
+                if http::write_response(&mut stream, status, &body, keep).is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- routing
+
+fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let draining = shared.stopping();
+            (
+                200,
+                format!(
+                    "{{\"status\":\"{}\"}}",
+                    if draining { "draining" } else { "ok" }
+                ),
+            )
+        }
+        ("GET", "/v1/models") => {
+            let cards: Vec<Json> =
+                shared.handle.list_models().iter().map(|c| c.to_json()).collect();
+            (200, Json::Obj(vec![("models".to_string(), Json::Arr(cards))]).encode())
+        }
+        ("GET", "/stats") => (200, stats_body(shared)),
+        (_, "/healthz") | (_, "/v1/models") | (_, "/stats") => method_not_allowed("GET"),
+        (method, path) => match path.strip_prefix("/v1/models/") {
+            None => not_found(path),
+            Some(rest) => match rest.rsplit_once('/') {
+                None => not_found(path),
+                Some((name, action)) if name.is_empty() => {
+                    not_found(&format!("/v1/models//{action}"))
+                }
+                Some((name, action)) => {
+                    if !matches!(action, "matvec" | "query" | "labelprop") {
+                        return not_found(path);
+                    }
+                    if method != "POST" {
+                        return method_not_allowed("POST");
+                    }
+                    match model_action(shared, name, action, &req.body) {
+                        Ok(body) => (200, body),
+                        Err(e) => (status_of(&e), error_body(&e)),
+                    }
+                }
+            },
+        },
+    }
+}
+
+fn not_found(path: &str) -> (u16, String) {
+    let msg = format!(
+        "no route {path}; see /healthz, /stats, /v1/models, \
+         /v1/models/{{name}}/{{matvec|query|labelprop}}"
+    );
+    (404, kind_body("not_found", &msg))
+}
+
+fn method_not_allowed(allowed: &str) -> (u16, String) {
+    (405, kind_body("method_not_allowed", &format!("this route only accepts {allowed}")))
+}
+
+fn model_action(
+    shared: &Shared,
+    name: &str,
+    action: &str,
+    body: &[u8],
+) -> Result<String, VdtError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| VdtError::InvalidSpec("request body is not valid UTF-8".to_string()))?;
+    if text.trim().is_empty() {
+        return Err(VdtError::InvalidSpec(format!(
+            "empty request body; POST a JSON object (see the README's \"{action}\" example)"
+        )));
+    }
+    let parsed = Json::parse(text)
+        .map_err(|e| VdtError::InvalidSpec(format!("request body is not valid JSON: {e}")))?;
+    match action {
+        "matvec" => {
+            let y = field_matrix(&parsed, "y")?;
+            let out = dispatch(shared, name, BatchKind::Matvec, y)?;
+            Ok(matrix_body("yhat", &out))
+        }
+        "query" => {
+            let x = field_matrix(&parsed, "x")?;
+            if x.rows > MAX_QUERY_ROWS {
+                return Err(VdtError::InvalidSpec(format!(
+                    "at most {MAX_QUERY_ROWS} query rows per request, got {} \
+                     (each row materializes a dense length-N posterior)",
+                    x.rows
+                )));
+            }
+            let out = dispatch(shared, name, BatchKind::Query, x)?;
+            Ok(matrix_body("rows", &out))
+        }
+        "labelprop" => {
+            let y0 = field_matrix(&parsed, "y0")?;
+            let alpha = match parsed.get("alpha") {
+                None => 0.01,
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    VdtError::InvalidSpec("field 'alpha' must be a number".to_string())
+                })? as f32,
+            };
+            if !(0.0..=1.0).contains(&alpha) {
+                return Err(VdtError::InvalidSpec(format!(
+                    "alpha must be in [0, 1], got {alpha}"
+                )));
+            }
+            let steps = match parsed.get("steps") {
+                None => 500,
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    VdtError::InvalidSpec(
+                        "field 'steps' must be a non-negative integer".to_string(),
+                    )
+                })?,
+            };
+            // a label-propagation run occupies a coordinator worker for
+            // its full duration and the owner joins the burst before the
+            // next one, so untrusted request size must be capped or one
+            // request wedges every model for hours
+            if steps > MAX_LP_STEPS {
+                return Err(VdtError::InvalidSpec(format!(
+                    "steps must be ≤ {MAX_LP_STEPS}, got {steps}"
+                )));
+            }
+            let work = (steps as u64).saturating_mul(y0.data.len() as u64);
+            if work > MAX_LP_WORK {
+                return Err(VdtError::InvalidSpec(format!(
+                    "steps × y0 elements must be ≤ {MAX_LP_WORK}, got {work}; \
+                     lower steps or split the label matrix"
+                )));
+            }
+            let out = shared.handle.label_prop(name, y0, LpConfig { alpha, steps })?;
+            Ok(matrix_body("y", &out))
+        }
+        _ => unreachable!("route() filters actions"),
+    }
+}
+
+/// Matvec/query dispatch: through the micro-batcher when enabled, else a
+/// direct coordinator round-trip.
+fn dispatch(
+    shared: &Shared,
+    model: &str,
+    kind: BatchKind,
+    m: Matrix,
+) -> Result<Matrix, VdtError> {
+    match (&shared.batcher, kind) {
+        (Some(b), _) => b.submit(model, kind, m),
+        (None, BatchKind::Matvec) => shared.handle.matvec(model, m),
+        (None, BatchKind::Query) => shared.handle.query(model, m),
+    }
+}
+
+fn stats_body(shared: &Shared) -> String {
+    let c = shared.handle.stats();
+    let h = shared.http_stats();
+    let num = |v: u64| Json::Num(v as f64);
+    Json::Obj(vec![
+        (
+            "coordinator".to_string(),
+            Json::Obj(vec![
+                ("requests".to_string(), num(c.requests)),
+                ("fused_cols".to_string(), num(c.fused_cols)),
+                ("fused_batches".to_string(), num(c.fused_batches)),
+                ("errors".to_string(), num(c.errors)),
+                ("inflight".to_string(), num(shared.handle.inflight())),
+            ]),
+        ),
+        (
+            "http".to_string(),
+            Json::Obj(vec![
+                ("requests".to_string(), num(h.requests)),
+                ("errors".to_string(), num(h.errors)),
+                ("rejected".to_string(), num(h.rejected)),
+                ("active_connections".to_string(), num(h.active_connections)),
+            ]),
+        ),
+        (
+            "batching".to_string(),
+            Json::Obj(vec![
+                ("enabled".to_string(), Json::Bool(shared.batcher.is_some())),
+                ("batches".to_string(), num(h.batches)),
+                ("batched_requests".to_string(), num(h.batched_requests)),
+            ]),
+        ),
+    ])
+    .encode()
+}
+
+// ------------------------------------------------------------- wire glue
+
+/// `{"<key>": [[row], [row], ...]}` with exact-round-trip f32 floats.
+pub fn matrix_body(key: &str, m: &Matrix) -> String {
+    let mut s = String::with_capacity(m.data.len() * 10 + key.len() + 8);
+    s.push_str("{\"");
+    s.push_str(key);
+    s.push_str("\":");
+    write_matrix(&mut s, m);
+    s.push('}');
+    s
+}
+
+/// Append `[[...], ...]` rows of `m` (shortest-round-trip floats).
+pub fn write_matrix(out: &mut String, m: &Matrix) {
+    out.push('[');
+    for r in 0..m.rows {
+        if r > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for (i, &v) in m.row(r).iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::write_f32(out, v);
+        }
+        out.push(']');
+    }
+    out.push(']');
+}
+
+/// Required matrix field of a request object.
+fn field_matrix(obj: &Json, key: &'static str) -> Result<Matrix, VdtError> {
+    let v = obj.get(key).ok_or_else(|| {
+        VdtError::InvalidSpec(format!("missing field '{key}' (an array of number rows)"))
+    })?;
+    matrix_from_json(v, key)
+}
+
+/// Decode `[[..], ..]` into a [`Matrix`] — typed errors for ragged rows,
+/// non-numbers, and empty shapes.
+pub fn matrix_from_json(v: &Json, what: &str) -> Result<Matrix, VdtError> {
+    let rows = v
+        .as_arr()
+        .ok_or_else(|| VdtError::InvalidSpec(format!("'{what}' must be an array of rows")))?;
+    if rows.is_empty() {
+        return Err(VdtError::InvalidSpec(format!("'{what}' must have at least one row")));
+    }
+    let cols = rows[0]
+        .as_arr()
+        .ok_or_else(|| {
+            VdtError::InvalidSpec(format!("'{what}' rows must be arrays of numbers"))
+        })?
+        .len();
+    if cols == 0 {
+        return Err(VdtError::InvalidSpec(format!(
+            "'{what}' rows must have at least one value"
+        )));
+    }
+    // validate the whole shape BEFORE allocating: rows.len() × cols is
+    // attacker-controlled, and letting row 0 alone size the buffer would
+    // turn a few-MB body ([[0,0,…1M zeros…],[0],[0],…]) into a
+    // multi-terabyte `Matrix::zeros` that aborts the process. After this
+    // pass the allocation is bounded by values actually present in the
+    // parsed JSON, which the body cap already bounds.
+    for (r, row) in rows.iter().enumerate() {
+        let vals = row.as_arr().ok_or_else(|| {
+            VdtError::InvalidSpec(format!("'{what}' row {r} is not an array"))
+        })?;
+        if vals.len() != cols {
+            return Err(VdtError::InvalidSpec(format!(
+                "'{what}' is ragged: row {r} has {} values, row 0 has {cols}",
+                vals.len()
+            )));
+        }
+    }
+    let mut m = Matrix::zeros(rows.len(), cols);
+    for (r, row) in rows.iter().enumerate() {
+        let vals = row.as_arr().expect("shape validated above");
+        for (c, val) in vals.iter().enumerate() {
+            let f = val.as_f64().ok_or_else(|| {
+                VdtError::InvalidSpec(format!("'{what}'[{r}][{c}] is not a number"))
+            })?;
+            let v = f as f32;
+            // e.g. 1e39 is a finite f64 the parser accepts but overflows
+            // f32 to Inf — without this gate the request would answer
+            // 200 with Inf/NaN results encoded as null
+            if !v.is_finite() {
+                return Err(VdtError::InvalidSpec(format!(
+                    "'{what}'[{r}][{c}] = {f:e} overflows f32"
+                )));
+            }
+            m.set(r, c, v);
+        }
+    }
+    Ok(m)
+}
+
+/// `{"error": {"kind": ..., "message": ...}}`.
+pub fn error_body(e: &VdtError) -> String {
+    kind_body(e.kind(), &e.to_string())
+}
+
+/// Error body with an explicit machine-readable kind — for wire-level
+/// conditions (e.g. the 408 read timeout) that have no [`VdtError`]
+/// variant of their own and must not alias one that means something
+/// else to clients matching on `error.kind`.
+fn kind_body(kind: &str, message: &str) -> String {
+    Json::Obj(vec![(
+        "error".to_string(),
+        Json::Obj(vec![
+            ("kind".to_string(), Json::Str(kind.to_string())),
+            ("message".to_string(), Json::Str(message.to_string())),
+        ]),
+    )])
+    .encode()
+}
+
+/// HTTP status for a typed error.
+pub fn status_of(e: &VdtError) -> u16 {
+    match e {
+        VdtError::InvalidSpec(_) | VdtError::Domain { .. } | VdtError::ShapeMismatch { .. } => {
+            400
+        }
+        VdtError::UnknownModel(_) => 404,
+        VdtError::Unsupported(_) => 501,
+        VdtError::ServiceUnavailable(_) => 503,
+        VdtError::Snapshot(_) | VdtError::Runtime(_) | VdtError::Internal(_) => 500,
+    }
+}
+
+// -------------------------------------------------------------- CLI glue
+
+/// Split a comma-separated `--model-path` list into `(name, path)` pairs,
+/// naming each snapshot after its file stem. Two snapshots resolving to
+/// the same name would silently shadow each other in the registry, so
+/// duplicates are a typed [`VdtError::InvalidSpec`] *before* anything
+/// binds or loads.
+pub fn parse_model_paths(paths: &str) -> Result<Vec<(String, PathBuf)>, VdtError> {
+    let mut out: Vec<(String, PathBuf)> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    for p in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let path = PathBuf::from(p);
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("model")
+            .to_string();
+        if !seen.insert(name.clone()) {
+            return Err(VdtError::InvalidSpec(format!(
+                "--model-path lists two snapshots named '{name}'; rename one file \
+                 (the stem is the registration name)"
+            )));
+        }
+        out.push((name, path));
+    }
+    if out.is_empty() {
+        return Err(VdtError::InvalidSpec(
+            "--model-path lists no snapshots".to_string(),
+        ));
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------ signal handling
+
+static STOP_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGTERM/SIGINT handlers that flip a process-global flag and
+/// return that flag — `vdt serve --http` polls it and drains on shutdown
+/// (the CI smoke job asserts a clean SIGTERM drain). Async-signal-safe:
+/// the handler only stores into an atomic. On non-Unix targets this is a
+/// no-op that returns the (never-set) flag.
+pub fn install_shutdown_signals() -> &'static AtomicBool {
+    #[cfg(unix)]
+    {
+        extern "C" fn on_signal(_signum: i32) {
+            STOP_SIGNAL.store(true, Ordering::SeqCst);
+        }
+        type Handler = extern "C" fn(i32);
+        extern "C" {
+            fn signal(signum: i32, handler: Handler) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+    &STOP_SIGNAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_model_paths_names_by_stem_and_rejects_duplicates() {
+        let got = parse_model_paths("a/digit1.vdt, b/usps.vdt").unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, "digit1");
+        assert_eq!(got[0].1, PathBuf::from("a/digit1.vdt"));
+        assert_eq!(got[1].0, "usps");
+
+        // same stem in different directories still collides in the
+        // registry — typed error before anything loads
+        let err = parse_model_paths("a/m.vdt,b/m.vdt").unwrap_err();
+        assert!(matches!(&err, VdtError::InvalidSpec(msg) if msg.contains("'m'")), "{err}");
+
+        // empty list is typed too
+        let err = parse_model_paths(" , ").unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+    }
+
+    #[test]
+    fn matrix_json_roundtrip_is_bit_exact() {
+        let m = Matrix::from_fn(3, 4, |r, c| ((r * 13 + c * 7) % 11) as f32 * 0.3 - 1.0);
+        let body = matrix_body("y", &m);
+        let parsed = Json::parse(&body).unwrap();
+        let back = matrix_from_json(parsed.get("y").unwrap(), "y").unwrap();
+        assert_eq!((back.rows, back.cols), (3, 4));
+        assert_eq!(back.data, m.data, "wire round-trip changed float bits");
+    }
+
+    #[test]
+    fn matrix_from_json_rejects_malformed_shapes() {
+        for (src, why) in [
+            ("3", "not an array"),
+            ("[]", "no rows"),
+            ("[[]]", "empty row"),
+            ("[[1,2],[3]]", "ragged"),
+            ("[[1,2],3]", "row not an array"),
+            ("[[1,\"x\"]]", "non-number"),
+            ("[[1,null]]", "null entry"),
+            ("[[1e39]]", "finite f64 that overflows f32"),
+        ] {
+            let v = Json::parse(src).unwrap();
+            let err = matrix_from_json(&v, "y").unwrap_err();
+            assert!(matches!(err, VdtError::InvalidSpec(_)), "{why}: {err}");
+        }
+    }
+
+    #[test]
+    fn error_bodies_are_typed_json() {
+        let e = VdtError::ShapeMismatch { what: "Y", expected: 10, got: 7 };
+        let body = error_body(&e);
+        let v = Json::parse(&body).unwrap();
+        let err = v.get("error").unwrap();
+        assert_eq!(err.get("kind").unwrap().as_str(), Some("shape_mismatch"));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("10"));
+        assert_eq!(status_of(&e), 400);
+        assert_eq!(status_of(&VdtError::UnknownModel(String::new())), 404);
+        assert_eq!(status_of(&VdtError::Unsupported(String::new())), 501);
+        assert_eq!(status_of(&VdtError::ServiceUnavailable(String::new())), 503);
+        assert_eq!(status_of(&VdtError::Internal(String::new())), 500);
+    }
+}

@@ -28,6 +28,7 @@
 //! out-of-sample label prediction — inductive SSL on top of a fitted
 //! transductive model.
 
+use crate::core::error::VdtError;
 use crate::core::vecmath::logsumexp;
 use crate::core::Matrix;
 use crate::tree::PartitionTree;
@@ -46,6 +47,15 @@ impl InductiveRow {
     /// Expand to a dense length-N row (mass uniform within each block).
     pub fn expand(&self, tree: &PartitionTree) -> Vec<f32> {
         let mut row = vec![0f32; tree.n];
+        self.expand_into(tree, &mut row);
+        row
+    }
+
+    /// Expand into a caller-owned length-N buffer (fully overwritten) —
+    /// the allocation-free variant serving request loops reuse.
+    pub fn expand_into(&self, tree: &PartitionTree, row: &mut [f32]) {
+        assert_eq!(row.len(), tree.n, "inductive row buffer must have length N");
+        row.fill(0.0);
         for &(node, mass) in &self.targets {
             let leaves = tree.leaves_under(node);
             let per = (mass / leaves.len() as f64) as f32;
@@ -53,7 +63,6 @@ impl InductiveRow {
                 row[leaf as usize] += per;
             }
         }
-        row
     }
 
     /// Expected value of per-point scores under this row: Σ_j p_xj y_j —
@@ -103,14 +112,38 @@ pub fn route(tree: &PartitionTree, x: &[f32]) -> Vec<u32> {
 }
 
 /// Outgoing transition row of an unseen `x` under a fitted model.
+///
+/// Library convenience that panics on caller errors; the serving path
+/// ([`try_inductive_row`], surfaced as
+/// [`crate::core::op::TransitionOp::inductive_into`]) reports the same
+/// conditions as typed [`VdtError`]s instead.
 pub fn inductive_row(model: &VdtModel, x: &[f32]) -> InductiveRow {
+    match try_inductive_row(model, x) {
+        Ok(row) => row,
+        Err(VdtError::ShapeMismatch { expected, got, .. }) => {
+            panic!("query dimension mismatch: expected {expected}, got {got}")
+        }
+        Err(VdtError::Domain { divergence, reason, .. }) => {
+            panic!("query outside the {divergence} domain: {reason}")
+        }
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Fallible [`inductive_row`]: a wrong-dimension query is
+/// [`VdtError::ShapeMismatch`] and an out-of-domain query (NaN, or e.g. a
+/// near-zero coordinate under Itakura-Saito) is [`VdtError::Domain`] with
+/// `row = 0` — callers batching several queries remap the row index.
+pub fn try_inductive_row(model: &VdtModel, x: &[f32]) -> Result<InductiveRow, VdtError> {
     let tree = &model.tree;
-    assert_eq!(x.len(), tree.d, "query dimension mismatch");
+    if x.len() != tree.d {
+        return Err(VdtError::ShapeMismatch { what: "query", expected: tree.d, got: x.len() });
+    }
     // same fail-fast domain gate as build_tree_impl: a NaN (or, under
     // Itakura-Saito, a near-zero coordinate) would otherwise flow through
     // route()/d2_point_block and come back as a silently garbage posterior
-    if let Err(e) = tree.div.check_point(x) {
-        panic!("query outside the {} domain: {e}", tree.div.name());
+    if let Err(reason) = tree.div.check_point(x) {
+        return Err(VdtError::Domain { divergence: tree.div.name(), row: 0, reason });
     }
     let sigma = model.sigma();
     let path = route(tree, x);
@@ -124,7 +157,7 @@ pub fn inductive_row(model: &VdtModel, x: &[f32]) -> InductiveRow {
     }
     if kernels.is_empty() {
         // degenerate single-point model
-        return InductiveRow { targets: vec![] };
+        return Ok(InductiveRow { targets: vec![] });
     }
     // flat softmax over the path blocks with block-averaged energies:
     // weight(B) ∝ |B| · exp(−D²_xB / (2σ²|B|))   (mass for the whole block)
@@ -142,7 +175,7 @@ pub fn inductive_row(model: &VdtModel, x: &[f32]) -> InductiveRow {
         .zip(logits)
         .map(|(b, l)| (b, (l - z).exp()))
         .collect();
-    InductiveRow { targets }
+    Ok(InductiveRow { targets })
 }
 
 /// Inductive label prediction: score each class by the expected label
@@ -249,6 +282,37 @@ mod tests {
             // expand() rounds per-leaf mass to f32; score() stays f64
             assert!((fast[k] - want).abs() < 1e-5, "class {k}: {} vs {want}", fast[k]);
         }
+    }
+
+    #[test]
+    fn try_inductive_row_reports_typed_errors() {
+        let (ds, m) = fitted(40, 8);
+        // happy path agrees with the panicking wrapper
+        let a = try_inductive_row(&m, ds.x.row(3)).unwrap();
+        let b = inductive_row(&m, ds.x.row(3));
+        assert_eq!(a.targets, b.targets);
+        // wrong dimension is a typed shape mismatch
+        let err = try_inductive_row(&m, &[0.0; 5]).unwrap_err();
+        assert!(
+            matches!(err, VdtError::ShapeMismatch { expected: 2, got: 5, .. }),
+            "{err}"
+        );
+        // out-of-domain query is a typed domain error
+        let err = try_inductive_row(&m, &[f32::NAN, 0.0]).unwrap_err();
+        assert!(
+            matches!(err, VdtError::Domain { divergence: "sq_euclidean", .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn expand_into_overwrites_dirty_buffers() {
+        let (ds, m) = fitted(30, 9);
+        let row = inductive_row(&m, ds.x.row(4));
+        let want = row.expand(&m.tree);
+        let mut dirty = vec![7.5f32; 30];
+        row.expand_into(&m.tree, &mut dirty);
+        assert_eq!(dirty, want);
     }
 
     #[test]

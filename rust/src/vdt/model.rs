@@ -10,6 +10,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::core::divergence::{Divergence, DivergenceKind};
+use crate::core::error::VdtError;
 use crate::core::Matrix;
 use crate::core::op::{Backend, ModelCard, TransitionOp};
 use crate::runtime::snapshot::{instantiate_divergence, Snapshot};
@@ -419,6 +420,16 @@ impl TransitionOp for VdtModel {
             sigma: Some(self.sigma),
             provenance: self.provenance.clone(),
         }
+    }
+
+    fn query_dim(&self) -> Option<usize> {
+        Some(self.tree.d)
+    }
+
+    fn inductive_into(&self, x: &[f32], out: &mut [f32]) -> Result<(), VdtError> {
+        let row = super::induct::try_inductive_row(self, x)?;
+        row.expand_into(&self.tree, out);
+        Ok(())
     }
 }
 

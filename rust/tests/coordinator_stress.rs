@@ -61,10 +61,15 @@ fn eight_plus_clients_fused_results_are_bit_exact() {
     }
     assert_eq!(total_requests, (CLIENTS * ROUNDS) as u64);
 
-    let (served, fused_cols, batches) = handle.stats();
-    assert_eq!(served, total_requests, "every request must be counted");
-    assert_eq!(fused_cols, total_cols, "every successful column must be counted");
-    assert!(batches >= 1 && batches <= total_requests, "batches {batches}");
+    let s = handle.stats();
+    assert_eq!(s.requests, total_requests, "every request must be counted");
+    assert_eq!(s.fused_cols, total_cols, "every successful column must be counted");
+    assert!(
+        s.fused_batches >= 1 && s.fused_batches <= total_requests,
+        "batches {}",
+        s.fused_batches
+    );
+    assert_eq!(s.errors, 0);
     handle.shutdown();
 }
 
@@ -116,9 +121,9 @@ fn mixed_workload_under_concurrency_stays_correct() {
         j.join().expect("worker panicked");
     }
 
-    let (served, fused_cols, _) = handle.stats();
-    assert_eq!(served, 8 * 4 + 2 + 2);
-    assert_eq!(fused_cols, 8 * 4);
+    let s = handle.stats();
+    assert_eq!(s.requests, 8 * 4 + 2 + 2);
+    assert_eq!(s.fused_cols, 8 * 4);
     handle.shutdown();
 }
 
@@ -149,9 +154,10 @@ fn errors_under_concurrency_do_not_poison_counters() {
     for j in joins {
         j.join().unwrap();
     }
-    let (served, fused_cols, batches) = handle.stats();
-    assert_eq!(served, 8, "errors still count as served requests");
-    assert_eq!(fused_cols, 4, "only valid columns are fused");
-    assert!(batches <= 4);
+    let s = handle.stats();
+    assert_eq!(s.requests, 8, "errors still count as served requests");
+    assert_eq!(s.fused_cols, 4, "only valid columns are fused");
+    assert!(s.fused_batches <= 4);
+    assert_eq!(s.errors, 4, "each bad-shape request counts as one error");
     handle.shutdown();
 }

@@ -1,0 +1,465 @@
+//! Wire-layer test suite for `runtime::server` over real sockets:
+//!
+//! - end-to-end serving (healthz / models / stats / matvec / inductive
+//!   query / labelprop) with responses **bit-identical** to in-process
+//!   `CoordinatorHandle` calls,
+//! - the malformed-request corpus (bad JSON, missing/ragged fields, bad
+//!   content-length, truncated and oversized bodies, wrong shapes, wrong
+//!   methods, unknown routes/models) — every one a typed 4xx/5xx, never
+//!   a panic, and the server stays healthy afterwards,
+//! - a multi-client concurrent soak under micro-batching asserting
+//!   bit-parity with direct `CoordinatorHandle::matvec`,
+//! - admission control (429 when the worker pool and queue are full) and
+//!   graceful drain on shutdown.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use vdt::coordinator::{Coordinator, CoordinatorHandle};
+use vdt::core::json::Json;
+use vdt::core::Matrix;
+use vdt::labelprop::{self, LpConfig};
+use vdt::runtime::server::client::HttpClient;
+use vdt::runtime::server::{
+    matrix_body, matrix_from_json, write_matrix, Server, ServerConfig, ServerHandle,
+};
+use vdt::vdt::{induct, VdtConfig, VdtModel};
+
+const N: usize = 120;
+
+fn fitted(seed: u64) -> Arc<VdtModel> {
+    let ds = vdt::data::synthetic::two_moons(N, 0.07, seed);
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    m.refine_to(5 * N);
+    Arc::new(m)
+}
+
+/// Coordinator + server with the given config; "m" is a fitted VDT model
+/// **warm-started from a snapshot** (the fit-once/serve-many deployment
+/// path — snapshot loading is bit-identical, so parity assertions against
+/// the returned in-process model still hold exactly), "knn" a
+/// transductive baseline.
+fn spawn(cfg: ServerConfig) -> (CoordinatorHandle, ServerHandle, Arc<VdtModel>) {
+    let model = fitted(1);
+    let handle = Coordinator::spawn();
+    let snap = std::env::temp_dir().join(format!(
+        "vdt_http_snap_{}_{:p}.vdt",
+        std::process::id(),
+        Arc::as_ptr(&model)
+    ));
+    model.save(&snap, "http-test").expect("save snapshot");
+    let n = handle.register_snapshot("m", &snap).expect("warm start");
+    assert_eq!(n, N);
+    std::fs::remove_file(&snap).ok();
+    let ds = vdt::data::synthetic::two_moons(60, 0.07, 2);
+    let knn = vdt::knn::KnnGraph::build(
+        &ds.x,
+        &vdt::knn::KnnConfig { k: 3, ..Default::default() },
+    );
+    handle.register("knn", Arc::new(knn));
+    let server = Server::bind(handle.clone(), "127.0.0.1:0", cfg).expect("bind");
+    (handle, server, model)
+}
+
+fn parse_matrix(body: &str, key: &str) -> Matrix {
+    let v = Json::parse(body).unwrap_or_else(|e| panic!("bad response body {body}: {e}"));
+    matrix_from_json(v.get(key).unwrap_or_else(|| panic!("no '{key}' in {body}")), key)
+        .expect("response matrix decodes")
+}
+
+fn error_kind(body: &str) -> String {
+    Json::parse(body)
+        .ok()
+        .and_then(|v| v.get("error")?.get("kind")?.as_str().map(str::to_string))
+        .unwrap_or_else(|| panic!("no error.kind in {body}"))
+}
+
+#[test]
+fn healthz_models_and_stats_respond() {
+    let (handle, server, _model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"ok\""), "{body}");
+
+    let (status, body) = c.get("/v1/models").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let models = Json::parse(&body).unwrap();
+    let arr = models.get("models").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(arr.len(), 2, "{body}");
+    // name-sorted: knn before m
+    assert_eq!(arr[0].get("name").unwrap().as_str(), Some("knn"));
+    assert_eq!(arr[0].get("backend").unwrap().as_str(), Some("knn"));
+    assert_eq!(arr[1].get("name").unwrap().as_str(), Some("m"));
+    assert_eq!(arr[1].get("backend").unwrap().as_str(), Some("vdt"));
+    assert_eq!(arr[1].get("n").unwrap().as_usize(), Some(N));
+    assert!(arr[1].get("sigma").unwrap().as_f64().unwrap() > 0.0);
+
+    let (status, body) = c.get("/stats").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let stats = Json::parse(&body).unwrap();
+    assert!(stats.get("coordinator").unwrap().get("requests").is_some(), "{body}");
+    assert!(stats.get("http").unwrap().get("requests").unwrap().as_f64().unwrap() >= 2.0);
+    assert_eq!(stats.get("batching").unwrap().get("enabled").unwrap().as_bool(), Some(true));
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn matvec_over_http_is_bit_identical_to_in_process_calls() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let y = Matrix::from_fn(N, 3, |r, col| (((r * 31 + col * 17) % 23) as f32 - 11.0) * 0.25);
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got = parse_matrix(&body, "yhat");
+    assert_eq!((got.rows, got.cols), (N, 3));
+
+    // bit-parity with both the direct operator and the coordinator path
+    let want_direct = model.matvec(&y);
+    let want_coord = handle.matvec("m", y.clone()).unwrap();
+    assert_eq!(got.data, want_direct.data, "HTTP matvec drifted from the operator");
+    assert_eq!(got.data, want_coord.data, "HTTP matvec drifted from the coordinator");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn inductive_query_over_http_matches_in_process_rows() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    // out-of-sample-ish points (perturbed training coords)
+    let x = Matrix::from_fn(3, 2, |r, col| {
+        model.tree.s1_of(model.tree.root())[col] / model.tree.n as f32
+            + (r as f32 - 1.0) * 0.05
+    });
+    let (status, body) = c.post("/v1/models/m/query", &matrix_body("x", &x)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got = parse_matrix(&body, "rows");
+    assert_eq!((got.rows, got.cols), (3, N));
+    for r in 0..3 {
+        let want = induct::inductive_row(&model, x.row(r)).expand(&model.tree);
+        assert_eq!(got.row(r), &want[..], "query row {r} drifted");
+        let sum: f64 = got.row(r).iter().map(|&v| v as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+    }
+
+    // and bit-parity with the coordinator query path
+    let want_coord = handle.query("m", x.clone()).unwrap();
+    assert_eq!(got.data, want_coord.data);
+
+    // a transductive backend answers 501 with a typed kind
+    let (status, body) = c
+        .post("/v1/models/knn/query", &matrix_body("x", &Matrix::zeros(1, 2)))
+        .unwrap();
+    assert_eq!(status, 501, "{body}");
+    assert_eq!(error_kind(&body), "unsupported");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn labelprop_over_http_matches_in_process_run() {
+    let (handle, server, _model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let ds = vdt::data::synthetic::two_moons(N, 0.07, 1);
+    let labeled = labelprop::choose_labeled(&ds.labels, 2, 12, 3);
+    let y0 = labelprop::seed_matrix(&ds.labels, &labeled, 2);
+    let mut body_json = String::from("{\"alpha\":0.5,\"steps\":40,\"y0\":");
+    vdt::runtime::server::write_matrix(&mut body_json, &y0);
+    body_json.push('}');
+
+    let (status, body) = c.post("/v1/models/m/labelprop", &body_json).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got = parse_matrix(&body, "y");
+    let want = handle
+        .label_prop("m", y0.clone(), LpConfig { alpha: 0.5, steps: 40 })
+        .unwrap();
+    assert_eq!(got.data, want.data, "HTTP labelprop drifted from the coordinator");
+    let ccr = labelprop::ccr(&got, &ds.labels, &labeled);
+    assert!(ccr > 0.8, "CCR {ccr}");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_typed_4xx_and_never_kill_the_server() {
+    let (handle, server, _model) = spawn(ServerConfig {
+        max_body_bytes: 64 * 1024,
+        ..ServerConfig::default()
+    });
+    let addr = server.addr();
+
+    // (path, body, want_status, want_kind)
+    let cases: Vec<(&str, String, u16, &str)> = vec![
+        ("/v1/models/m/matvec", "not json".to_string(), 400, "invalid_spec"),
+        ("/v1/models/m/matvec", String::new(), 400, "invalid_spec"),
+        ("/v1/models/m/matvec", "{}".to_string(), 400, "invalid_spec"),
+        ("/v1/models/m/matvec", "{\"y\": 3}".to_string(), 400, "invalid_spec"),
+        ("/v1/models/m/matvec", "{\"y\": []}".to_string(), 400, "invalid_spec"),
+        ("/v1/models/m/matvec", "{\"y\": [[1,2],[3]]}".to_string(), 400, "invalid_spec"),
+        ("/v1/models/m/matvec", "{\"y\": [[1,\"a\"]]}".to_string(), 400, "invalid_spec"),
+        // wrong shape: 7 rows against an N=120 operator
+        (
+            "/v1/models/m/matvec",
+            matrix_body("y", &Matrix::zeros(7, 1)),
+            400,
+            "shape_mismatch",
+        ),
+        // wrong query dimension
+        (
+            "/v1/models/m/query",
+            matrix_body("x", &Matrix::zeros(1, 9)),
+            400,
+            "shape_mismatch",
+        ),
+        // unknown model
+        (
+            "/v1/models/ghost/matvec",
+            matrix_body("y", &Matrix::zeros(4, 1)),
+            404,
+            "unknown_model",
+        ),
+        // unknown action
+        ("/v1/models/m/transmogrify", "{}".to_string(), 404, "not_found"),
+        // bad labelprop knobs
+        (
+            "/v1/models/m/labelprop",
+            {
+                let mut b = String::from("{\"alpha\":7.0,\"y0\":");
+                write_matrix(&mut b, &Matrix::zeros(N, 2));
+                b.push('}');
+                b
+            },
+            400,
+            "invalid_spec",
+        ),
+        // steps over the server-side cap: one request must not be able
+        // to occupy a coordinator worker for hours
+        (
+            "/v1/models/m/labelprop",
+            {
+                let mut b = String::from("{\"steps\":4000000000,\"y0\":");
+                write_matrix(&mut b, &Matrix::zeros(N, 2));
+                b.push('}');
+                b
+            },
+            400,
+            "invalid_spec",
+        ),
+        // a finite f64 that overflows f32 must be rejected, not served
+        // back as a 200 full of nulls
+        ("/v1/models/m/matvec", "{\"y\": [[1e39]]}".to_string(), 400, "invalid_spec"),
+        // query rows over the per-request cap: the response would be
+        // rows × N, so the row count is bounded up front
+        (
+            "/v1/models/m/query",
+            {
+                let mut b = String::from("{\"x\":");
+                write_matrix(&mut b, &Matrix::zeros(1025, 2));
+                b.push('}');
+                b
+            },
+            400,
+            "invalid_spec",
+        ),
+        // allocation bomb: a wide row 0 over many 1-element rows must be
+        // rejected as ragged BEFORE rows×cols sizes a buffer
+        (
+            "/v1/models/m/matvec",
+            {
+                let mut b = String::from("{\"y\": [[");
+                b.push_str(&vec!["0"; 4096].join(","));
+                b.push(']');
+                for _ in 0..64 {
+                    b.push_str(",[0]");
+                }
+                b.push_str("]}");
+                b
+            },
+            400,
+            "invalid_spec",
+        ),
+    ];
+    for (path, body, want_status, want_kind) in cases {
+        let mut c = HttpClient::connect(addr).unwrap();
+        let (status, resp) = c.post(path, &body).unwrap();
+        assert_eq!(status, want_status, "{path} with {body:.60}: {resp}");
+        assert_eq!(error_kind(&resp), want_kind, "{path}: {resp}");
+    }
+
+    // wrong method on an action route
+    let mut c = HttpClient::connect(addr).unwrap();
+    let (status, resp) = c.get("/v1/models/m/matvec").unwrap();
+    assert_eq!(status, 405, "{resp}");
+    // wrong method on a read route
+    let (status, resp) = c.post("/healthz", "{}").unwrap();
+    assert_eq!(status, 405, "{resp}");
+    // unknown route
+    let (status, resp) = c.get("/v2/anything").unwrap();
+    assert_eq!(status, 404, "{resp}");
+
+    // raw-socket protocol garbage: non-numeric content-length
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"POST /v1/models/m/matvec HTTP/1.1\r\nContent-Length: abc\r\n\r\n")
+        .unwrap();
+    let mut cl = HttpClient::connect(addr).unwrap(); // server still alive?
+    let (status, _) = cl.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+
+    // truncated body: declare 100 bytes, send 10, close — the server
+    // must shrug it off (it may not even get the 400 written)
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"POST /v1/models/m/matvec HTTP/1.1\r\nContent-Length: 100\r\n\r\n{\"y\": [[1").unwrap();
+    drop(raw);
+    let mut cl = HttpClient::connect(addr).unwrap();
+    let (status, _) = cl.get("/healthz").unwrap();
+    assert_eq!(status, 200, "server unhealthy after a truncated body");
+
+    // oversized body: declared over the cap → 413 without reading it.
+    // The typed body must actually reach the client (the server drains
+    // before closing so the close doesn't RST the response off the wire).
+    let mut c = HttpClient::connect(addr).unwrap();
+    let huge_decl = format!(
+        "POST /v1/models/m/matvec HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        1 << 20
+    );
+    c.stream_mut().write_all(huge_decl.as_bytes()).unwrap();
+    let (status, resp) = c.read_reply().expect("413 response must survive the close");
+    assert_eq!(status, 413, "{resp}");
+    assert_eq!(error_kind(&resp), "invalid_spec", "{resp}");
+
+    // the server survived the whole corpus and still serves correctly
+    let mut c = HttpClient::connect(addr).unwrap();
+    let y = Matrix::from_fn(N, 1, |r, _| (r % 5) as f32);
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_soak_under_batching_is_bit_exact() {
+    const CLIENTS: usize = 12;
+    const ROUNDS: usize = 5;
+    let (handle, server, model) = spawn(ServerConfig {
+        // wide window + small cap: force real coalescing and multiple
+        // flushes
+        batch_window: Duration::from_millis(2),
+        max_batch: 8,
+        batching: true,
+        ..ServerConfig::default()
+    });
+    let addr = server.addr();
+
+    let mut joins = Vec::new();
+    for client in 0..CLIENTS {
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("connect");
+            for round in 0..ROUNDS {
+                let tag = client * 1000 + round;
+                let y = Matrix::from_fn(N, 1, move |r, _| {
+                    (((r * 31 + tag * 7) % 19) as f32 - 9.0) * 0.1
+                });
+                let (status, body) =
+                    c.post("/v1/models/m/matvec", &matrix_body("y", &y)).expect("post");
+                assert_eq!(status, 200, "{body}");
+                let got = parse_matrix(&body, "yhat");
+                let want = model.matvec(&y);
+                assert_eq!(
+                    got.data, want.data,
+                    "client {client} round {round} not bit-exact vs direct matvec"
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("soak client panicked");
+    }
+
+    let http = server.stats();
+    assert_eq!(http.requests, (CLIENTS * ROUNDS) as u64);
+    assert_eq!(http.errors, 0);
+    assert_eq!(http.batched_requests, (CLIENTS * ROUNDS) as u64);
+    assert!(
+        http.batches <= http.batched_requests,
+        "batches {} > requests {}",
+        http.batches,
+        http.batched_requests
+    );
+    let coord = handle.stats();
+    assert_eq!(coord.requests, http.batches, "one coordinator call per flushed batch");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn overload_answers_429_with_a_typed_body() {
+    let (handle, server, _model) = spawn(ServerConfig {
+        workers: 1,
+        queue_depth: 1,
+        ..ServerConfig::default()
+    });
+    let addr = server.addr();
+
+    // conn1 claims the only worker (keep-alive holds it)
+    let mut c1 = HttpClient::connect(addr).unwrap();
+    let (status, _) = c1.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    // conn2 fills the queue; give the acceptor a beat to park it
+    let _c2 = TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    // conn3 must be rejected up front
+    let mut c3 = HttpClient::connect(addr).unwrap();
+    let (status, body) = c3.get("/healthz").unwrap();
+    assert_eq!(status, 429, "{body}");
+    assert_eq!(error_kind(&body), "service_unavailable");
+    assert!(server.stats().rejected >= 1);
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_and_then_refuses() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let addr = server.addr();
+
+    // a few idle keep-alive connections plus one active client
+    let _idle1 = TcpStream::connect(addr).unwrap();
+    let _idle2 = TcpStream::connect(addr).unwrap();
+    let mut c = HttpClient::connect(addr).unwrap();
+    let y = Matrix::from_fn(N, 1, |r, _| (r % 3) as f32);
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(parse_matrix(&body, "yhat").data, model.matvec(&y).data);
+
+    // shutdown joins every worker without hanging on the idle conns
+    server.shutdown();
+    // the port no longer serves; a fresh request must fail (refused
+    // connect, or an accepted-then-dropped socket) rather than hang
+    let refused = match TcpStream::connect(addr) {
+        Err(_) => true,
+        Ok(mut s) => {
+            let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+            let mut buf = [0u8; 16];
+            !matches!(s.read(&mut buf), Ok(k) if k > 0)
+        }
+    };
+    assert!(refused, "server still serving after shutdown");
+    handle.shutdown();
+}

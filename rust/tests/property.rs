@@ -192,9 +192,9 @@ fn prop_coordinator_routing_and_batching_state() {
             assert!(diff < 1e-5, "round {round} req {i}: diff {diff}");
         }
     }
-    let (served, cols, batches) = handle.stats();
-    assert_eq!(served, expected, "stats lost requests");
-    assert!(cols >= expected, "fused columns < requests");
-    assert!(batches <= served, "more batches than requests");
+    let s = handle.stats();
+    assert_eq!(s.requests, expected, "stats lost requests");
+    assert!(s.fused_cols >= expected, "fused columns < requests");
+    assert!(s.fused_batches <= s.requests, "more batches than requests");
     handle.shutdown();
 }
