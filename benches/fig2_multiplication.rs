@@ -1,89 +1,225 @@
 //! Fig 2B — one multiplication (P·Y) across the three representations,
 //! plus the matvec-cost-vs-|B| series showing the O(|B|) law. Memory
 //! shares Table 1's complexity column with multiplication, so this bench
-//! doubles as the memory comparison. A final section times the
+//! doubles as the memory comparison. A second section times the
 //! column-blocked matvec and a 10-step LP sweep serial vs parallel (the
 //! `core::par` thread-scaling record lives in `benches/parallel_scaling.rs`
-//! / `BENCH_parallel.json`).
+//! / `BENCH_parallel.json`). The final `mrhs/` section measures the
+//! raw-speed levers of the fused hot path — one multi-RHS traversal vs C
+//! per-column traversals, scalar vs runtime-detected SIMD lanes — at
+//! BENCH_N (default 8000) and emits `BENCH_matvec.json` for the CI bench
+//! gate. A name filter (`cargo bench --bench fig2_multiplication -- mrhs`)
+//! skips the other sections' model builds entirely.
 
 use vdt::core::bench::Runner;
 use vdt::core::op::TransitionOp;
 use vdt::core::par;
+use vdt::core::simd::{self, SimdMode};
 use vdt::data::synthetic;
 use vdt::exact::ExactModel;
 use vdt::knn::{KnnConfig, KnnGraph};
 use vdt::labelprop::{self, one_hot_labels, LpConfig};
 use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::Matrix;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 fn main() {
     let mut r = Runner::from_args();
-    println!("# fig2b_multiplication (secstr-like)");
-    for &n in &[500usize, 1000, 2000, 4000] {
-        let ds = synthetic::secstr_like(n, 1);
+    // Runner filters per-bench by substring; sections gate their (much
+    // more expensive) model builds on the same argument so a filtered run
+    // doesn't pay for setup it will never time. A section runs when there
+    // is no filter or the filter string overlaps the section prefix.
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let want = |section: &str| {
+        filter
+            .as_ref()
+            .map_or(true, |f| f.contains(section) || section.contains(f.as_str()))
+    };
+
+    if want("fig2b") {
+        println!("# fig2b_multiplication (secstr-like)");
+        for &n in &[500usize, 1000, 2000, 4000] {
+            let ds = synthetic::secstr_like(n, 1);
+            let y = one_hot_labels(&ds.labels, ds.n_classes);
+
+            let vdt = VdtModel::build(&ds.x, &VdtConfig::default());
+            r.bench(&format!("fig2b/vdt_coarsest/N={n}"), || {
+                std::hint::black_box(vdt.matvec(&y));
+            });
+
+            let knn = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
+            r.bench(&format!("fig2b/fast_knn_k2/N={n}"), || {
+                std::hint::black_box(knn.matvec(&y));
+            });
+
+            if n <= 2000 {
+                let exact = ExactModel::build_dense(&ds.x, None);
+                r.bench(&format!("fig2b/exact_dense/N={n}"), || {
+                    std::hint::black_box(exact.matvec(&y));
+                });
+            }
+        }
+        if let (Some(v), Some(e)) = (
+            r.mean_of("fig2b/vdt_coarsest/N=2000"),
+            r.mean_of("fig2b/exact_dense/N=2000"),
+        ) {
+            println!("# speedup vdt vs exact matvec at N=2000: {:.1}x", e / v);
+        }
+
+        println!("\n# fig2b matvec cost vs refinement level (O(|B|) law)");
+        let ds = synthetic::digit1_like(1500, 1);
         let y = one_hot_labels(&ds.labels, ds.n_classes);
-
-        let vdt = VdtModel::build(&ds.x, &VdtConfig::default());
-        r.bench(&format!("fig2b/vdt_coarsest/N={n}"), || {
-            std::hint::black_box(vdt.matvec(&y));
-        });
-
-        let knn = KnnGraph::build(&ds.x, &KnnConfig { k: 2, ..Default::default() });
-        r.bench(&format!("fig2b/fast_knn_k2/N={n}"), || {
-            std::hint::black_box(knn.matvec(&y));
-        });
-
-        if n <= 2000 {
-            let exact = ExactModel::build_dense(&ds.x, None);
-            r.bench(&format!("fig2b/exact_dense/N={n}"), || {
-                std::hint::black_box(exact.matvec(&y));
+        let mut vdt = VdtModel::build(&ds.x, &VdtConfig::default());
+        for k in [2usize, 4, 8] {
+            vdt.refine_to(k * ds.n());
+            r.bench(&format!("fig2b/vdt_matvec/B={k}N"), || {
+                std::hint::black_box(vdt.matvec(&y));
             });
         }
-    }
-    if let (Some(v), Some(e)) = (
-        r.mean_of("fig2b/vdt_coarsest/N=2000"),
-        r.mean_of("fig2b/exact_dense/N=2000"),
-    ) {
-        println!("# speedup vdt vs exact matvec at N=2000: {:.1}x", e / v);
+
+        println!("\n# fig2b serial vs parallel matvec / LP sweep (core::par)");
+        let hw = par::max_threads();
+        let dsp = synthetic::gaussian_mixture(6000, 32, 8, 2, 2.2, 1, "fig2b_par");
+        let mut vdtp = VdtModel::build(&dsp.x, &VdtConfig::default());
+        vdtp.refine_to(6 * dsp.n());
+        let yp = one_hot_labels(&dsp.labels, dsp.n_classes);
+        let lp_cfg = LpConfig { alpha: 0.01, steps: 10 };
+        for (label, threads) in [("serial", 1usize), ("threads", hw)] {
+            let prev = par::set_max_threads(threads);
+            r.bench(&format!("fig2b/vdt_matvec_8col/{label}/N=6000"), || {
+                std::hint::black_box(vdtp.matvec(&yp));
+            });
+            r.bench(&format!("fig2b/lp_sweep_10step/{label}/N=6000"), || {
+                std::hint::black_box(labelprop::propagate(&vdtp, &yp, &lp_cfg));
+            });
+            par::set_max_threads(prev);
+        }
+        if let (Some(s), Some(t)) = (
+            r.mean_of("fig2b/vdt_matvec_8col/serial/N=6000"),
+            r.mean_of("fig2b/vdt_matvec_8col/threads/N=6000"),
+        ) {
+            println!("# matvec parallel speedup at N=6000, C=8: {:.2}x ({hw} threads)", s / t);
+        }
+        if let (Some(s), Some(t)) = (
+            r.mean_of("fig2b/lp_sweep_10step/serial/N=6000"),
+            r.mean_of("fig2b/lp_sweep_10step/threads/N=6000"),
+        ) {
+            println!("# LP-sweep parallel speedup at N=6000, C=8: {:.2}x ({hw} threads)", s / t);
+        }
     }
 
-    println!("\n# fig2b matvec cost vs refinement level (O(|B|) law)");
-    let ds = synthetic::digit1_like(1500, 1);
-    let y = one_hot_labels(&ds.labels, ds.n_classes);
-    let mut vdt = VdtModel::build(&ds.x, &VdtConfig::default());
-    for k in [2usize, 4, 8] {
-        vdt.refine_to(k * ds.n());
-        r.bench(&format!("fig2b/vdt_matvec/B={k}N"), || {
-            std::hint::black_box(vdt.matvec(&y));
-        });
+    // ---- multi-RHS fused sweep × SIMD tier (BENCH_matvec.json) ----
+    //
+    // The two raw-speed levers of the fused hot path, measured
+    // independently and together:
+    //   percol   — C separate single-column `matmul_into` calls (the old
+    //              cost model: one CollectUp/DistributeDown per column)
+    //   multirhs — one C-column `matmul_into` (one traversal, all columns)
+    // each under VDT_SIMD=0 (scalar) and the default runtime-detected
+    // lanes. All four variants are asserted bit-identical before timing.
+    let nm = env_usize("BENCH_N", 8000);
+    let widths = [8usize, 32];
+    if want("mrhs") {
+        println!("\n# mrhs: multi-RHS fused sweep x SIMD tier (N={nm}, |B|=6N)");
+        let dsm = synthetic::gaussian_mixture(nm, 32, 8, 2, 2.2, 2, "fig2b_mrhs");
+        let mut vdtm = VdtModel::build(&dsm.x, &VdtConfig::default());
+        vdtm.refine_to(6 * nm);
+        println!("# simd lanes detected: {}", simd::active_lanes());
+        for &c in &widths {
+            let y = Matrix::from_fn(nm, c, |row, k| {
+                (((row * 29 + k * 13) % 17) as f32 - 8.0) * 0.11
+            });
+            let cols: Vec<Matrix> =
+                (0..c).map(|k| Matrix::from_fn(nm, 1, |row, _| y.get(row, k))).collect();
+
+            // bit-parity gate: fused == stacked per-column, SIMD == scalar
+            let prev = simd::set_simd_mode(SimdMode::Scalar);
+            let reference = vdtm.matmul(&y);
+            for (k, yk) in cols.iter().enumerate() {
+                let alone = vdtm.matmul(yk);
+                for row in 0..nm {
+                    assert_eq!(
+                        alone.get(row, 0).to_bits(),
+                        reference.get(row, k).to_bits(),
+                        "C={c} col={k}: multi-RHS diverged from per-column"
+                    );
+                }
+            }
+            simd::set_simd_mode(SimdMode::Auto);
+            assert_eq!(
+                vdtm.matmul(&y).data,
+                reference.data,
+                "C={c}: SIMD tier is not bit-exact vs scalar"
+            );
+            simd::set_simd_mode(prev);
+
+            let mut out_one = Matrix::zeros(nm, 1);
+            let mut out_all = Matrix::zeros(nm, c);
+            for (label, mode) in [("scalar", SimdMode::Scalar), ("simd", SimdMode::Auto)] {
+                let prev = simd::set_simd_mode(mode);
+                r.bench(&format!("mrhs/C={c}/percol/{label}"), || {
+                    for yk in &cols {
+                        vdtm.matmul_into(yk, &mut out_one);
+                        std::hint::black_box(&out_one);
+                    }
+                });
+                r.bench(&format!("mrhs/C={c}/multirhs/{label}"), || {
+                    vdtm.matmul_into(&y, &mut out_all);
+                    std::hint::black_box(&out_all);
+                });
+                simd::set_simd_mode(prev);
+            }
+            if let (Some(p), Some(m)) = (
+                r.mean_of(&format!("mrhs/C={c}/percol/simd")),
+                r.mean_of(&format!("mrhs/C={c}/multirhs/simd")),
+            ) {
+                println!("# multi-RHS speedup at N={nm}, C={c} (simd): {:.2}x", p / m);
+            }
+            if let (Some(s), Some(v)) = (
+                r.mean_of(&format!("mrhs/C={c}/multirhs/scalar")),
+                r.mean_of(&format!("mrhs/C={c}/multirhs/simd")),
+            ) {
+                println!("# SIMD speedup at N={nm}, C={c} (multirhs): {:.2}x", s / v);
+            }
+        }
     }
 
-    println!("\n# fig2b serial vs parallel matvec / LP sweep (core::par)");
-    let hw = par::max_threads();
-    let dsp = synthetic::gaussian_mixture(6000, 32, 8, 2, 2.2, 1, "fig2b_par");
-    let mut vdtp = VdtModel::build(&dsp.x, &VdtConfig::default());
-    vdtp.refine_to(6 * dsp.n());
-    let yp = one_hot_labels(&dsp.labels, dsp.n_classes);
-    let lp_cfg = LpConfig { alpha: 0.01, steps: 10 };
-    for (label, threads) in [("serial", 1usize), ("threads", hw)] {
-        let prev = par::set_max_threads(threads);
-        r.bench(&format!("fig2b/vdt_matvec_8col/{label}/N=6000"), || {
-            std::hint::black_box(vdtp.matvec(&yp));
-        });
-        r.bench(&format!("fig2b/lp_sweep_10step/{label}/N=6000"), || {
-            std::hint::black_box(labelprop::propagate(&vdtp, &yp, &lp_cfg));
-        });
-        par::set_max_threads(prev);
+    // ---- emit BENCH_matvec.json ----
+    // schema matches benches/check_regression.py: entries under "paths",
+    // keyed by "path", gated timing in "ms"
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    for &c in &widths {
+        for kind in ["percol", "multirhs"] {
+            for tier in ["scalar", "simd"] {
+                let name = format!("mrhs/C={c}/{kind}/{tier}");
+                if let Some(ms) = r.mean_of(&name) {
+                    entries.push((name, ms));
+                }
+            }
+        }
     }
-    if let (Some(s), Some(t)) = (
-        r.mean_of("fig2b/vdt_matvec_8col/serial/N=6000"),
-        r.mean_of("fig2b/vdt_matvec_8col/threads/N=6000"),
-    ) {
-        println!("# matvec parallel speedup at N=6000, C=8: {:.2}x ({hw} threads)", s / t);
+    if entries.is_empty() {
+        println!("# BENCH_matvec.json skipped (mrhs section filtered out)");
+        return;
     }
-    if let (Some(s), Some(t)) = (
-        r.mean_of("fig2b/lp_sweep_10step/serial/N=6000"),
-        r.mean_of("fig2b/lp_sweep_10step/threads/N=6000"),
-    ) {
-        println!("# LP-sweep parallel speedup at N=6000, C=8: {:.2}x ({hw} threads)", s / t);
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"matvec_multirhs\",\n  \"n\": {nm},\n  \"lanes\": \"{}\",\n  \"paths\": [\n",
+        simd::active_lanes()
+    ));
+    for (i, (name, ms)) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"path\": \"{name}\", \"ms\": {ms:.3}}}{}\n",
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write("BENCH_matvec.json", &json) {
+        eprintln!("warn: could not write BENCH_matvec.json: {e}");
+    } else {
+        println!("# wrote BENCH_matvec.json ({} timings)", entries.len());
     }
 }

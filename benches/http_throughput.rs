@@ -11,11 +11,12 @@
 //!   per request. This is the true per-request baseline the batching
 //!   subsystem exists to beat.
 //!
-//! 32 keep-alive clients hammer `POST matvec` (one column each) and
-//! `POST query` (one out-of-sample point each); we record req/s and
-//! p50/p99 latency per endpoint per mode and emit `BENCH_http.json`
-//! (consumed by the CI bench job next to `BENCH_parallel.json` /
-//! `BENCH_serve.json`).
+//! 32 keep-alive clients hammer `POST matvec` (one column each), `POST
+//! matvec` with an 8-column Y (the multi-RHS request shape — fused bursts
+//! execute as one true multi-RHS sweep downstream), and `POST query` (one
+//! out-of-sample point each); we record req/s and p50/p99 latency per
+//! endpoint per mode and emit `BENCH_http.json` (consumed by the CI bench
+//! job next to `BENCH_parallel.json` / `BENCH_serve.json`).
 //!
 //! Correctness gate: a served matvec response must decode to the exact
 //! bits of a direct `TransitionOp::matvec` — a throughput number from a
@@ -137,6 +138,13 @@ fn main() {
             Matrix::from_fn(n, 1, move |r, _| (((r * 31 + tag * 7) % 19) as f32 - 9.0) * 0.1);
         matrix_body("y", &y)
     };
+    let matvec8_body = move |client: usize, round: usize| {
+        let tag = client * 1000 + round;
+        let y = Matrix::from_fn(n, 8, move |r, k| {
+            (((r * 31 + k * 11 + tag * 7) % 19) as f32 - 9.0) * 0.1
+        });
+        matrix_body("y", &y)
+    };
     let query_body = {
         let x = ds.x.clone();
         move |client: usize, round: usize| {
@@ -169,6 +177,21 @@ fn main() {
                 model.matvec(&y).data,
                 "{mode} serving is not bit-identical to the in-process operator"
             );
+            // same gate for the multi-RHS request shape
+            let y8 = Matrix::from_fn(n, 8, |r, k| (((r * 7 + k * 3) % 13) as f32 - 6.0) * 0.2);
+            let (status, body) =
+                http.post("/v1/models/bench/matvec", &matrix_body("y", &y8)).expect("post");
+            assert_eq!(status, 200, "{body}");
+            let got8 = matrix_from_json(
+                Json::parse(&body).expect("json").get("yhat").expect("yhat"),
+                "yhat",
+            )
+            .expect("decode");
+            assert_eq!(
+                got8.data,
+                model.matmul(&y8).data,
+                "{mode} multi-column serving is not bit-identical to the in-process operator"
+            );
         }
 
         // brief warmup so thread pools and scratch lanes exist
@@ -180,6 +203,13 @@ fn main() {
             mv.rps, mv.p50_ms, mv.p99_ms
         );
         results.push((format!("{mode}/matvec"), mv));
+
+        let mv8 = hammer(addr, "/v1/models/bench/matvec", rounds, &matvec8_body);
+        println!(
+            "# {mode}/matvec8: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+            mv8.rps, mv8.p50_ms, mv8.p99_ms
+        );
+        results.push((format!("{mode}/matvec8"), mv8));
 
         let q = hammer(addr, "/v1/models/bench/query", rounds, &query_body);
         println!(
@@ -199,8 +229,11 @@ fn main() {
 
     let get = |k: &str| results.iter().find(|(name, _)| name == k).expect("mode ran").1;
     let mv_speedup = get("batched/matvec").rps / get("unbatched/matvec").rps;
+    let mv8_speedup = get("batched/matvec8").rps / get("unbatched/matvec8").rps;
     let q_speedup = get("batched/query").rps / get("unbatched/query").rps;
-    println!("# speedup batched/unbatched: matvec {mv_speedup:.2}x, query {q_speedup:.2}x");
+    println!(
+        "# speedup batched/unbatched: matvec {mv_speedup:.2}x, matvec8 {mv8_speedup:.2}x, query {q_speedup:.2}x"
+    );
 
     // ---- emit BENCH_http.json ----
     // schema matches benches/check_regression.py: entries under "paths",

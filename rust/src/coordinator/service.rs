@@ -270,18 +270,19 @@ impl Work {
 }
 
 /// Execute one fused batch: concatenate the requests' columns, run a
-/// single multi-column sweep (itself column-parallel on the model side),
-/// and split the result back per request. Per-request results are
-/// bit-identical to unfused calls: every column of the underlying
-/// matvec is an independent scalar sequence.
+/// single multi-RHS apply ([`TransitionOp::matmul`] — on the VDT backend
+/// one tree/partition traversal for *all* fused columns, itself
+/// column-parallel), and split the result back per request. Per-request
+/// results are bit-identical to unfused calls: every column of the
+/// underlying apply is an independent scalar sequence.
 fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>)>) {
     let n = op.n();
     if group.len() == 1 {
         let (y, resp) = group.pop().unwrap();
-        let _ = resp.send(Response::Matrix(op.matvec(&y)));
+        let _ = resp.send(Response::Matrix(op.matmul(&y)));
         return;
     }
-    // fuse: concatenate all columns, one sweep, then split
+    // fuse: concatenate all columns, one multi-RHS apply, then split
     let total_cols: usize = group.iter().map(|(y, _)| y.cols).sum();
     let mut fused = Matrix::zeros(n, total_cols);
     let mut off = 0usize;
@@ -292,7 +293,7 @@ fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>
         }
         off += y.cols;
     }
-    let out = op.matvec(&fused);
+    let out = op.matmul(&fused);
     let mut off = 0usize;
     for (y, resp) in group {
         let mut part = Matrix::zeros(n, y.cols);
@@ -372,10 +373,91 @@ struct Owner {
     fuse: bool,
 }
 
+/// A per-model group of batchable requests awaiting routing.
+type Group = Vec<(Matrix, mpsc::Sender<Response>)>;
+
 impl Owner {
     fn error(&self, resp: &mpsc::Sender<Response>, e: VdtError) {
         self.errors.fetch_add(1, Ordering::Relaxed);
         let _ = resp.send(Response::Error(e));
+    }
+
+    /// Shared routing skeleton for the batchable request kinds (matvec and
+    /// inductive query): count the requests, resolve the model (typed
+    /// `UnknownModel` per request), check backend eligibility and the
+    /// per-request dimension (typed `ShapeMismatch`), then hand the valid
+    /// remainder to `make_work` — one fused item per model when fusion is
+    /// on, one item per request otherwise.
+    ///
+    /// `expected_dim` returns the dimension every request must match (or a
+    /// typed error failing the whole group, e.g. a transductive backend
+    /// asked for inductive queries); `got_dim` extracts the request's
+    /// actual dimension. `count_fusion` bumps the matvec fusion counters —
+    /// they are defined as *matvec columns through fused batches*, so the
+    /// query path leaves them alone.
+    fn route_batchable(
+        &mut self,
+        groups: HashMap<String, Group>,
+        work: &mut Vec<Work>,
+        what: &'static str,
+        count_fusion: bool,
+        expected_dim: impl Fn(&SharedOp) -> Result<usize, VdtError>,
+        got_dim: impl Fn(&Matrix) -> usize,
+        make_work: impl Fn(&Self, SharedOp, Group) -> Work,
+    ) {
+        for (model, group) in groups {
+            self.requests += group.len() as u64;
+            let op = match self.models.get(&model) {
+                Some(op) => op.clone(),
+                None => {
+                    for (_, resp) in group {
+                        self.error(&resp, VdtError::UnknownModel(model.clone()));
+                    }
+                    continue;
+                }
+            };
+            let d = match expected_dim(&op) {
+                Ok(d) => d,
+                Err(e) => {
+                    for (_, resp) in group {
+                        self.error(&resp, e.clone());
+                    }
+                    continue;
+                }
+            };
+            let (mut ok, mut bad): (Group, Group) = (Vec::new(), Vec::new());
+            for item in group {
+                if got_dim(&item.0) == d {
+                    ok.push(item);
+                } else {
+                    bad.push(item);
+                }
+            }
+            for (m, resp) in bad {
+                self.error(
+                    &resp,
+                    VdtError::ShapeMismatch { what, expected: d, got: got_dim(&m) },
+                );
+            }
+            if ok.is_empty() {
+                continue;
+            }
+            if self.fuse {
+                if count_fusion {
+                    self.fused_batches += 1;
+                    self.fused_cols += ok.iter().map(|(y, _)| y.cols as u64).sum::<u64>();
+                }
+                let item = make_work(self, op, ok);
+                work.push(item);
+            } else {
+                // no-batching baseline: one work item (and one model
+                // traversal) per request
+                for item in ok {
+                    let item = make_work(self, op.clone(), vec![item]);
+                    work.push(item);
+                }
+            }
+        }
     }
 
     /// Route, validate and execute one burst. Returns true when the burst
@@ -453,103 +535,35 @@ impl Owner {
         }
 
         // fuse matvec groups per model; shape errors answered here
-        for (model, group) in matvec_groups {
-            self.requests += group.len() as u64;
-            let op = match self.models.get(&model) {
-                Some(op) => op.clone(),
-                None => {
-                    for (_, resp) in group {
-                        self.error(&resp, VdtError::UnknownModel(model.clone()));
-                    }
-                    continue;
-                }
-            };
-            let n = op.n();
-            let (mut ok, mut bad): (Vec<_>, Vec<_>) = (Vec::new(), Vec::new());
-            for item in group {
-                if item.0.rows == n {
-                    ok.push(item);
-                } else {
-                    bad.push(item);
-                }
-            }
-            for (y, resp) in bad {
-                self.error(&resp, VdtError::ShapeMismatch { what: "Y", expected: n, got: y.rows });
-            }
-            if ok.is_empty() {
-                continue;
-            }
-            if self.fuse {
-                self.fused_batches += 1;
-                self.fused_cols += ok.iter().map(|(y, _)| y.cols as u64).sum::<u64>();
-                work.push(Work::MatvecBatch { op, group: ok });
-            } else {
-                // no-batching baseline: one work item (and one sweep) per
-                // request
-                for item in ok {
-                    work.push(Work::MatvecBatch { op: op.clone(), group: vec![item] });
-                }
-            }
-        }
+        self.route_batchable(
+            matvec_groups,
+            &mut work,
+            "Y",
+            true,
+            |op| Ok(op.n()),
+            |y| y.rows,
+            |_, op, group| Work::MatvecBatch { op, group },
+        );
 
         // validate query groups; dim errors answered here, domain errors
         // per request on the worker
-        for (model, group) in query_groups {
-            self.requests += group.len() as u64;
-            let op = match self.models.get(&model) {
-                Some(op) => op.clone(),
-                None => {
-                    for (_, resp) in group {
-                        self.error(&resp, VdtError::UnknownModel(model.clone()));
-                    }
-                    continue;
-                }
-            };
-            let d = match op.query_dim() {
-                Some(d) => d,
-                None => {
-                    for (_, resp) in group {
-                        self.error(
-                            &resp,
-                            VdtError::Unsupported(format!(
-                                "the {} backend is transductive: it has no inductive \
-                                 out-of-sample path (only vdt models do)",
-                                op.card().backend
-                            )),
-                        );
-                    }
-                    continue;
-                }
-            };
-            let (mut ok, mut bad): (Vec<_>, Vec<_>) = (Vec::new(), Vec::new());
-            for item in group {
-                if item.0.cols == d {
-                    ok.push(item);
-                } else {
-                    bad.push(item);
-                }
-            }
-            for (x, resp) in bad {
-                self.error(
-                    &resp,
-                    VdtError::ShapeMismatch { what: "query", expected: d, got: x.cols },
-                );
-            }
-            if ok.is_empty() {
-                continue;
-            }
-            if self.fuse {
-                work.push(Work::QueryBatch { op, group: ok, errors: self.errors.clone() });
-            } else {
-                for item in ok {
-                    work.push(Work::QueryBatch {
-                        op: op.clone(),
-                        group: vec![item],
-                        errors: self.errors.clone(),
-                    });
-                }
-            }
-        }
+        self.route_batchable(
+            query_groups,
+            &mut work,
+            "query",
+            false,
+            |op| {
+                op.query_dim().ok_or_else(|| {
+                    VdtError::Unsupported(format!(
+                        "the {} backend is transductive: it has no inductive \
+                         out-of-sample path (only vdt models do)",
+                        op.card().backend
+                    ))
+                })
+            },
+            |x| x.cols,
+            |owner, op, group| Work::QueryBatch { op, group, errors: owner.errors.clone() },
+        );
 
         // ---- execute the burst on scoped worker threads ----
         // waves are capped at the thread budget and each worker runs

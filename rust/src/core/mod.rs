@@ -1,6 +1,7 @@
 //! Core substrates: the [`op`] transition-operator layer (the crate's
 //! central abstraction) and its typed [`error`] enum, dense row-major
-//! matrices, vector math, metrics/timing, a seedable RNG, the bench
+//! matrices, vector math with runtime-dispatched [`simd`] kernels,
+//! metrics/timing, a seedable RNG, the bench
 //! harness, and the [`par`] data-parallel execution layer (this is an
 //! offline build — no external crates beyond the vendored `xla`/`anyhow`
 //! stand-ins, so these are all in-tree).
@@ -14,6 +15,7 @@ pub mod metrics;
 pub mod op;
 pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod vecmath;
 
 pub use divergence::{
@@ -25,3 +27,4 @@ pub use matrix::Matrix;
 pub use metrics::{Stats, Timer};
 pub use op::{AnyModel, Backend, ModelCard, TransitionOp};
 pub use rng::Rng;
+pub use simd::SimdMode;

@@ -201,6 +201,27 @@ pub trait TransitionOp {
         out
     }
 
+    /// True multi-RHS apply: Ŷ = P·Y for an N×C right-hand side, written
+    /// into `out` (same shape contract as [`TransitionOp::matvec_into`]).
+    ///
+    /// Backends that can amortize model traversal across fused columns
+    /// override this (the VDT backend walks its tree and block partition
+    /// once for all C columns — see [`crate::vdt::VdtModel::matmul_into`]);
+    /// the default simply delegates to `matvec_into`, so every operator
+    /// accepts multi-RHS input and overriding is purely a performance
+    /// decision. Implementations must keep the output identical to C
+    /// stacked single-column `matvec_into` calls.
+    fn matmul_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.matvec_into(y, out);
+    }
+
+    /// Multi-RHS Ŷ = P·Y, allocating the output.
+    fn matmul(&self, y: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.n(), y.cols);
+        self.matmul_into(y, &mut out);
+        out
+    }
+
     /// Structured metadata: backend kind, divergence, size, parameter
     /// count, bandwidth, provenance.
     fn card(&self) -> ModelCard {
@@ -275,6 +296,17 @@ impl AnyModel {
     /// Ŷ = P·Y into a caller-owned buffer (allocation-free serving).
     pub fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
         self.as_op().matvec_into(y, out);
+    }
+
+    /// Multi-RHS Ŷ = P·Y (allocating); one model traversal for all
+    /// columns on backends that support it.
+    pub fn matmul(&self, y: &Matrix) -> Matrix {
+        self.as_op().matmul(y)
+    }
+
+    /// Multi-RHS Ŷ = P·Y into a caller-owned buffer.
+    pub fn matmul_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.as_op().matmul_into(y, out);
     }
 
     /// Structured metadata card.
@@ -359,6 +391,12 @@ impl TransitionOp for AnyModel {
     fn matvec(&self, y: &Matrix) -> Matrix {
         self.as_op().matvec(y)
     }
+    fn matmul_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.as_op().matmul_into(y, out);
+    }
+    fn matmul(&self, y: &Matrix) -> Matrix {
+        self.as_op().matmul(y)
+    }
     fn card(&self) -> ModelCard {
         self.as_op().card()
     }
@@ -424,6 +462,12 @@ mod tests {
         let op = Identity(3);
         let y = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
         assert_eq!(op.matvec(&y).data, y.data);
+        // the multi-RHS defaults delegate too, so every operator takes
+        // fused batches without an override
+        assert_eq!(op.matmul(&y).data, y.data);
+        let mut out = Matrix::zeros(3, 2);
+        op.matmul_into(&y, &mut out);
+        assert_eq!(out.data, y.data);
         let card = op.card();
         assert_eq!(card.backend, Backend::Custom("op"));
         assert_eq!(card.n, 3);

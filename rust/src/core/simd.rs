@@ -1,0 +1,540 @@
+//! Runtime-dispatched SIMD kernels for the crate's innermost loops.
+//!
+//! Explicit `std::arch` x86_64 lanes (AVX2 when the CPU has it, SSE2
+//! otherwise — SSE2 is the x86_64 baseline so it needs no runtime check)
+//! with a scalar fallback that is always compiled and is the only path on
+//! other architectures. Dispatch happens at runtime per call from a cached
+//! mode + cached CPUID probe, so one binary serves every microarchitecture.
+//!
+//! ## The `VDT_SIMD` knob
+//!
+//! Read once from the environment on first use (mirroring `VDT_THREADS` in
+//! [`crate::core::par`]); [`set_simd_mode`] is the programmatic override
+//! used by benches and tests to compare paths in one process.
+//!
+//! - `VDT_SIMD=0` (also `off` / `scalar`): scalar kernels only.
+//! - `VDT_SIMD=1` (also `auto`, or unset): **bit-exact** SIMD. Every kernel
+//!   in this tier reproduces the scalar path's bits exactly — see below.
+//! - `VDT_SIMD=fast`: additionally enables documented *non*-bit-exact
+//!   variants (reassociated reductions, f32-packed block coefficients).
+//!   Error-bound tests in `rust/tests/simd_kernels.rs` pin their accuracy.
+//!
+//! ## Bit-exactness contract
+//!
+//! The default (`Auto`) kernels vectorize only *elementwise* arithmetic:
+//! each output element (or partial-sum lane) is produced by the same IEEE
+//! operation sequence as in the scalar code, just executed 2/4/8 lanes at a
+//! time — no FMA contraction, no reassociation. [`sq_dist`]'s scalar form
+//! was already written as two 8-lane partial-sum blocks combined by a fixed
+//! scalar sequence, so the vector versions reuse that exact lane structure
+//! and share the scalar combine/remainder tail ([`finish_sq_dist`]).
+//! `cargo test` under `VDT_SIMD=0` and `VDT_SIMD=1` must therefore produce
+//! identical results; the CI test matrix runs both.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel tier the process runs. See the module docs for semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Scalar fallback everywhere (`VDT_SIMD=0`).
+    Scalar,
+    /// Bit-exact SIMD where the CPU supports it (default).
+    Auto,
+    /// `Auto` plus documented non-bit-exact fast variants (`VDT_SIMD=fast`).
+    Fast,
+}
+
+/// Cached mode; 0 = not yet initialized, else `SimdMode as u8 + 1`.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn parse_mode(v: &str) -> SimdMode {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "0" | "off" | "scalar" => SimdMode::Scalar,
+        "fast" => SimdMode::Fast,
+        _ => SimdMode::Auto,
+    }
+}
+
+fn encode(m: SimdMode) -> u8 {
+    match m {
+        SimdMode::Scalar => 1,
+        SimdMode::Auto => 2,
+        SimdMode::Fast => 3,
+    }
+}
+
+fn decode(v: u8) -> SimdMode {
+    match v {
+        1 => SimdMode::Scalar,
+        3 => SimdMode::Fast,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// The active [`SimdMode`], from `VDT_SIMD` on first use (unset ⇒ `Auto`).
+pub fn simd_mode() -> SimdMode {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != 0 {
+        return decode(m);
+    }
+    let m = std::env::var("VDT_SIMD").map(|v| parse_mode(&v)).unwrap_or(SimdMode::Auto);
+    MODE.store(encode(m), Ordering::Relaxed);
+    m
+}
+
+/// Override the mode for the rest of the process (takes precedence over the
+/// environment; used by benches to time scalar vs SIMD in one run). Returns
+/// the previous effective mode.
+pub fn set_simd_mode(m: SimdMode) -> SimdMode {
+    let prev = simd_mode();
+    MODE.store(encode(m), Ordering::Relaxed);
+    prev
+}
+
+/// True when the opt-in non-bit-exact fast variants are enabled.
+pub fn fast_enabled() -> bool {
+    simd_mode() == SimdMode::Fast
+}
+
+#[cfg(target_arch = "x86_64")]
+fn lanes_enabled() -> bool {
+    simd_mode() != SimdMode::Scalar
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+/// Which lane width the bit-exact tier currently dispatches to:
+/// `"avx2"`, `"sse2"`, or `"scalar"`. Diagnostic only (bench labels, logs).
+pub fn active_lanes() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lanes_enabled() {
+            return if have_avx2() { "avx2" } else { "sse2" };
+        }
+    }
+    "scalar"
+}
+
+// ---------------------------------------------------------------------------
+// out = a + b (f64, elementwise) — bit-exact tier
+// ---------------------------------------------------------------------------
+
+/// Scalar reference for [`add_f64`]; public so conformance tests can pin
+/// the SIMD paths against it bit-for-bit.
+#[inline]
+pub fn add_f64_scalar(out: &mut [f64], a: &[f64], b: &[f64]) {
+    for (o, (x, y)) in out.iter_mut().zip(a.iter().zip(b.iter())) {
+        *o = *x + *y;
+    }
+}
+
+/// `out[k] = a[k] + b[k]` — the CollectUp child-merge kernel. Bit-exact in
+/// every mode: IEEE addition is performed per element with no
+/// reassociation, so lane width cannot change any bit.
+#[inline]
+pub fn add_f64(out: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if lanes_enabled() {
+        if have_avx2() {
+            // SAFETY: AVX2 support verified at runtime via CPUID.
+            unsafe { add_f64_avx2(out, a, b) };
+        } else {
+            add_f64_sse2(out, a, b);
+        }
+        return;
+    }
+    add_f64_scalar(out, a, b);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_f64_avx2(out: &mut [f64], a: &[f64], b: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_add_pd(va, vb));
+        i += 4;
+    }
+    add_f64_scalar(&mut out[i..], &a[i..], &b[i..]);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn add_f64_sse2(out: &mut [f64], a: &[f64], b: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let mut i = 0usize;
+    while i + 2 <= n {
+        // SAFETY: SSE2 is the x86_64 baseline; indices bounds-checked above.
+        unsafe {
+            let va = _mm_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm_loadu_pd(b.as_ptr().add(i));
+            _mm_storeu_pd(out.as_mut_ptr().add(i), _mm_add_pd(va, vb));
+        }
+        i += 2;
+    }
+    add_f64_scalar(&mut out[i..], &a[i..], &b[i..]);
+}
+
+// ---------------------------------------------------------------------------
+// acc += q * t (f64, elementwise) — bit-exact tier
+// ---------------------------------------------------------------------------
+
+/// Scalar reference for [`axpy_f64`].
+#[inline]
+pub fn axpy_f64_scalar(acc: &mut [f64], q: f64, t: &[f64]) {
+    for (a, x) in acc.iter_mut().zip(t.iter()) {
+        *a += q * *x;
+    }
+}
+
+/// `acc[k] += q·t[k]` — the DistributeDown mark-application kernel.
+/// Bit-exact in every mode: multiply-round then add-round per element,
+/// exactly the scalar sequence (deliberately **no FMA** — a fused
+/// multiply-add skips the intermediate rounding and would change bits).
+#[inline]
+pub fn axpy_f64(acc: &mut [f64], q: f64, t: &[f64]) {
+    debug_assert_eq!(acc.len(), t.len());
+    #[cfg(target_arch = "x86_64")]
+    if lanes_enabled() {
+        if have_avx2() {
+            // SAFETY: AVX2 support verified at runtime via CPUID.
+            unsafe { axpy_f64_avx2(acc, q, t) };
+        } else {
+            axpy_f64_sse2(acc, q, t);
+        }
+        return;
+    }
+    axpy_f64_scalar(acc, q, t);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f64_avx2(acc: &mut [f64], q: f64, t: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let qv = _mm256_set1_pd(q);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let va = _mm256_loadu_pd(acc.as_ptr().add(i));
+        let vt = _mm256_loadu_pd(t.as_ptr().add(i));
+        // mul then add as two rounded ops — matches the scalar sequence
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_add_pd(va, _mm256_mul_pd(qv, vt)));
+        i += 4;
+    }
+    axpy_f64_scalar(&mut acc[i..], q, &t[i..]);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_f64_sse2(acc: &mut [f64], q: f64, t: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    // SAFETY: SSE2 is the x86_64 baseline.
+    let qv = unsafe { _mm_set1_pd(q) };
+    let mut i = 0usize;
+    while i + 2 <= n {
+        // SAFETY: indices bounds-checked above.
+        unsafe {
+            let va = _mm_loadu_pd(acc.as_ptr().add(i));
+            let vt = _mm_loadu_pd(t.as_ptr().add(i));
+            _mm_storeu_pd(acc.as_mut_ptr().add(i), _mm_add_pd(va, _mm_mul_pd(qv, vt)));
+        }
+        i += 2;
+    }
+    axpy_f64_scalar(&mut acc[i..], q, &t[i..]);
+}
+
+// ---------------------------------------------------------------------------
+// squared Euclidean distance (f32 in, f64 out) — bit-exact tier
+// ---------------------------------------------------------------------------
+
+/// Shared combine + remainder tail for every [`sq_dist`] variant: fold the
+/// two 8-lane partial-sum blocks in the fixed scalar order, then add the
+/// `len % 16` trailing elements in f64. Because all variants produce
+/// bit-identical `p0`/`p1` lanes (elementwise IEEE ops) and then call this
+/// one function, their final results are bit-identical too.
+#[inline]
+fn finish_sq_dist(p0: &[f32; 8], p1: &[f32; 8], a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    acc += p0.iter().zip(p1.iter()).map(|(&x, &y)| x as f64 + y as f64).sum::<f64>();
+    let rem = a.len() - a.len() % 16;
+    for i in rem..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Scalar reference for [`sq_dist`]: two independent 8-lane f32 partial-sum
+/// blocks over 16-element chunks (written in SIMD shape so LLVM vectorizes
+/// it even without explicit intrinsics), combined by [`finish_sq_dist`].
+#[inline]
+pub fn sq_dist_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let mut it = a.chunks_exact(16).zip(b.chunks_exact(16));
+    let mut p0 = [0.0f32; 8];
+    let mut p1 = [0.0f32; 8];
+    for (ca, cb) in &mut it {
+        for i in 0..8 {
+            let d = ca[i] - cb[i];
+            p0[i] += d * d;
+        }
+        for i in 0..8 {
+            let d = ca[8 + i] - cb[8 + i];
+            p1[i] += d * d;
+        }
+    }
+    finish_sq_dist(&p0, &p1, a, b)
+}
+
+/// Squared Euclidean distance between equal-length slices. Bit-exact across
+/// all modes and lane widths: every variant keeps the same two 8-lane
+/// partial-sum blocks (`p0[i] += d·d` is elementwise per lane `i`) and
+/// shares the scalar combine/remainder tail.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if lanes_enabled() && a.len() >= 16 {
+        if have_avx2() {
+            // SAFETY: AVX2 support verified at runtime via CPUID.
+            return unsafe { sq_dist_avx2(a, b) };
+        }
+        return sq_dist_sse2(a, b);
+    }
+    sq_dist_scalar(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sq_dist_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / 16;
+    let mut v0 = _mm256_setzero_ps();
+    let mut v1 = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let base = c * 16;
+        let d0 = _mm256_sub_ps(
+            _mm256_loadu_ps(a.as_ptr().add(base)),
+            _mm256_loadu_ps(b.as_ptr().add(base)),
+        );
+        let d1 = _mm256_sub_ps(
+            _mm256_loadu_ps(a.as_ptr().add(base + 8)),
+            _mm256_loadu_ps(b.as_ptr().add(base + 8)),
+        );
+        v0 = _mm256_add_ps(v0, _mm256_mul_ps(d0, d0));
+        v1 = _mm256_add_ps(v1, _mm256_mul_ps(d1, d1));
+    }
+    let mut p0 = [0.0f32; 8];
+    let mut p1 = [0.0f32; 8];
+    _mm256_storeu_ps(p0.as_mut_ptr(), v0);
+    _mm256_storeu_ps(p1.as_mut_ptr(), v1);
+    finish_sq_dist(&p0, &p1, a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn sq_dist_sse2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / 16;
+    // four 4-lane registers = the same two 8-lane blocks, split lo/hi
+    // SAFETY: SSE2 is the x86_64 baseline; all loads stay in bounds
+    // because `base + 12 + 4 <= chunks * 16 <= a.len()`.
+    unsafe {
+        let mut v0lo = _mm_setzero_ps();
+        let mut v0hi = _mm_setzero_ps();
+        let mut v1lo = _mm_setzero_ps();
+        let mut v1hi = _mm_setzero_ps();
+        for c in 0..chunks {
+            let base = c * 16;
+            let d0lo = _mm_sub_ps(_mm_loadu_ps(a.as_ptr().add(base)), _mm_loadu_ps(b.as_ptr().add(base)));
+            let d0hi = _mm_sub_ps(
+                _mm_loadu_ps(a.as_ptr().add(base + 4)),
+                _mm_loadu_ps(b.as_ptr().add(base + 4)),
+            );
+            let d1lo = _mm_sub_ps(
+                _mm_loadu_ps(a.as_ptr().add(base + 8)),
+                _mm_loadu_ps(b.as_ptr().add(base + 8)),
+            );
+            let d1hi = _mm_sub_ps(
+                _mm_loadu_ps(a.as_ptr().add(base + 12)),
+                _mm_loadu_ps(b.as_ptr().add(base + 12)),
+            );
+            v0lo = _mm_add_ps(v0lo, _mm_mul_ps(d0lo, d0lo));
+            v0hi = _mm_add_ps(v0hi, _mm_mul_ps(d0hi, d0hi));
+            v1lo = _mm_add_ps(v1lo, _mm_mul_ps(d1lo, d1lo));
+            v1hi = _mm_add_ps(v1hi, _mm_mul_ps(d1hi, d1hi));
+        }
+        let mut p0 = [0.0f32; 8];
+        let mut p1 = [0.0f32; 8];
+        _mm_storeu_ps(p0.as_mut_ptr(), v0lo);
+        _mm_storeu_ps(p0.as_mut_ptr().add(4), v0hi);
+        _mm_storeu_ps(p1.as_mut_ptr(), v1lo);
+        _mm_storeu_ps(p1.as_mut_ptr().add(4), v1hi);
+        finish_sq_dist(&p0, &p1, a, b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// squared distance to an (S1, count) centroid — fast tier (opt-in)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference for [`sq_dist_to_centroid`]: a plain sequential f64
+/// accumulation (the order every caller has always observed).
+#[inline]
+pub fn sq_dist_to_centroid_scalar(p: &[f32], s1: &[f32], count: f64) -> f64 {
+    let inv = 1.0 / count;
+    let mut acc = 0.0f64;
+    for (x, s) in p.iter().zip(s1.iter()) {
+        let d = *x as f64 - (*s as f64) * inv;
+        acc += d * d;
+    }
+    acc
+}
+
+/// `‖p − S1/count‖²` without materializing the centroid.
+///
+/// The scalar form accumulates one f64 sum left-to-right; vectorizing it
+/// requires reassociating that reduction, which changes low-order bits. The
+/// AVX2 variant therefore runs **only** under `VDT_SIMD=fast` — it keeps
+/// four f64 partial sums folded in a fixed order at the end, so it is still
+/// deterministic for a given input, just not bit-identical to scalar.
+/// `rust/tests/simd_kernels.rs` bounds its relative error.
+#[inline]
+pub fn sq_dist_to_centroid(p: &[f32], s1: &[f32], count: f64) -> f64 {
+    debug_assert_eq!(p.len(), s1.len());
+    #[cfg(target_arch = "x86_64")]
+    if fast_enabled() && have_avx2() && p.len() >= 8 {
+        // SAFETY: AVX2 support verified at runtime via CPUID.
+        return unsafe { sq_dist_to_centroid_avx2(p, s1, count) };
+    }
+    sq_dist_to_centroid_scalar(p, s1, count)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sq_dist_to_centroid_avx2(p: &[f32], s1: &[f32], count: f64) -> f64 {
+    use std::arch::x86_64::*;
+    let inv = _mm256_set1_pd(1.0 / count);
+    let mut acc = _mm256_setzero_pd();
+    let n = p.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let px = _mm256_cvtps_pd(_mm_loadu_ps(p.as_ptr().add(i)));
+        let sx = _mm256_cvtps_pd(_mm_loadu_ps(s1.as_ptr().add(i)));
+        let d = _mm256_sub_pd(px, _mm256_mul_pd(sx, inv));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+        i += 4;
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    // fixed fold order keeps the fast path deterministic run-to-run
+    let mut total = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+    let inv = 1.0 / count;
+    for k in i..n {
+        let d = p[k] as f64 - (s1[k] as f64) * inv;
+        total += d * d;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `MODE` is process-global and tests run concurrently: anything that
+    /// flips it serializes here (same pattern as `par::tests`).
+    static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn mode_guard() -> std::sync::MutexGuard<'static, ()> {
+        MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parse_mode_spellings() {
+        assert_eq!(parse_mode("0"), SimdMode::Scalar);
+        assert_eq!(parse_mode(" off "), SimdMode::Scalar);
+        assert_eq!(parse_mode("SCALAR"), SimdMode::Scalar);
+        assert_eq!(parse_mode("fast"), SimdMode::Fast);
+        assert_eq!(parse_mode("1"), SimdMode::Auto);
+        assert_eq!(parse_mode("auto"), SimdMode::Auto);
+        assert_eq!(parse_mode("definitely-not-a-mode"), SimdMode::Auto);
+    }
+
+    #[test]
+    fn set_mode_round_trips() {
+        let _guard = mode_guard();
+        let prev = set_simd_mode(SimdMode::Scalar);
+        assert_eq!(simd_mode(), SimdMode::Scalar);
+        assert_eq!(active_lanes(), "scalar");
+        set_simd_mode(SimdMode::Fast);
+        assert!(fast_enabled());
+        set_simd_mode(prev);
+        assert_eq!(simd_mode(), prev);
+    }
+
+    fn vecs(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos() - 0.4).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_bits() {
+        let _guard = mode_guard();
+        let prev = set_simd_mode(SimdMode::Auto);
+        for n in [0usize, 1, 3, 7, 15, 16, 17, 31, 33, 64, 100] {
+            let (a, b) = vecs(n);
+            assert_eq!(
+                sq_dist(&a, &b).to_bits(),
+                sq_dist_scalar(&a, &b).to_bits(),
+                "sq_dist n={n}"
+            );
+            let af: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+            let bf: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+            let mut out_s = vec![0.0f64; n];
+            let mut out_v = vec![0.0f64; n];
+            add_f64_scalar(&mut out_s, &af, &bf);
+            add_f64(&mut out_v, &af, &bf);
+            assert_eq!(out_s, out_v, "add_f64 n={n}");
+            let mut acc_s = bf.clone();
+            let mut acc_v = bf.clone();
+            axpy_f64_scalar(&mut acc_s, 0.731, &af);
+            axpy_f64(&mut acc_v, 0.731, &af);
+            assert_eq!(acc_s, acc_v, "axpy_f64 n={n}");
+        }
+        set_simd_mode(prev);
+    }
+
+    #[test]
+    fn scalar_mode_forces_scalar_path() {
+        let _guard = mode_guard();
+        let prev = set_simd_mode(SimdMode::Scalar);
+        let (a, b) = vecs(40);
+        assert_eq!(sq_dist(&a, &b).to_bits(), sq_dist_scalar(&a, &b).to_bits());
+        assert_eq!(active_lanes(), "scalar");
+        set_simd_mode(prev);
+    }
+
+    #[test]
+    fn centroid_fast_variant_is_close_but_gated() {
+        let _guard = mode_guard();
+        let prev = set_simd_mode(SimdMode::Auto);
+        let (p, s1) = vecs(37);
+        // Auto must take the scalar path exactly
+        let auto = sq_dist_to_centroid(&p, &s1, 3.0);
+        assert_eq!(auto.to_bits(), sq_dist_to_centroid_scalar(&p, &s1, 3.0).to_bits());
+        // Fast may differ in low-order bits but must stay tight
+        set_simd_mode(SimdMode::Fast);
+        let fast = sq_dist_to_centroid(&p, &s1, 3.0);
+        let rel = (fast - auto).abs() / auto.max(1e-30);
+        assert!(rel < 1e-12, "fast centroid distance drifted: rel={rel}");
+        set_simd_mode(prev);
+    }
+}

@@ -1,39 +1,25 @@
 //! Small vector kernels shared by the tree / kNN / VDT hot paths.
 //!
-//! These are the innermost loops of the L3 coordinator; keep them simple
-//! enough for LLVM to vectorize (no bounds checks in the hot loop, f32
-//! accumulation into f64 only where the numerics demand it).
+//! These are the innermost loops of the L3 coordinator. The two distance
+//! kernels dispatch through [`crate::core::simd`] (explicit AVX2/SSE2
+//! lanes behind runtime detection, `VDT_SIMD` knob, scalar fallback); the
+//! rest stay simple enough for LLVM to vectorize on its own (no bounds
+//! checks in the hot loop, f32 accumulation into f64 only where the
+//! numerics demand it).
+
+use super::simd;
 
 /// Squared Euclidean distance between two equal-length slices.
 ///
-/// Two 8-lane f32 accumulator blocks (16 floats per step) so LLVM emits
-/// independent SIMD chains without -C target-cpu tuning; measured ~10%
-/// faster than a single 8-lane block on the anchor-construction hot path
-/// (EXPERIMENTS.md §Perf).
+/// Dispatches to the bit-exact SIMD tier (see [`crate::core::simd`]):
+/// every variant keeps the same two 8-lane f32 partial-sum blocks over
+/// 16-element chunks (the shape the scalar reference was already written
+/// in — measured ~10% faster than a single 8-lane block on the
+/// anchor-construction hot path, EXPERIMENTS.md §Perf), so the result is
+/// bit-identical under `VDT_SIMD=0` and `VDT_SIMD=1`.
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    let mut it = a.chunks_exact(16).zip(b.chunks_exact(16));
-    let mut p0 = [0.0f32; 8];
-    let mut p1 = [0.0f32; 8];
-    for (ca, cb) in &mut it {
-        for i in 0..8 {
-            let d = ca[i] - cb[i];
-            p0[i] += d * d;
-        }
-        for i in 0..8 {
-            let d = ca[8 + i] - cb[8 + i];
-            p1[i] += d * d;
-        }
-    }
-    acc += p0.iter().zip(p1.iter()).map(|(&x, &y)| x as f64 + y as f64).sum::<f64>();
-    let rem = a.len() - a.len() % 16;
-    for i in rem..a.len() {
-        let d = (a[i] - b[i]) as f64;
-        acc += d * d;
-    }
-    acc
+    simd::sq_dist(a, b)
 }
 
 /// Dot product, f64 accumulator.
@@ -65,16 +51,13 @@ pub fn add_assign(a: &mut [f32], b: &[f32]) {
 /// Squared distance between a point and a centroid stored as an
 /// (unnormalized sum, count) pair: `|| p - s/c ||^2` without materializing
 /// the centroid. Used all over the tree code where nodes store `S1`.
+///
+/// The scalar form is a sequential f64 reduction, so the vectorized
+/// variant (which must reassociate) only runs under `VDT_SIMD=fast` — see
+/// [`crate::core::simd::sq_dist_to_centroid`].
 #[inline]
 pub fn sq_dist_to_centroid(p: &[f32], s1: &[f32], count: f64) -> f64 {
-    debug_assert_eq!(p.len(), s1.len());
-    let inv = 1.0 / count;
-    let mut acc = 0.0f64;
-    for (x, s) in p.iter().zip(s1.iter()) {
-        let d = *x as f64 - (*s as f64) * inv;
-        acc += d * d;
-    }
-    acc
+    simd::sq_dist_to_centroid(p, s1, count)
 }
 
 /// Numerically-stable log-sum-exp over a slice (f64). Empty slice -> -inf.

@@ -8,8 +8,9 @@
 //! ```
 //!
 //! At convergence Y_U = (I − P_UU)⁻¹ P_UL Y_L — the harmonic solution.
-//! Like everything else in the crate it only needs `TransitionOp::matvec`,
-//! so the O(|B|) VDT representation accelerates it identically.
+//! Like everything else in the crate it only needs the operator's
+//! multi-RHS apply (`TransitionOp::matmul_into`), so the O(|B|) VDT
+//! representation accelerates it identically.
 
 use crate::core::Matrix;
 
@@ -50,8 +51,11 @@ pub fn propagate_harmonic(
     if cols == 0 {
         return y;
     }
+    // py is fully overwritten by each multi-RHS apply, so one buffer
+    // serves every step (same allocation-free pattern as soft LP)
+    let mut py = Matrix::zeros(y0.rows, cols);
     for _ in 0..cfg.steps {
-        let py = op.matvec(&y);
+        op.matmul_into(&y, &mut py);
         // unlabeled-row updates are independent: split row-aligned chunks
         // over the par layer (each per-row delta/assignment is the same
         // scalar sequence as serial; chunk deltas merge by max, which is

@@ -79,6 +79,12 @@ pub fn choose_labeled(labels: &[usize], n_classes: usize, count: usize, seed: u6
 }
 
 /// Run label propagation: `Y ← α·P·Y + (1−α)·Y⁰`, `steps` times.
+///
+/// All C class columns go through the operator's multi-RHS
+/// [`crate::core::op::TransitionOp::matmul_into`] (one model traversal per
+/// step on backends that fuse columns), double-buffered so the steady
+/// state allocates nothing per step. Bit-identical to the historical
+/// per-step `matvec` loop: the buffers swap, they never mix.
 /// (Signatures name the canonical `core::op` path so the deprecated
 /// re-export above stays warning-free inside the crate.)
 pub fn propagate(
@@ -88,10 +94,11 @@ pub fn propagate(
 ) -> Matrix {
     assert_eq!(y0.rows, op.n(), "Y0 rows must equal N");
     let mut y = y0.clone();
+    let mut py = Matrix::zeros(y0.rows, y0.cols);
     for _ in 0..cfg.steps {
-        let mut py = op.matvec(&y);
+        op.matmul_into(&y, &mut py);
         py.scale_add(cfg.alpha, 1.0 - cfg.alpha, y0);
-        y = py;
+        std::mem::swap(&mut y, &mut py);
     }
     y
 }

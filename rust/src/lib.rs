@@ -87,7 +87,13 @@
 //! spectral dots, coordinator batch execution) run on the
 //! [`core::par`] data-parallel layer — `VDT_THREADS=1` forces the serial
 //! fallbacks, and parallel results are exactly equivalent to serial (see
-//! the `core::par` module docs for the determinism contract).
+//! the `core::par` module docs for the determinism contract). The
+//! innermost loops (distance kernels, Algorithm-1 accumulation)
+//! additionally dispatch to runtime-detected SIMD lanes ([`core::simd`],
+//! `VDT_SIMD` knob) whose default tier is bit-exact against scalar, and
+//! multi-column workloads go through the operators' multi-RHS
+//! [`core::op::TransitionOp::matmul_into`] so all fused columns share one
+//! model traversal.
 //!
 //! ## Choosing a divergence
 //!

@@ -7,7 +7,10 @@
 //! earlier: N HTTP workers produce one coordinator round-trip instead of
 //! N, so the owner thread routes once, the reply fan-out happens here,
 //! and the batch is as wide as the window allows rather than as wide as
-//! the owner's brief drain happened to catch.
+//! the owner's brief drain happened to catch. Downstream, a fused matvec
+//! batch executes as one true multi-RHS apply
+//! ([`crate::core::op::TransitionOp::matmul`] — on the VDT backend a
+//! single tree/partition traversal for all fused columns).
 //!
 //! **Bit-parity**: fusing matvec requests concatenates columns, and every
 //! column of every backend's `matvec` is an independent scalar sequence;

@@ -11,19 +11,99 @@
 //! *kernel* node, unweighted, since `T_B` already sums |B| values. We
 //! implement the corrected form and verify against materialized Q in tests.
 //!
-//! The implementation is multi-column (Y is N×C) so label propagation over
-//! C classes runs all columns in one tree sweep — and for C > 1 the
-//! columns are **blocked over threads**: each worker runs the full
-//! CollectUp/DistributeDown pass on its own column range with its own
-//! scratch lane. Every column's arithmetic is a scalar sequence
-//! independent of the blocking, so parallel output is bit-identical to
-//! serial (`VDT_THREADS=1` or a single column takes the serial lane).
+//! ## Multi-RHS execution ([`matmul_into`])
+//!
+//! Y is N×C and the whole RHS goes through **one** pack of the block
+//! partition per call: the per-node mark lists and block stats are
+//! flattened into a contiguous CSR-like [`BlockPack`] (offsets + kernel
+//! ids + coefficients), then the CollectUp/DistributeDown sweep applies
+//! all fused columns at every node/mark visit. The column range is
+//! processed in tiles of at most [`COL_TILE`] columns so the per-node
+//! `t`/`acc` lanes stay cache-resident even for wide fused batches, and
+//! for C > 1 the tiles are additionally **blocked over threads**: each
+//! worker sweeps its own contiguous column range with its own scratch
+//! lane. The inner loops go through [`crate::core::simd`] (runtime
+//! AVX2/SSE2 dispatch, `VDT_SIMD` knob).
+//!
+//! ## Determinism
+//!
+//! Every column's arithmetic is a scalar sequence independent of the
+//! tiling and the thread blocking, and the SIMD kernels in the default
+//! tier are elementwise (per-lane IEEE ops, no FMA, no reassociation) —
+//! so the output is bit-identical across `VDT_THREADS`, `VDT_SIMD∈{0,1}`,
+//! tile boundaries, and C-vs-stacked-single-column execution. The only
+//! exception is the opt-in `VDT_SIMD=fast` tier, which packs block
+//! coefficients to f32 (accumulation stays f64); its error is bounded by
+//! tests in `rust/tests/simd_kernels.rs`.
 
-use crate::core::par;
+use crate::core::{par, simd};
 use crate::core::Matrix;
 use crate::tree::{PartitionTree, NONE};
 
 use super::partition::BlockPartition;
+
+/// Column-tile width: the sweep processes at most this many RHS columns
+/// per tree traversal, bounding the hot `t`/`acc` working set to
+/// `num_nodes × COL_TILE × 8 B` each (≈1 MB at N = 8000) so wide fused
+/// batches don't fall out of L2.
+const COL_TILE: usize = 8;
+
+/// The per-call flattened view of a [`BlockPartition`]: mark lists and
+/// block stats packed into one contiguous CSR-like layout so the
+/// DistributeDown inner loop reads offsets/kernels/coefficients
+/// sequentially instead of chasing `Vec<Vec<u32>>` spines and 40-byte
+/// `Block` records. Rebuilt from the partition on every [`matmul_into`]
+/// call (O(num_nodes + |B|), amortized across all column tiles and
+/// workers of that call), so it can never go stale when `refine_to` /
+/// `optimize_q` mutate the partition between calls.
+#[derive(Default)]
+struct BlockPack {
+    /// CSR offsets into `kernel`/coefficients, length `num_nodes + 1`.
+    off: Vec<u32>,
+    /// Kernel node id per mark.
+    kernel: Vec<u32>,
+    /// f64 block coefficients (default tier; empty in fast mode).
+    q: Vec<f64>,
+    /// f32-packed coefficients (`VDT_SIMD=fast` only; empty otherwise).
+    q32: Vec<f32>,
+    /// Which coefficient array is populated.
+    fast: bool,
+}
+
+impl BlockPack {
+    fn build(&mut self, part: &BlockPartition, nn: usize, fast: bool) {
+        self.off.clear();
+        self.kernel.clear();
+        self.q.clear();
+        self.q32.clear();
+        self.fast = fast;
+        self.off.reserve(nn + 1);
+        self.off.push(0);
+        for marks in part.marks.iter().take(nn) {
+            for &bi in marks {
+                let blk = &part.blocks[bi as usize];
+                self.kernel.push(blk.kernel);
+                if fast {
+                    self.q32.push(blk.q as f32);
+                } else {
+                    self.q.push(blk.q);
+                }
+            }
+            self.off.push(self.kernel.len() as u32);
+        }
+    }
+}
+
+/// Where DistributeDown reads each node's marks from: the packed CSR view
+/// (multi-column calls) or the partition directly (single-column calls,
+/// where a per-call pack build would cost as much as the sweep itself).
+/// Both iterate the same marks in the same order with f64 arithmetic, so
+/// the two paths are bit-identical in the default tier.
+#[derive(Clone, Copy)]
+enum Marks<'a> {
+    Pack(&'a BlockPack),
+    Direct(&'a BlockPartition),
+}
 
 /// One worker's reusable buffers, sized (num_nodes × its column count).
 #[derive(Default)]
@@ -38,30 +118,34 @@ struct Lane {
     out: Vec<f32>,
 }
 
-/// Reusable buffers for [`matvec`]: one [`Lane`] per column-block worker
-/// (exactly one in the serial case). Lanes persist across calls, so
-/// steady-state matvec (e.g. LP iterations) allocates nothing.
+/// Reusable buffers for [`matmul`]/[`matvec`]: the flattened block pack
+/// plus one [`Lane`] per column-block worker (exactly one in the serial
+/// case). Buffers persist across calls, so steady-state application (e.g.
+/// LP iterations, the serving loop) allocates nothing.
 #[derive(Default)]
 pub struct MatvecScratch {
+    pack: BlockPack,
     lanes: Vec<Lane>,
 }
 
-/// Run Algorithm 1 for the column range `c0..c1` of `y`, writing the
-/// result (row-major `n × (c1-c0)`) into `out`.
+/// Run Algorithm 1 for the column tile `c0..c1` of `y`, writing the
+/// result into `out` at row stride `out_stride`, starting at column
+/// `out_col0` of each row.
 #[allow(clippy::too_many_arguments)]
-fn sweep_columns(
+fn sweep_tile(
     tree: &PartitionTree,
-    part: &BlockPartition,
+    marks: Marks<'_>,
     y: &Matrix,
     c0: usize,
     c1: usize,
     t: &mut Vec<f64>,
     acc: &mut Vec<f64>,
     out: &mut [f32],
+    out_stride: usize,
+    out_col0: usize,
 ) {
     let cb = c1 - c0;
     let nn = tree.num_nodes();
-    debug_assert_eq!(out.len(), tree.n * cb);
     t.clear();
     t.resize(nn * cb, 0.0);
     acc.clear();
@@ -75,9 +159,9 @@ fn sweep_columns(
     }
     for a in tree.n..nn {
         let (l, r) = (tree.left[a] as usize, tree.right[a] as usize);
-        for k in 0..cb {
-            t[a * cb + k] = t[l * cb + k] + t[r * cb + k];
-        }
+        debug_assert!(l < a && r < a, "child ids are always smaller than the parent's");
+        let (lo, hi) = t.split_at_mut(a * cb);
+        simd::add_f64(&mut hi[..cb], &lo[l * cb..l * cb + cb], &lo[r * cb..r * cb + cb]);
     }
 
     // ---- DistributeDown (descending ids = parents before children) ----
@@ -89,38 +173,102 @@ fn sweep_columns(
             let (lo, hi) = acc.split_at_mut(p * cb);
             lo[a * cb..a * cb + cb].copy_from_slice(&hi[..cb]);
         }
-        for &bi in &part.marks[a] {
-            let blk = &part.blocks[bi as usize];
-            let tb = &t[blk.kernel as usize * cb..blk.kernel as usize * cb + cb];
-            for k in 0..cb {
-                acc[a * cb + k] += blk.q * tb[k];
+        match marks {
+            Marks::Pack(pack) => {
+                let (m0, m1) = (pack.off[a] as usize, pack.off[a + 1] as usize);
+                if m0 == m1 {
+                    continue;
+                }
+                let dst = &mut acc[a * cb..a * cb + cb];
+                for m in m0..m1 {
+                    let kn = pack.kernel[m] as usize;
+                    let q = if pack.fast { pack.q32[m] as f64 } else { pack.q[m] };
+                    simd::axpy_f64(dst, q, &t[kn * cb..kn * cb + cb]);
+                }
+            }
+            Marks::Direct(part) => {
+                if part.marks[a].is_empty() {
+                    continue;
+                }
+                let dst = &mut acc[a * cb..a * cb + cb];
+                for &bi in &part.marks[a] {
+                    let blk = &part.blocks[bi as usize];
+                    let kn = blk.kernel as usize;
+                    simd::axpy_f64(dst, blk.q, &t[kn * cb..kn * cb + cb]);
+                }
             }
         }
     }
 
     for leaf in 0..tree.n {
-        for k in 0..cb {
-            out[leaf * cb + k] = acc[leaf * cb + k] as f32;
+        let dst = &mut out[leaf * out_stride + out_col0..leaf * out_stride + out_col0 + cb];
+        for (k, o) in dst.iter_mut().enumerate() {
+            *o = acc[leaf * cb + k] as f32;
         }
     }
 }
 
-/// Ŷ = Q·Y. `y` has one row per data point (tree leaf).
-pub fn matvec(
+/// Sweep the column range `c0..c1` as consecutive tiles of at most
+/// [`COL_TILE`] columns, reusing the same `t`/`acc` buffers across tiles
+/// (this is the cache blocking: one tile's lanes are hot while the tree
+/// and pack stream through). `out` holds rows of `out_stride` floats and
+/// receives the range at columns `0..c1-c0` relative to `c0`.
+#[allow(clippy::too_many_arguments)]
+fn sweep_range(
+    tree: &PartitionTree,
+    marks: Marks<'_>,
+    y: &Matrix,
+    c0: usize,
+    c1: usize,
+    t: &mut Vec<f64>,
+    acc: &mut Vec<f64>,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    let mut tc0 = c0;
+    while tc0 < c1 {
+        let tc1 = (tc0 + COL_TILE).min(c1);
+        sweep_tile(tree, marks, y, tc0, tc1, t, acc, out, out_stride, tc0 - c0);
+        tc0 = tc1;
+    }
+}
+
+/// Ŷ = Q·Y. `y` has one row per data point (tree leaf). Allocates the
+/// output; see [`matmul_into`] for the allocation-free form.
+pub fn matmul(
     tree: &PartitionTree,
     part: &BlockPartition,
     y: &Matrix,
     scratch: &mut MatvecScratch,
 ) -> Matrix {
     let mut out = Matrix::zeros(tree.n, y.cols);
-    matvec_into(tree, part, y, scratch, &mut out);
+    matmul_into(tree, part, y, scratch, &mut out);
     out
 }
 
-/// Ŷ = Q·Y written into a caller-owned `out` (`n × y.cols`, fully
-/// overwritten) — the allocation-free serving primitive: steady-state
-/// request loops reuse both the scratch lanes *and* the output buffer.
-pub fn matvec_into(
+/// Backwards-compatible alias for [`matmul`] (the historical single-sweep
+/// entry point; multi-column Y was always accepted).
+pub fn matvec(
+    tree: &PartitionTree,
+    part: &BlockPartition,
+    y: &Matrix,
+    scratch: &mut MatvecScratch,
+) -> Matrix {
+    matmul(tree, part, y, scratch)
+}
+
+/// True multi-RHS Algorithm 1: Ŷ = Q·Y written into a caller-owned `out`
+/// (`n × y.cols`, fully overwritten) — the allocation-free serving
+/// primitive; steady-state request loops reuse the scratch *and* the
+/// output buffer.
+///
+/// For C > 1 the block partition is flattened into the scratch's
+/// [`BlockPack`] **once per call** and shared by every column tile and
+/// worker, so fused batches pay one partition traversal total instead of
+/// one per column block. Output is bit-identical to C separate
+/// single-column calls (and to any `VDT_THREADS` setting) in the default
+/// SIMD tier; see the module docs for the `VDT_SIMD=fast` exception.
+pub fn matmul_into(
     tree: &PartitionTree,
     part: &BlockPartition,
     y: &Matrix,
@@ -131,41 +279,54 @@ pub fn matvec_into(
     let c = y.cols;
     let n = tree.n;
     assert_eq!((out.rows, out.cols), (n, c), "output shape mismatch");
+    if c == 0 {
+        return;
+    }
+
+    // single-column calls read the partition directly — a per-call pack
+    // build would cost as much as the one sweep it feeds
+    let use_pack = c > 1;
+    if use_pack {
+        scratch.pack.build(part, tree.num_nodes(), simd::fast_enabled());
+    }
+    let MatvecScratch { pack, lanes } = scratch;
+    let marks = if use_pack { Marks::Pack(&*pack) } else { Marks::Direct(part) };
+
     let workers = par::effective_threads().min(c);
     if workers <= 1 || n * c < 8192 {
-        // serial lane: the whole column range in one sweep, straight into
-        // the result matrix
-        if scratch.lanes.is_empty() {
-            scratch.lanes.push(Lane::default());
+        // serial lane: all tiles on this thread, straight into the result
+        // matrix at row stride c
+        if lanes.is_empty() {
+            lanes.push(Lane::default());
         }
-        let lane = &mut scratch.lanes[0];
-        sweep_columns(tree, part, y, 0, c, &mut lane.t, &mut lane.acc, &mut out.data);
+        let lane = &mut lanes[0];
+        sweep_range(tree, marks, y, 0, c, &mut lane.t, &mut lane.acc, &mut out.data, c);
         return;
     }
 
     // column-blocked: worker w owns columns w*cb .. min((w+1)*cb, c),
-    // staging into its lane's persistent out buffer (steady state
-    // allocates nothing)
+    // tiling its range and staging into its lane's persistent out buffer
+    // (steady state allocates nothing)
     let cb = c.div_ceil(workers);
     let n_blocks = c.div_ceil(cb);
-    if scratch.lanes.len() < n_blocks {
-        scratch.lanes.resize_with(n_blocks, Lane::default);
+    if lanes.len() < n_blocks {
+        lanes.resize_with(n_blocks, Lane::default);
     }
     std::thread::scope(|s| {
-        for (w, lane) in scratch.lanes.iter_mut().enumerate().take(n_blocks) {
+        for (w, lane) in lanes.iter_mut().enumerate().take(n_blocks) {
             let c0 = w * cb;
             let c1 = (c0 + cb).min(c);
             s.spawn(move || {
                 let Lane { t, acc, out } = lane;
                 out.clear();
                 out.resize(n * (c1 - c0), 0.0);
-                sweep_columns(tree, part, y, c0, c1, t, acc, &mut out[..]);
+                sweep_range(tree, marks, y, c0, c1, t, acc, &mut out[..], c1 - c0);
             });
         }
     });
 
     // interleave the column blocks back into one row-major matrix
-    for (w, lane) in scratch.lanes.iter().enumerate().take(n_blocks) {
+    for (w, lane) in lanes.iter().enumerate().take(n_blocks) {
         let c0 = w * cb;
         let width = lane.out.len() / n;
         for r in 0..n {
@@ -173,6 +334,17 @@ pub fn matvec_into(
                 .copy_from_slice(&lane.out[r * width..(r + 1) * width]);
         }
     }
+}
+
+/// Backwards-compatible alias for [`matmul_into`].
+pub fn matvec_into(
+    tree: &PartitionTree,
+    part: &BlockPartition,
+    y: &Matrix,
+    scratch: &mut MatvecScratch,
+    out: &mut Matrix,
+) {
+    matmul_into(tree, part, y, scratch, out);
 }
 
 #[cfg(test)]
@@ -214,7 +386,10 @@ mod tests {
     }
 
     #[test]
-    fn multicolumn_equals_stacked_single_columns() {
+    fn multicolumn_is_bit_identical_to_stacked_single_columns() {
+        // the packed multi-RHS path and the direct single-column path run
+        // the same per-column scalar sequence => exact equality, not just
+        // tolerance
         let (t, p) = setup(12, 8);
         let y = Matrix::from_fn(12, 4, |r, c| ((r + c * 13) % 7) as f32);
         let multi = matvec(&t, &p, &y, &mut MatvecScratch::default());
@@ -222,7 +397,11 @@ mod tests {
             let single = Matrix::from_fn(12, 1, |r, _| y.get(r, col));
             let got = matvec(&t, &p, &single, &mut MatvecScratch::default());
             for r in 0..12 {
-                assert!((got.get(r, 0) - multi.get(r, col)).abs() < 1e-6);
+                assert_eq!(
+                    got.get(r, 0).to_bits(),
+                    multi.get(r, col).to_bits(),
+                    "r={r} col={col}"
+                );
             }
         }
     }
@@ -244,10 +423,60 @@ mod tests {
         // big enough that n*c clears the parallel gate when threads > 1
         let (t, p) = setup(1300, 12);
         let y = Matrix::from_fn(1300, 8, |r, c| (((r * 31 + c * 17) % 23) as f32 - 11.0) * 0.3);
+        let mut pack = BlockPack::default();
+        pack.build(&p, t.num_nodes(), false);
         let mut serial_out = Matrix::zeros(1300, 8);
         let mut lane = Lane::default();
-        sweep_columns(&t, &p, &y, 0, 8, &mut lane.t, &mut lane.acc, &mut serial_out.data);
+        sweep_range(
+            &t,
+            Marks::Pack(&pack),
+            &y,
+            0,
+            8,
+            &mut lane.t,
+            &mut lane.acc,
+            &mut serial_out.data,
+            8,
+        );
         let blocked = matvec(&t, &p, &y, &mut MatvecScratch::default());
         assert_eq!(serial_out.data, blocked.data, "column blocking changed bits");
+    }
+
+    #[test]
+    fn tiling_is_bit_invariant_for_wide_rhs() {
+        // C = 19 spans two tiles serially (COL_TILE = 8) and splits
+        // unevenly over workers; every grouping must produce the same bits
+        // as the direct single-column path
+        let (t, p) = setup(90, 21);
+        let y = Matrix::from_fn(90, 19, |r, c| (((r * 13 + c * 7) % 29) as f32 - 14.0) * 0.21);
+        let wide = matvec(&t, &p, &y, &mut MatvecScratch::default());
+        for col in 0..19 {
+            let single = Matrix::from_fn(90, 1, |r, _| y.get(r, col));
+            let got = matvec(&t, &p, &single, &mut MatvecScratch::default());
+            for r in 0..90 {
+                assert_eq!(got.get(r, 0).to_bits(), wide.get(r, col).to_bits(), "r={r} col={col}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_matches_partition_order() {
+        let (t, p) = setup(60, 4);
+        let mut pack = BlockPack::default();
+        pack.build(&p, t.num_nodes(), false);
+        assert_eq!(pack.off.len(), t.num_nodes() + 1);
+        assert_eq!(*pack.off.last().unwrap() as usize, pack.kernel.len());
+        assert_eq!(pack.q.len(), pack.kernel.len());
+        assert!(pack.q32.is_empty());
+        let mut m = 0usize;
+        for a in 0..t.num_nodes() {
+            for &bi in &p.marks[a] {
+                let blk = &p.blocks[bi as usize];
+                assert_eq!(pack.kernel[m], blk.kernel);
+                assert_eq!(pack.q[m].to_bits(), blk.q.to_bits());
+                m += 1;
+            }
+        }
+        assert_eq!(m, pack.kernel.len());
     }
 }

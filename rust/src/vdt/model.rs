@@ -16,7 +16,7 @@ use crate::core::op::{Backend, ModelCard, TransitionOp};
 use crate::runtime::snapshot::{instantiate_divergence, Snapshot};
 use crate::tree::{build_tree_with, BuildConfig, PartitionTree, NONE};
 
-use super::matvec::{matvec, matvec_into, MatvecScratch};
+use super::matvec::{matmul, matmul_into, MatvecScratch};
 use super::optimize::loglik;
 use super::partition::{Block, BlockPartition};
 use super::refine::Refiner;
@@ -171,24 +171,40 @@ impl VdtModel {
         self.scratch_pool.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Ŷ = Q·Y via Algorithm 1, O((N+|B|)·C). Thread-safe through `&self`:
-    /// each call borrows a scratch from the pool (allocating one only the
-    /// first time a new concurrency level is reached) and returns it after
-    /// the sweep, so concurrent callers never serialize on the buffers.
-    pub fn matvec(&self, y: &Matrix) -> Matrix {
+    /// Ŷ = Q·Y via Algorithm 1, O((N+|B|)·C) — the true multi-RHS path:
+    /// all C columns of `y` share one flattened pass over the block
+    /// partition (see [`super::matvec::matmul_into`]). Thread-safe through
+    /// `&self`: each call borrows a scratch from the pool (allocating one
+    /// only the first time a new concurrency level is reached) and returns
+    /// it after the sweep, so concurrent callers never serialize on the
+    /// buffers.
+    pub fn matmul(&self, y: &Matrix) -> Matrix {
         let mut scratch = self.pool().pop().unwrap_or_default();
-        let out = matvec(&self.tree, &self.partition, y, &mut scratch);
+        let out = matmul(&self.tree, &self.partition, y, &mut scratch);
         self.pool().push(scratch);
         out
     }
 
-    /// Ŷ = Q·Y into a caller-owned buffer (`n × y.cols`, fully
+    /// Multi-RHS Ŷ = Q·Y into a caller-owned buffer (`n × y.cols`, fully
     /// overwritten): the allocation-free serving path — steady state
     /// reuses the pooled scratch lanes *and* the caller's output matrix.
-    pub fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+    /// Output is bit-identical to C stacked single-column calls in the
+    /// default SIMD tier (see [`crate::core::simd`]).
+    pub fn matmul_into(&self, y: &Matrix, out: &mut Matrix) {
         let mut scratch = self.pool().pop().unwrap_or_default();
-        matvec_into(&self.tree, &self.partition, y, &mut scratch, out);
+        matmul_into(&self.tree, &self.partition, y, &mut scratch, out);
         self.pool().push(scratch);
+    }
+
+    /// Alias for [`VdtModel::matmul`] (the historical name; multi-column Y
+    /// was always accepted).
+    pub fn matvec(&self, y: &Matrix) -> Matrix {
+        self.matmul(y)
+    }
+
+    /// Alias for [`VdtModel::matmul_into`].
+    pub fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+        self.matmul_into(y, out);
     }
 
     /// Record what the model was fitted on (shown in the
@@ -403,11 +419,19 @@ impl TransitionOp for VdtModel {
     }
 
     fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
-        VdtModel::matvec_into(self, y, out);
+        VdtModel::matmul_into(self, y, out);
     }
 
     fn matvec(&self, y: &Matrix) -> Matrix {
-        VdtModel::matvec(self, y)
+        VdtModel::matmul(self, y)
+    }
+
+    fn matmul_into(&self, y: &Matrix, out: &mut Matrix) {
+        VdtModel::matmul_into(self, y, out);
+    }
+
+    fn matmul(&self, y: &Matrix) -> Matrix {
+        VdtModel::matmul(self, y)
     }
 
     fn card(&self) -> ModelCard {

@@ -1,0 +1,231 @@
+//! Conformance tests for the runtime-dispatched SIMD tier
+//! (`core::simd`) and the multi-RHS matvec path built on it.
+//!
+//! The default (`VDT_SIMD=1`/`Auto`) kernels promise **bit-exactness**
+//! against the always-compiled scalar fallback; the exhaustive
+//! remainder-length sweeps below pin that for every vector length from 1
+//! through four full hardware lanes plus a ragged tail (dim = 1..=4·L+3),
+//! so no remainder-handling path goes untested. The opt-in
+//! `VDT_SIMD=fast` variants are *not* bit-exact by design; their error is
+//! bounded here instead.
+//!
+//! The SIMD mode is process-global, so every test that flips or depends
+//! on it serializes on one lock (same pattern as `core::par`'s budget
+//! tests).
+
+use vdt::core::simd::{
+    self, add_f64, add_f64_scalar, axpy_f64, axpy_f64_scalar, sq_dist, sq_dist_scalar,
+    sq_dist_to_centroid, sq_dist_to_centroid_scalar, SimdMode,
+};
+use vdt::core::Matrix;
+use vdt::data::synthetic;
+use vdt::vdt::{VdtConfig, VdtModel};
+
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn mode_guard() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Deterministic, sign-mixed, non-trivial f32 test vectors.
+fn vec_f32(n: usize, salt: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let x = (i as f32 + salt as f32 * 0.7) * 0.619;
+            (x.sin() * 2.5 + (i % 5) as f32 - 2.0) * if i % 3 == 0 { -1.0 } else { 1.0 }
+        })
+        .collect()
+}
+
+fn vec_f64(n: usize, salt: u32) -> Vec<f64> {
+    vec_f32(n, salt).into_iter().map(|x| x as f64 * 1.000000119).collect()
+}
+
+/// f32 lanes are 8 wide (AVX2 `_mm256_ps`): sweep 1..=4·8+3 so the SIMD
+/// `sq_dist` exercises zero through four full 16-element chunks plus
+/// every possible scalar remainder, and each length must reproduce the
+/// scalar bits exactly.
+#[test]
+fn sq_dist_bitexact_exhaustive_remainder_sweep() {
+    let _guard = mode_guard();
+    let prev = simd::set_simd_mode(SimdMode::Auto);
+    for dim in 1..=(4 * 8 + 3) {
+        let a = vec_f32(dim, 1);
+        let b = vec_f32(dim, 2);
+        let simd_v = sq_dist(&a, &b);
+        let scalar_v = sq_dist_scalar(&a, &b);
+        assert_eq!(
+            simd_v.to_bits(),
+            scalar_v.to_bits(),
+            "sq_dist dim={dim}: simd {simd_v:e} != scalar {scalar_v:e}"
+        );
+    }
+    simd::set_simd_mode(prev);
+}
+
+/// f64 lanes are 4 wide (AVX2 `_mm256_pd`): sweep 1..=4·4+3 for the two
+/// matvec accumulation kernels (CollectUp's `out = a + b`, DistributeDown's
+/// `acc += q·t`).
+#[test]
+fn accumulation_kernels_bitexact_exhaustive_remainder_sweep() {
+    let _guard = mode_guard();
+    let prev = simd::set_simd_mode(SimdMode::Auto);
+    for len in 1..=(4 * 4 + 3) {
+        let a = vec_f64(len, 3);
+        let b = vec_f64(len, 4);
+        let mut out_s = vec![0.0f64; len];
+        let mut out_v = vec![0.0f64; len];
+        add_f64_scalar(&mut out_s, &a, &b);
+        add_f64(&mut out_v, &a, &b);
+        for k in 0..len {
+            assert_eq!(out_s[k].to_bits(), out_v[k].to_bits(), "add_f64 len={len} k={k}");
+        }
+        for q in [0.0f64, 1.0, -0.37, 1.0e-12, 7.25e3] {
+            let mut acc_s = b.clone();
+            let mut acc_v = b.clone();
+            axpy_f64_scalar(&mut acc_s, q, &a);
+            axpy_f64(&mut acc_v, q, &a);
+            for k in 0..len {
+                assert_eq!(
+                    acc_s[k].to_bits(),
+                    acc_v[k].to_bits(),
+                    "axpy_f64 len={len} q={q} k={k}"
+                );
+            }
+        }
+    }
+    simd::set_simd_mode(prev);
+}
+
+/// In `Auto` mode `sq_dist_to_centroid` must stay on the scalar path (it
+/// is a sequential reduction — vectorizing it reassociates).
+#[test]
+fn centroid_distance_is_scalar_in_auto_mode() {
+    let _guard = mode_guard();
+    let prev = simd::set_simd_mode(SimdMode::Auto);
+    for dim in 1..=(4 * 8 + 3) {
+        let p = vec_f32(dim, 5);
+        let s1 = vec_f32(dim, 6);
+        let auto = sq_dist_to_centroid(&p, &s1, 7.0);
+        let scalar = sq_dist_to_centroid_scalar(&p, &s1, 7.0);
+        assert_eq!(auto.to_bits(), scalar.to_bits(), "centroid dim={dim}");
+    }
+    simd::set_simd_mode(prev);
+}
+
+/// The `fast` centroid variant reassociates a short f64 reduction; its
+/// relative error against scalar must stay within a few ulps-worth.
+#[test]
+fn fast_centroid_distance_error_is_bounded() {
+    let _guard = mode_guard();
+    let prev = simd::set_simd_mode(SimdMode::Fast);
+    for dim in 1..=(4 * 8 + 3) {
+        let p = vec_f32(dim, 7);
+        let s1 = vec_f32(dim, 8);
+        let fast = sq_dist_to_centroid(&p, &s1, 11.0);
+        let scalar = sq_dist_to_centroid_scalar(&p, &s1, 11.0);
+        let rel = (fast - scalar).abs() / scalar.abs().max(1e-30);
+        assert!(rel < 1e-12, "fast centroid dim={dim}: rel error {rel:e}");
+    }
+    simd::set_simd_mode(prev);
+}
+
+fn fitted_model(n: usize, seed: u64) -> VdtModel {
+    let ds = synthetic::gaussian_mixture(n, 4, 3, 2, 2.2, seed, "simd_conf");
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    m.refine_to(5 * n);
+    m
+}
+
+/// The multi-RHS property test the tentpole promises: for a refined model
+/// and C ∈ {1..9, 17, 32}, one fused `matmul` call must be bit-identical
+/// to C stacked single-column calls — across tile boundaries (COL_TILE=8)
+/// and worker splits — in both scalar and SIMD modes.
+#[test]
+fn matmul_bit_parity_with_stacked_single_columns() {
+    let _guard = mode_guard();
+    let m = fitted_model(700, 17);
+    let n = m.n();
+    for mode in [SimdMode::Scalar, SimdMode::Auto] {
+        let prev = simd::set_simd_mode(mode);
+        for c in (1..=9usize).chain([17, 32]) {
+            let y = Matrix::from_fn(n, c, |r, k| {
+                (((r * 31 + k * 17 + c) % 23) as f32 - 11.0) * 0.13
+            });
+            let fused = m.matmul(&y);
+            for col in 0..c {
+                let single = Matrix::from_fn(n, 1, |r, _| y.get(r, col));
+                let alone = m.matmul(&single);
+                for r in 0..n {
+                    assert_eq!(
+                        alone.get(r, 0).to_bits(),
+                        fused.get(r, col).to_bits(),
+                        "mode={mode:?} C={c} col={col} row={r}"
+                    );
+                }
+            }
+        }
+        simd::set_simd_mode(prev);
+    }
+}
+
+/// SIMD on vs off must not change a single output bit of the full
+/// pipeline primitive (the acceptance criterion behind running the whole
+/// test suite under `VDT_SIMD={0,1}` in CI).
+#[test]
+fn matmul_auto_mode_is_bit_identical_to_scalar_mode() {
+    let _guard = mode_guard();
+    let m = fitted_model(900, 23);
+    let n = m.n();
+    let y = Matrix::from_fn(n, 8, |r, k| (((r * 7 + k * 13) % 31) as f32 - 15.0) * 0.21);
+    let prev = simd::set_simd_mode(SimdMode::Scalar);
+    let scalar_out = m.matmul(&y);
+    simd::set_simd_mode(SimdMode::Auto);
+    let simd_out = m.matmul(&y);
+    simd::set_simd_mode(prev);
+    assert_eq!(scalar_out.data, simd_out.data, "VDT_SIMD=1 changed matmul bits");
+}
+
+/// `fast` mode packs block coefficients to f32 (accumulation stays f64).
+/// Each output element is Σ q_ab·T_b with Σq ≈ 1 per row, so the f32
+/// rounding of q (relative 2⁻²⁴ per coefficient) bounds the output error
+/// at a few 1e-6 relative to the row scale. Not bit-exact — bounded.
+#[test]
+fn fast_mode_matmul_error_is_bounded() {
+    let _guard = mode_guard();
+    let m = fitted_model(600, 31);
+    let n = m.n();
+    let y = Matrix::from_fn(n, 6, |r, k| (((r * 11 + k * 5) % 19) as f32 - 9.0) * 0.3);
+    let scale = y.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let prev = simd::set_simd_mode(SimdMode::Scalar);
+    let exact = m.matmul(&y);
+    simd::set_simd_mode(SimdMode::Fast);
+    let fast = m.matmul(&y);
+    simd::set_simd_mode(prev);
+    let tol = scale * 1e-4;
+    let diff = exact.max_abs_diff(&fast);
+    assert!(diff < tol, "fast-mode drift {diff:e} exceeds bound {tol:e}");
+    assert!(
+        exact.data != fast.data || m.num_blocks() == 0,
+        "fast mode unexpectedly bit-identical — is the f32 packing actually on?"
+    );
+}
+
+/// The fast tier must never leak into default-mode results: building and
+/// applying a model under Auto after a Fast episode yields the same bits
+/// as a process that never entered Fast (the pack is rebuilt per call).
+#[test]
+fn fast_mode_does_not_leak_into_auto_results() {
+    let _guard = mode_guard();
+    let m = fitted_model(400, 37);
+    let n = m.n();
+    let y = Matrix::from_fn(n, 4, |r, k| (((r * 3 + k) % 13) as f32 - 6.0) * 0.5);
+    let prev = simd::set_simd_mode(SimdMode::Auto);
+    let before = m.matmul(&y);
+    simd::set_simd_mode(SimdMode::Fast);
+    let _ = m.matmul(&y);
+    simd::set_simd_mode(SimdMode::Auto);
+    let after = m.matmul(&y);
+    simd::set_simd_mode(prev);
+    assert_eq!(before.data, after.data, "a Fast episode contaminated later Auto calls");
+}
