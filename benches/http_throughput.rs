@@ -21,6 +21,14 @@
 //! Correctness gate: a served matvec response must decode to the exact
 //! bits of a direct `TransitionOp::matvec` — a throughput number from a
 //! server that rounds floats would be worthless.
+//!
+//! After the mode comparison, a **keep-alive concurrency sweep** opens
+//! `BENCH_HTTP_CONNS` (default 1024, clamped to the fd budget)
+//! simultaneous keep-alive connections against the event loop at the
+//! DEFAULT compute-pool size — the connection ceiling is `max_conns`
+//! now, not the worker count — and hammers matvec over all of them with
+//! sampled bit-parity. Emitted as `batched/matvec@c{conns}` entries in
+//! `BENCH_http.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -83,6 +91,85 @@ fn hammer(
         }
         for j in joins {
             lats.extend(j.join().expect("client panicked"));
+        }
+    });
+    let wall_s = wall.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    ModeResult {
+        rps: lats.len() as f64 / wall_s,
+        p50_ms: percentile(&lats, 50.0),
+        p99_ms: percentile(&lats, 99.0),
+    }
+}
+
+/// Threads carrying the concurrency sweep. Each owns `conns / THREADS`
+/// keep-alive connections and drives them round-robin, so the measured
+/// concurrency is *open connections* (the event loop's axis), while
+/// in-flight requests stay bounded by the thread count.
+const SWEEP_THREADS: usize = 16;
+
+/// Open `conns` keep-alive connections, then run `rounds` matvec
+/// requests over every one of them, bit-checking every 97th response
+/// against the in-process operator.
+fn keepalive_sweep(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    rounds: usize,
+    n: usize,
+    model: &Arc<VdtModel>,
+) -> ModeResult {
+    let per = (conns / SWEEP_THREADS).max(1);
+    let barrier = std::sync::Barrier::new(SWEEP_THREADS);
+    let wall = Instant::now();
+    let mut lats: Vec<f64> = Vec::with_capacity(per * SWEEP_THREADS * rounds);
+    std::thread::scope(|s| {
+        let barrier = &barrier;
+        let mut joins = Vec::new();
+        for t in 0..SWEEP_THREADS {
+            let model = model.clone();
+            joins.push(s.spawn(move || {
+                let mut clients: Vec<HttpClient> = (0..per)
+                    .map(|i| {
+                        HttpClient::connect(addr)
+                            .unwrap_or_else(|e| panic!("connect {}: {e}", t * per + i))
+                    })
+                    .collect();
+                // every connection is open before any traffic flows —
+                // the sweep measures serving at full connection count
+                barrier.wait();
+                let mut lat = Vec::with_capacity(per * rounds);
+                for round in 0..rounds {
+                    for (i, http) in clients.iter_mut().enumerate() {
+                        let id = t * per + i;
+                        let tag = id * 10 + round;
+                        let y = Matrix::from_fn(n, 1, move |r, _| {
+                            (((r * 31 + tag * 7) % 19) as f32 - 9.0) * 0.1
+                        });
+                        let body = matrix_body("y", &y);
+                        let tt = Instant::now();
+                        let (status, resp) =
+                            http.post("/v1/models/bench/matvec", &body).expect("post");
+                        lat.push(tt.elapsed().as_secs_f64() * 1e3);
+                        assert_eq!(status, 200, "conn {id}: {resp}");
+                        if id % 97 == 0 {
+                            let got = matrix_from_json(
+                                Json::parse(&resp).expect("json").get("yhat").expect("yhat"),
+                                "yhat",
+                            )
+                            .expect("decode");
+                            assert_eq!(
+                                got.data,
+                                model.matvec(&y).data,
+                                "conn {id} not bit-identical under {conns}-conn load"
+                            );
+                        }
+                    }
+                }
+                lat
+            }));
+        }
+        for j in joins {
+            lats.extend(j.join().expect("sweep thread panicked"));
         }
     });
     let wall_s = wall.elapsed().as_secs_f64();
@@ -225,6 +312,43 @@ fn main() {
         );
         stack.server.shutdown();
         stack.handle.shutdown();
+    }
+
+    // ---- keep-alive concurrency sweep (event-loop axis) ----
+    // default workers on purpose: the acceptance bar is 1k concurrent
+    // keep-alive connections WITHOUT raising the compute pool
+    let fd_budget = vdt::runtime::server::raise_fd_limit().unwrap_or(1024);
+    let want_conns = env_usize("BENCH_HTTP_CONNS", 1024);
+    let conns = want_conns.min(((fd_budget.saturating_sub(128)) / 2) as usize).max(64);
+    if conns < want_conns {
+        println!("# sweep clamped to {conns} connections by the fd limit ({fd_budget})");
+    }
+    {
+        let handle = Coordinator::spawn();
+        handle.register("bench", model.clone());
+        let server = Server::bind(
+            handle.clone(),
+            "127.0.0.1:0",
+            ServerConfig {
+                max_conns: conns + 64,
+                batch_window: Duration::from_millis(1),
+                max_batch: 128,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind sweep server");
+        let sweep_rounds = env_usize("BENCH_HTTP_SWEEP_REQS", 3);
+        let r = keepalive_sweep(server.addr(), conns, sweep_rounds, n, &model);
+        println!(
+            "# batched/matvec@c{conns}: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+            r.rps, r.p50_ms, r.p99_ms
+        );
+        let stats = server.stats();
+        assert_eq!(stats.errors, 0, "sweep produced protocol errors");
+        assert_eq!(stats.rejected, 0, "sweep was rejected below max_conns");
+        results.push((format!("batched/matvec@c{conns}"), r));
+        server.shutdown();
+        handle.shutdown();
     }
 
     let get = |k: &str| results.iter().find(|(name, _)| name == k).expect("mode ran").1;

@@ -69,8 +69,10 @@ COMMANDS
             --http <addr>            e.g. 0.0.0.0:8080; endpoints:
                                      GET /healthz /stats /v1/models,
                                      POST /v1/models/{name}/matvec|query|labelprop
-            --http-workers <int> (32)     connection-handler pool
-            --queue-depth <int> (64)      pending connections before 429
+            --max-conns <int> (4096)      concurrent connections before 429
+            --http-workers <int> (32)     compute-pool threads (throughput,
+                                          not the connection ceiling)
+            --queue-depth <int> (64)      queued compute requests before 429
             --max-body-bytes <int> (8MiB)  request payload cap (413)
             --batching on|off (on)        micro-batch matvec/query
             --batch-window-us <int> (500) batch coalescing deadline
@@ -236,6 +238,7 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
     let cfg = ServerConfig {
         workers: args.get("http_workers", defaults.workers)?,
         queue_depth: args.get("queue_depth", defaults.queue_depth)?,
+        max_conns: args.get("max_conns", defaults.max_conns)?,
         max_body_bytes: args.get("max_body_bytes", defaults.max_body_bytes)?,
         batch_window: std::time::Duration::from_micros(
             args.get("batch_window_us", defaults.batch_window.as_micros() as u64)?,
@@ -243,6 +246,17 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
         max_batch: args.get("max_batch", defaults.max_batch)?,
         batching,
     };
+    // a 4k+ connection ceiling outruns the usual 1024 soft fd limit —
+    // raise it to the hard limit before binding (best effort)
+    if let Some(limit) = server::raise_fd_limit() {
+        if (limit as usize) < cfg.max_conns.saturating_add(64) {
+            eprintln!(
+                "warn: fd limit {limit} is below --max-conns {} + overhead; \
+                 connections beyond it will fail to accept",
+                cfg.max_conns
+            );
+        }
+    }
     let server = Server::bind(handle.clone(), addr, cfg)?;
     println!(
         "listening on http://{} (batching {}); \

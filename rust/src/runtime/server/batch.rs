@@ -56,6 +56,10 @@ struct Job {
     kind: BatchKind,
     m: Matrix,
     resp: mpsc::Sender<Result<Matrix, VdtError>>,
+    /// When [`Batcher::submit`] enqueued the job. The coalescing deadline
+    /// anchors on the *oldest* member's arrival, so a job parked through
+    /// someone else's window doesn't restart its wait from scratch.
+    arrived: Instant,
 }
 
 /// Compatibility key: jobs fuse only within (model, kind, shape) — for
@@ -108,7 +112,8 @@ pub struct Batcher {
 
 impl Batcher {
     /// Spawn the batching thread and its flush pool. `window` is the
-    /// coalescing deadline measured from the first job of a batch;
+    /// coalescing deadline measured from the *arrival* of the oldest job
+    /// in a batch (not from when the flush loop got around to it);
     /// `max_batch` caps how many requests one flush may carry.
     pub fn spawn(
         handle: CoordinatorHandle,
@@ -147,7 +152,13 @@ impl Batcher {
     pub fn submit(&self, model: &str, kind: BatchKind, m: Matrix) -> Result<Matrix, VdtError> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Job { model: model.to_string(), kind, m, resp: rtx })
+            .send(Job {
+                model: model.to_string(),
+                kind,
+                m,
+                resp: rtx,
+                arrived: Instant::now(),
+            })
             .map_err(|_| VdtError::ServiceUnavailable("batcher is shut down".to_string()))?;
         rrx.recv()
             .map_err(|_| VdtError::ServiceUnavailable("batcher dropped the reply".to_string()))?
@@ -189,8 +200,16 @@ fn run(
             }
         }
         // collect newcomers until the deadline, the size cap, or the
-        // payload cap
-        let deadline = Instant::now() + window;
+        // payload cap. The deadline anchors on the oldest member's
+        // *arrival*: a job that sat parked through a wrong-key flush has
+        // already spent its window and must not wait a second one
+        // (end-to-end latency stays ≤ one window + execution).
+        let deadline = group
+            .iter()
+            .map(|j| j.arrived)
+            .min()
+            .expect("group is non-empty")
+            + window;
         while group.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -225,7 +244,7 @@ fn run(
 /// Execute one batch and answer every job in it.
 fn flush(handle: &CoordinatorHandle, mut group: Vec<Job>) {
     if group.len() == 1 {
-        let Job { model, kind, m, resp } = group.pop().expect("non-empty");
+        let Job { model, kind, m, resp, .. } = group.pop().expect("non-empty");
         let out = match kind {
             BatchKind::Matvec => handle.matvec(model, m),
             BatchKind::Query => handle.query(model, m),
@@ -397,6 +416,49 @@ mod tests {
         let sum: f64 = qrow.data.iter().map(|&v| v as f64).sum();
         assert!((sum - 1.0).abs() < 1e-5, "query row sums to {sum}");
         let _ = model;
+        handle.shutdown();
+    }
+
+    #[test]
+    fn parked_job_latency_stays_under_one_window() {
+        // Regression: the coalescing deadline used to be measured from
+        // the flush-loop wakeup, so a job parked through a wrong-key
+        // flush waited up to 2× the window. With the deadline anchored
+        // on the oldest member's arrival, end-to-end latency stays
+        // under one window plus slack.
+        let (handle, _model) = serve_model(40, 5);
+        let ds2 = synthetic::two_moons(30, 0.07, 6);
+        let mut m2 = VdtModel::build(&ds2.x, &VdtConfig::default());
+        m2.refine_to(4 * 30);
+        handle.register("m2", Arc::new(m2));
+        let counters = Arc::new(BatchCounters::default());
+        let window = Duration::from_millis(400);
+        let batcher = Batcher::spawn(handle.clone(), window, 16, counters);
+
+        // job A opens a window for key ("m", 40) and holds the batcher
+        // loop until its deadline (max_batch is never reached)
+        let ba = batcher.clone();
+        let a = std::thread::spawn(move || {
+            ba.submit("m", BatchKind::Matvec, Matrix::from_fn(40, 1, |r, _| r as f32))
+                .unwrap()
+        });
+        // job B arrives mid-window with a different key → parked
+        std::thread::sleep(Duration::from_millis(100));
+        let t0 = Instant::now();
+        let out = batcher
+            .submit("m2", BatchKind::Matvec, Matrix::from_fn(30, 1, |r, _| r as f32))
+            .unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(out.rows, 30);
+        a.join().unwrap();
+        // B already burned ~100 ms of its window parked behind A; the
+        // buggy flush-anchored deadline would hold it ~(window - 100 ms)
+        // + another full window ≈ 700 ms. Arrival-anchored it completes
+        // in ≤ one window + slack.
+        assert!(
+            waited < window + Duration::from_millis(150),
+            "parked job waited {waited:?}, over one window + slack"
+        );
         handle.shutdown();
     }
 

@@ -12,8 +12,10 @@ use std::time::Duration;
 /// One keep-alive connection to the server.
 pub struct HttpClient {
     stream: TcpStream,
-    /// Carry-over bytes read past the previous response (none in
-    /// practice — the server never pipelines — but correctness first).
+    /// Carry-over bytes read past the previous response. The server
+    /// pipelines: with several requests in flight on one connection,
+    /// a read can pull in the head of the next response — those bytes
+    /// must seed the next `read_response`, not be dropped.
     leftover: Vec<u8>,
 }
 

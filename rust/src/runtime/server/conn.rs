@@ -1,0 +1,555 @@
+//! Per-connection state machine for the event-loop server.
+//!
+//! Each accepted socket becomes a [`Conn`] multiplexed by the readiness
+//! loop in [`super`]: nonblocking reads feed an incremental
+//! [`RequestParser`], a complete request is handed to the compute pool
+//! (`Dispatched` — interest mask empty, so the level-triggered poller
+//! does not spin while the request computes), the response is flushed
+//! from a write buffer (`Writing`), and the connection returns to
+//! keep-alive reading or drains to close.
+//!
+//! ```text
+//! Reading ──complete request──▶ Dispatched ──completion──▶ Writing
+//!    ▲                                                        │
+//!    └────────── keep-alive (next pipelined request) ─────────┤
+//!                                                   Draining ◀┘ (protocol
+//!                                                     │         errors)
+//!                                                   close
+//! ```
+//!
+//! HTTP/1.1 pipelining falls out of the design: bytes past the current
+//! request stay buffered in the parser, and after a response is written
+//! the loop immediately parses the next request from the leftover —
+//! requests on one connection are still answered strictly in order.
+//!
+//! Deadlines are *data*, not blocking timeouts: every state transition
+//! (re)arms [`Conn::deadline`], the loop mirrors it into the timer
+//! queue, and the generation counter invalidates stale entries.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::http::{self, HttpRequest};
+
+/// Per-readable-event byte budget. A single level-triggered event never
+/// buffers more than this; a large (≤ body-cap) upload simply takes a
+/// few loop iterations, which keeps one fast sender from starving the
+/// other connections.
+const READ_BUDGET: usize = 256 * 1024;
+
+/// Byte budget for the pre-close drain (absorbing unread request bytes
+/// so the close does not RST a just-written error body off the wire).
+const DRAIN_BUDGET: usize = 64 * 1024;
+
+/// Time budget for the same drain.
+pub(crate) const DRAIN_DEADLINE: Duration = Duration::from_millis(100);
+
+// ------------------------------------------------------- request parser
+
+/// What [`RequestParser::next`] produced.
+#[derive(Debug)]
+pub(crate) enum Parsed {
+    /// No complete request buffered yet — keep reading.
+    NeedMore,
+    /// The head declared `Expect: 100-continue` and the body has not
+    /// arrived: queue the interim response, then keep reading. Returned
+    /// at most once per request.
+    NeedContinue,
+    /// One complete request (leftover pipelined bytes stay buffered).
+    Request(HttpRequest),
+    /// Protocol violation — answer 400 and drain to close.
+    Bad(String),
+    /// Declared body exceeds the server cap — answer 413 and drain.
+    TooLarge { limit: usize },
+}
+
+struct PendingHead {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    keep_alive: bool,
+    content_length: usize,
+    /// Offset of the first body byte in the buffer.
+    body_start: usize,
+    expects_continue: bool,
+}
+
+/// Incremental HTTP/1.1 request parser over an append-only byte buffer.
+/// Feed bytes as they arrive, then call [`RequestParser::next`] until it
+/// stops yielding `Request`s — pipelined requests come out one at a time
+/// in arrival order.
+#[derive(Default)]
+pub(crate) struct RequestParser {
+    buf: Vec<u8>,
+    head: Option<PendingHead>,
+    continue_sent: bool,
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser::default()
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// A request has started arriving (or leftover pipelined bytes are
+    /// waiting) — EOF now is mid-request, not a clean close.
+    pub fn mid_request(&self) -> bool {
+        self.head.is_some() || !self.buf.is_empty()
+    }
+
+    /// Declared body length once the head has parsed (drives the
+    /// size-scaled read deadline).
+    pub fn pending_body_len(&self) -> Option<usize> {
+        self.head.as_ref().map(|h| h.content_length)
+    }
+
+    pub fn next(&mut self, max_body: usize) -> Parsed {
+        if self.head.is_none() {
+            let Some(pos) = http::find_head_end(&self.buf) else {
+                if self.buf.len() > http::MAX_HEADER_BYTES {
+                    return Parsed::Bad(format!(
+                        "header section exceeds {} bytes",
+                        http::MAX_HEADER_BYTES
+                    ));
+                }
+                return Parsed::NeedMore;
+            };
+            let (method, path, headers, keep_alive, content_length) =
+                match http::parse_head(&self.buf[..pos]) {
+                    Ok(h) => h,
+                    Err(e) => return Parsed::Bad(e),
+                };
+            if content_length > max_body {
+                return Parsed::TooLarge { limit: max_body };
+            }
+            let expects_continue = headers
+                .iter()
+                .any(|(k, v)| k == "expect" && v.to_ascii_lowercase().contains("100-continue"));
+            self.head = Some(PendingHead {
+                method,
+                path,
+                headers,
+                keep_alive,
+                content_length,
+                body_start: pos + 4,
+                expects_continue,
+            });
+        }
+        let (total, expects_continue) = {
+            let h = self.head.as_ref().expect("head parsed above");
+            (h.body_start + h.content_length, h.expects_continue)
+        };
+        if self.buf.len() >= total {
+            let h = self.head.take().expect("head parsed above");
+            let body = self.buf[h.body_start..total].to_vec();
+            self.buf.drain(..total);
+            self.continue_sent = false;
+            return Parsed::Request(HttpRequest {
+                method: h.method,
+                path: h.path,
+                headers: h.headers,
+                body,
+                keep_alive: h.keep_alive,
+            });
+        }
+        if expects_continue && !self.continue_sent {
+            // curl sends `Expect: 100-continue` for bodies over ~1 KiB
+            // and waits ~1 s for the interim response before transmitting
+            self.continue_sent = true;
+            return Parsed::NeedContinue;
+        }
+        Parsed::NeedMore
+    }
+}
+
+// ------------------------------------------------------------ connection
+
+/// What the connection does after its write buffer empties.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum AfterWrite {
+    /// Return to reading (possibly an already-buffered pipelined
+    /// request).
+    KeepAlive,
+    /// Close immediately.
+    Close,
+    /// FIN, then bounded read-discard before closing (protocol errors:
+    /// closing with unread request bytes queued makes the kernel RST the
+    /// error body off the wire).
+    Drain,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum State {
+    Reading,
+    /// The compute pool owns the current request; interest mask empty.
+    Dispatched,
+    Writing(AfterWrite),
+    Draining,
+}
+
+/// Which deadline is armed — decides what firing does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DeadlineKind {
+    /// Silent between requests → close quietly.
+    Idle,
+    /// Mid-request read stalled (slow-loris) → 408.
+    Read,
+    /// Peer stopped reading its response → drop.
+    Write,
+    /// Pre-close drain overstayed → close.
+    Drain,
+}
+
+/// Outcome of an I/O pass, for the event loop to act on.
+#[derive(Debug)]
+pub(crate) enum Io {
+    /// Nothing actionable.
+    Continue,
+    /// New bytes buffered — run the parser.
+    Data,
+    /// Peer sent FIN. Buffered bytes may still hold complete requests.
+    Eof,
+    /// Connection is dead (I/O error, or drain finished) — remove it.
+    Closed,
+    /// The response write buffer emptied — act on [`Conn::after_write`].
+    WriteDone,
+}
+
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    pub parser: RequestParser,
+    pub state: State,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    /// Bumped on every deadline (re)arm or clear; timer-queue entries
+    /// carry the generation they were scheduled under.
+    pub deadline_gen: u64,
+    synced_gen: u64,
+    pub deadline: Option<(Instant, DeadlineKind)>,
+    /// Interest currently registered with the poller.
+    pub interest: (bool, bool),
+    read_armed: bool,
+    body_scaled: bool,
+    drain_budget: usize,
+    /// Peer already sent FIN: answer the in-flight request, then close
+    /// instead of idling.
+    pub half_closed: bool,
+    /// Admission-control 429 connection (not a served client).
+    pub is_reject: bool,
+    /// Marked dead; the loop deregisters and removes it on sync.
+    pub closing: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        let mut conn = Conn {
+            stream,
+            parser: RequestParser::new(),
+            state: State::Reading,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            deadline_gen: 0,
+            synced_gen: 0,
+            deadline: None,
+            interest: (false, false),
+            read_armed: false,
+            body_scaled: false,
+            drain_budget: 0,
+            half_closed: false,
+            is_reject: false,
+            closing: false,
+        };
+        conn.enter_idle();
+        Ok(conn)
+    }
+
+    /// The interest mask this connection's state wants.
+    pub fn wants(&self) -> (bool, bool) {
+        let writing = self.write_pos < self.write_buf.len();
+        match self.state {
+            // `writing` while Reading covers a queued 100-continue
+            State::Reading => (true, writing),
+            State::Dispatched => (false, false),
+            State::Writing(_) => (false, true),
+            State::Draining => (true, false),
+        }
+    }
+
+    fn set_deadline(&mut self, kind: DeadlineKind, at: Instant) {
+        self.deadline = Some((at, kind));
+        self.deadline_gen += 1;
+    }
+
+    pub fn clear_deadline(&mut self) {
+        self.deadline = None;
+        self.deadline_gen += 1;
+    }
+
+    /// Pull the deadline only if it changed since the last sync, so the
+    /// loop pushes one timer entry per (re)arm.
+    pub fn deadline_entry(&mut self) -> Option<(Instant, u64)> {
+        if self.deadline_gen == self.synced_gen {
+            return None;
+        }
+        self.synced_gen = self.deadline_gen;
+        self.deadline.map(|(at, _)| (at, self.deadline_gen))
+    }
+
+    /// Back to between-requests reading: idle deadline armed, per-request
+    /// deadline state reset.
+    pub fn enter_idle(&mut self) {
+        self.state = State::Reading;
+        self.read_armed = false;
+        self.body_scaled = false;
+        self.set_deadline(DeadlineKind::Idle, Instant::now() + http::IDLE_TIMEOUT);
+    }
+
+    /// Arm/extend the mid-request read deadline. Called by the loop when
+    /// the parser holds a partial request: first byte arms the flat
+    /// anti-slow-loris deadline, a parsed head with a declared body
+    /// extends it proportionally (≈1 MiB/s floor) exactly once.
+    pub fn arm_read_deadline(&mut self) {
+        let now = Instant::now();
+        if !self.read_armed {
+            self.read_armed = true;
+            self.set_deadline(DeadlineKind::Read, now + http::REQUEST_DEADLINE);
+        }
+        if !self.body_scaled {
+            if let Some(len) = self.parser.pending_body_len() {
+                self.body_scaled = true;
+                if len > 0 {
+                    let extra = Duration::from_millis((len / 1024) as u64);
+                    let scaled = now + http::REQUEST_DEADLINE + extra;
+                    if self.deadline.map_or(true, |(at, _)| scaled > at) {
+                        self.set_deadline(DeadlineKind::Read, scaled);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pull the armed deadline earlier (shutdown drain tightens mid-read
+    /// requests to [`http::DRAIN_GRACE`]).
+    pub fn tighten_deadline(&mut self, at: Instant) {
+        if let Some((cur, kind)) = self.deadline {
+            if at < cur {
+                self.set_deadline(kind, at);
+            }
+        } else {
+            self.set_deadline(DeadlineKind::Read, at);
+        }
+    }
+
+    /// Hand the current request to the compute pool: no deadline (the
+    /// coordinator bounds its own work), no interest (level-triggered
+    /// readiness on unread pipelined bytes would spin).
+    pub fn begin_dispatch(&mut self) {
+        self.state = State::Dispatched;
+        self.clear_deadline();
+    }
+
+    /// Queue a complete response and transition to `Writing`.
+    pub fn queue_response(&mut self, status: u16, body: &str, after: AfterWrite) {
+        let keep = after == AfterWrite::KeepAlive;
+        self.write_buf.extend_from_slice(&http::encode_response(status, body, keep));
+        self.state = State::Writing(after);
+        self.set_deadline(DeadlineKind::Write, Instant::now() + http::WRITE_TIMEOUT);
+    }
+
+    /// Queue the `100 Continue` interim response without leaving
+    /// `Reading` (the real response still follows).
+    pub fn queue_continue(&mut self) {
+        self.write_buf.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+
+    pub fn after_write(&self) -> AfterWrite {
+        match self.state {
+            State::Writing(a) => a,
+            _ => AfterWrite::Close,
+        }
+    }
+
+    /// FIN the write side and absorb a bounded amount of unread request
+    /// bytes before the close.
+    pub fn start_drain(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Write);
+        self.state = State::Draining;
+        self.drain_budget = DRAIN_BUDGET;
+        self.set_deadline(DeadlineKind::Drain, Instant::now() + DRAIN_DEADLINE);
+    }
+
+    /// Handle read readiness in the current state.
+    pub fn on_readable(&mut self) -> Io {
+        match self.state {
+            State::Draining => self.on_drain_readable(),
+            State::Reading => self.on_read(),
+            // spurious (interest should be off)
+            State::Dispatched | State::Writing(_) => Io::Continue,
+        }
+    }
+
+    fn on_read(&mut self) -> Io {
+        let mut tmp = [0u8; 16 * 1024];
+        let mut total = 0usize;
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.half_closed = true;
+                    return Io::Eof;
+                }
+                Ok(k) => {
+                    self.parser.feed(&tmp[..k]);
+                    total += k;
+                    if total >= READ_BUDGET {
+                        // level-triggered: the poller re-reports what is
+                        // left, after other connections get a turn
+                        return Io::Data;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return if total > 0 { Io::Data } else { Io::Continue };
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return Io::Closed,
+            }
+        }
+    }
+
+    fn on_drain_readable(&mut self) -> Io {
+        let mut tmp = [0u8; 8192];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Io::Closed,
+                Ok(k) => {
+                    if k >= self.drain_budget {
+                        return Io::Closed;
+                    }
+                    self.drain_budget -= k;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Io::Continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return Io::Closed,
+            }
+        }
+    }
+
+    /// Flush the write buffer as far as the socket allows.
+    pub fn on_writable(&mut self) -> Io {
+        while self.write_pos < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.write_pos..]) {
+                Ok(0) => return Io::Closed,
+                Ok(k) => self.write_pos += k,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Io::Continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return Io::Closed,
+            }
+        }
+        self.write_buf.clear();
+        self.write_pos = 0;
+        match self.state {
+            State::Writing(_) => Io::WriteDone,
+            // a 100-continue flushed while still reading the body
+            _ => Io::Continue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_all(p: &mut RequestParser, s: &str) {
+        p.feed(s.as_bytes());
+    }
+
+    #[test]
+    fn parses_pipelined_requests_in_order() {
+        let mut p = RequestParser::new();
+        feed_all(
+            &mut p,
+            "POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+             GET /b HTTP/1.1\r\n\r\n\
+             POST /c HTTP/1.1\r\nContent-Length: 1\r\n\r\nz",
+        );
+        let r1 = match p.next(1024) {
+            Parsed::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((r1.method.as_str(), r1.path.as_str()), ("POST", "/a"));
+        assert_eq!(r1.body, b"hi");
+        let r2 = match p.next(1024) {
+            Parsed::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((r2.method.as_str(), r2.path.as_str()), ("GET", "/b"));
+        assert!(r2.body.is_empty());
+        let r3 = match p.next(1024) {
+            Parsed::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(r3.path, "/c");
+        assert_eq!(r3.body, b"z");
+        assert!(matches!(p.next(1024), Parsed::NeedMore));
+        assert!(!p.mid_request());
+    }
+
+    #[test]
+    fn reassembles_a_request_split_across_feeds() {
+        let mut p = RequestParser::new();
+        let wire = "POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        for chunk in wire.as_bytes().chunks(3) {
+            p.feed(chunk);
+        }
+        // intermediate states were NeedMore; final state yields the request
+        let r = match p.next(1024) {
+            Parsed::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(r.body, b"hello");
+    }
+
+    #[test]
+    fn expect_continue_is_signaled_exactly_once() {
+        let mut p = RequestParser::new();
+        feed_all(&mut p, "POST /x HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 3\r\n\r\n");
+        assert!(matches!(p.next(1024), Parsed::NeedContinue));
+        assert!(matches!(p.next(1024), Parsed::NeedMore), "continue must not repeat");
+        p.feed(b"abc");
+        assert!(matches!(p.next(1024), Parsed::Request(_)));
+    }
+
+    #[test]
+    fn oversized_and_malformed_heads_are_typed() {
+        let mut p = RequestParser::new();
+        feed_all(&mut p, "POST /x HTTP/1.1\r\nContent-Length: 100\r\n\r\n");
+        assert!(matches!(p.next(50), Parsed::TooLarge { limit: 50 }));
+
+        let mut p = RequestParser::new();
+        feed_all(&mut p, "NOT A REQUEST\r\n\r\n");
+        assert!(matches!(p.next(1024), Parsed::Bad(_)));
+
+        // an endless head with no terminator trips the header cap
+        let mut p = RequestParser::new();
+        p.feed(&b"a".repeat(http::MAX_HEADER_BYTES + 1));
+        assert!(matches!(p.next(1024), Parsed::Bad(_)));
+    }
+
+    #[test]
+    fn mid_request_tracks_partial_state() {
+        let mut p = RequestParser::new();
+        assert!(!p.mid_request());
+        p.feed(b"GET");
+        assert!(p.mid_request());
+        assert!(matches!(p.next(1024), Parsed::NeedMore));
+        p.feed(b" / HTTP/1.1\r\n\r\n");
+        assert!(matches!(p.next(1024), Parsed::Request(_)));
+        assert!(!p.mid_request());
+        assert!(p.pending_body_len().is_none());
+    }
+}

@@ -1,40 +1,47 @@
 //! Hand-rolled HTTP/1.1 wire layer for [`crate::runtime::server`] — no
-//! hyper, no tokio, just `std::net`.
+//! hyper, no tokio, just bytes.
 //!
 //! Scope is deliberately the subset serving needs: request line +
 //! headers + `Content-Length` bodies in, status + JSON bodies out, with
-//! keep-alive. Everything attacker-controlled is bounded (header section
-//! ≤ [`MAX_HEADER_BYTES`], body ≤ the server's configured cap, a hard
-//! per-request read deadline against slow-loris dribbling, an
-//! [`IDLE_TIMEOUT`] so connections that never send a byte can't hold a
-//! worker forever) and every
-//! malformed input is a typed [`ReadOutcome`] — never a panic
-//! (`rust/tests/http_server.rs` exercises the corners over real sockets).
+//! keep-alive and pipelining. This module is *pure*: the head parser
+//! ([`parse_head`]) and response encoder ([`encode_response`]) are
+//! functions over bytes so the malformed-request suite can hit them
+//! without sockets. The socket side — nonblocking reads feeding an
+//! incremental parser, deadline bookkeeping in the event loop's timer
+//! queue — lives in the sibling `conn`/`poll` modules.
 //!
-//! The head parser ([`parse_head`]) is a pure function over bytes so the
-//! malformed-request suite can hit it without sockets; [`read_request`]
-//! adds the socket loop: short read timeouts so a blocked worker notices
-//! the server's shutdown flag, and deadline tightening during drain.
+//! Everything attacker-controlled is bounded: header section ≤
+//! [`MAX_HEADER_BYTES`], body ≤ the server's configured cap (413), a
+//! hard per-request read deadline against slow-loris dribbling (408,
+//! scaled with the declared body length at a ≈1 MiB/s floor), an
+//! [`IDLE_TIMEOUT`] so connections that never send a byte can't sit
+//! forever, and a [`WRITE_TIMEOUT`] so a client that stops *reading* its
+//! response is dropped. Every malformed input is a typed error — never a
+//! panic (`rust/tests/http_server.rs` exercises the corners over real
+//! sockets).
 
-use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Cap on the request line + headers (a request this large is abuse).
 pub const MAX_HEADER_BYTES: usize = 16 * 1024;
 
 /// Hard deadline for reading one complete request once its first byte
 /// arrived (anti-slow-loris; generous for real clients).
-const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+pub(crate) const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
 
 /// How long a connection may sit silent between requests before the
-/// server closes it. Bounds workers held by connections that never send
-/// a byte the way [`REQUEST_DEADLINE`] bounds half-sent requests —
-/// without it, `workers` idle sockets would wedge the pool permanently.
+/// server closes it. Bounds connections that never send a byte the way
+/// [`REQUEST_DEADLINE`] bounds half-sent requests — without it, idle
+/// sockets would accumulate against `max_conns` permanently.
 pub const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// How long a queued response may take to flush before the connection is
+/// declared mute and dropped (a peer that stops reading must not hold
+/// buffers forever).
+pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Remaining patience for a half-read request once shutdown begins.
-const DRAIN_GRACE: Duration = Duration::from_secs(1);
+pub(crate) const DRAIN_GRACE: Duration = Duration::from_secs(1);
 
 /// One parsed HTTP request.
 #[derive(Clone, Debug)]
@@ -54,22 +61,6 @@ impl HttpRequest {
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
     }
-}
-
-/// Everything reading one request can produce. Only `Request` continues
-/// the connection; the rest tell the worker what to answer (if anything)
-/// before closing.
-#[derive(Debug)]
-pub enum ReadOutcome {
-    Request(HttpRequest),
-    /// Peer closed (or went idle into shutdown) between requests.
-    Closed,
-    /// Protocol violation — answer 400 and close.
-    Bad(String),
-    /// Declared body exceeds the server's cap — answer 413 and close.
-    TooLarge { limit: usize },
-    /// The request stalled past its read deadline — answer 408 and close.
-    TimedOut,
 }
 
 /// Parsed head: method, path, headers, keep-alive, declared body length.
@@ -135,198 +126,24 @@ pub fn parse_head(head: &[u8]) -> Result<Head, String> {
     Ok((method.to_string(), path, headers, keep_alive, content_length))
 }
 
-/// Read one request off the stream. The stream must have a short read
-/// timeout set (the worker loop uses ~50 ms) so `stop()` — the server's
-/// shutdown flag — is observed between reads.
-pub fn read_request(
-    stream: &mut TcpStream,
-    max_body: usize,
-    stop: &dyn Fn() -> bool,
-) -> ReadOutcome {
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
-    let mut tmp = [0u8; 8192];
-    let mut deadline: Option<Instant> = None;
-    let idle_deadline = Instant::now() + IDLE_TIMEOUT;
-
-    // ---- head: everything up to CRLFCRLF ----
-    let head_end = loop {
-        if let Some(pos) = find_head_end(&buf) {
-            break pos;
-        }
-        if buf.len() > MAX_HEADER_BYTES {
-            return ReadOutcome::Bad(format!(
-                "header section exceeds {MAX_HEADER_BYTES} bytes"
-            ));
-        }
-        match read_some(stream, &mut tmp, &mut buf, &mut deadline, idle_deadline, stop) {
-            ReadStep::Progress => {}
-            ReadStep::Eof => {
-                return if buf.is_empty() {
-                    ReadOutcome::Closed
-                } else {
-                    ReadOutcome::Bad("connection closed mid-request".to_string())
-                };
-            }
-            ReadStep::IdleStop => return ReadOutcome::Closed,
-            ReadStep::DeadlineHit => return ReadOutcome::TimedOut,
-            ReadStep::IoError => return ReadOutcome::Closed,
-        }
-    };
-
-    let (method, path, headers, keep_alive, content_length) =
-        match parse_head(&buf[..head_end]) {
-            Ok(h) => h,
-            Err(e) => return ReadOutcome::Bad(e),
-        };
-    if content_length > max_body {
-        return ReadOutcome::TooLarge { limit: max_body };
-    }
-    // curl sends `Expect: 100-continue` for bodies over ~1 KiB and waits
-    // ~1 s for the interim response before transmitting — answer it, or
-    // every documented curl example eats a silent second of latency
-    let expects_continue = headers
-        .iter()
-        .any(|(k, v)| k == "expect" && v.to_ascii_lowercase().contains("100-continue"));
-    if expects_continue && stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err() {
-        return ReadOutcome::Closed;
-    }
-    // scale the remaining patience with the declared body: a legitimate
-    // 32 MiB upload at WAN speeds needs more than the flat 10 s, while a
-    // dribbling attacker is still hard-bounded (≈1 MiB/s floor)
-    if content_length > 0 {
-        let extra = Duration::from_millis((content_length / 1024) as u64);
-        let scaled = Instant::now() + REQUEST_DEADLINE + extra;
-        if deadline.map_or(true, |d| scaled > d) {
-            deadline = Some(scaled);
-        }
-    }
-
-    // ---- body: exactly content_length bytes after the terminator ----
-    let body_start = head_end + 4;
-    let mut body: Vec<u8> = buf[body_start.min(buf.len())..].to_vec();
-    while body.len() < content_length {
-        match read_some(stream, &mut tmp, &mut body, &mut deadline, idle_deadline, stop) {
-            ReadStep::Progress => {}
-            ReadStep::Eof => {
-                return ReadOutcome::Bad(format!(
-                    "body truncated: got {} of {content_length} declared bytes",
-                    body.len()
-                ));
-            }
-            ReadStep::IdleStop | ReadStep::DeadlineHit => return ReadOutcome::TimedOut,
-            ReadStep::IoError => return ReadOutcome::Closed,
-        }
-    }
-    if body.len() > content_length {
-        // pipelined extra bytes: simplest correct behavior for this
-        // server is to reject (we never advertise pipelining)
-        return ReadOutcome::Bad("request pipelining is not supported".to_string());
-    }
-    ReadOutcome::Request(HttpRequest { method, path, headers, body, keep_alive })
-}
-
-enum ReadStep {
-    Progress,
-    Eof,
-    /// Nothing read yet and the connection should be let go quietly:
-    /// either the server is draining, or the idle timeout expired.
-    IdleStop,
-    DeadlineHit,
-    IoError,
-}
-
-fn read_some(
-    stream: &mut TcpStream,
-    tmp: &mut [u8],
-    into: &mut Vec<u8>,
-    deadline: &mut Option<Instant>,
-    idle_deadline: Instant,
-    stop: &dyn Fn() -> bool,
-) -> ReadStep {
-    match stream.read(tmp) {
-        Ok(0) => ReadStep::Eof,
-        Ok(k) => {
-            if deadline.is_none() {
-                *deadline = Some(Instant::now() + REQUEST_DEADLINE);
-            }
-            into.extend_from_slice(&tmp[..k]);
-            // enforce the deadline on *successful* reads too: a sender
-            // trickling one byte per socket-timeout would otherwise keep
-            // landing in this arm and never face the slow-loris bound
-            match deadline {
-                Some(d) if Instant::now() >= *d => ReadStep::DeadlineHit,
-                _ => ReadStep::Progress,
-            }
-        }
-        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-            let started = deadline.is_some() || !into.is_empty();
-            if stop() {
-                if !started {
-                    return ReadStep::IdleStop;
-                }
-                // mid-request during drain: tighten the deadline
-                let grace = Instant::now() + DRAIN_GRACE;
-                if deadline.map_or(true, |d| grace < d) {
-                    *deadline = Some(grace);
-                }
-            }
-            if !started && Instant::now() >= idle_deadline {
-                return ReadStep::IdleStop;
-            }
-            match deadline {
-                Some(d) if Instant::now() >= *d => ReadStep::DeadlineHit,
-                _ => ReadStep::Progress,
-            }
-        }
-        Err(e) if e.kind() == ErrorKind::Interrupted => ReadStep::Progress,
-        Err(_) => ReadStep::IoError,
-    }
-}
-
-fn find_head_end(buf: &[u8]) -> Option<usize> {
+/// Offset of the `\r\n\r\n` head terminator, if buffered.
+pub(crate) fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Best-effort bounded drain of unread request bytes before the socket
-/// drops. Closing with data still queued in the receive buffer makes the
-/// kernel answer with RST, which can discard a just-written response on
-/// the client side — a 413/429 would surface as "connection reset"
-/// instead of its typed JSON body. Sends FIN (write shutdown), then
-/// reads and discards what the peer already sent, capped tightly in
-/// bytes and time so an attacker can't turn the courtesy into a stall.
-pub fn drain_before_close(stream: &mut TcpStream) {
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
-    let mut tmp = [0u8; 8192];
-    let deadline = Instant::now() + Duration::from_millis(100);
-    let mut budget = 64 * 1024usize;
-    while budget > 0 && Instant::now() < deadline {
-        match stream.read(&mut tmp) {
-            Ok(0) => break,
-            Ok(k) => budget = budget.saturating_sub(k),
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            // timeout with an empty queue: nothing left to absorb
-            Err(_) => break,
-        }
-    }
-}
-
-/// Write a complete JSON response.
-pub fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    body: &str,
-    keep_alive: bool,
-) -> std::io::Result<()> {
+/// Encode a complete JSON response (head + body) as wire bytes, ready
+/// for the connection's write buffer.
+pub fn encode_response(status: u16, body: &str, keep_alive: bool) -> Vec<u8> {
     let head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         reason_phrase(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
 }
 
 /// Canonical reason phrases for the statuses this server emits.
@@ -417,5 +234,19 @@ mod tests {
         assert_eq!(find_head_end(b"ab\r\n\r\ncd"), Some(2));
         assert_eq!(find_head_end(b"ab\r\n\r"), None);
         assert_eq!(find_head_end(b""), None);
+    }
+
+    #[test]
+    fn encode_response_frames_the_body() {
+        let wire = encode_response(200, "{\"a\":1}", true);
+        let text = std::str::from_utf8(&wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"a\":1}"), "{text}");
+        let wire = encode_response(429, "{}", false);
+        let text = std::str::from_utf8(&wire).unwrap();
+        assert!(text.contains("429 Too Many Requests"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
     }
 }

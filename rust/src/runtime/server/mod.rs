@@ -3,9 +3,25 @@
 //!
 //! The paper's point is that the VDT approximation makes transition-matrix
 //! operations cheap enough to run *online*; this module is the network
-//! surface that cashes that in: a `std::net::TcpListener` acceptor thread
-//! feeding a bounded worker pool, fronting a [`CoordinatorHandle`] model
-//! registry (warm-started from snapshots via `vdt serve --http`).
+//! surface that cashes that in. Since the event-loop rewrite, it serves
+//! with **one driver thread** running a readiness loop (`epoll(7)` on
+//! Linux, `poll(2)` on other unix — see the `poll` module's raw-syscall
+//! shim) over nonblocking sockets, multiplexing thousands of keep-alive
+//! connections onto a small **compute pool** that executes the routed
+//! requests. A connection is a state machine (see the `conn` module):
+//!
+//! ```text
+//! accept → Reading (incremental parse) → Dispatched (compute pool)
+//!        → Writing (buffered flush) → keep-alive idle / drain-close
+//! ```
+//!
+//! so an idle keep-alive client costs one fd and a few hundred bytes —
+//! not a pinned thread. HTTP/1.1 keep-alive **and pipelining** are
+//! supported: back-to-back requests on one connection are parsed from
+//! the same buffer and answered strictly in order, one in flight at a
+//! time. Every protocol deadline (idle, slow-loris read, mute-reader
+//! write, pre-close drain) lives in the loop's timer queue; nothing
+//! blocks.
 //!
 //! ## Endpoints
 //!
@@ -31,26 +47,34 @@
 //!   after its first request (the latency the throughput is bought with).
 //! - [`ServerConfig::max_batch`] — requests per flush cap.
 //!
-//! ## Backpressure knobs
+//! ## Capacity knobs
 //!
-//! - [`ServerConfig::workers`] — connection-handler pool size; also the
-//!   maximum number of concurrently-served connections.
-//! - [`ServerConfig::queue_depth`] — accepted connections waiting for a
-//!   worker. When the queue is full the acceptor answers **429** with a
-//!   typed `service_unavailable` body instead of letting latency grow
-//!   unboundedly.
+//! - [`ServerConfig::max_conns`] — concurrently open connections
+//!   (keep-alive idle included). This is the connection ceiling now;
+//!   beyond it new connections are answered **429** (or shed unanswered
+//!   under a flood). `vdt serve --http` exposes it as `--max-conns`.
+//! - [`ServerConfig::workers`] — compute-pool threads executing routed
+//!   requests. Sizes *throughput*, not connection capacity.
+//! - [`ServerConfig::queue_depth`] — dispatched requests that may queue
+//!   for the compute pool beyond the in-flight ones before per-request
+//!   admission control answers **429**.
 //! - [`ServerConfig::max_body_bytes`] — request payload cap (**413**).
 //!
 //! Connections that sit silent for [`http::IDLE_TIMEOUT`] between
 //! requests are closed, so idle (or deliberately mute) clients can't
-//! hold the whole worker pool hostage; a request that stalls mid-read
-//! hits the per-request deadline (**408**) instead, and a client that
-//! stops *reading* its response trips a write timeout and is dropped.
+//! accumulate against `max_conns` forever; a request that stalls
+//! mid-read hits the per-request deadline (**408**) instead, and a
+//! client that stops *reading* its response trips the write timeout and
+//! is dropped. Accept errors are classified: per-connection failures are
+//! skipped, fd/memory exhaustion pauses the listener briefly, and a
+//! broken listener stops accepting for good (counted in
+//! [`HttpStats::accept_failures`]).
 //!
-//! Shutdown is a graceful drain: the acceptor stops, in-flight requests
-//! finish (keep-alive connections are closed at the next request
-//! boundary), then the coordinator's own drain guarantees every accepted
-//! request is answered. `vdt serve --http` wires this to SIGTERM/SIGINT.
+//! Shutdown is a graceful drain: accepting stops, idle connections close
+//! at the request boundary, in-flight requests finish and flush, then
+//! the coordinator's own drain guarantees every accepted request is
+//! answered (a hard 15 s backstop force-closes stragglers). `vdt serve
+//! --http` wires this to SIGTERM/SIGINT.
 //!
 //! ```
 //! use std::sync::Arc;
@@ -79,13 +103,40 @@ pub mod client;
 pub mod http;
 
 mod batch;
+#[cfg(unix)]
+mod conn;
+#[cfg(unix)]
+pub(crate) mod poll;
+
+#[cfg(unix)]
+pub use poll::raise_fd_limit;
+
+/// Non-unix targets: no fd limit to raise (the event loop itself is
+/// unix-only — see [`Server::serve`]).
+#[cfg(not(unix))]
+pub fn raise_fd_limit() -> Option<u64> {
+    None
+}
 
 use std::collections::HashSet;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+#[cfg(unix)]
+use std::collections::HashMap;
+#[cfg(unix)]
+use std::io::ErrorKind;
+#[cfg(unix)]
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+#[cfg(unix)]
+use std::sync::mpsc;
+#[cfg(unix)]
+use std::time::Instant;
 
 use crate::coordinator::CoordinatorHandle;
 use crate::core::error::VdtError;
@@ -94,6 +145,8 @@ use crate::core::Matrix;
 use crate::labelprop::LpConfig;
 
 use batch::{BatchCounters, BatchKind, Batcher};
+#[cfg(unix)]
+use conn::{AfterWrite, Conn, DeadlineKind, Io, Parsed, State};
 
 /// Server-side ceiling on the `steps` a labelprop request may ask for
 /// (LP converges in tens-to-hundreds of steps; this is pure DoS margin).
@@ -115,12 +168,16 @@ pub const MAX_QUERY_ROWS: usize = 1024;
 /// buys.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Connection-handler threads (= max concurrently served
-    /// connections). Keep-alive clients hold a worker while connected.
+    /// Compute-pool threads executing routed requests. Sizes throughput;
+    /// the connection ceiling is [`ServerConfig::max_conns`].
     pub workers: usize,
-    /// Accepted connections that may wait for a free worker before the
-    /// acceptor starts answering 429.
+    /// Dispatched requests that may queue for the compute pool beyond
+    /// the `workers` in flight before new requests are answered 429.
     pub queue_depth: usize,
+    /// Concurrently open connections (keep-alive idle included). Beyond
+    /// this, new connections are answered 429 — or, under a flood, shed
+    /// unanswered.
+    pub max_conns: usize,
     /// Request body cap in bytes (larger declared bodies get 413).
     ///
     /// Size this for your deployment's memory budget: a JSON body parses
@@ -146,6 +203,7 @@ impl Default for ServerConfig {
         ServerConfig {
             workers: 32,
             queue_depth: 64,
+            max_conns: 4096,
             max_body_bytes: 8 << 20,
             batch_window: Duration::from_micros(500),
             max_batch: 64,
@@ -160,18 +218,23 @@ impl Default for ServerConfig {
 pub struct HttpStats {
     /// Complete HTTP requests parsed and routed.
     pub requests: u64,
-    /// Responses with status ≥ 400 served by the worker pool (protocol
-    /// rejections included). Acceptor-side admission-control 429s are
-    /// counted in [`HttpStats::rejected`] only, not here.
+    /// Responses with status ≥ 400 served off the compute pool plus
+    /// wire-level protocol rejections (400/408/413). Admission-control
+    /// 429s are counted in [`HttpStats::rejected`] only, not here.
     pub errors: u64,
-    /// Connections answered 429 by the acceptor (queue full).
+    /// Connections and requests answered 429 by admission control
+    /// (`max_conns` ceiling or a full compute queue), including
+    /// overflow connections shed without a body.
     pub rejected: u64,
     /// Micro-batches flushed to the coordinator.
     pub batches: u64,
     /// Requests that rode in those batches.
     pub batched_requests: u64,
-    /// Connections currently held by workers.
+    /// Connections currently open in the event loop (rejects excluded).
     pub active_connections: u64,
+    /// Accept errors beyond per-connection hiccups: listener pauses from
+    /// fd/memory exhaustion, plus fatal listener failures.
+    pub accept_failures: u64,
 }
 
 struct Shared {
@@ -182,18 +245,17 @@ struct Shared {
     requests: AtomicU64,
     errors: AtomicU64,
     rejected: AtomicU64,
+    accept_failures: AtomicU64,
     active: AtomicU64,
-    /// 429-writer threads currently alive (bounded by
-    /// [`MAX_REJECT_THREADS`] so a connection flood can't amplify into a
-    /// thread flood).
-    rejects_inflight: AtomicU64,
     batch_counters: Arc<BatchCounters>,
+    /// Completions the compute pool hands back to the event loop.
+    #[cfg(unix)]
+    done: Mutex<Vec<Completion>>,
+    /// Pulls the event loop out of its wait when completions (or
+    /// shutdown) arrive.
+    #[cfg(unix)]
+    waker: poll::Waker,
 }
-
-/// Cap on concurrent 429-writer threads. Beyond this the acceptor drops
-/// the connection unanswered — under that much overload, shedding load
-/// cheaply matters more than the courtesy body.
-const MAX_REJECT_THREADS: u64 = 32;
 
 impl Shared {
     fn stopping(&self) -> bool {
@@ -210,13 +272,30 @@ impl Shared {
             batches: self.batch_counters.flushed.load(Ordering::Relaxed),
             batched_requests: self.batch_counters.coalesced.load(Ordering::Relaxed),
             active_connections: self.active.load(Ordering::Relaxed),
+            accept_failures: self.accept_failures.load(Ordering::Relaxed),
         }
     }
 }
 
-/// The serving subsystem. [`Server::bind`] starts the acceptor and worker
-/// pool and returns a [`ServerHandle`]; dropping the handle (or calling
-/// [`ServerHandle::shutdown`]) drains and stops everything.
+/// One request handed from the event loop to the compute pool.
+#[cfg(unix)]
+struct ComputeJob {
+    token: u64,
+    req: http::HttpRequest,
+}
+
+/// One routed response handed back from the compute pool.
+#[cfg(unix)]
+struct Completion {
+    token: u64,
+    status: u16,
+    body: String,
+    keep_alive: bool,
+}
+
+/// The serving subsystem. [`Server::bind`] starts the event loop and
+/// compute pool and returns a [`ServerHandle`]; dropping the handle (or
+/// calling [`ServerHandle::shutdown`]) drains and stops everything.
 pub struct Server;
 
 impl Server {
@@ -234,6 +313,7 @@ impl Server {
     }
 
     /// Serve on an already-bound listener.
+    #[cfg(unix)]
     pub fn serve(
         handle: CoordinatorHandle,
         listener: TcpListener,
@@ -242,6 +322,9 @@ impl Server {
         let addr = listener
             .local_addr()
             .map_err(|e| VdtError::Runtime(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| VdtError::Runtime(format!("nonblocking listener: {e}")))?;
         let batch_counters = Arc::new(BatchCounters::default());
         let batcher = if cfg.batching {
             Some(Batcher::spawn(
@@ -253,6 +336,8 @@ impl Server {
         } else {
             None
         };
+        let waker = poll::Waker::new()
+            .map_err(|e| VdtError::Runtime(format!("event-loop waker: {e}")))?;
         let shared = Arc::new(Shared {
             handle,
             batcher,
@@ -261,32 +346,46 @@ impl Server {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            accept_failures: AtomicU64::new(0),
             active: AtomicU64::new(0),
-            rejects_inflight: AtomicU64::new(0),
             batch_counters,
+            done: Mutex::new(Vec::new()),
+            waker,
         });
 
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.queue_depth.max(1));
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for w in 0..cfg.workers.max(1) {
             let shared = shared.clone();
-            let conn_rx = conn_rx.clone();
+            let job_rx = job_rx.clone();
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("vdt-http-worker-{w}"))
-                    .spawn(move || worker_loop(&shared, &conn_rx))
-                    .map_err(|e| VdtError::Runtime(format!("spawn worker: {e}")))?,
+                    .name(format!("vdt-http-compute-{w}"))
+                    .spawn(move || compute_worker(&shared, &job_rx))
+                    .map_err(|e| VdtError::Runtime(format!("spawn compute worker: {e}")))?,
             );
         }
-        let acceptor = {
-            let shared = shared.clone();
-            std::thread::Builder::new()
-                .name("vdt-http-acceptor".into())
-                .spawn(move || acceptor_loop(&shared, &listener, conn_tx))
-                .map_err(|e| VdtError::Runtime(format!("spawn acceptor: {e}")))?
-        };
-        Ok(ServerHandle { addr, shared, acceptor: Some(acceptor), workers })
+        let ev = EventLoop::new(shared.clone(), listener, job_tx)
+            .map_err(|e| VdtError::Runtime(format!("event loop init: {e}")))?;
+        let driver = std::thread::Builder::new()
+            .name("vdt-http-driver".into())
+            .spawn(move || ev.run())
+            .map_err(|e| VdtError::Runtime(format!("spawn driver: {e}")))?;
+        Ok(ServerHandle { addr, shared, driver: Some(driver), workers })
+    }
+
+    /// The readiness event loop needs `epoll(7)`/`poll(2)` — on non-unix
+    /// targets serving is a typed [`VdtError::Unsupported`].
+    #[cfg(not(unix))]
+    pub fn serve(
+        _handle: CoordinatorHandle,
+        _listener: TcpListener,
+        _cfg: ServerConfig,
+    ) -> Result<ServerHandle, VdtError> {
+        Err(VdtError::Unsupported(
+            "the HTTP event loop requires a unix target (epoll/poll readiness)".to_string(),
+        ))
     }
 }
 
@@ -294,7 +393,7 @@ impl Server {
 pub struct ServerHandle {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    acceptor: Option<std::thread::JoinHandle<()>>,
+    driver: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -321,12 +420,12 @@ impl ServerHandle {
 
     fn stop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        if let Some(acceptor) = self.acceptor.take() {
-            // wake the acceptor out of accept(2)
-            let _ = TcpStream::connect(self.addr);
-            let _ = acceptor.join();
-            // the acceptor owned the connection sender: workers drain the
-            // queued connections, then see the disconnect and exit
+        #[cfg(unix)]
+        self.shared.waker.wake();
+        if let Some(driver) = self.driver.take() {
+            let _ = driver.join();
+            // the driver owned the job sender: the compute pool drains
+            // the queued jobs, sees the disconnect, and exits
             for w in self.workers.drain(..) {
                 let _ = w.join();
             }
@@ -340,141 +439,596 @@ impl Drop for ServerHandle {
     }
 }
 
-fn acceptor_loop(
-    shared: &Arc<Shared>,
-    listener: &TcpListener,
-    conn_tx: mpsc::SyncSender<TcpStream>,
-) {
-    loop {
-        let stream = match listener.accept() {
-            Ok((stream, _)) => stream,
-            Err(_) => {
-                if shared.stopping() {
-                    return;
-                }
-                // transient accept failure (e.g. fd exhaustion): back off
-                // briefly instead of spinning
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
-        };
-        if shared.stopping() {
-            return; // (also catches the self-connect wake-up)
-        }
-        match conn_tx.try_send(stream) {
-            Ok(()) => {}
-            Err(mpsc::TrySendError::Full(stream)) => {
-                // admission control: reject now rather than queue forever
-                shared.rejected.fetch_add(1, Ordering::Relaxed);
-                reject_connection(shared, stream);
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => return,
-        }
-    }
-}
+// ----------------------------------------------------------- compute pool
 
-/// Answer a rejected connection with the typed 429 body — off the
-/// acceptor thread, because the write plus the bounded drain (which
-/// keeps the close from RSTing the body off the wire) can take ~100 ms
-/// and the acceptor must keep accepting exactly when the server is
-/// overloaded. Reject threads are capped: past [`MAX_REJECT_THREADS`]
-/// the connection is dropped unanswered rather than amplifying a
-/// connection flood into a thread flood.
-fn reject_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
-    if shared.rejects_inflight.fetch_add(1, Ordering::SeqCst) >= MAX_REJECT_THREADS {
-        shared.rejects_inflight.fetch_sub(1, Ordering::SeqCst);
-        return; // drop: close without a body, cheapest possible shed
-    }
-    let body = error_body(&VdtError::ServiceUnavailable(format!(
-        "server at capacity ({} workers busy, {} connections queued)",
-        shared.cfg.workers, shared.cfg.queue_depth
-    )));
-    let s = shared.clone();
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-    let spawned = std::thread::Builder::new()
-        .name("vdt-http-reject".into())
-        .spawn(move || {
-            let _ = http::write_response(&mut stream, 429, &body, false);
-            http::drain_before_close(&mut stream);
-            s.rejects_inflight.fetch_sub(1, Ordering::SeqCst);
-        });
-    if spawned.is_err() {
-        // thread exhaustion: the closure (and its counter decrement)
-        // never ran — undo here; the connection closed when the closure
-        // was dropped
-        shared.rejects_inflight.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-fn worker_loop(shared: &Shared, conn_rx: &Mutex<mpsc::Receiver<TcpStream>>) {
+#[cfg(unix)]
+fn compute_worker(shared: &Shared, job_rx: &Mutex<mpsc::Receiver<ComputeJob>>) {
     loop {
         // holding the lock while blocked in recv is fine: the holder is
-        // the one worker entitled to the next connection anyway
-        let stream = {
-            let guard = conn_rx.lock().unwrap_or_else(|e| e.into_inner());
+        // the one worker entitled to the next job anyway
+        let job = {
+            let guard = job_rx.lock().unwrap_or_else(|e| e.into_inner());
             match guard.recv() {
-                Ok(s) => s,
-                Err(_) => return, // acceptor gone and queue drained
+                Ok(j) => j,
+                Err(_) => return, // event loop gone and queue drained
             }
         };
-        shared.active.fetch_add(1, Ordering::SeqCst);
-        serve_connection(shared, stream);
-        shared.active.fetch_sub(1, Ordering::SeqCst);
+        let (status, body) = route(shared, &job.req);
+        if status >= 400 {
+            shared.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let keep_alive = job.req.keep_alive && !shared.stopping();
+        {
+            let mut done = shared.done.lock().unwrap_or_else(|e| e.into_inner());
+            done.push(Completion { token: job.token, status, body, keep_alive });
+        }
+        shared.waker.wake();
     }
 }
 
-fn serve_connection(shared: &Shared, mut stream: TcpStream) {
-    let _ = stream.set_nodelay(true);
-    // short poll so the shutdown flag is observed between reads
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    // a client that stops *reading* must not hold the worker either:
-    // without this, write_all on a response larger than the socket
-    // buffer blocks forever and even shutdown's worker join hangs
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let stop = || shared.stopping();
-    loop {
-        // protocol rejections close with a bounded drain of whatever the
-        // peer already sent: without it the close RSTs the error body
-        // off the wire and the client sees "connection reset", not JSON
-        match http::read_request(&mut stream, shared.cfg.max_body_bytes, &stop) {
-            http::ReadOutcome::Closed => return,
-            http::ReadOutcome::Bad(msg) => {
-                shared.errors.fetch_add(1, Ordering::Relaxed);
-                let body = error_body(&VdtError::InvalidSpec(msg));
-                let _ = http::write_response(&mut stream, 400, &body, false);
-                http::drain_before_close(&mut stream);
+// ------------------------------------------------------------- event loop
+
+#[cfg(unix)]
+const TOKEN_LISTENER: u64 = 0;
+#[cfg(unix)]
+const TOKEN_WAKER: u64 = 1;
+
+/// Hard backstop on the graceful drain: connections still open this long
+/// after shutdown began are force-closed.
+#[cfg(unix)]
+const SHUTDOWN_DEADLINE: Duration = Duration::from_secs(15);
+
+/// Cap on concurrent 429-writer connections at the `max_conns` ceiling.
+/// Beyond this the connection is dropped unanswered — under that much
+/// overload, shedding load cheaply matters more than the courtesy body.
+#[cfg(unix)]
+const MAX_REJECT_CONNS: usize = 64;
+
+/// How long the listener stays paused after fd/memory exhaustion.
+#[cfg(unix)]
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(10);
+
+/// Connections accepted per listener-readiness event before yielding to
+/// connection I/O (the listener is level-triggered: the rest re-fire).
+#[cfg(unix)]
+const ACCEPT_BURST: usize = 64;
+
+/// What an accept error means for the accept loop.
+#[cfg(unix)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum AcceptDisposition {
+    /// Per-connection failure (peer reset mid-handshake): keep accepting.
+    Retry,
+    /// Process/system resource exhaustion (EMFILE/ENFILE/ENOMEM/
+    /// ENOBUFS): pause the listener briefly — retrying immediately would
+    /// spin at 100% CPU re-hitting the same limit.
+    Backoff,
+    /// The listener itself is broken: stop accepting for good.
+    Fatal,
+}
+
+#[cfg(unix)]
+fn classify_accept_error(e: &std::io::Error) -> AcceptDisposition {
+    match e.kind() {
+        ErrorKind::Interrupted | ErrorKind::ConnectionAborted | ErrorKind::ConnectionReset => {
+            AcceptDisposition::Retry
+        }
+        _ => match e.raw_os_error() {
+            // ENOMEM(12), ENFILE(23), EMFILE(24), ENOBUFS(105)
+            Some(12) | Some(23) | Some(24) | Some(105) => AcceptDisposition::Backoff,
+            _ => AcceptDisposition::Fatal,
+        },
+    }
+}
+
+#[cfg(unix)]
+struct EventLoop {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+    poller: poll::Poller,
+    timers: poll::TimerQueue,
+    conns: HashMap<u64, Conn>,
+    /// Monotonic connection tokens, never reused (stale timer/readiness
+    /// reports for a closed token then just miss the map).
+    next_token: u64,
+    job_tx: mpsc::Sender<ComputeJob>,
+    /// Jobs dispatched to the compute pool and not yet completed —
+    /// per-request admission control caps this at
+    /// `workers + queue_depth`.
+    pending_jobs: usize,
+    /// Open served connections (excludes 429-reject connections).
+    served: usize,
+    /// Open reject connections still flushing their 429.
+    rejects_open: usize,
+    listener_armed: bool,
+    /// Generation for listener pause/resume timer entries.
+    listener_gen: u64,
+    draining: bool,
+    drain_started: Option<Instant>,
+    events: Vec<poll::Event>,
+}
+
+#[cfg(unix)]
+impl EventLoop {
+    fn new(
+        shared: Arc<Shared>,
+        listener: TcpListener,
+        job_tx: mpsc::Sender<ComputeJob>,
+    ) -> std::io::Result<EventLoop> {
+        let mut poller = poll::Poller::new()?;
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        poller.register(shared.waker.read_fd(), TOKEN_WAKER, true, false)?;
+        Ok(EventLoop {
+            shared,
+            listener,
+            poller,
+            timers: poll::TimerQueue::new(),
+            conns: HashMap::new(),
+            next_token: 2,
+            job_tx,
+            pending_jobs: 0,
+            served: 0,
+            rejects_open: 0,
+            listener_armed: true,
+            listener_gen: 0,
+            draining: false,
+            drain_started: None,
+            events: Vec::new(),
+        })
+    }
+
+    fn run(mut self) {
+        loop {
+            if self.shared.stopping() && !self.draining {
+                self.begin_drain();
+            }
+            if self.draining {
+                let forced = self
+                    .drain_started
+                    .is_some_and(|t| t.elapsed() >= SHUTDOWN_DEADLINE);
+                if self.conns.is_empty() || forced {
+                    break;
+                }
+            }
+            let now = Instant::now();
+            let mut timeout =
+                self.timers.next_deadline().map(|at| at.saturating_duration_since(now));
+            if self.draining {
+                // bounded ticks while draining: the stragglers' own
+                // deadlines plus the 15 s backstop both stay observed
+                let cap = Duration::from_millis(100);
+                timeout = Some(timeout.unwrap_or(cap).min(cap));
+            }
+            let mut events = std::mem::take(&mut self.events);
+            if self.poller.wait(&mut events, timeout).is_err() {
+                // the poller itself failed — serving is over
+                self.events = events;
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_WAKER => self.shared.waker.drain(),
+                    TOKEN_LISTENER => self.accept_burst(),
+                    token => self.conn_event(token, ev),
+                }
+            }
+            self.events = events;
+            self.drain_completions();
+            let now = Instant::now();
+            while let Some((token, deadline_gen)) = self.timers.pop_expired(now) {
+                self.on_timer(token, deadline_gen);
+            }
+        }
+        // force-close whatever survived the drain backstop
+        self.conns.clear();
+    }
+
+    // ---- accepting ----
+
+    fn accept_burst(&mut self) {
+        if self.draining || !self.listener_armed {
+            return;
+        }
+        for _ in 0..ACCEPT_BURST {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) => match classify_accept_error(&e) {
+                    AcceptDisposition::Retry => continue,
+                    AcceptDisposition::Backoff => {
+                        self.shared.accept_failures.fetch_add(1, Ordering::Relaxed);
+                        self.pause_listener();
+                        return;
+                    }
+                    AcceptDisposition::Fatal => {
+                        self.shared.accept_failures.fetch_add(1, Ordering::Relaxed);
+                        let _ = self.poller.deregister(self.listener.as_raw_fd());
+                        self.listener_armed = false;
+                        self.listener_gen += 1; // invalidate pending re-arms
+                        return;
+                    }
+                },
+            }
+        }
+    }
+
+    fn pause_listener(&mut self) {
+        if self.listener_armed {
+            let _ = self.poller.deregister(self.listener.as_raw_fd());
+            self.listener_armed = false;
+        }
+        self.listener_gen += 1;
+        self.timers.schedule(Instant::now() + ACCEPT_BACKOFF, TOKEN_LISTENER, self.listener_gen);
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        if self.served >= self.shared.cfg.max_conns.max(1) {
+            // admission control: reject now rather than serve unboundedly
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            if self.rejects_open >= MAX_REJECT_CONNS {
+                return; // drop: close without a body, cheapest possible shed
+            }
+            if let Ok(mut c) = Conn::new(stream) {
+                c.is_reject = true;
+                let body = error_body(&VdtError::ServiceUnavailable(format!(
+                    "server at capacity ({} connections open)",
+                    self.shared.cfg.max_conns
+                )));
+                c.queue_response(429, &body, AfterWrite::Drain);
+                if let Some(token) = self.install(c) {
+                    self.rejects_open += 1;
+                    self.flush(token);
+                    self.sync(token);
+                }
+            }
+            return;
+        }
+        if let Ok(c) = Conn::new(stream) {
+            if self.install(c).is_some() {
+                self.served += 1;
+                self.shared.active.store(self.served as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Register a new connection with the poller and the connection map.
+    fn install(&mut self, c: Conn) -> Option<u64> {
+        let token = self.next_token;
+        self.next_token += 1;
+        let (r, w) = c.wants();
+        if self.poller.register(c.stream.as_raw_fd(), token, r, w).is_err() {
+            return None; // conn drops (and closes) here
+        }
+        let mut c = c;
+        c.interest = (r, w);
+        self.conns.insert(token, c);
+        self.sync(token); // pushes the idle/write deadline into the timers
+        Some(token)
+    }
+
+    // ---- per-connection events ----
+
+    fn conn_event(&mut self, token: u64, ev: poll::Event) {
+        {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if ev.hangup && !ev.readable && !ev.writable {
+                // pure hangup/error (reported even with an empty interest
+                // mask, which is how dispatched connections whose peer
+                // vanished get noticed)
+                c.closing = true;
+                self.sync(token);
                 return;
             }
-            http::ReadOutcome::TooLarge { limit } => {
-                shared.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if ev.readable {
+            let io = match self.conns.get_mut(&token) {
+                Some(c) => c.on_readable(),
+                None => return,
+            };
+            self.after_io(token, io);
+        }
+        if ev.writable {
+            let io = match self.conns.get_mut(&token) {
+                Some(c) => c.on_writable(),
+                None => return,
+            };
+            self.after_io(token, io);
+        }
+        self.sync(token);
+    }
+
+    fn after_io(&mut self, token: u64, io: Io) {
+        match io {
+            Io::Continue => {}
+            Io::Data => self.pump(token),
+            Io::Eof => {
+                // buffered bytes may still hold a complete request
+                self.pump(token);
+                let verdict = self.conns.get_mut(&token).map(|c| {
+                    (c.state == State::Reading, c.parser.mid_request())
+                });
+                match verdict {
+                    Some((true, true)) => {
+                        // EOF truncated a request
+                        self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                        let body = error_body(&VdtError::InvalidSpec(
+                            "connection closed mid-request".to_string(),
+                        ));
+                        if let Some(c) = self.conns.get_mut(&token) {
+                            c.queue_response(400, &body, AfterWrite::Close);
+                        }
+                        self.flush(token);
+                    }
+                    Some((true, false)) => {
+                        // clean close between requests
+                        if let Some(c) = self.conns.get_mut(&token) {
+                            c.closing = true;
+                        }
+                    }
+                    // dispatched/writing: half_closed is recorded; the
+                    // response path closes after flushing
+                    _ => {}
+                }
+            }
+            Io::WriteDone => self.finish_write(token),
+            Io::Closed => {
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.closing = true;
+                }
+            }
+        }
+    }
+
+    /// Run the incremental parser over what the connection has buffered
+    /// and act on the outcome. At most one request is in flight per
+    /// connection: a dispatched request parks further pipelined bytes in
+    /// the buffer until its response is written.
+    fn pump(&mut self, token: u64) {
+        let Some(c) = self.conns.get_mut(&token) else { return };
+        if c.closing || c.state != State::Reading {
+            return;
+        }
+        match c.parser.next(self.shared.cfg.max_body_bytes) {
+            Parsed::NeedMore => {
+                if c.parser.mid_request() {
+                    c.arm_read_deadline();
+                    if self.draining {
+                        c.tighten_deadline(Instant::now() + http::DRAIN_GRACE);
+                    }
+                }
+            }
+            Parsed::NeedContinue => {
+                c.queue_continue();
+                c.arm_read_deadline();
+                self.flush(token);
+            }
+            Parsed::Request(req) => self.dispatch_request(token, req),
+            Parsed::Bad(msg) => {
+                self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                let body = error_body(&VdtError::InvalidSpec(msg));
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.queue_response(400, &body, AfterWrite::Drain);
+                }
+                self.flush(token);
+            }
+            Parsed::TooLarge { limit } => {
+                self.shared.errors.fetch_add(1, Ordering::Relaxed);
                 let body = error_body(&VdtError::InvalidSpec(format!(
                     "request body exceeds the {limit}-byte cap"
                 )));
-                let _ = http::write_response(&mut stream, 413, &body, false);
-                http::drain_before_close(&mut stream);
-                return;
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.queue_response(413, &body, AfterWrite::Drain);
+                }
+                self.flush(token);
             }
-            http::ReadOutcome::TimedOut => {
-                shared.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn dispatch_request(&mut self, token: u64, req: http::HttpRequest) {
+        self.shared.requests.fetch_add(1, Ordering::Relaxed);
+        let cap = self.shared.cfg.workers.max(1) + self.shared.cfg.queue_depth;
+        if self.pending_jobs >= cap {
+            // per-request admission control: the compute queue is full
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            let body = error_body(&VdtError::ServiceUnavailable(format!(
+                "server at capacity ({} compute workers busy, {} requests queued)",
+                self.shared.cfg.workers.max(1),
+                self.shared.cfg.queue_depth
+            )));
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.queue_response(429, &body, AfterWrite::Drain);
+            }
+            self.flush(token);
+            return;
+        }
+        if let Some(c) = self.conns.get_mut(&token) {
+            c.begin_dispatch();
+        }
+        self.pending_jobs += 1;
+        if self.job_tx.send(ComputeJob { token, req }).is_err() {
+            // compute pool unreachable — only possible during teardown
+            self.pending_jobs -= 1;
+            self.shared.errors.fetch_add(1, Ordering::Relaxed);
+            let body = error_body(&VdtError::Internal("compute pool unavailable".to_string()));
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.queue_response(500, &body, AfterWrite::Close);
+            }
+            self.flush(token);
+        }
+    }
+
+    /// Opportunistic write: most responses fit the socket buffer and
+    /// complete here, without a poller round-trip.
+    fn flush(&mut self, token: u64) {
+        let Some(c) = self.conns.get_mut(&token) else { return };
+        match c.on_writable() {
+            Io::WriteDone => self.finish_write(token),
+            Io::Closed => {
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.closing = true;
+                }
+            }
+            // partial write: writable interest picks up the rest
+            _ => {}
+        }
+    }
+
+    fn finish_write(&mut self, token: u64) {
+        let Some(c) = self.conns.get_mut(&token) else { return };
+        match c.after_write() {
+            AfterWrite::Close => c.closing = true,
+            AfterWrite::Drain => {
+                c.start_drain();
+                // absorb whatever the peer already queued, right now
+                if matches!(c.on_readable(), Io::Closed) {
+                    c.closing = true;
+                }
+            }
+            AfterWrite::KeepAlive => {
+                if c.half_closed {
+                    c.closing = true;
+                } else {
+                    c.enter_idle();
+                    // pipelining: the next request may be fully buffered
+                    self.pump(token);
+                }
+            }
+        }
+    }
+
+    // ---- completions and timers ----
+
+    fn drain_completions(&mut self) {
+        let done: Vec<Completion> = {
+            let mut guard = self.shared.done.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *guard)
+        };
+        for completion in done {
+            self.pending_jobs = self.pending_jobs.saturating_sub(1);
+            let token = completion.token;
+            let Some(c) = self.conns.get_mut(&token) else { continue };
+            if c.closing {
+                continue; // peer vanished while the request computed
+            }
+            let after = if completion.keep_alive && !c.half_closed && !self.draining {
+                AfterWrite::KeepAlive
+            } else {
+                AfterWrite::Close
+            };
+            c.queue_response(completion.status, &completion.body, after);
+            self.flush(token);
+            self.sync(token);
+        }
+    }
+
+    fn on_timer(&mut self, token: u64, deadline_gen: u64) {
+        if token == TOKEN_LISTENER {
+            if deadline_gen == self.listener_gen && !self.listener_armed && !self.draining {
+                // backoff over: resume accepting
+                let fd = self.listener.as_raw_fd();
+                if self.poller.register(fd, TOKEN_LISTENER, true, false).is_ok() {
+                    self.listener_armed = true;
+                    self.accept_burst();
+                } else {
+                    self.pause_listener();
+                }
+            }
+            return;
+        }
+        let kind = {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if deadline_gen != c.deadline_gen {
+                return; // stale entry: the deadline was re-armed since
+            }
+            match c.deadline {
+                Some((_, kind)) => kind,
+                None => return,
+            }
+        };
+        match kind {
+            DeadlineKind::Idle | DeadlineKind::Write | DeadlineKind::Drain => {
+                // silent idle conn, mute reader, or overstayed drain:
+                // nothing useful to say — close
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.closing = true;
+                }
+            }
+            DeadlineKind::Read => {
+                // the request stalled mid-read (slow-loris / trickle)
+                self.shared.errors.fetch_add(1, Ordering::Relaxed);
                 // a distinct kind: clients matching on error.kind must
                 // not confuse "your upload stalled" (408, retry the
                 // request) with server overload (429/503, back off)
                 let body = kind_body("timeout", "request read timed out");
-                let _ = http::write_response(&mut stream, 408, &body, false);
-                http::drain_before_close(&mut stream);
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.queue_response(408, &body, AfterWrite::Drain);
+                }
+                self.flush(token);
+            }
+        }
+        self.sync(token);
+    }
+
+    // ---- state synchronization ----
+
+    /// Reconcile a connection's desired interest mask and deadline with
+    /// the poller and timer queue — or tear it down if it is closing.
+    fn sync(&mut self, token: u64) {
+        let Some(c) = self.conns.get_mut(&token) else { return };
+        if c.closing {
+            let fd = c.stream.as_raw_fd();
+            let was_reject = c.is_reject;
+            let _ = self.poller.deregister(fd);
+            self.conns.remove(&token);
+            if was_reject {
+                self.rejects_open = self.rejects_open.saturating_sub(1);
+            } else {
+                self.served = self.served.saturating_sub(1);
+                self.shared.active.store(self.served as u64, Ordering::Relaxed);
+            }
+            return;
+        }
+        let want = c.wants();
+        if want != c.interest {
+            let fd = c.stream.as_raw_fd();
+            if self.poller.modify(fd, token, want.0, want.1).is_ok() {
+                c.interest = want;
+            } else {
+                c.closing = true;
+                self.sync(token);
                 return;
             }
-            http::ReadOutcome::Request(req) => {
-                shared.requests.fetch_add(1, Ordering::Relaxed);
-                let (status, body) = route(shared, &req);
-                if status >= 400 {
-                    shared.errors.fetch_add(1, Ordering::Relaxed);
-                }
-                let keep = req.keep_alive && !stop();
-                if http::write_response(&mut stream, status, &body, keep).is_err() || !keep {
-                    return;
+        }
+        if let Some((at, deadline_gen)) = c.deadline_entry() {
+            self.timers.schedule(at, token, deadline_gen);
+        }
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_started = Some(Instant::now());
+        if self.listener_armed {
+            let _ = self.poller.deregister(self.listener.as_raw_fd());
+            self.listener_armed = false;
+        }
+        self.listener_gen += 1;
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        let grace = Instant::now() + http::DRAIN_GRACE;
+        for token in tokens {
+            {
+                let Some(c) = self.conns.get_mut(&token) else { continue };
+                match c.state {
+                    // idle between requests: close at the boundary now
+                    State::Reading if !c.parser.mid_request() => c.closing = true,
+                    // mid-request: tighten to the drain grace
+                    State::Reading => c.tighten_deadline(grace),
+                    // dispatched/writing/draining: their own deadlines
+                    // (and the shutdown backstop) already bound them
+                    _ => {}
                 }
             }
+            self.sync(token);
         }
     }
 }
@@ -650,6 +1204,7 @@ fn stats_body(shared: &Shared) -> String {
                 ("errors".to_string(), num(h.errors)),
                 ("rejected".to_string(), num(h.rejected)),
                 ("active_connections".to_string(), num(h.active_connections)),
+                ("accept_failures".to_string(), num(h.accept_failures)),
             ]),
         ),
         (
@@ -921,5 +1476,30 @@ mod tests {
         assert_eq!(status_of(&VdtError::Unsupported(String::new())), 501);
         assert_eq!(status_of(&VdtError::ServiceUnavailable(String::new())), 503);
         assert_eq!(status_of(&VdtError::Internal(String::new())), 500);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn accept_errors_are_classified() {
+        use std::io::Error;
+        // peer-caused hiccups: keep accepting
+        for kind in
+            [ErrorKind::Interrupted, ErrorKind::ConnectionAborted, ErrorKind::ConnectionReset]
+        {
+            assert_eq!(classify_accept_error(&Error::from(kind)), AcceptDisposition::Retry);
+        }
+        // resource exhaustion: pause the listener, then resume
+        for errno in [12, 23, 24, 105] {
+            assert_eq!(
+                classify_accept_error(&Error::from_raw_os_error(errno)),
+                AcceptDisposition::Backoff,
+                "errno {errno}"
+            );
+        }
+        // anything else (e.g. EBADF on a dead listener): stop accepting
+        assert_eq!(
+            classify_accept_error(&Error::from_raw_os_error(9)),
+            AcceptDisposition::Fatal
+        );
     }
 }

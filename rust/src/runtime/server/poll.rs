@@ -1,0 +1,513 @@
+//! Readiness polling for the event-loop server — a thin raw-syscall shim
+//! with no `libc` dependency (the same hand-rolled `extern "C"` approach
+//! the SIGTERM handler in [`super`] already uses).
+//!
+//! Three pieces:
+//!
+//! - [`Poller`] — level-triggered readiness over many fds: `epoll(7)` on
+//!   Linux, `poll(2)` on other unix targets. Registrations carry a `u64`
+//!   token that comes back in each [`Event`], so the event loop never
+//!   maps fds to connections itself.
+//! - [`Waker`] — a self-pipe that other threads write one byte into to
+//!   pull the event loop out of a blocking wait (compute-pool completions
+//!   and shutdown both use it).
+//! - [`TimerQueue`] — the timer wheel every per-connection deadline
+//!   (idle, slow-loris read, write, drain) lives in. Entries are lazily
+//!   deleted: each carries the connection's deadline generation, and a
+//!   fired entry whose generation no longer matches is simply stale.
+//!
+//! `EPOLLHUP`/`EPOLLERR` surface as [`Event::hangup`] regardless of the
+//! registered interest — that is how dispatched connections (interest
+//! mask empty while the compute pool owns the request) still report a
+//! dead peer. `EPOLLRDHUP` is deliberately *not* requested: a client that
+//! half-closes after sending its request still wants the response, and
+//! read() returning 0 already tells the state machine about EOF when it
+//! is actually reading.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::io;
+use std::os::raw::c_int;
+use std::os::unix::io::RawFd;
+use std::time::{Duration, Instant};
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the socket errored (always reported, even with an
+    /// empty interest mask).
+    pub hangup: bool,
+}
+
+fn timeout_ms(timeout: Option<Duration>) -> c_int {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            // round up: waking just *after* a deadline lets the timer
+            // fire, waking just before would busy-loop on a 0ms wait
+            let mut ms = d.as_millis();
+            if d.subsec_nanos() % 1_000_000 != 0 {
+                ms += 1;
+            }
+            ms.min(c_int::MAX as u128) as c_int
+        }
+    }
+}
+
+// ------------------------------------------------------- Linux: epoll(7)
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::*;
+
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+
+    /// Mirrors the kernel's `struct epoll_event`; packed on x86-64 (the
+    /// kernel ABI has no padding between `events` and `data` there).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const MAX_EVENTS: usize = 512;
+
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    fn mask(read: bool, write: bool) -> u32 {
+        (if read { EPOLLIN } else { 0 }) | (if write { EPOLLOUT } else { 0 })
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, mask(read, write), token)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, mask(read, write), token)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            // a dummy event for pre-2.6.9 kernels that reject a null ptr
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let n = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as c_int, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // copy packed fields out by value (references into a
+                // packed struct would be UB)
+                let events = ev.events;
+                let token = ev.data;
+                out.push(Event {
+                    token,
+                    readable: events & EPOLLIN != 0,
+                    writable: events & EPOLLOUT != 0,
+                    hangup: events & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ------------------------------------------- other unix: poll(2) fallback
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::*;
+    use std::collections::HashMap;
+    use std::os::raw::{c_short, c_ulong};
+
+    const POLLIN: c_short = 0x1;
+    const POLLOUT: c_short = 0x4;
+    const POLLERR: c_short = 0x8;
+    const POLLHUP: c_short = 0x10;
+    const POLLNVAL: c_short = 0x20;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+
+    /// Rebuilds the pollfd array per wait — O(fds) per tick, fine for the
+    /// non-Linux development targets this fallback exists for.
+    pub struct Poller {
+        regs: HashMap<RawFd, (u64, bool, bool)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { regs: HashMap::new() })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.regs.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.regs.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.regs.remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = Vec::with_capacity(self.regs.len());
+            let mut tokens: Vec<u64> = Vec::with_capacity(self.regs.len());
+            for (&fd, &(token, read, write)) in &self.regs {
+                let events =
+                    (if read { POLLIN } else { 0 }) | (if write { POLLOUT } else { 0 });
+                fds.push(PollFd { fd, events, revents: 0 });
+                tokens.push(token);
+            }
+            let n =
+                unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms(timeout)) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & POLLIN != 0,
+                    writable: r & POLLOUT != 0,
+                    hangup: r & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+pub use sys::Poller;
+
+// ----------------------------------------------------------------- waker
+
+extern "C" {
+    fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+}
+
+#[cfg(target_os = "linux")]
+fn make_pipe() -> io::Result<[c_int; 2]> {
+    extern "C" {
+        fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+    }
+    const O_NONBLOCK: c_int = 0o4000;
+    const O_CLOEXEC: c_int = 0o2000000;
+    let mut fds: [c_int; 2] = [0; 2];
+    if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(fds)
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+fn make_pipe() -> io::Result<[c_int; 2]> {
+    extern "C" {
+        fn pipe(fds: *mut c_int) -> c_int;
+    }
+    // blocking ends are acceptable on the fallback targets: drain() only
+    // runs after the poller reported the read end ready, and it reads a
+    // single bounded chunk
+    let mut fds: [c_int; 2] = [0; 2];
+    if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(fds)
+}
+
+/// Self-pipe the compute workers (and [`super::ServerHandle::shutdown`])
+/// use to interrupt the event loop's blocking wait. `Send + Sync`: wake()
+/// is a single syscall on a fixed fd.
+pub struct Waker {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let fds = make_pipe()?;
+        Ok(Waker { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    /// The end the event loop registers for readability.
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Interrupt the event loop. Never blocks meaningfully: if the pipe
+    /// is full, enough wake bytes are already pending.
+    pub fn wake(&self) {
+        let b = 1u8;
+        unsafe {
+            write(self.write_fd, &b, 1);
+        }
+    }
+
+    /// Absorb pending wake bytes. One bounded read: leftover bytes just
+    /// make the next wait return immediately, which is harmless.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 4096];
+        unsafe {
+            read(self.read_fd, buf.as_mut_ptr(), buf.len());
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        extern "C" {
+            fn close(fd: c_int) -> c_int;
+        }
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+// ----------------------------------------------------------- timer queue
+
+/// Min-heap of `(deadline, token, generation)` with lazy deletion: the
+/// event loop checks the popped generation against the connection's
+/// current one and drops stale entries. Rearming a deadline just pushes a
+/// new entry — no O(n) removal on the hot path.
+#[derive(Default)]
+pub struct TimerQueue {
+    heap: BinaryHeap<Reverse<(Instant, u64, u64)>>,
+}
+
+impl TimerQueue {
+    pub fn new() -> TimerQueue {
+        TimerQueue::default()
+    }
+
+    pub fn schedule(&mut self, at: Instant, token: u64, gen: u64) {
+        self.heap.push(Reverse((at, token, gen)));
+    }
+
+    /// Earliest pending entry (possibly stale — staleness is resolved at
+    /// pop time, so this may under-estimate the true next deadline, which
+    /// only costs a spurious wakeup).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.heap.peek().map(|Reverse((at, _, _))| *at)
+    }
+
+    /// Pop one entry whose deadline has passed, if any.
+    pub fn pop_expired(&mut self, now: Instant) -> Option<(u64, u64)> {
+        match self.heap.peek() {
+            Some(Reverse((at, _, _))) if *at <= now => {
+                let Reverse((_, token, gen)) = self.heap.pop().expect("peeked");
+                Some((token, gen))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+// ------------------------------------------------------------- fd limits
+
+/// Raise the process soft fd limit to the hard limit (the 1k-connection
+/// soak and the bench concurrency sweep need ~2 fds per connection).
+/// Returns the resulting soft limit, or `None` if it could not be read.
+#[cfg(target_os = "linux")]
+pub fn raise_fd_limit() -> Option<u64> {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    }
+    const RLIMIT_NOFILE: c_int = 7;
+    unsafe {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return None;
+        }
+        if lim.cur < lim.max {
+            let want = RLimit { cur: lim.max, max: lim.max };
+            if setrlimit(RLIMIT_NOFILE, &want) == 0 {
+                return Some(lim.max);
+            }
+        }
+        Some(lim.cur)
+    }
+}
+
+/// Non-Linux: leave the limit alone and report "unknown".
+#[cfg(all(unix, not(target_os = "linux")))]
+pub fn raise_fd_limit() -> Option<u64> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn timer_queue_orders_and_reports_expiry() {
+        let mut q = TimerQueue::new();
+        let now = Instant::now();
+        q.schedule(now + Duration::from_millis(50), 7, 1);
+        q.schedule(now + Duration::from_millis(10), 3, 4);
+        q.schedule(now + Duration::from_millis(30), 7, 2);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.next_deadline(), Some(now + Duration::from_millis(10)));
+        // nothing expired yet
+        assert_eq!(q.pop_expired(now), None);
+        // all expired: min-heap order, tokens with their generations
+        let late = now + Duration::from_millis(60);
+        assert_eq!(q.pop_expired(late), Some((3, 4)));
+        assert_eq!(q.pop_expired(late), Some((7, 2)));
+        assert_eq!(q.pop_expired(late), Some((7, 1)));
+        assert_eq!(q.pop_expired(late), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn waker_wakes_a_blocking_wait() {
+        let mut poller = Poller::new().expect("poller");
+        let waker = Waker::new().expect("waker");
+        poller.register(waker.read_fd(), 42, true, false).expect("register");
+        let mut events = Vec::new();
+        // nothing pending: a short wait times out empty
+        poller.wait(&mut events, Some(Duration::from_millis(20))).expect("wait");
+        assert!(events.is_empty(), "spurious event {events:?}");
+        waker.wake();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable);
+        waker.drain();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).expect("wait");
+        assert!(events.is_empty(), "wake byte not drained: {events:?}");
+    }
+
+    #[test]
+    fn socket_readiness_is_reported_with_tokens() {
+        let mut poller = Poller::new().expect("poller");
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        listener.set_nonblocking(true).expect("nonblocking");
+        poller.register(listener.as_raw_fd(), 1, true, false).expect("register");
+
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).expect("connect");
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).expect("wait");
+        assert!(
+            events.iter().any(|e| e.token == 1 && e.readable),
+            "no accept readiness: {events:?}"
+        );
+        let (server_side, _) = listener.accept().expect("accept");
+        server_side.set_nonblocking(true).expect("nonblocking");
+        poller.register(server_side.as_raw_fd(), 2, true, false).expect("register");
+
+        client.write_all(b"ping").expect("write");
+        // the listener may still report stale readiness on some kernels;
+        // look specifically for token 2
+        for _ in 0..50 {
+            poller.wait(&mut events, Some(Duration::from_millis(100))).expect("wait");
+            if events.iter().any(|e| e.token == 2 && e.readable) {
+                poller.deregister(server_side.as_raw_fd()).expect("deregister");
+                return;
+            }
+        }
+        panic!("data readiness never reported for token 2");
+    }
+}

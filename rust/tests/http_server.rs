@@ -326,6 +326,17 @@ fn malformed_requests_get_typed_4xx_and_never_kill_the_server() {
     let (status, _) = cl.get("/healthz").unwrap();
     assert_eq!(status, 200, "server unhealthy after a truncated body");
 
+    // half-close mid-request: declare 100 bytes, send 10, FIN the write
+    // side but keep reading — the 400 must still come back
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    raw.write_all(b"POST /v1/models/m/matvec HTTP/1.1\r\nContent-Length: 100\r\n\r\n{\"y\": [[1")
+        .unwrap();
+    raw.shutdown(std::net::Shutdown::Write).unwrap();
+    let (status, resp) = read_raw_reply(&mut raw);
+    assert_eq!(status, 400, "{resp}");
+    assert_eq!(error_kind(&resp), "invalid_spec", "{resp}");
+
     // oversized body: declared over the cap → 413 without reading it.
     // The typed body must actually reach the client (the server drains
     // before closing so the close doesn't RST the response off the wire).
@@ -408,26 +419,215 @@ fn concurrent_soak_under_batching_is_bit_exact() {
 
 #[test]
 fn overload_answers_429_with_a_typed_body() {
+    // two open connections fill the ceiling — idle keep-alive counts
+    // (the event loop decouples connections from compute workers, so the
+    // ceiling under test is max_conns, not the pool size)
     let (handle, server, _model) = spawn(ServerConfig {
-        workers: 1,
-        queue_depth: 1,
+        max_conns: 2,
         ..ServerConfig::default()
     });
     let addr = server.addr();
 
-    // conn1 claims the only worker (keep-alive holds it)
+    // conn1 is a served keep-alive connection
     let mut c1 = HttpClient::connect(addr).unwrap();
     let (status, _) = c1.get("/healthz").unwrap();
     assert_eq!(status, 200);
-    // conn2 fills the queue; give the acceptor a beat to park it
+    // conn2 occupies the second slot without sending a byte
     let _c2 = TcpStream::connect(addr).unwrap();
     std::thread::sleep(Duration::from_millis(100));
-    // conn3 must be rejected up front
+    // conn3 must be rejected up front with a typed body
     let mut c3 = HttpClient::connect(addr).unwrap();
     let (status, body) = c3.get("/healthz").unwrap();
     assert_eq!(status, 429, "{body}");
     assert_eq!(error_kind(&body), "service_unavailable");
     assert!(server.stats().rejected >= 1);
+
+    // conn1 is still served: rejects must not disturb admitted clients
+    let (status, _) = c1.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn connection_count_is_decoupled_from_the_compute_pool() {
+    // 64 concurrent keep-alive clients against a 2-thread compute pool:
+    // under the old thread-per-connection model this would wedge or 429;
+    // the event loop holds every connection open and feeds the pool
+    let (handle, server, model) = spawn(ServerConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_conns: 256,
+        ..ServerConfig::default()
+    });
+    let addr = server.addr();
+
+    let mut joins = Vec::new();
+    for client in 0..64usize {
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("connect");
+            let y = Matrix::from_fn(N, 1, move |r, _| ((r * 7 + client) % 13) as f32 - 6.0);
+            let (status, body) =
+                c.post("/v1/models/m/matvec", &matrix_body("y", &y)).expect("post");
+            assert_eq!(status, 200, "client {client}: {body}");
+            assert_eq!(
+                parse_matrix(&body, "yhat").data,
+                model.matvec(&y).data,
+                "client {client} not bit-exact"
+            );
+        }));
+    }
+    for j in joins {
+        j.join().expect("client panicked");
+    }
+    let http = server.stats();
+    assert_eq!(http.requests, 64);
+    assert_eq!(http.errors, 0);
+    assert_eq!(http.rejected, 0, "queue_depth should absorb 64 clients over 2 workers");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+/// Read one `HTTP/1.1` response (head + Content-Length body) from a raw
+/// stream that may have more responses queued behind it.
+fn read_raw_reply(s: &mut TcpStream) -> (u16, String) {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let k = s.read(&mut tmp).expect("read head");
+        assert!(k > 0, "EOF before response head");
+        buf.extend_from_slice(&tmp[..k]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head}"));
+    let clen: usize = head
+        .lines()
+        .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(str::to_string))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("content-length");
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < clen {
+        let k = s.read(&mut tmp).expect("read body");
+        assert!(k > 0, "EOF mid-body");
+        body.extend_from_slice(&tmp[..k]);
+    }
+    // keep-alive responses are framed exactly: nothing of the next
+    // response may be consumed here, so only take clen bytes
+    let text = String::from_utf8(body[..clen].to_vec()).expect("utf8 body");
+    assert_eq!(body.len(), clen, "over-read into the next pipelined response");
+    (status, text)
+}
+
+#[test]
+fn pipelined_requests_answer_in_order_and_bit_exact() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let addr = server.addr();
+
+    // three distinct matvecs written back-to-back in ONE write, before
+    // reading anything: the server must answer all three, strictly in
+    // request order, each bit-identical to a direct operator call
+    let ys: Vec<Matrix> = (0..3)
+        .map(|i| Matrix::from_fn(N, 1, move |r, _| (((r * 13 + i * 29) % 17) as f32 - 8.0) * 0.5))
+        .collect();
+    let mut wire = Vec::new();
+    for y in &ys {
+        let body = matrix_body("y", y);
+        wire.extend_from_slice(
+            format!(
+                "POST /v1/models/m/matvec HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            )
+            .as_bytes(),
+        );
+    }
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&wire).unwrap();
+
+    for (i, y) in ys.iter().enumerate() {
+        let (status, body) = read_raw_reply(&mut s);
+        assert_eq!(status, 200, "pipelined request {i}: {body}");
+        let got = parse_matrix(&body, "yhat");
+        let want = model.matvec(y);
+        assert_eq!(got.data, want.data, "pipelined request {i} out of order or drifted");
+    }
+    assert_eq!(server.stats().requests, 3);
+    assert_eq!(server.stats().errors, 0);
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn thousand_connection_keepalive_soak_is_bit_exact() {
+    // the acceptance bar: ~1k concurrent keep-alive connections at the
+    // DEFAULT compute-pool size, every response bit-identical to a
+    // direct operator call. Each connection costs two fds in this
+    // process (client + server end), so clamp to the fd budget.
+    let budget = vdt::runtime::server::raise_fd_limit().unwrap_or(1024);
+    let conns = (((budget.saturating_sub(128)) / 2) as usize).clamp(64, 1024);
+    let (handle, server, model) = spawn(ServerConfig {
+        max_conns: conns + 64,
+        ..ServerConfig::default() // default workers: the pool must not need resizing
+    });
+    let addr = server.addr();
+
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 2;
+    let per = conns / THREADS;
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            // open this thread's slice of connections FIRST, so all
+            // ~conns sockets are concurrently open before any traffic
+            let mut clients: Vec<HttpClient> = (0..per)
+                .map(|i| {
+                    HttpClient::connect(addr)
+                        .unwrap_or_else(|e| panic!("connect {}: {e}", t * per + i))
+                })
+                .collect();
+            std::thread::sleep(Duration::from_millis(200));
+            for round in 0..ROUNDS {
+                for (i, c) in clients.iter_mut().enumerate() {
+                    let tag = (t * per + i) * 10 + round;
+                    let y = Matrix::from_fn(N, 1, move |r, _| {
+                        (((r * 31 + tag * 7) % 19) as f32 - 9.0) * 0.1
+                    });
+                    let (status, body) =
+                        c.post("/v1/models/m/matvec", &matrix_body("y", &y)).expect("post");
+                    assert_eq!(status, 200, "conn {tag}: {body}");
+                    // sampled bit-parity keeps the soak fast while still
+                    // pinning exactness across the sweep
+                    if (t * per + i) % 7 == 0 {
+                        assert_eq!(
+                            parse_matrix(&body, "yhat").data,
+                            model.matvec(&y).data,
+                            "conn {tag} not bit-exact under load"
+                        );
+                    }
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("soak thread panicked");
+    }
+    let http = server.stats();
+    assert_eq!(http.requests, (THREADS * per * ROUNDS) as u64);
+    assert_eq!(http.errors, 0, "soak produced protocol errors");
+    assert_eq!(http.rejected, 0, "soak was rejected below max_conns");
 
     server.shutdown();
     handle.shutdown();
