@@ -1,0 +1,125 @@
+//! Kernel throughput — `vdt::kernels` on the VDT operator at BENCH_N
+//! (default 4000, |B| = 6N): deterministic power kernels (diffusion /
+//! PPR) per column width, the GRF walk sampler serial vs parallel, and
+//! commute-distance batches. Emits `BENCH_kernels.json` for the CI bench
+//! gate. Bit-parity is asserted before timing: fused power columns equal
+//! stacked single-column runs, and the parallel GRF sampler equals
+//! serial.
+
+use vdt::core::bench::Runner;
+use vdt::core::par;
+use vdt::data::synthetic;
+use vdt::kernels::{self, GrfConfig, PowerKernel};
+use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::Matrix;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let n = env_usize("BENCH_N", 4000);
+    let widths = [4usize, 16];
+
+    println!("# kernel throughput (N={n}, |B|=6N)");
+    let ds = synthetic::gaussian_mixture(n, 32, 8, 2, 2.2, 2, "kernels_bench");
+    let mut model = VdtModel::build(&ds.x, &VdtConfig::default());
+    model.refine_to(6 * n);
+
+    // ---- deterministic power kernels ----
+    let diffusion = PowerKernel::Diffusion { steps: 10 };
+    let ppr = PowerKernel::Ppr { alpha: 0.15, steps: 10 };
+    for &c in &widths {
+        let y0 = Matrix::from_fn(n, c, |row, k| if row % (k + 3) == 0 { 1.0 } else { 0.0 });
+
+        // parity gate: the fused multi-column run must be bit-identical
+        // to stacked single columns before its timing means anything
+        let fused = kernels::power(&model, ppr, &y0);
+        for k in 0..c {
+            let col = Matrix::from_fn(n, 1, |row, _| y0.get(row, k));
+            let solo = kernels::power(&model, ppr, &col);
+            for row in 0..n {
+                assert_eq!(
+                    solo.get(row, 0).to_bits(),
+                    fused.get(row, k).to_bits(),
+                    "C={c} col={k}: fused power run diverged from per-column"
+                );
+            }
+        }
+
+        let mut out = Matrix::zeros(n, c);
+        let mut scratch = Matrix::zeros(n, c);
+        for (label, kernel) in [("diffusion", diffusion), ("ppr", ppr)] {
+            r.bench(&format!("kernels/{label}/C={c}"), || {
+                kernels::power_into(&model, kernel, &y0, &mut out, &mut scratch);
+                std::hint::black_box(&out);
+            });
+        }
+    }
+
+    // ---- GRF walk sampling, serial vs parallel ----
+    let starts: Vec<usize> = (0..64).map(|i| (i * 97) % n).collect();
+    let cfg = GrfConfig { walks: 32, seed: 11, ..GrfConfig::default() };
+    let hw = par::max_threads();
+    let parallel = kernels::grf_rows(&model, &starts, &cfg).unwrap();
+    {
+        let prev = par::set_max_threads(1);
+        let serial = kernels::grf_rows(&model, &starts, &cfg).unwrap();
+        par::set_max_threads(prev);
+        assert_eq!(parallel.data, serial.data, "par GRF is not bit-exact vs serial");
+    }
+    for (label, threads) in [("serial", 1usize), ("threads", hw)] {
+        let prev = par::set_max_threads(threads);
+        r.bench(&format!("kernels/grf_64rows/{label}"), || {
+            std::hint::black_box(kernels::grf_rows(&model, &starts, &cfg).unwrap());
+        });
+        par::set_max_threads(prev);
+    }
+    if let (Some(s), Some(t)) = (
+        r.mean_of("kernels/grf_64rows/serial"),
+        r.mean_of("kernels/grf_64rows/threads"),
+    ) {
+        println!("# GRF parallel speedup at 64 rows: {:.2}x ({hw} threads)", s / t);
+    }
+
+    // ---- commute-distance batch ----
+    let pairs: Vec<(usize, usize)> = (0..32).map(|i| ((i * 53) % n, (i * 71 + 9) % n)).collect();
+    r.bench("kernels/commute_32pairs", || {
+        std::hint::black_box(kernels::commute_times(&model, &pairs, &cfg).unwrap());
+    });
+
+    // ---- emit BENCH_kernels.json ----
+    // schema matches benches/check_regression.py: entries under "paths",
+    // keyed by "path", gated timing in "ms"
+    let mut names: Vec<String> = Vec::new();
+    for &c in &widths {
+        names.push(format!("kernels/diffusion/C={c}"));
+        names.push(format!("kernels/ppr/C={c}"));
+    }
+    names.push("kernels/grf_64rows/serial".to_string());
+    names.push("kernels/grf_64rows/threads".to_string());
+    names.push("kernels/commute_32pairs".to_string());
+    let entries: Vec<(String, f64)> =
+        names.into_iter().filter_map(|name| r.mean_of(&name).map(|ms| (name, ms))).collect();
+    if entries.is_empty() {
+        println!("# BENCH_kernels.json skipped (all sections filtered out)");
+        return;
+    }
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"kernel_throughput\",\n  \"n\": {n},\n  \"threads\": {hw},\n  \"paths\": [\n"
+    ));
+    for (i, (name, ms)) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"path\": \"{name}\", \"ms\": {ms:.3}}}{}\n",
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write("BENCH_kernels.json", &json) {
+        eprintln!("warn: could not write BENCH_kernels.json: {e}");
+    } else {
+        println!("# wrote BENCH_kernels.json ({} timings)", entries.len());
+    }
+}

@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use crate::core::error::VdtError;
 use crate::core::Matrix;
 use crate::core::op::{AnyModel, ModelCard, TransitionOp};
+use crate::kernels::{self, GrfConfig, KernelSpec, PowerKernel};
 use crate::labelprop::{self, LpConfig};
 
 /// Shared, thread-safe transition operator.
@@ -46,12 +47,13 @@ pub type ModelInfo = ModelCard;
 /// stop guessing field order.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServiceStats {
-    /// Requests routed (matvec, query, labelprop, spectral), including
-    /// ones answered with an error.
+    /// Requests routed (matvec, query, kernel, labelprop, spectral),
+    /// including ones answered with an error.
     pub requests: u64,
-    /// Matvec columns that went through fused batches.
+    /// Matvec and power-kernel columns that went through fused batches.
     pub fused_cols: u64,
-    /// Fused matvec batches executed (one batch may carry many requests).
+    /// Fused matvec / power-kernel batches executed (one batch may carry
+    /// many requests).
     pub fused_batches: u64,
     /// Requests answered with a typed error.
     pub errors: u64,
@@ -93,6 +95,9 @@ pub enum Request {
     /// Inductive out-of-sample rows: one query point per row of `x`
     /// (`q × d`), answered as the `q × N` posterior matrix. Batchable.
     Query { model: String, x: Matrix, resp: mpsc::Sender<Response> },
+    /// A graph-kernel evaluation ([`crate::kernels`]). Power specs are
+    /// batchable per `(model, kernel)`; GRF/commute run individually.
+    Kernel { model: String, spec: KernelSpec, resp: mpsc::Sender<Response> },
     /// Full label propagation run.
     LabelProp { model: String, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
     /// Top-m Ritz values via Arnoldi.
@@ -186,6 +191,25 @@ impl CoordinatorHandle {
         }
     }
 
+    /// Evaluate a graph kernel ([`crate::kernels`]) against a registered
+    /// model: a power spec answers the kernel applied to its `y0`
+    /// (`N × C`, fused with concurrent same-`(model, kernel)` requests —
+    /// bit-identical to running alone); a GRF spec answers the
+    /// `starts × N` estimated kernel rows; a commute spec the
+    /// `pairs × 1` distance column. Bad specs come back as typed
+    /// [`VdtError`]s, never a panic.
+    pub fn kernel(
+        &self,
+        model: impl Into<String>,
+        spec: KernelSpec,
+    ) -> Result<Matrix, VdtError> {
+        match self.roundtrip(|resp| Request::Kernel { model: model.into(), spec, resp })? {
+            Response::Matrix(m) => Ok(m),
+            Response::Error(e) => Err(e),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
+        }
+    }
+
     pub fn label_prop(
         &self,
         model: impl Into<String>,
@@ -239,10 +263,32 @@ impl CoordinatorHandle {
 enum Work {
     /// One fused multi-column matvec batch against a single model.
     MatvecBatch { op: SharedOp, group: Vec<(Matrix, mpsc::Sender<Response>)> },
+    /// One fused batch of power-kernel requests sharing `(model, kernel)`.
+    KernelBatch {
+        op: SharedOp,
+        kernel: PowerKernel,
+        group: Vec<(Matrix, mpsc::Sender<Response>)>,
+    },
     /// One batch of inductive query requests against a single model.
     QueryBatch {
         op: SharedOp,
         group: Vec<(Matrix, mpsc::Sender<Response>)>,
+        errors: Arc<AtomicU64>,
+    },
+    /// GRF kernel-row estimation for one request.
+    GrfRows {
+        op: SharedOp,
+        starts: Vec<usize>,
+        cfg: GrfConfig,
+        resp: mpsc::Sender<Response>,
+        errors: Arc<AtomicU64>,
+    },
+    /// Commute-distance estimation for one request.
+    Commute {
+        op: SharedOp,
+        pairs: Vec<(usize, usize)>,
+        cfg: GrfConfig,
+        resp: mpsc::Sender<Response>,
         errors: Arc<AtomicU64>,
     },
     /// A full label-propagation run.
@@ -251,12 +297,44 @@ enum Work {
     Spectral { op: SharedOp, m: usize, resp: mpsc::Sender<Response> },
 }
 
+/// Answer a fallible walk-sampling result, counting errors.
+fn send_walk_result(
+    result: Result<Matrix, VdtError>,
+    resp: mpsc::Sender<Response>,
+    errors: &AtomicU64,
+) {
+    match result {
+        Ok(m) => {
+            let _ = resp.send(Response::Matrix(m));
+        }
+        Err(e) => {
+            errors.fetch_add(1, Ordering::Relaxed);
+            let _ = resp.send(Response::Error(e));
+        }
+    }
+}
+
 impl Work {
     /// Run the item and answer its client(s) directly.
     fn execute(self) {
         match self {
-            Work::MatvecBatch { op, group } => run_matvec_batch(op, group),
+            Work::MatvecBatch { op, group } => {
+                run_fused_batch(op, group, |op, y| op.matmul(y));
+            }
+            Work::KernelBatch { op, kernel, group } => {
+                run_fused_batch(op, group, move |op, y| kernels::power(op, kernel, y));
+            }
             Work::QueryBatch { op, group, errors } => run_query_batch(op, group, &errors),
+            Work::GrfRows { op, starts, cfg, resp, errors } => {
+                send_walk_result(kernels::grf_rows(op.as_ref(), &starts, &cfg), resp, &errors);
+            }
+            Work::Commute { op, pairs, cfg, resp, errors } => {
+                send_walk_result(
+                    kernels::commute_times(op.as_ref(), &pairs, &cfg),
+                    resp,
+                    &errors,
+                );
+            }
             Work::LabelProp { op, y0, cfg, resp } => {
                 let _ = resp.send(Response::Matrix(labelprop::propagate(op.as_ref(), &y0, &cfg)));
             }
@@ -270,16 +348,22 @@ impl Work {
 }
 
 /// Execute one fused batch: concatenate the requests' columns, run a
-/// single multi-RHS apply ([`TransitionOp::matmul`] — on the VDT backend
-/// one tree/partition traversal for *all* fused columns, itself
-/// column-parallel), and split the result back per request. Per-request
-/// results are bit-identical to unfused calls: every column of the
-/// underlying apply is an independent scalar sequence.
-fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>)>) {
+/// single multi-RHS `apply` (for matvec, [`TransitionOp::matmul`] — on
+/// the VDT backend one tree/partition traversal for *all* fused columns,
+/// itself column-parallel; for power kernels the whole double-buffered
+/// recurrence, [`kernels::power`]), and split the result back per
+/// request. Per-request results are bit-identical to unfused calls: every
+/// column of the underlying apply is an independent scalar sequence.
+/// `apply` must map an `N × C` input to an `N × C` output.
+fn run_fused_batch(
+    op: SharedOp,
+    mut group: Vec<(Matrix, mpsc::Sender<Response>)>,
+    apply: impl Fn(&dyn TransitionOp, &Matrix) -> Matrix,
+) {
     let n = op.n();
     if group.len() == 1 {
         let (y, resp) = group.pop().unwrap();
-        let _ = resp.send(Response::Matrix(op.matmul(&y)));
+        let _ = resp.send(Response::Matrix(apply(op.as_ref(), &y)));
         return;
     }
     // fuse: concatenate all columns, one multi-RHS apply, then split
@@ -293,7 +377,7 @@ fn run_matvec_batch(op: SharedOp, mut group: Vec<(Matrix, mpsc::Sender<Response>
         }
         off += y.cols;
     }
-    let out = op.matmul(&fused);
+    let out = apply(op.as_ref(), &fused);
     let mut off = 0usize;
     for (y, resp) in group {
         let mut part = Matrix::zeros(n, y.cols);
@@ -382,41 +466,47 @@ impl Owner {
         let _ = resp.send(Response::Error(e));
     }
 
-    /// Shared routing skeleton for the batchable request kinds (matvec and
-    /// inductive query): count the requests, resolve the model (typed
-    /// `UnknownModel` per request), check backend eligibility and the
-    /// per-request dimension (typed `ShapeMismatch`), then hand the valid
-    /// remainder to `make_work` — one fused item per model when fusion is
-    /// on, one item per request otherwise.
+    /// Shared routing skeleton for the batchable request kinds (matvec,
+    /// inductive query, power kernel): count the requests, resolve the
+    /// model (typed `UnknownModel` per request), check backend/spec
+    /// eligibility and the per-request dimension (typed `ShapeMismatch`),
+    /// then hand the valid remainder to `make_work` — one fused item per
+    /// group key when fusion is on, one item per request otherwise.
     ///
-    /// `expected_dim` returns the dimension every request must match (or a
-    /// typed error failing the whole group, e.g. a transductive backend
-    /// asked for inductive queries); `got_dim` extracts the request's
-    /// actual dimension. `count_fusion` bumps the matvec fusion counters —
-    /// they are defined as *matvec columns through fused batches*, so the
+    /// Groups are keyed by `K` — the model name for matvec/query, the
+    /// `(model, kernel)` pair for power kernels, so only requests running
+    /// the *same* recurrence fuse; `model_of` extracts the registry name
+    /// from the key. `expected_dim` returns the dimension every request
+    /// must match (or a typed error failing the whole group, e.g. a
+    /// transductive backend asked for inductive queries, or an invalid
+    /// kernel spec); `got_dim` extracts the request's actual dimension.
+    /// `count_fusion` bumps the fusion counters — defined as *operator
+    /// columns through fused batches* (matvec and power kernels), so the
     /// query path leaves them alone.
-    fn route_batchable(
+    fn route_batchable<K: std::hash::Hash + Eq>(
         &mut self,
-        groups: HashMap<String, Group>,
+        groups: HashMap<K, Group>,
         work: &mut Vec<Work>,
         what: &'static str,
         count_fusion: bool,
-        expected_dim: impl Fn(&SharedOp) -> Result<usize, VdtError>,
+        model_of: impl Fn(&K) -> &str,
+        expected_dim: impl Fn(&K, &SharedOp) -> Result<usize, VdtError>,
         got_dim: impl Fn(&Matrix) -> usize,
-        make_work: impl Fn(&Self, SharedOp, Group) -> Work,
+        make_work: impl Fn(&Self, &K, SharedOp, Group) -> Work,
     ) {
-        for (model, group) in groups {
+        for (key, group) in groups {
             self.requests += group.len() as u64;
-            let op = match self.models.get(&model) {
+            let op = match self.models.get(model_of(&key)) {
                 Some(op) => op.clone(),
                 None => {
+                    let name = model_of(&key).to_string();
                     for (_, resp) in group {
-                        self.error(&resp, VdtError::UnknownModel(model.clone()));
+                        self.error(&resp, VdtError::UnknownModel(name.clone()));
                     }
                     continue;
                 }
             };
-            let d = match expected_dim(&op) {
+            let d = match expected_dim(&key, &op) {
                 Ok(d) => d,
                 Err(e) => {
                     for (_, resp) in group {
@@ -447,13 +537,13 @@ impl Owner {
                     self.fused_batches += 1;
                     self.fused_cols += ok.iter().map(|(y, _)| y.cols as u64).sum::<u64>();
                 }
-                let item = make_work(self, op, ok);
+                let item = make_work(self, &key, op, ok);
                 work.push(item);
             } else {
                 // no-batching baseline: one work item (and one model
                 // traversal) per request
                 for item in ok {
-                    let item = make_work(self, op.clone(), vec![item]);
+                    let item = make_work(self, &key, op.clone(), vec![item]);
                     work.push(item);
                 }
             }
@@ -469,6 +559,8 @@ impl Owner {
             HashMap::new();
         let mut query_groups: HashMap<String, Vec<(Matrix, mpsc::Sender<Response>)>> =
             HashMap::new();
+        let mut power_groups: HashMap<(String, PowerKernel), Vec<(Matrix, mpsc::Sender<Response>)>> =
+            HashMap::new();
         let mut work: Vec<Work> = Vec::new();
         let mut shutdown = false;
         for req in burst {
@@ -482,6 +574,78 @@ impl Owner {
                 Request::Query { model, x, resp } => {
                     query_groups.entry(model).or_default().push((x, resp));
                 }
+                Request::Kernel { model, spec, resp } => match spec {
+                    // deterministic power kernels group per (model,
+                    // kernel): identical recurrences fuse into one
+                    // multi-RHS run
+                    KernelSpec::Power { kernel, y0 } => {
+                        power_groups.entry((model, kernel)).or_default().push((y0, resp));
+                    }
+                    // walk-sampling specs run as individual work items;
+                    // the kernels module validates them and answers typed
+                    // errors, only the response-size cap needs the
+                    // registry's N here
+                    KernelSpec::Grf { starts, cfg } => {
+                        self.requests += 1;
+                        match self.models.get(&model) {
+                            None => self.error(&resp, VdtError::UnknownModel(model)),
+                            Some(op) => {
+                                let n = op.n();
+                                if starts.len().saturating_mul(n) > MAX_QUERY_OUT_ELEMS {
+                                    self.error(
+                                        &resp,
+                                        VdtError::InvalidSpec(format!(
+                                            "grf response would be {} × {n} values \
+                                             (cap {MAX_QUERY_OUT_ELEMS}); send fewer starts \
+                                             per request",
+                                            starts.len()
+                                        )),
+                                    );
+                                } else {
+                                    work.push(Work::GrfRows {
+                                        op: op.clone(),
+                                        starts,
+                                        cfg,
+                                        resp,
+                                        errors: self.errors.clone(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    KernelSpec::Commute { pairs, cfg } => {
+                        self.requests += 1;
+                        match self.models.get(&model) {
+                            None => self.error(&resp, VdtError::UnknownModel(model)),
+                            Some(op) => {
+                                let n = op.n();
+                                // the estimator samples one N-sized GRF
+                                // row per distinct pair endpoint
+                                if pairs.len().saturating_mul(2).saturating_mul(n)
+                                    > MAX_QUERY_OUT_ELEMS
+                                {
+                                    self.error(
+                                        &resp,
+                                        VdtError::InvalidSpec(format!(
+                                            "commute request would sample up to {} × {n} \
+                                             kernel values (cap {MAX_QUERY_OUT_ELEMS}); \
+                                             send fewer pairs per request",
+                                            2 * pairs.len()
+                                        )),
+                                    );
+                                } else {
+                                    work.push(Work::Commute {
+                                        op: op.clone(),
+                                        pairs,
+                                        cfg,
+                                        resp,
+                                        errors: self.errors.clone(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                },
                 Request::LabelProp { model, y0, cfg, resp } => {
                     self.requests += 1;
                     match self.models.get(&model) {
@@ -540,9 +704,27 @@ impl Owner {
             &mut work,
             "Y",
             true,
-            |op| Ok(op.n()),
+            |model| model.as_str(),
+            |_, op| Ok(op.n()),
             |y| y.rows,
-            |_, op, group| Work::MatvecBatch { op, group },
+            |_, _, op, group| Work::MatvecBatch { op, group },
+        );
+
+        // fuse power-kernel groups per (model, kernel); invalid specs fail
+        // the whole group (they share the recurrence), shape errors are
+        // per request
+        self.route_batchable(
+            power_groups,
+            &mut work,
+            "Y0",
+            true,
+            |key: &(String, PowerKernel)| key.0.as_str(),
+            |key, op| {
+                key.1.validate()?;
+                Ok(op.n())
+            },
+            |y| y.rows,
+            |_, key, op, group| Work::KernelBatch { op, kernel: key.1, group },
         );
 
         // validate query groups; dim errors answered here, domain errors
@@ -552,7 +734,8 @@ impl Owner {
             &mut work,
             "query",
             false,
-            |op| {
+            |model| model.as_str(),
+            |_, op| {
                 op.query_dim().ok_or_else(|| {
                     VdtError::Unsupported(format!(
                         "the {} backend is transductive: it has no inductive \
@@ -562,7 +745,7 @@ impl Owner {
                 })
             },
             |x| x.cols,
-            |owner, op, group| Work::QueryBatch { op, group, errors: owner.errors.clone() },
+            |owner, _, op, group| Work::QueryBatch { op, group, errors: owner.errors.clone() },
         );
 
         // ---- execute the burst on scoped worker threads ----
@@ -898,6 +1081,95 @@ mod tests {
         handle.register("m", op);
         let eigs = handle.spectral("m", 10).unwrap();
         assert!((eigs[0].0 - 1.0).abs() < 1e-3, "top eig {:?}", eigs[0]);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn kernel_requests_route_and_match_direct_evaluation() {
+        use crate::kernels::{GrfConfig, KernelSpec, PowerKernel};
+        let handle = Coordinator::spawn();
+        let (op, _) = model(50, 20);
+        handle.register("m", op.clone());
+
+        // power kernel parity with the library call
+        let y0 = Matrix::from_fn(50, 2, |r, c| ((r * 2 + c) % 5) as f32);
+        let kernel = PowerKernel::Ppr { alpha: 0.15, steps: 20 };
+        let got = handle
+            .kernel("m", KernelSpec::Power { kernel, y0: y0.clone() })
+            .unwrap();
+        let want = crate::kernels::power(op.as_ref(), kernel, &y0);
+        assert_eq!(got.data, want.data);
+
+        // GRF parity (seeded, deterministic)
+        let cfg = GrfConfig { walks: 8, ..Default::default() };
+        let got = handle
+            .kernel("m", KernelSpec::Grf { starts: vec![1, 9], cfg })
+            .unwrap();
+        let want = crate::kernels::grf_rows(op.as_ref(), &[1, 9], &cfg).unwrap();
+        assert_eq!(got.data, want.data);
+
+        // commute parity
+        let got = handle
+            .kernel("m", KernelSpec::Commute { pairs: vec![(1, 9)], cfg })
+            .unwrap();
+        let want = crate::kernels::commute_times(op.as_ref(), &[(1, 9)], &cfg).unwrap();
+        assert_eq!(got.data, want.data);
+
+        // typed errors: bad spec, bad shape, unknown model
+        let err = handle
+            .kernel(
+                "m",
+                KernelSpec::Power {
+                    kernel: PowerKernel::Ppr { alpha: 2.0, steps: 5 },
+                    y0: Matrix::zeros(50, 1),
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+        let err = handle
+            .kernel("m", KernelSpec::Power { kernel, y0: Matrix::zeros(7, 1) })
+            .unwrap_err();
+        assert!(
+            matches!(err, VdtError::ShapeMismatch { what: "Y0", expected: 50, got: 7 }),
+            "{err}"
+        );
+        let err = handle
+            .kernel("m", KernelSpec::Grf { starts: vec![50], cfg })
+            .unwrap_err();
+        assert!(matches!(err, VdtError::ShapeMismatch { .. }), "{err}");
+        let err = handle
+            .kernel("nope", KernelSpec::Grf { starts: vec![0], cfg })
+            .unwrap_err();
+        assert!(matches!(err, VdtError::UnknownModel(_)), "{err}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_same_spec_kernels_fuse_and_stay_bit_exact() {
+        use crate::kernels::{KernelSpec, PowerKernel};
+        let handle = Coordinator::spawn();
+        let (op, _) = model(40, 21);
+        handle.register("m", op.clone());
+        let kernel = PowerKernel::Diffusion { steps: 6 };
+        let mut joins = Vec::new();
+        for c in 0..8usize {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let y0 = Matrix::from_fn(40, 1, move |r, _| ((r + c) % 5) as f32);
+                (c, h.kernel("m", KernelSpec::Power { kernel, y0 }).unwrap())
+            }));
+        }
+        for j in joins {
+            let (c, got) = j.join().unwrap();
+            let y0 = Matrix::from_fn(40, 1, move |r, _| ((r + c) % 5) as f32);
+            let want = crate::kernels::power(op.as_ref(), kernel, &y0);
+            assert_eq!(got.data, want.data, "request {c}");
+        }
+        let s = handle.stats();
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.fused_cols, 8, "power-kernel columns count toward fusion stats");
+        assert!(s.fused_batches <= 8);
+        assert_eq!(s.errors, 0);
         handle.shutdown();
     }
 

@@ -254,6 +254,28 @@ pub trait TransitionOp {
             self.card().backend
         )))
     }
+
+    /// Random-access row read: write the dense outgoing transition row
+    /// `P[i, ·]` of *training* point `i` into `out` (length `n()`).
+    ///
+    /// `matvec(e_j)` yields a *column* of `P`; random-walk sampling
+    /// ([`crate::kernels::grf`]) needs rows — the distribution a walker at
+    /// node `i` steps from. Every serving-grade backend overrides this
+    /// (the VDT backend expands the marked blocks along `i`'s leaf-to-root
+    /// path, the kNN backend copies its CSR row, the exact backend its
+    /// dense row); the default is a typed [`VdtError::Unsupported`] so
+    /// out-of-tree operators degrade gracefully. An out-of-range `i`
+    /// returns [`VdtError::ShapeMismatch`]. The written row must match
+    /// the operator's matvec semantics exactly: `row[j] == (P·e_j)[i]`
+    /// bit-for-bit.
+    fn transition_row_into(&self, i: usize, out: &mut [f32]) -> Result<(), VdtError> {
+        let _ = (i, out);
+        Err(VdtError::Unsupported(format!(
+            "the {} backend has no random-access row read (required for \
+             random-walk kernel sampling)",
+            self.card().backend
+        )))
+    }
 }
 
 /// A fitted model of any serving-grade backend, as one `Send + Sync`
@@ -406,6 +428,9 @@ impl TransitionOp for AnyModel {
     fn inductive_into(&self, x: &[f32], out: &mut [f32]) -> Result<(), VdtError> {
         self.as_op().inductive_into(x, out)
     }
+    fn transition_row_into(&self, i: usize, out: &mut [f32]) -> Result<(), VdtError> {
+        self.as_op().transition_row_into(i, out)
+    }
 }
 
 impl From<crate::vdt::VdtModel> for AnyModel {
@@ -476,6 +501,9 @@ mod tests {
         assert_eq!(op.query_dim(), None);
         let mut row = vec![0.0f32; 3];
         let err = op.inductive_into(&[0.0, 0.0], &mut row).unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+        // random-access row reads default to typed Unsupported too
+        let err = op.transition_row_into(0, &mut row).unwrap_err();
         assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
     }
 

@@ -17,6 +17,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
+use crate::core::error::VdtError;
 use crate::core::Matrix;
 use crate::core::op::{Backend, ModelCard, TransitionOp};
 use crate::runtime::Runtime;
@@ -111,6 +112,19 @@ impl TransitionOp for ExactModel {
             sigma: Some(self.sigma),
             provenance: self.provenance.clone(),
         }
+    }
+
+    /// Dense row copy — `P[i, ·]` verbatim.
+    fn transition_row_into(&self, i: usize, out: &mut [f32]) -> Result<(), VdtError> {
+        let n = self.p.rows;
+        if i >= n {
+            return Err(VdtError::ShapeMismatch { what: "row index", expected: n, got: i });
+        }
+        if out.len() != n {
+            return Err(VdtError::ShapeMismatch { what: "row buffer", expected: n, got: out.len() });
+        }
+        out.copy_from_slice(self.p.row(i));
+        Ok(())
     }
 }
 

@@ -1,0 +1,308 @@
+//! Graph random features (GRF): unbiased Monte-Carlo estimates of the
+//! resolvent kernel `K_γ = (I − γP)⁻¹ = Σ_k γ^k P^k` via batched
+//! random-walk sampling (arXiv:2305.00156 / 2310.04859), plus
+//! commute-distance estimates derived from them.
+//!
+//! ## Estimator
+//!
+//! A walker starts at node `i` and at each step halts with probability
+//! `halt`, otherwise samples its next node from the operator's transition
+//! row ([`TransitionOp::transition_row_into`] — the new random-access row
+//! capability every serving backend implements). The importance weight
+//! ("load") starts at 1 and is multiplied by `γ / (1 − halt)` per
+//! surviving step; depositing the load at every visited node gives, in
+//! expectation over walks,
+//!
+//! ```text
+//! E[φ_i(j)] = Σ_k (1−halt)^k · P^k[i,j] · (γ/(1−halt))^k = K_γ[i, j]
+//! ```
+//!
+//! — an unbiased estimate of row `i` of the kernel, for any
+//! `halt ∈ (0,1)`. Averaging `walks` independent walks shrinks the
+//! variance as `1/walks`; the conformance suite pins that the error
+//! against the exact Neumann series decreases as `walks` grows.
+//!
+//! ## Determinism and parallelism
+//!
+//! The RNG stream of each start node is derived from `(seed, node id)` —
+//! not from the node's position in the request or the thread that runs
+//! it — so results are reproducible across requests, batch compositions,
+//! and `VDT_THREADS` settings: [`crate::core::par::par_map`] preserves
+//! item order and each item owns its RNG and scratch. `par == serial`
+//! holds bit-exactly.
+
+use crate::core::error::VdtError;
+use crate::core::op::TransitionOp;
+use crate::core::par;
+use crate::core::rng::Rng;
+use crate::core::Matrix;
+
+/// Random-walk sampling configuration — the estimator's variance knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GrfConfig {
+    /// Independent walks per start node. Variance ∝ 1/walks.
+    pub walks: usize,
+    /// Kernel discount `γ ∈ (0, 1)`: `K_γ = Σ_k γ^k P^k`. Larger γ weighs
+    /// longer-range structure (and raises estimator variance).
+    pub gamma: f64,
+    /// Per-step halting probability ∈ (0, 1). Expected walk length is
+    /// `1/halt`; lower halt explores further but costs more row samples.
+    pub halt: f64,
+    /// Base RNG seed; per-node streams are derived from `(seed, node)`.
+    pub seed: u64,
+    /// Hard step cap per walk (truncation backstop; the geometric halt
+    /// ends almost all walks long before this).
+    pub max_steps: usize,
+}
+
+impl Default for GrfConfig {
+    fn default() -> Self {
+        GrfConfig { walks: 64, gamma: 0.5, halt: 0.5, seed: 0, max_steps: 1024 }
+    }
+}
+
+impl GrfConfig {
+    /// Typed spec validation — what the serving layers answer 400 with.
+    pub fn validate(&self) -> Result<(), VdtError> {
+        if self.walks == 0 {
+            return Err(VdtError::InvalidSpec("grf needs walks >= 1".to_string()));
+        }
+        if !self.gamma.is_finite() || self.gamma <= 0.0 || self.gamma >= 1.0 {
+            return Err(VdtError::InvalidSpec(format!(
+                "grf gamma must be in (0, 1), got {}",
+                self.gamma
+            )));
+        }
+        if !self.halt.is_finite() || self.halt <= 0.0 || self.halt >= 1.0 {
+            return Err(VdtError::InvalidSpec(format!(
+                "grf halt probability must be in (0, 1), got {}",
+                self.halt
+            )));
+        }
+        if self.max_steps == 0 {
+            return Err(VdtError::InvalidSpec("grf needs max_steps >= 1".to_string()));
+        }
+        Ok(())
+    }
+}
+
+/// Per-node RNG stream: mix the node id into the base seed (golden-ratio
+/// multiply, then `seed_from_u64`'s splitmix expansion decorrelates the
+/// streams).
+fn stream_seed(seed: u64, node: u64) -> u64 {
+    seed ^ node.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Inverse-CDF sample from a transition row with an f64 running sum.
+/// `u ∈ [0,1)`; the f32 row sums to 1 up to rounding, so the fallback
+/// (last strictly-positive entry, or `current` when the row is all zero)
+/// absorbs the rounding shortfall.
+fn sample_row(row: &[f32], u: f64, current: usize) -> usize {
+    let mut acc = 0f64;
+    let mut last = current;
+    for (j, &p) in row.iter().enumerate() {
+        if p <= 0.0 {
+            continue;
+        }
+        last = j;
+        acc += p as f64;
+        if u < acc {
+            return j;
+        }
+    }
+    last
+}
+
+/// Estimate rows `K_γ[i, ·]` of the resolvent kernel for each start node
+/// `i` in `starts`, as a `starts.len() × N` matrix.
+///
+/// Typed errors: bad `cfg` or an empty/out-of-range start list is
+/// [`VdtError::InvalidSpec`] / [`VdtError::ShapeMismatch`]; a backend
+/// without the row-read capability is [`VdtError::Unsupported`].
+pub fn grf_rows(
+    op: &(dyn TransitionOp + Sync),
+    starts: &[usize],
+    cfg: &GrfConfig,
+) -> Result<Matrix, VdtError> {
+    cfg.validate()?;
+    let n = op.n();
+    if starts.is_empty() {
+        return Err(VdtError::InvalidSpec("grf needs at least one start node".to_string()));
+    }
+    for &s in starts {
+        if s >= n {
+            return Err(VdtError::ShapeMismatch { what: "start index", expected: n, got: s });
+        }
+    }
+    // capability probe before fanning out workers: a transductive custom
+    // backend fails here with one typed Unsupported, not once per start
+    {
+        let mut probe = vec![0f32; n];
+        op.transition_row_into(starts[0], &mut probe)?;
+    }
+    let rows: Vec<Result<Vec<f64>, VdtError>> = par::par_map(starts.len(), |si| {
+        let start = starts[si];
+        let mut rng = Rng::seed_from_u64(stream_seed(cfg.seed, start as u64));
+        let mut phi = vec![0f64; n];
+        let mut row = vec![0f32; n];
+        let step_load = cfg.gamma / (1.0 - cfg.halt);
+        for _ in 0..cfg.walks {
+            let mut s = start;
+            let mut load = 1.0f64;
+            phi[s] += load;
+            for _ in 0..cfg.max_steps {
+                if rng.f64() < cfg.halt {
+                    break;
+                }
+                op.transition_row_into(s, &mut row)?;
+                s = sample_row(&row, rng.f64(), s);
+                load *= step_load;
+                phi[s] += load;
+            }
+        }
+        let inv = 1.0 / cfg.walks as f64;
+        for v in &mut phi {
+            *v *= inv;
+        }
+        Ok(phi)
+    });
+    let mut out = Matrix::zeros(starts.len(), n);
+    for (r, res) in rows.into_iter().enumerate() {
+        let phi = res?;
+        for (j, v) in phi.into_iter().enumerate() {
+            out.set(r, j, v as f32);
+        }
+    }
+    Ok(out)
+}
+
+/// Commute-distance estimates derived from the GRF kernel: for each pair
+/// `(i, j)`, `d(i,j) = K[i,i] + K[j,j] − K[i,j] − K[j,i]` — the kernel-
+/// induced squared distance, estimated from the GRF rows of the pair's
+/// nodes. Returns a `pairs.len() × 1` column. Each node's row is sampled
+/// once (per-node RNG streams make it identical however the pairs are
+/// grouped), so `p` pairs cost at most `2p` row estimates.
+pub fn commute_times(
+    op: &(dyn TransitionOp + Sync),
+    pairs: &[(usize, usize)],
+    cfg: &GrfConfig,
+) -> Result<Matrix, VdtError> {
+    if pairs.is_empty() {
+        return Err(VdtError::InvalidSpec("commute needs at least one pair".to_string()));
+    }
+    let mut nodes: Vec<usize> = pairs.iter().flat_map(|&(i, j)| [i, j]).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let k = grf_rows(op, &nodes, cfg)?;
+    let index = |x: usize| nodes.binary_search(&x).expect("node sampled above");
+    let mut out = Matrix::zeros(pairs.len(), 1);
+    for (r, &(i, j)) in pairs.iter().enumerate() {
+        let (ri, rj) = (index(i), index(j));
+        let d = k.get(ri, i) as f64 + k.get(rj, j) as f64
+            - k.get(ri, j) as f64
+            - k.get(rj, i) as f64;
+        out.set(r, 0, d as f32);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn fitted(n: usize, seed: u64) -> VdtModel {
+        let ds = synthetic::two_moons(n, 0.07, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * n);
+        m
+    }
+
+    #[test]
+    fn sample_row_inverts_the_cdf() {
+        let row = [0.25f32, 0.0, 0.5, 0.25];
+        assert_eq!(sample_row(&row, 0.0, 9), 0);
+        assert_eq!(sample_row(&row, 0.24, 9), 0);
+        assert_eq!(sample_row(&row, 0.26, 9), 2);
+        assert_eq!(sample_row(&row, 0.74, 9), 2);
+        assert_eq!(sample_row(&row, 0.76, 9), 3);
+        // rounding shortfall falls back to the last positive entry
+        assert_eq!(sample_row(&row, 0.9999999, 9), 3);
+        // an all-zero row keeps the walker in place
+        assert_eq!(sample_row(&[0.0; 4], 0.3, 2), 2);
+    }
+
+    #[test]
+    fn rows_are_deterministic_and_request_independent() {
+        let m = fitted(50, 1);
+        let cfg = GrfConfig { walks: 16, ..Default::default() };
+        let a = grf_rows(&m, &[3, 7, 11], &cfg).unwrap();
+        let b = grf_rows(&m, &[3, 7, 11], &cfg).unwrap();
+        assert_eq!(a.data, b.data, "same request must replay bit-identically");
+        // a node's row does not depend on which request it rides in
+        let solo = grf_rows(&m, &[7], &cfg).unwrap();
+        assert_eq!(a.row(1), solo.row(0), "per-node streams are position-independent");
+        // ... but does depend on the seed
+        let reseeded = grf_rows(&m, &[7], &GrfConfig { seed: 99, ..cfg }).unwrap();
+        assert_ne!(solo.data, reseeded.data);
+    }
+
+    #[test]
+    fn par_equals_serial_bit_exact() {
+        let m = fitted(60, 2);
+        let cfg = GrfConfig { walks: 8, ..Default::default() };
+        let starts: Vec<usize> = (0..12).map(|i| i * 5).collect();
+        let par = grf_rows(&m, &starts, &cfg).unwrap();
+        let prev = crate::core::par::set_max_threads(1);
+        let serial = grf_rows(&m, &starts, &cfg).unwrap();
+        crate::core::par::set_max_threads(prev);
+        assert_eq!(par.data, serial.data);
+    }
+
+    #[test]
+    fn typed_errors_for_bad_specs() {
+        let m = fitted(30, 3);
+        let cfg = GrfConfig::default();
+        assert!(matches!(
+            grf_rows(&m, &[], &cfg),
+            Err(VdtError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            grf_rows(&m, &[30], &cfg),
+            Err(VdtError::ShapeMismatch { expected: 30, got: 30, .. })
+        ));
+        assert!(matches!(
+            grf_rows(&m, &[0], &GrfConfig { walks: 0, ..cfg }),
+            Err(VdtError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            grf_rows(&m, &[0], &GrfConfig { gamma: 1.0, ..cfg }),
+            Err(VdtError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            grf_rows(&m, &[0], &GrfConfig { halt: 0.0, ..cfg }),
+            Err(VdtError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            commute_times(&m, &[], &cfg),
+            Err(VdtError::InvalidSpec(_))
+        ));
+    }
+
+    #[test]
+    fn commute_is_symmetric_zero_on_self_and_matches_rows() {
+        let m = fitted(40, 4);
+        let cfg = GrfConfig { walks: 32, ..Default::default() };
+        let d = commute_times(&m, &[(3, 9), (9, 3), (5, 5)], &cfg).unwrap();
+        assert_eq!((d.rows, d.cols), (3, 1));
+        assert_eq!(d.get(0, 0), d.get(1, 0), "commute estimate is symmetric");
+        assert_eq!(d.get(2, 0), 0.0, "self-pair distance is exactly zero");
+        // consistent with the same nodes' GRF rows
+        let k = grf_rows(&m, &[3, 9], &cfg).unwrap();
+        let want = (k.get(0, 3) as f64 + k.get(1, 9) as f64
+            - k.get(0, 9) as f64
+            - k.get(1, 3) as f64) as f32;
+        assert_eq!(d.get(0, 0), want);
+    }
+}

@@ -1,0 +1,94 @@
+//! `kernels::` — random-walk graph kernels on the transition operator.
+//!
+//! The paper makes repeated transition-operator application cheap at
+//! scale; this module is the workload tier that *uses* those walks beyond
+//! label propagation (ROADMAP item 4), following the random-walk kernel
+//! family of arXiv:2410.10368 and the graph-random-feature estimators of
+//! arXiv:2305.00156 / 2310.04859. Everything is built on
+//! [`crate::core::op::TransitionOp`], so every backend — VDT, kNN, exact —
+//! serves every kernel:
+//!
+//! - [`power`] — deterministic power-iteration kernels: t-step
+//!   **diffusion** embeddings (`P^t·Y0`) and **personalized PageRank**
+//!   with restart (`Y ← (1−α)PY + αY0`), both as multi-RHS
+//!   [`TransitionOp::matmul_into`](crate::core::op::TransitionOp::matmul_into)
+//!   loops with double-buffered, allocation-free steady state.
+//! - [`grf`] — **GRF** unbiased Monte-Carlo estimators of the resolvent
+//!   kernel `K_γ = (I−γP)⁻¹` via batched random-walk sampling
+//!   ([`crate::core::rng`] streams, [`crate::core::par`] over start
+//!   nodes, `par == serial` bit-exact), plus **commute-distance**
+//!   estimates derived from the sampled rows.
+//!
+//! Serving: `POST /v1/models/{name}/kernel`
+//! ([`crate::runtime::server`]), routed through the coordinator
+//! ([`crate::coordinator::CoordinatorHandle::kernel`]) where
+//! same-`(model, kernel)` power requests fuse into one multi-RHS sweep;
+//! `vdt kernel` on the CLI; `examples/kernels.rs` compares VDT-backed
+//! vs exact-backend estimates.
+//!
+//! ```
+//! use vdt::kernels::{self, PowerKernel};
+//! use vdt::{Matrix, ModelBuilder};
+//!
+//! # fn main() -> Result<(), vdt::VdtError> {
+//! let ds = vdt::data::synthetic::two_moons(60, 0.08, 7);
+//! let model = ModelBuilder::from_dataset(&ds).build()?;
+//! // 4-step diffusion of a point mass at node 0
+//! let y0 = Matrix::from_fn(60, 1, |r, _| if r == 0 { 1.0 } else { 0.0 });
+//! let diff = kernels::power(model.as_op(), PowerKernel::Diffusion { steps: 4 }, &y0);
+//! assert_eq!((diff.rows, diff.cols), (60, 1));
+//! // P is row-stochastic, so the all-ones column is a fixed point of
+//! // both kernels — the conformance suite's invariant
+//! let ones = Matrix::from_fn(60, 1, |_, _| 1.0);
+//! let fixed = kernels::power(model.as_op(), PowerKernel::Ppr { alpha: 0.2, steps: 6 }, &ones);
+//! assert!(fixed.data.iter().all(|v| (v - 1.0).abs() < 1e-4));
+//! # Ok(()) }
+//! ```
+
+pub mod grf;
+pub mod power;
+
+pub use grf::{commute_times, grf_rows, GrfConfig};
+pub use power::{power, power_into, PowerKernel};
+
+use crate::core::Matrix;
+
+/// One kernel request against a model — the unit the coordinator routes
+/// and the HTTP/CLI layers construct. Power specs are batchable (the
+/// coordinator fuses same-`(model, kernel)` groups into one multi-RHS
+/// run); GRF and commute requests execute as individual work items.
+pub enum KernelSpec {
+    /// Deterministic power-iteration kernel applied to `y0` (`N × C`).
+    Power {
+        /// Which recurrence to run.
+        kernel: PowerKernel,
+        /// Right-hand side, one distribution (or feature column) per
+        /// column.
+        y0: Matrix,
+    },
+    /// GRF rows `K_γ[i, ·]` for each start node.
+    Grf {
+        /// Start nodes (training-point indices).
+        starts: Vec<usize>,
+        /// Sampling knobs.
+        cfg: GrfConfig,
+    },
+    /// Commute-distance estimates for node pairs.
+    Commute {
+        /// `(i, j)` node pairs.
+        pairs: Vec<(usize, usize)>,
+        /// Sampling knobs.
+        cfg: GrfConfig,
+    },
+}
+
+impl KernelSpec {
+    /// Stable wire tag (`diffusion` | `ppr` | `grf` | `commute`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            KernelSpec::Power { kernel, .. } => kernel.tag(),
+            KernelSpec::Grf { .. } => "grf",
+            KernelSpec::Commute { .. } => "commute",
+        }
+    }
+}

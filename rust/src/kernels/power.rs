@@ -1,0 +1,270 @@
+//! Deterministic power-iteration kernels: t-step diffusion embeddings and
+//! personalized PageRank with restart, both as multi-RHS
+//! [`TransitionOp::matmul_into`] loops with a double-buffered,
+//! allocation-free steady state (the [`crate::labelprop::propagate`]
+//! execution shape).
+//!
+//! - **Diffusion** (`P^t·Y0`): the t-step random-walk / heat-kernel
+//!   embedding of arXiv:2410.10368's power family — column `c` of the
+//!   result is the walk distribution after `t` steps from the
+//!   distribution in column `c` of `Y0`.
+//! - **PPR** (`Y ← (1−α)·P·Y + α·Y0`): personalized PageRank with restart
+//!   probability `α`; `steps` iterations of the restart recurrence, which
+//!   converges geometrically to `α·(I−(1−α)P)⁻¹·Y0`. Plain PageRank is
+//!   the special case `Y0 = 1/N` (the CLI builds that column).
+//!
+//! Both recurrences are column-independent and run on the operator's
+//! multi-RHS path, so concurrent requests with matching shapes fuse in
+//! the coordinator bit-exactly (see
+//! [`crate::coordinator::CoordinatorHandle::kernel`]), and `P·1 = 1`
+//! (row-stochastic P) makes the all-ones column a fixed point of both —
+//! the conformance suite's invariant.
+
+use crate::core::error::VdtError;
+use crate::core::op::TransitionOp;
+use crate::core::Matrix;
+
+/// A deterministic power-iteration kernel spec. `Copy` + `Eq` + `Hash`
+/// (PPR's `α` compares by bit pattern) so the coordinator can key fusion
+/// groups by `(model, kernel)`.
+#[derive(Clone, Copy, Debug)]
+pub enum PowerKernel {
+    /// `P^steps · Y0` — the t-step diffusion embedding.
+    Diffusion {
+        /// Number of walk steps `t` (≥ 1).
+        steps: usize,
+    },
+    /// `steps` iterations of `Y ← (1−α)·P·Y + α·Y0`.
+    Ppr {
+        /// Restart probability `α ∈ (0, 1]`.
+        alpha: f32,
+        /// Iteration count (≥ 1); the residual decays as `(1−α)^steps`.
+        steps: usize,
+    },
+}
+
+impl PowerKernel {
+    /// Iteration count (one operator apply per step for either kernel).
+    pub fn steps(&self) -> usize {
+        match *self {
+            PowerKernel::Diffusion { steps } | PowerKernel::Ppr { steps, .. } => steps,
+        }
+    }
+
+    /// Stable wire/CLI tag (`diffusion` | `ppr`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            PowerKernel::Diffusion { .. } => "diffusion",
+            PowerKernel::Ppr { .. } => "ppr",
+        }
+    }
+
+    /// Typed spec validation — what the serving layers answer 400 with.
+    pub fn validate(&self) -> Result<(), VdtError> {
+        match *self {
+            PowerKernel::Diffusion { steps } => {
+                if steps == 0 {
+                    return Err(VdtError::InvalidSpec(
+                        "diffusion kernel needs steps >= 1".to_string(),
+                    ));
+                }
+            }
+            PowerKernel::Ppr { alpha, steps } => {
+                if steps == 0 {
+                    return Err(VdtError::InvalidSpec("ppr kernel needs steps >= 1".to_string()));
+                }
+                if !alpha.is_finite() || alpha <= 0.0 || alpha > 1.0 {
+                    return Err(VdtError::InvalidSpec(format!(
+                        "ppr restart alpha must be in (0, 1], got {alpha}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// `α` compares/hashes by bit pattern: kernel specs arrive over the wire
+// as concrete numbers (never NaN past `validate`), and two requests fuse
+// only when their recurrences are literally identical.
+impl PartialEq for PowerKernel {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (PowerKernel::Diffusion { steps: a }, PowerKernel::Diffusion { steps: b }) => a == b,
+            (
+                PowerKernel::Ppr { alpha: a, steps: s },
+                PowerKernel::Ppr { alpha: b, steps: t },
+            ) => a.to_bits() == b.to_bits() && s == t,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for PowerKernel {}
+
+impl std::hash::Hash for PowerKernel {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        match *self {
+            PowerKernel::Diffusion { steps } => {
+                0u8.hash(state);
+                steps.hash(state);
+            }
+            PowerKernel::Ppr { alpha, steps } => {
+                1u8.hash(state);
+                alpha.to_bits().hash(state);
+                steps.hash(state);
+            }
+        }
+    }
+}
+
+/// Run `kernel` on `y0`, writing the result into `y` — the
+/// allocation-free serving path. `y` and `scratch` are the double
+/// buffers; both must be pre-sized to `y0`'s shape (`y0.rows` must be the
+/// operator's N — serving layers validate first and answer
+/// [`VdtError::ShapeMismatch`]; a violation here is a programming error
+/// and panics). On return `y` holds the result; `scratch` is clobbered.
+///
+/// Each step is one multi-RHS apply plus (for PPR) one elementwise
+/// `scale_add`, both column-independent — so a fused multi-request batch
+/// is bit-identical to the requests run alone, and the output is
+/// bit-identical across `VDT_THREADS`/`VDT_SIMD` default tiers (the
+/// matmul contract).
+pub fn power_into(
+    op: &dyn TransitionOp,
+    kernel: PowerKernel,
+    y0: &Matrix,
+    y: &mut Matrix,
+    scratch: &mut Matrix,
+) {
+    assert_eq!(y0.rows, op.n(), "Y0 rows must equal the operator's N");
+    assert_eq!((y.rows, y.cols), (y0.rows, y0.cols), "output buffer shape");
+    assert_eq!((scratch.rows, scratch.cols), (y0.rows, y0.cols), "scratch buffer shape");
+    y.data.copy_from_slice(&y0.data);
+    match kernel {
+        PowerKernel::Diffusion { steps } => {
+            for _ in 0..steps {
+                op.matmul_into(y, scratch);
+                std::mem::swap(y, scratch);
+            }
+        }
+        PowerKernel::Ppr { alpha, steps } => {
+            for _ in 0..steps {
+                op.matmul_into(y, scratch);
+                // scratch = (1−α)·P·Y + α·Y0
+                scratch.scale_add(1.0 - alpha, alpha, y0);
+                std::mem::swap(y, scratch);
+            }
+        }
+    }
+}
+
+/// Allocating convenience over [`power_into`].
+pub fn power(op: &dyn TransitionOp, kernel: PowerKernel, y0: &Matrix) -> Matrix {
+    let mut y = Matrix::zeros(y0.rows, y0.cols);
+    let mut scratch = Matrix::zeros(y0.rows, y0.cols);
+    power_into(op, kernel, y0, &mut y, &mut scratch);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn fitted(n: usize, seed: u64) -> VdtModel {
+        let ds = synthetic::two_moons(n, 0.07, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * n);
+        m
+    }
+
+    #[test]
+    fn one_step_diffusion_is_the_matmul() {
+        let m = fitted(40, 1);
+        let y0 = Matrix::from_fn(40, 3, |r, c| ((r * 3 + c) % 5) as f32 - 2.0);
+        let got = power(&m, PowerKernel::Diffusion { steps: 1 }, &y0);
+        assert_eq!(got.data, m.matmul(&y0).data);
+    }
+
+    #[test]
+    fn diffusion_matches_repeated_matmul() {
+        let m = fitted(40, 2);
+        let y0 = Matrix::from_fn(40, 2, |r, c| ((r + c) % 3) as f32);
+        let mut want = y0.clone();
+        for _ in 0..5 {
+            want = m.matmul(&want);
+        }
+        let got = power(&m, PowerKernel::Diffusion { steps: 5 }, &y0);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn ppr_matches_labelprop_recurrence() {
+        // labelprop's propagate computes Y ← α_lp·P·Y + (1−α_lp)·Y0; PPR
+        // with restart α is the same recurrence at α_lp = 1−α
+        let m = fitted(50, 3);
+        let y0 = Matrix::from_fn(50, 2, |r, c| ((r * 2 + c) % 4) as f32);
+        let alpha = 0.15f32;
+        let want = crate::labelprop::propagate(
+            &m,
+            &y0,
+            &crate::labelprop::LpConfig { alpha: 1.0 - alpha, steps: 30 },
+        );
+        let got = power(&m, PowerKernel::Ppr { alpha, steps: 30 }, &y0);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn ones_column_is_a_fixed_point() {
+        // P is row-stochastic, so P·1 = 1: both kernels leave the all-ones
+        // column (numerically) unchanged
+        let m = fitted(60, 4);
+        let ones = Matrix::from_fn(60, 1, |_, _| 1.0);
+        for kernel in [
+            PowerKernel::Diffusion { steps: 8 },
+            PowerKernel::Ppr { alpha: 0.2, steps: 8 },
+        ] {
+            let out = power(&m, kernel, &ones);
+            for r in 0..60 {
+                assert!((out.get(r, 0) - 1.0).abs() < 1e-4, "{} row {r}", kernel.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_columns_equal_stacked_runs() {
+        let m = fitted(40, 5);
+        let kernel = PowerKernel::Ppr { alpha: 0.1, steps: 12 };
+        let y0 = Matrix::from_fn(40, 5, |r, c| ((r * 5 + c) % 7) as f32 - 3.0);
+        let fused = power(&m, kernel, &y0);
+        for c in 0..5 {
+            let col = Matrix::from_fn(40, 1, |r, _| y0.get(r, c));
+            let alone = power(&m, kernel, &col);
+            for r in 0..40 {
+                assert_eq!(fused.get(r, c), alone.get(r, 0), "col {c} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn specs_validate() {
+        assert!(PowerKernel::Diffusion { steps: 0 }.validate().is_err());
+        assert!(PowerKernel::Ppr { alpha: 0.0, steps: 5 }.validate().is_err());
+        assert!(PowerKernel::Ppr { alpha: 1.5, steps: 5 }.validate().is_err());
+        assert!(PowerKernel::Ppr { alpha: f32::NAN, steps: 5 }.validate().is_err());
+        assert!(PowerKernel::Ppr { alpha: 0.15, steps: 0 }.validate().is_err());
+        assert!(PowerKernel::Ppr { alpha: 0.15, steps: 5 }.validate().is_ok());
+        assert!(PowerKernel::Diffusion { steps: 3 }.validate().is_ok());
+        // fusion-key semantics: equal specs compare equal, α by bits
+        assert_eq!(
+            PowerKernel::Ppr { alpha: 0.15, steps: 5 },
+            PowerKernel::Ppr { alpha: 0.15, steps: 5 }
+        );
+        assert_ne!(
+            PowerKernel::Ppr { alpha: 0.15, steps: 5 },
+            PowerKernel::Diffusion { steps: 5 }
+        );
+    }
+}

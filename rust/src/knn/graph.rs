@@ -223,6 +223,25 @@ impl TransitionOp for KnnGraph {
             provenance: self.provenance.clone(),
         }
     }
+
+    /// Scatter the CSR row — the stored values are already the f32 entries
+    /// the dense matvec multiplies by, so the expansion is bit-exact.
+    fn transition_row_into(&self, i: usize, out: &mut [f32]) -> Result<(), crate::core::error::VdtError> {
+        use crate::core::error::VdtError;
+        let n = self.x.rows;
+        if i >= n {
+            return Err(VdtError::ShapeMismatch { what: "row index", expected: n, got: i });
+        }
+        if out.len() != n {
+            return Err(VdtError::ShapeMismatch { what: "row buffer", expected: n, got: out.len() });
+        }
+        out.fill(0.0);
+        let (idx, vals) = self.p.row(i);
+        for (&j, &v) in idx.iter().zip(vals) {
+            out[j as usize] = v;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -142,6 +142,7 @@ pub mod core;
 pub mod data;
 pub mod exact;
 pub mod experiments;
+pub mod kernels;
 pub mod knn;
 pub mod labelprop;
 pub mod linkanalysis;

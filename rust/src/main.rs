@@ -25,6 +25,7 @@ use vdt::core::op::{Backend, ModelCard};
 use vdt::data::{io, synthetic, Dataset};
 use vdt::exact::XlaExactModel;
 use vdt::experiments::{fig2, tables, Table};
+use vdt::kernels::{self, GrfConfig, PowerKernel};
 use vdt::labelprop::{self, LpConfig};
 use vdt::runtime::server::{self, Server, ServerConfig};
 use vdt::vdt::VdtModel;
@@ -45,6 +46,13 @@ COMMANDS
             --alpha <f> (0.01)  --steps <int> (500)
   spectral  top Ritz values of P via Arnoldi
             (build flags +) --m <krylov dim> (20)
+  kernel    graph kernels on a fitted model (deterministic diffusion/PPR
+            power iterations; GRF resolvent rows; commute distances)
+            (build flags +) --kind diffusion|ppr|grf|commute (ppr)
+            --starts 0,1,... (0)   source nodes (power columns / GRF rows)
+            --steps <int> (10)  --alpha <f> (0.15)    power kernels
+            --walks <int> (64)  --gamma <f> (0.5)  --halt <f> (0.5)
+            --pairs i:j,... (0:1)  commute-distance node pairs
   exp       regenerate a paper experiment and write results/<id>.csv
             ids: fig2abc fig2digit1 fig2usps table1 table2 all
             --sizes 500,1000,...  --reps <int> (5)  --steps <int> (500)
@@ -68,7 +76,8 @@ COMMANDS
             of fitting (each registers under its file stem)
             --http <addr>            e.g. 0.0.0.0:8080; endpoints:
                                      GET /healthz /stats /v1/models,
-                                     POST /v1/models/{name}/matvec|query|labelprop
+                                     POST /v1/models/{name}/
+                                          matvec|query|labelprop|kernel
             --max-conns <int> (4096)      concurrent connections before 429
             --http-workers <int> (32)     compute-pool threads (throughput,
                                           not the connection ceiling)
@@ -174,6 +183,48 @@ fn print_card(card: &ModelCard) {
     println!("model card: {}", card.summary());
 }
 
+/// `--starts 0,17,42` → bounds-checked node indices.
+fn parse_index_list(s: &str, flag: &str, n: usize) -> Result<Vec<usize>> {
+    let v: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow!("bad --{flag}: {e}"))?;
+    for &i in &v {
+        if i >= n {
+            return Err(anyhow!("--{flag} node {i} out of range (N = {n})"));
+        }
+    }
+    Ok(v)
+}
+
+/// `--pairs 0:5,3:9` → bounds-checked (i, j) node pairs.
+fn parse_pair_list(s: &str, n: usize) -> Result<Vec<(usize, usize)>> {
+    s.split(',')
+        .map(|p| {
+            let (a, b) = p
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad --pairs entry '{p}': want i:j"))?;
+            let (a, b): (usize, usize) = (a.parse()?, b.parse()?);
+            if a >= n || b >= n {
+                return Err(anyhow!("--pairs {a}:{b} out of range (N = {n})"));
+            }
+            Ok((a, b))
+        })
+        .collect()
+}
+
+/// Print the k largest entries of a kernel row/column plus its mass.
+fn print_top(label: &str, row: &[f32], k: usize) {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let total: f32 = row.iter().sum();
+    let top: Vec<String> =
+        idx.iter().take(k).map(|&j| format!("{j}:{:.4}", row[j])).collect();
+    println!("  {label}: sum = {total:.4}, top = [{}]", top.join(", "));
+}
+
 fn print_and_save(t: &Table, out: &str, id: &str) {
     println!("{}", t.render());
     let path = format!("{out}/{id}.csv");
@@ -260,7 +311,8 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
     let server = Server::bind(handle.clone(), addr, cfg)?;
     println!(
         "listening on http://{} (batching {}); \
-         GET /healthz /stats /v1/models, POST /v1/models/{{name}}/matvec|query|labelprop",
+         GET /healthz /stats /v1/models, \
+         POST /v1/models/{{name}}/matvec|query|labelprop|kernel",
         server.addr(),
         if batching { "on" } else { "off" }
     );
@@ -368,6 +420,98 @@ fn main() -> Result<()> {
                     if *im >= 0.0 { "+" } else { "-" },
                     im.abs()
                 );
+            }
+        }
+        "kernel" => {
+            let n = args.get("n", 1500usize)?;
+            let seed = args.get("seed", 0u64)?;
+            let ds = make_dataset(&args.get_str("dataset", "digit1"), n, seed)?;
+            let (builder, backend) = model_builder(&ds, &args, 6)?;
+            if backend == Backend::ExactXla {
+                return Err(anyhow!(
+                    "kernel: --method exact-xla is not supported here (the walk \
+                     sampler needs a Sync operator); use vdt|knn|exact"
+                ));
+            }
+            let t = Timer::start();
+            let model = builder.build()?;
+            println!(
+                "built {} on {} (N={}) in {:.1} ms",
+                model.card().backend,
+                ds.name,
+                ds.n(),
+                t.ms()
+            );
+            let kind = args.get_str("kind", "ppr");
+            let starts = parse_index_list(&args.get_str("starts", "0"), "starts", n)?;
+            match kind.as_str() {
+                "diffusion" | "ppr" => {
+                    let steps = args.get("steps", 10usize)?;
+                    let kernel = if kind == "diffusion" {
+                        PowerKernel::Diffusion { steps }
+                    } else {
+                        PowerKernel::Ppr { alpha: args.get("alpha", 0.15f32)?, steps }
+                    };
+                    kernel.validate()?;
+                    // one indicator column per start node: column c of the
+                    // result is P^t·e_s (entry j = t-step walk probability
+                    // j → s), resp. the PPR column personalized on s
+                    let y0 = vdt::Matrix::from_fn(n, starts.len(), |r, c| {
+                        if r == starts[c] {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    });
+                    let t2 = Timer::start();
+                    let k = kernels::power(&model, kernel, &y0);
+                    println!("{kind} (steps={steps}) in {:.1} ms", t2.ms());
+                    for (c, &s) in starts.iter().enumerate() {
+                        let col: Vec<f32> = (0..n).map(|r| k.row(r)[c]).collect();
+                        print_top(&format!("node {s}"), &col, 5);
+                    }
+                }
+                "grf" | "commute" => {
+                    let cfg = GrfConfig {
+                        walks: args.get("walks", 64usize)?,
+                        gamma: args.get("gamma", 0.5f64)?,
+                        halt: args.get("halt", 0.5f64)?,
+                        seed,
+                        ..GrfConfig::default()
+                    };
+                    let t2 = Timer::start();
+                    if kind == "grf" {
+                        let k = kernels::grf_rows(&model, &starts, &cfg)?;
+                        println!(
+                            "grf ({} walks/node, γ={}, halt={}) in {:.1} ms",
+                            cfg.walks,
+                            cfg.gamma,
+                            cfg.halt,
+                            t2.ms()
+                        );
+                        for (r, &s) in starts.iter().enumerate() {
+                            print_top(&format!("K_γ row of node {s}"), k.row(r), 5);
+                        }
+                    } else {
+                        let pairs = parse_pair_list(&args.get_str("pairs", "0:1"), n)?;
+                        let d = kernels::commute_times(&model, &pairs, &cfg)?;
+                        println!(
+                            "commute ({} walks/node, γ={}, halt={}) in {:.1} ms",
+                            cfg.walks,
+                            cfg.gamma,
+                            cfg.halt,
+                            t2.ms()
+                        );
+                        for (r, &(i, j)) in pairs.iter().enumerate() {
+                            println!("  d({i}, {j}) = {:.6}", d.row(r)[0]);
+                        }
+                    }
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unknown --kind {other}; want diffusion|ppr|grf|commute"
+                    ))
+                }
             }
         }
         "exp" => {

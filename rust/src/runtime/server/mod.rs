@@ -30,6 +30,7 @@
 //! | `POST /v1/models/{name}/matvec` | `{"y": [[..], ..]}` → `{"yhat": [[..], ..]}` (Ŷ = P·Y) |
 //! | `POST /v1/models/{name}/query` | `{"x": [[..], ..]}` → `{"rows": [[..], ..]}` — **inductive** posterior rows for out-of-sample points |
 //! | `POST /v1/models/{name}/labelprop` | `{"y0": [[..], ..], "alpha": a, "steps": s}` → `{"y": [[..], ..]}` |
+//! | `POST /v1/models/{name}/kernel` | graph kernels ([`crate::kernels`]): `{"kind": "diffusion"\|"ppr", "y0": [[..], ..], "steps": s, "alpha": a}` or `{"kind": "grf", "starts": [..], "walks": w, "gamma": g, "halt": h, "seed": s}` or `{"kind": "commute", "pairs": [[i, j], ..], ...}` → `{"k": [[..], ..]}` |
 //! | `GET /v1/models` | registered [`crate::core::op::ModelCard`]s as JSON |
 //! | `GET /healthz` | liveness |
 //! | `GET /stats` | coordinator + HTTP + batching counters |
@@ -142,6 +143,7 @@ use crate::coordinator::CoordinatorHandle;
 use crate::core::error::VdtError;
 use crate::core::json::{self, Json};
 use crate::core::Matrix;
+use crate::kernels::{GrfConfig, KernelSpec, PowerKernel};
 use crate::labelprop::LpConfig;
 
 use batch::{BatchCounters, BatchKind, Batcher};
@@ -163,6 +165,19 @@ pub const MAX_LP_WORK: u64 = 10_000_000_000;
 /// without this cap a ~30 MiB body of low-dimensional points (well under
 /// the body cap) could demand a 100+ GiB response allocation.
 pub const MAX_QUERY_ROWS: usize = 1024;
+
+/// Ceiling on the `walks` a GRF kernel request may ask for. Estimator
+/// error shrinks as `1/√walks`, so 65k walks already buys ~250× the
+/// default-config accuracy; anything beyond that is DoS margin, not
+/// statistics.
+pub const MAX_GRF_WALKS: usize = 1 << 16;
+
+/// Ceiling on a GRF request's expected sampling work, measured as
+/// `walks × start nodes ÷ halt` (expected walk length is `1/halt`
+/// steps, each touching one dense length-N transition row). Capping
+/// `walks` alone is not enough: a tiny `halt` multiplies per-walk cost
+/// without bound.
+pub const MAX_GRF_WORK: f64 = 100_000_000.0;
 
 /// Tuning for [`Server::bind`] — see the module docs for what each knob
 /// buys.
@@ -1062,7 +1077,7 @@ fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
                     not_found(&format!("/v1/models//{action}"))
                 }
                 Some((name, action)) => {
-                    if !matches!(action, "matvec" | "query" | "labelprop") {
+                    if !matches!(action, "matvec" | "query" | "labelprop" | "kernel") {
                         return not_found(path);
                     }
                     if method != "POST" {
@@ -1081,7 +1096,7 @@ fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
 fn not_found(path: &str) -> (u16, String) {
     let msg = format!(
         "no route {path}; see /healthz, /stats, /v1/models, \
-         /v1/models/{{name}}/{{matvec|query|labelprop}}"
+         /v1/models/{{name}}/{{matvec|query|labelprop|kernel}}"
     );
     (404, kind_body("not_found", &msg))
 }
@@ -1163,8 +1178,202 @@ fn model_action(
             let out = shared.handle.label_prop(name, y0, LpConfig { alpha, steps })?;
             Ok(matrix_body("y", &out))
         }
+        "kernel" => {
+            let spec = kernel_spec_from_json(&parsed)?;
+            // not routed through the micro-batcher: power requests fuse
+            // inside the coordinator's burst loop (same (model, kernel)
+            // groups share one multi-RHS sweep), and walk sampling is
+            // per-request work with nothing to fuse
+            let out = shared.handle.kernel(name, spec)?;
+            Ok(matrix_body("k", &out))
+        }
         _ => unreachable!("route() filters actions"),
     }
+}
+
+/// Decode a `POST .../kernel` body into a [`KernelSpec`], enforcing the
+/// server-side resource caps ([`MAX_LP_STEPS`]/[`MAX_LP_WORK`] for power
+/// kernels, [`MAX_GRF_WALKS`]/[`MAX_GRF_WORK`]/[`MAX_QUERY_ROWS`] for
+/// walk sampling). Like labelprop, a kernel run occupies a coordinator
+/// worker for its full duration, so untrusted request size must be
+/// bounded here, before the request reaches the owner thread.
+fn kernel_spec_from_json(obj: &Json) -> Result<KernelSpec, VdtError> {
+    let kind = obj.get("kind").and_then(|v| v.as_str()).ok_or_else(|| {
+        VdtError::InvalidSpec(
+            "missing field 'kind' (one of diffusion | ppr | grf | commute)".to_string(),
+        )
+    })?;
+    match kind {
+        "diffusion" | "ppr" => {
+            let y0 = field_matrix(obj, "y0")?;
+            let steps = match field_opt_usize(obj, "steps")? {
+                Some(s) => s,
+                None => 10,
+            };
+            if steps > MAX_LP_STEPS {
+                return Err(VdtError::InvalidSpec(format!(
+                    "steps must be ≤ {MAX_LP_STEPS}, got {steps}"
+                )));
+            }
+            let work = (steps as u64).saturating_mul(y0.data.len() as u64);
+            if work > MAX_LP_WORK {
+                return Err(VdtError::InvalidSpec(format!(
+                    "steps × y0 elements must be ≤ {MAX_LP_WORK}, got {work}; \
+                     lower steps or split the columns"
+                )));
+            }
+            let kernel = if kind == "diffusion" {
+                PowerKernel::Diffusion { steps }
+            } else {
+                let alpha = match field_opt_f64(obj, "alpha")? {
+                    Some(a) => a as f32,
+                    None => 0.15,
+                };
+                PowerKernel::Ppr { alpha, steps }
+            };
+            kernel.validate()?;
+            Ok(KernelSpec::Power { kernel, y0 })
+        }
+        "grf" => {
+            let starts = field_indices(obj, "starts")?;
+            let cfg = grf_config_from_json(obj)?;
+            check_walk_budget(starts.len(), "start nodes", &cfg)?;
+            Ok(KernelSpec::Grf { starts, cfg })
+        }
+        "commute" => {
+            let pairs = field_pairs(obj, "pairs")?;
+            let cfg = grf_config_from_json(obj)?;
+            check_walk_budget(pairs.len().saturating_mul(2), "pair endpoints", &cfg)?;
+            Ok(KernelSpec::Commute { pairs, cfg })
+        }
+        other => Err(VdtError::InvalidSpec(format!(
+            "unknown kernel kind '{other}'; expected diffusion | ppr | grf | commute"
+        ))),
+    }
+}
+
+/// [`GrfConfig`] from optional request fields, defaults from
+/// [`GrfConfig::default`]. Validation happens in [`check_walk_budget`].
+fn grf_config_from_json(obj: &Json) -> Result<GrfConfig, VdtError> {
+    let mut cfg = GrfConfig::default();
+    if let Some(w) = field_opt_usize(obj, "walks")? {
+        cfg.walks = w;
+    }
+    if let Some(g) = field_opt_f64(obj, "gamma")? {
+        cfg.gamma = g;
+    }
+    if let Some(h) = field_opt_f64(obj, "halt")? {
+        cfg.halt = h;
+    }
+    if let Some(s) = field_opt_usize(obj, "seed")? {
+        cfg.seed = s as u64;
+    }
+    if let Some(m) = field_opt_usize(obj, "max_steps")? {
+        cfg.max_steps = m;
+    }
+    Ok(cfg)
+}
+
+/// Reject walk-sampling requests whose expected cost exceeds the server
+/// budget. `rows` is the number of output rows the request materializes
+/// (start nodes, or 2 × pairs).
+fn check_walk_budget(rows: usize, what: &str, cfg: &GrfConfig) -> Result<(), VdtError> {
+    cfg.validate()?;
+    if rows > MAX_QUERY_ROWS {
+        return Err(VdtError::InvalidSpec(format!(
+            "at most {MAX_QUERY_ROWS} {what} per request, got {rows} \
+             (each materializes a dense length-N kernel row)"
+        )));
+    }
+    if cfg.walks > MAX_GRF_WALKS {
+        return Err(VdtError::InvalidSpec(format!(
+            "walks must be ≤ {MAX_GRF_WALKS}, got {}",
+            cfg.walks
+        )));
+    }
+    let expected = cfg.walks as f64 * rows as f64 / cfg.halt;
+    if expected > MAX_GRF_WORK {
+        return Err(VdtError::InvalidSpec(format!(
+            "walks × {what} ÷ halt must be ≤ {MAX_GRF_WORK:.0}, got {expected:.0}; \
+             lower walks, raise halt, or split the request"
+        )));
+    }
+    Ok(())
+}
+
+/// Optional non-negative-integer field.
+fn field_opt_usize(obj: &Json, key: &'static str) -> Result<Option<usize>, VdtError> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+            VdtError::InvalidSpec(format!("field '{key}' must be a non-negative integer"))
+        }),
+    }
+}
+
+/// Optional numeric field.
+fn field_opt_f64(obj: &Json, key: &'static str) -> Result<Option<f64>, VdtError> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+            VdtError::InvalidSpec(format!("field '{key}' must be a number"))
+        }),
+    }
+}
+
+/// Required non-empty array of node indices.
+fn field_indices(obj: &Json, key: &'static str) -> Result<Vec<usize>, VdtError> {
+    let arr = obj.get(key).and_then(|v| v.as_arr()).ok_or_else(|| {
+        VdtError::InvalidSpec(format!("missing field '{key}' (an array of node indices)"))
+    })?;
+    if arr.is_empty() {
+        return Err(VdtError::InvalidSpec(format!(
+            "'{key}' must contain at least one node index"
+        )));
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_usize().ok_or_else(|| {
+                VdtError::InvalidSpec(format!(
+                    "'{key}'[{i}] must be a non-negative integer"
+                ))
+            })
+        })
+        .collect()
+}
+
+/// Required non-empty array of `[i, j]` node pairs.
+fn field_pairs(obj: &Json, key: &'static str) -> Result<Vec<(usize, usize)>, VdtError> {
+    let arr = obj.get(key).and_then(|v| v.as_arr()).ok_or_else(|| {
+        VdtError::InvalidSpec(format!(
+            "missing field '{key}' (an array of [i, j] node pairs)"
+        ))
+    })?;
+    if arr.is_empty() {
+        return Err(VdtError::InvalidSpec(format!(
+            "'{key}' must contain at least one [i, j] pair"
+        )));
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let bad = || {
+                VdtError::InvalidSpec(format!(
+                    "'{key}'[{i}] must be a two-element [i, j] array of \
+                     non-negative integers"
+                ))
+            };
+            let pair = v.as_arr().ok_or_else(bad)?;
+            if pair.len() != 2 {
+                return Err(bad());
+            }
+            Ok((
+                pair[0].as_usize().ok_or_else(bad)?,
+                pair[1].as_usize().ok_or_else(bad)?,
+            ))
+        })
+        .collect()
 }
 
 /// Matvec/query dispatch: through the micro-batcher when enabled, else a
@@ -1459,6 +1668,70 @@ mod tests {
         ] {
             let v = Json::parse(src).unwrap();
             let err = matrix_from_json(&v, "y").unwrap_err();
+            assert!(matches!(err, VdtError::InvalidSpec(_)), "{why}: {err}");
+        }
+    }
+
+    #[test]
+    fn kernel_specs_parse_with_defaults_and_typed_caps() {
+        // diffusion: default steps = 10
+        let v = Json::parse(r#"{"kind":"diffusion","y0":[[1],[0]]}"#).unwrap();
+        let spec = kernel_spec_from_json(&v).unwrap();
+        assert!(matches!(
+            spec,
+            KernelSpec::Power { kernel: PowerKernel::Diffusion { steps: 10 }, .. }
+        ));
+
+        // ppr: default alpha = 0.15, explicit steps
+        let v = Json::parse(r#"{"kind":"ppr","y0":[[1],[0]],"steps":7}"#).unwrap();
+        let spec = kernel_spec_from_json(&v).unwrap();
+        match spec {
+            KernelSpec::Power { kernel: PowerKernel::Ppr { alpha, steps }, .. } => {
+                assert_eq!(steps, 7);
+                assert!((alpha - 0.15).abs() < 1e-6);
+            }
+            other => panic!("wrong spec: {}", other.tag()),
+        }
+
+        // grf: knobs land in the config, defaults fill the rest
+        let v = Json::parse(r#"{"kind":"grf","starts":[0,3],"walks":32,"halt":0.4,"seed":9}"#)
+            .unwrap();
+        match kernel_spec_from_json(&v).unwrap() {
+            KernelSpec::Grf { starts, cfg } => {
+                assert_eq!(starts, vec![0, 3]);
+                assert_eq!((cfg.walks, cfg.seed), (32, 9));
+                assert_eq!(cfg.halt, 0.4);
+                assert_eq!(cfg.gamma, GrfConfig::default().gamma);
+            }
+            other => panic!("wrong spec: {}", other.tag()),
+        }
+
+        // commute: pairs parse as [i, j] arrays
+        let v = Json::parse(r#"{"kind":"commute","pairs":[[0,5],[2,2]]}"#).unwrap();
+        match kernel_spec_from_json(&v).unwrap() {
+            KernelSpec::Commute { pairs, .. } => assert_eq!(pairs, vec![(0, 5), (2, 2)]),
+            other => panic!("wrong spec: {}", other.tag()),
+        }
+
+        // every malformed or over-budget body is a typed InvalidSpec
+        for (src, why) in [
+            (r#"{"y0":[[1]]}"#, "missing kind"),
+            (r#"{"kind":"resolvent","y0":[[1]]}"#, "unknown kind"),
+            (r#"{"kind":"diffusion"}"#, "missing y0"),
+            (r#"{"kind":"diffusion","y0":[[1]],"steps":200000}"#, "steps cap"),
+            (r#"{"kind":"ppr","y0":[[1]],"alpha":2.0}"#, "alpha out of range"),
+            (r#"{"kind":"grf","starts":[]}"#, "empty starts"),
+            (r#"{"kind":"grf","starts":[0],"walks":100000}"#, "walks cap"),
+            (r#"{"kind":"grf","starts":[0],"halt":1.5}"#, "halt out of range"),
+            (
+                r#"{"kind":"grf","starts":[0],"walks":65536,"halt":0.0001}"#,
+                "work budget",
+            ),
+            (r#"{"kind":"commute","pairs":[[0,1,2]]}"#, "triple, not a pair"),
+            (r#"{"kind":"commute","pairs":[0,1]}"#, "pair not an array"),
+        ] {
+            let v = Json::parse(src).unwrap();
+            let err = kernel_spec_from_json(&v).unwrap_err();
             assert!(matches!(err, VdtError::InvalidSpec(_)), "{why}: {err}");
         }
     }

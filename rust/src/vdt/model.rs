@@ -455,6 +455,41 @@ impl TransitionOp for VdtModel {
         row.expand_into(&self.tree, out);
         Ok(())
     }
+
+    /// Q's row `i` without materializing Q: walk leaf `i`'s path to the
+    /// root and expand each marked block `(A, B)` on it — `i ∈ leaves(A)`
+    /// by construction, so `q_AB` covers `out[j]` for every
+    /// `j ∈ leaves(B)`. The alive blocks tile the off-diagonal exactly
+    /// (see [`super::partition::BlockPartition::validate`]), so every
+    /// `j ≠ i` is written once and `out[i]` stays 0 (`q_ii = 0`). Writes
+    /// `blk.q as f32`, identical to `materialize()` and to the f64
+    /// matvec of the indicator column (one term, unit weight).
+    fn transition_row_into(&self, i: usize, out: &mut [f32]) -> Result<(), VdtError> {
+        let n = self.tree.n;
+        if i >= n {
+            return Err(VdtError::ShapeMismatch { what: "row index", expected: n, got: i });
+        }
+        if out.len() != n {
+            return Err(VdtError::ShapeMismatch { what: "row buffer", expected: n, got: out.len() });
+        }
+        out.fill(0.0);
+        let mut a = i as u32;
+        loop {
+            for &bi in &self.partition.marks[a as usize] {
+                let blk = &self.partition.blocks[bi as usize];
+                let q = blk.q as f32;
+                for &j in &self.tree.leaves_under(blk.kernel) {
+                    out[j as usize] = q;
+                }
+            }
+            let p = self.tree.parent[a as usize];
+            if p == crate::tree::NONE {
+                break;
+            }
+            a = p;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -20,6 +20,7 @@ use std::time::Duration;
 use vdt::coordinator::{Coordinator, CoordinatorHandle};
 use vdt::core::json::Json;
 use vdt::core::Matrix;
+use vdt::kernels::{self, GrfConfig, PowerKernel};
 use vdt::labelprop::{self, LpConfig};
 use vdt::runtime::server::client::HttpClient;
 use vdt::runtime::server::{
@@ -187,6 +188,137 @@ fn labelprop_over_http_matches_in_process_run() {
     assert_eq!(got.data, want.data, "HTTP labelprop drifted from the coordinator");
     let ccr = labelprop::ccr(&got, &ds.labels, &labeled);
     assert!(ccr > 0.8, "CCR {ccr}");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn kernel_endpoint_matches_in_process_kernels() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    // power kernels over the wire are bit-identical to the library call
+    // on the same (snapshot-identical) model
+    let nodes = [3usize, 77];
+    let y0 = Matrix::from_fn(N, 2, |r, col| if r == nodes[col] { 1.0 } else { 0.0 });
+    let mut body = String::from("{\"kind\":\"ppr\",\"alpha\":0.2,\"steps\":15,\"y0\":");
+    write_matrix(&mut body, &y0);
+    body.push('}');
+    let (status, resp) = c.post("/v1/models/m/kernel", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let want = kernels::power(&*model, PowerKernel::Ppr { alpha: 0.2, steps: 15 }, &y0);
+    assert_eq!(parse_matrix(&resp, "k").data, want.data, "HTTP PPR drifted");
+
+    // diffusion picks up the default steps = 10
+    let mut body = String::from("{\"kind\":\"diffusion\",\"y0\":");
+    write_matrix(&mut body, &y0);
+    body.push('}');
+    let (status, resp) = c.post("/v1/models/m/kernel", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let want = kernels::power(&*model, PowerKernel::Diffusion { steps: 10 }, &y0);
+    assert_eq!(parse_matrix(&resp, "k").data, want.data, "HTTP diffusion drifted");
+
+    // seeded GRF sampling is reproducible over the wire
+    let cfg = GrfConfig { walks: 16, seed: 5, ..GrfConfig::default() };
+    let (status, resp) = c
+        .post("/v1/models/m/kernel", "{\"kind\":\"grf\",\"starts\":[3,77],\"walks\":16,\"seed\":5}")
+        .unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let want = kernels::grf_rows(&*model, &nodes, &cfg).unwrap();
+    assert_eq!(parse_matrix(&resp, "k").data, want.data, "HTTP GRF drifted");
+
+    // commute distances ride the same sampler
+    let (status, resp) = c
+        .post(
+            "/v1/models/m/kernel",
+            "{\"kind\":\"commute\",\"pairs\":[[3,77]],\"walks\":16,\"seed\":5}",
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let want = kernels::commute_times(&*model, &[(3, 77)], &cfg).unwrap();
+    assert_eq!(parse_matrix(&resp, "k").data, want.data, "HTTP commute drifted");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn kernel_endpoint_rejects_bad_specs_with_typed_errors() {
+    let (handle, server, _model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let cases: Vec<(&str, String, u16, &str)> = vec![
+        // spec-layer rejections (parsed before any model work)
+        ("/v1/models/m/kernel", "{\"y0\": [[1]]}".to_string(), 400, "invalid_spec"),
+        (
+            "/v1/models/m/kernel",
+            "{\"kind\":\"resolvent\",\"y0\":[[1]]}".to_string(),
+            400,
+            "invalid_spec",
+        ),
+        (
+            "/v1/models/m/kernel",
+            "{\"kind\":\"ppr\",\"alpha\":2.0,\"y0\":[[1]]}".to_string(),
+            400,
+            "invalid_spec",
+        ),
+        (
+            "/v1/models/m/kernel",
+            "{\"kind\":\"diffusion\",\"steps\":200000,\"y0\":[[1]]}".to_string(),
+            400,
+            "invalid_spec",
+        ),
+        (
+            "/v1/models/m/kernel",
+            "{\"kind\":\"grf\",\"starts\":[0],\"walks\":100000}".to_string(),
+            400,
+            "invalid_spec",
+        ),
+        (
+            "/v1/models/m/kernel",
+            "{\"kind\":\"grf\",\"starts\":[0],\"halt\":0.0}".to_string(),
+            400,
+            "invalid_spec",
+        ),
+        ("/v1/models/m/kernel", "{\"kind\":\"commute\",\"pairs\":[]}".to_string(), 400, "invalid_spec"),
+        // model-layer rejections (typed by the coordinator/kernel code)
+        (
+            "/v1/models/m/kernel",
+            {
+                // y0 rows must match the operator's N = 120
+                let mut b = String::from("{\"kind\":\"diffusion\",\"y0\":");
+                write_matrix(&mut b, &Matrix::zeros(7, 1));
+                b.push('}');
+                b
+            },
+            400,
+            "shape_mismatch",
+        ),
+        (
+            "/v1/models/m/kernel",
+            format!("{{\"kind\":\"grf\",\"starts\":[{}]}}", N + 5),
+            400,
+            "shape_mismatch",
+        ),
+        (
+            "/v1/models/ghost/kernel",
+            "{\"kind\":\"grf\",\"starts\":[0]}".to_string(),
+            404,
+            "unknown_model",
+        ),
+    ];
+    for (path, body, want_status, want_kind) in cases {
+        let (status, resp) = c.post(path, &body).unwrap();
+        assert_eq!(status, want_status, "{path} {body}: {resp}");
+        assert_eq!(error_kind(&resp), want_kind, "{path} {body}: {resp}");
+    }
+
+    // the server stays healthy after the rejection corpus
+    let (status, resp) = c
+        .post("/v1/models/m/kernel", "{\"kind\":\"grf\",\"starts\":[0],\"walks\":4}")
+        .unwrap();
+    assert_eq!(status, 200, "{resp}");
 
     server.shutdown();
     handle.shutdown();
@@ -661,5 +793,97 @@ fn graceful_shutdown_drains_and_then_refuses() {
         }
     };
     assert!(refused, "server still serving after shutdown");
+    handle.shutdown();
+}
+
+/// Synthetic EMFILE: squeeze the process fd budget until the server's
+/// `accept` fails, and assert the failure is *shed* (classified as
+/// backoff, counted in `accept_failures`, established connections keep
+/// serving) rather than killing the event loop — then restore the
+/// budget and assert fresh connections are accepted again.
+///
+/// Ignored by default: it mutates the process-wide RLIMIT_NOFILE, which
+/// would starve concurrently running tests of fds. The CI soak job runs
+/// it alone (`--ignored emfile --test-threads=1`).
+#[cfg(unix)]
+#[test]
+#[ignore = "mutates the process fd limit; run alone (CI soak job)"]
+fn synthetic_emfile_sheds_accepts_and_recovers() {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    fn open_fds() -> u64 {
+        std::fs::read_dir("/proc/self/fd").map(|d| d.count() as u64).unwrap_or(64)
+    }
+
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let mut probe = HttpClient::connect(server.addr()).unwrap();
+    let y = Matrix::from_fn(N, 1, |r, _| (r % 5) as f32 * 0.2);
+    let (status, body) = probe.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "pre-squeeze request failed: {body}");
+
+    let mut old = Rlimit { cur: 0, max: 0 };
+    assert_eq!(unsafe { getrlimit(RLIMIT_NOFILE, &mut old) }, 0, "getrlimit");
+    // leave exactly one spare fd: the client side of the next connect
+    // takes it, the handshake completes in the kernel backlog, and the
+    // server-side accept has nothing left — EMFILE
+    let squeezed = Rlimit { cur: open_fds() + 1, max: old.max };
+    assert_eq!(unsafe { setrlimit(RLIMIT_NOFILE, &squeezed) }, 0, "setrlimit");
+
+    let mut pokes = Vec::new();
+    for _ in 0..8 {
+        if let Ok(s) = TcpStream::connect(server.addr()) {
+            pokes.push(s);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the established connection keeps serving through the squeeze, and
+    // the EMFILE shows up as a counted, non-fatal accept failure
+    let mut failures = 0u64;
+    for _ in 0..100 {
+        let (status, body) = probe.get("/stats").unwrap();
+        assert_eq!(status, 200, "established conn died under EMFILE: {body}");
+        failures = Json::parse(&body)
+            .unwrap()
+            .get("http")
+            .unwrap()
+            .get("accept_failures")
+            .unwrap()
+            .as_f64()
+            .unwrap() as u64;
+        if failures >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(failures >= 1, "no accept failure recorded under synthetic EMFILE");
+
+    // restore the budget: the backed-off listener must resume accepting
+    assert_eq!(unsafe { setrlimit(RLIMIT_NOFILE, &old) }, 0, "restore rlimit");
+    drop(pokes);
+    let mut recovered = false;
+    for _ in 0..100 {
+        if let Ok(mut fresh) = HttpClient::connect(server.addr()) {
+            if let Ok((status, body)) = fresh.post("/v1/models/m/matvec", &matrix_body("y", &y)) {
+                if status == 200 {
+                    assert_eq!(parse_matrix(&body, "yhat").data, model.matvec(&y).data);
+                    recovered = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(recovered, "server did not accept fresh connections after fd budget restore");
+
+    server.shutdown();
     handle.shutdown();
 }

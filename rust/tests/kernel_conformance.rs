@@ -1,0 +1,265 @@
+//! Kernel conformance — the CI test-matrix leg for `vdt::kernels`
+//! (ROADMAP item 4). Runs under every `VDT_THREADS` × `VDT_SIMD` leg and
+//! asserts, across backends:
+//!
+//! - VDT-backed diffusion and PPR agree with the exact Eq. 3 operator to
+//!   the block-approximation tolerance,
+//! - row-stochastic invariants: the all-ones column is a fixed point of
+//!   both power kernels, and every `transition_row_into` row is a
+//!   probability distribution,
+//! - fused multi-column power runs are bit-identical to stacked
+//!   single-column runs, and `par == serial` holds bit-exactly for the
+//!   GRF sampler,
+//! - GRF estimates converge toward the deterministic Neumann-series
+//!   reference as the walk count grows (seeded, fully deterministic),
+//! - bad specs and unsupported backends surface as typed [`VdtError`]s.
+
+use vdt::api::ModelBuilder;
+use vdt::core::op::{Backend, TransitionOp};
+use vdt::core::par;
+use vdt::data::synthetic;
+use vdt::kernels::{self, GrfConfig, KernelSpec, PowerKernel};
+use vdt::{Matrix, VdtError};
+
+const N: usize = 140;
+
+fn fitted(backend: Backend) -> vdt::AnyModel {
+    let ds = synthetic::two_moons(N, 0.08, 7);
+    ModelBuilder::from_dataset(&ds).backend(backend).k(6).build().unwrap()
+}
+
+fn point_masses(nodes: &[usize]) -> Matrix {
+    Matrix::from_fn(N, nodes.len(), |r, c| if r == nodes[c] { 1.0 } else { 0.0 })
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Deterministic resolvent reference: truncated `Σ_k γ^k P^k e_i`.
+fn neumann_column(op: &dyn TransitionOp, i: usize, gamma: f32, terms: usize) -> Vec<f32> {
+    let mut acc = vec![0.0f32; op.n()];
+    let mut pk = point_masses(&[i]);
+    let mut w = 1.0f32;
+    for _ in 0..terms {
+        for r in 0..op.n() {
+            acc[r] += w * pk.row(r)[0];
+        }
+        pk = op.matmul(&pk);
+        w *= gamma;
+    }
+    acc
+}
+
+#[test]
+fn vdt_power_kernels_match_exact_within_tolerance() {
+    let exact = fitted(Backend::Exact);
+    let y0 = point_masses(&[0, N / 2, N - 1]);
+    for backend in [Backend::Vdt, Backend::Knn] {
+        let m = fitted(backend);
+        for kernel in [
+            PowerKernel::Diffusion { steps: 8 },
+            PowerKernel::Ppr { alpha: 0.15, steps: 40 },
+        ] {
+            let ka = kernels::power(&m, kernel, &y0);
+            let ke = kernels::power(&exact, kernel, &y0);
+            let diff = max_abs_diff(&ka.data, &ke.data);
+            // both operators approximate the same P; kernels agree to the
+            // block/kNN approximation error, far below the signal scale
+            assert!(
+                diff < 0.2,
+                "{:?} {} vs exact drifted: max |Δ| = {diff}",
+                backend,
+                kernel.tag()
+            );
+        }
+    }
+}
+
+#[test]
+fn row_stochastic_invariants_hold_for_every_backend() {
+    let ones = Matrix::from_fn(N, 1, |_, _| 1.0);
+    for backend in [Backend::Vdt, Backend::Knn, Backend::Exact] {
+        let m = fitted(backend);
+        // P·1 = 1 ⇒ the all-ones column is a fixed point of P^t and of
+        // the PPR recurrence (1−α)P·1 + α·1 = 1
+        for kernel in [
+            PowerKernel::Diffusion { steps: 12 },
+            PowerKernel::Ppr { alpha: 0.3, steps: 12 },
+        ] {
+            let k = kernels::power(&m, kernel, &ones);
+            for (r, v) in k.data.iter().enumerate() {
+                assert!(
+                    (v - 1.0).abs() < 1e-3,
+                    "{backend:?} {} broke the ones fixed point at row {r}: {v}",
+                    kernel.tag()
+                );
+            }
+        }
+        // every random-access transition row is a probability vector —
+        // the contract the walk sampler relies on
+        let mut row = vec![0.0f32; N];
+        for i in [0usize, 1, N / 2, N - 1] {
+            m.transition_row_into(i, &mut row).unwrap();
+            let mut sum = 0f64;
+            for (j, &p) in row.iter().enumerate() {
+                assert!(p >= 0.0, "{backend:?} P[{i},{j}] = {p} < 0");
+                sum += p as f64;
+            }
+            assert!(
+                (sum - 1.0).abs() < 1e-4,
+                "{backend:?} row {i} sums to {sum}, want 1"
+            );
+        }
+    }
+}
+
+#[test]
+fn transition_rows_match_matvec_columns_bitwise() {
+    // row[j] must equal (P·e_j)[i] bit-for-bit — the row read is the
+    // same linear map, just transposed access
+    for backend in [Backend::Vdt, Backend::Knn, Backend::Exact] {
+        let m = fitted(backend);
+        let mut row = vec![0.0f32; N];
+        for i in [0usize, N / 3, N - 1] {
+            m.transition_row_into(i, &mut row).unwrap();
+            for j in [0usize, 1, N / 2, N - 1] {
+                let col = m.matvec(&point_masses(&[j]));
+                assert_eq!(
+                    row[j].to_bits(),
+                    col.row(i)[0].to_bits(),
+                    "{backend:?} P[{i},{j}] row-read != matvec"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_power_columns_equal_stacked_single_runs() {
+    let m = fitted(Backend::Vdt);
+    let nodes = [0usize, 5, N / 2, N - 1];
+    let y0 = point_masses(&nodes);
+    for kernel in [
+        PowerKernel::Diffusion { steps: 6 },
+        PowerKernel::Ppr { alpha: 0.2, steps: 6 },
+    ] {
+        let fused = kernels::power(&m, kernel, &y0);
+        for (c, &node) in nodes.iter().enumerate() {
+            let solo = kernels::power(&m, kernel, &point_masses(&[node]));
+            for r in 0..N {
+                assert_eq!(
+                    fused.row(r)[c].to_bits(),
+                    solo.row(r)[0].to_bits(),
+                    "{} col {c} row {r} drifted under fusion",
+                    kernel.tag()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grf_par_equals_serial_bit_exact() {
+    let m = fitted(Backend::Vdt);
+    let starts: Vec<usize> = (0..16).map(|i| i * (N / 16)).collect();
+    let cfg = GrfConfig { walks: 32, seed: 9, ..GrfConfig::default() };
+    let par_rows = kernels::grf_rows(&m, &starts, &cfg).unwrap();
+    let prev = par::set_max_threads(1);
+    let serial_rows = kernels::grf_rows(&m, &starts, &cfg).unwrap();
+    par::set_max_threads(prev);
+    assert_eq!(par_rows.data.len(), serial_rows.data.len());
+    for (a, b) in par_rows.data.iter().zip(&serial_rows.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "par/serial GRF drift");
+    }
+    // and per-node streams make results independent of request grouping
+    let solo = kernels::grf_rows(&m, &starts[3..4], &cfg).unwrap();
+    assert_eq!(solo.data, par_rows.row(3), "request composition changed a row");
+}
+
+#[test]
+fn grf_converges_to_the_neumann_reference() {
+    let exact = fitted(Backend::Exact);
+    let gamma = 0.5f64;
+    let start = 0usize;
+    let reference = neumann_column(&exact, start, gamma as f32, 60);
+    let err_at = |walks: usize| {
+        let cfg = GrfConfig { walks, gamma, seed: 42, ..GrfConfig::default() };
+        let k = kernels::grf_rows(&exact, &[start], &cfg).unwrap();
+        max_abs_diff(k.row(0), &reference)
+    };
+    let (coarse, fine) = (err_at(8), err_at(512));
+    assert!(
+        fine < coarse,
+        "GRF error did not shrink with walks: {coarse} -> {fine}"
+    );
+    assert!(fine < 0.05, "512-walk GRF estimate too far off: {fine}");
+}
+
+#[test]
+fn commute_estimates_are_symmetric_and_rank_sanely() {
+    let m = fitted(Backend::Vdt);
+    let cfg = GrfConfig { walks: 256, seed: 3, ..GrfConfig::default() };
+    let near = (0usize, 1usize);
+    let far = (0usize, N / 2);
+    let d = kernels::commute_times(&m, &[near, far, (near.1, near.0), (5, 5)], &cfg).unwrap();
+    assert_eq!((d.rows, d.cols), (4, 1));
+    // symmetric by construction, zero on the diagonal
+    assert_eq!(d.row(0)[0].to_bits(), d.row(2)[0].to_bits());
+    assert_eq!(d.row(3)[0], 0.0);
+    // two-moons: adjacent points are closer than cross-dataset points
+    assert!(
+        d.row(0)[0] < d.row(1)[0],
+        "commute distance ranks inverted: near {} !< far {}",
+        d.row(0)[0],
+        d.row(1)[0]
+    );
+}
+
+#[test]
+fn kernel_errors_are_typed() {
+    let m = fitted(Backend::Vdt);
+    // bad power specs
+    let y0 = point_masses(&[0]);
+    assert!(matches!(
+        PowerKernel::Ppr { alpha: 0.0, steps: 5 }.validate(),
+        Err(VdtError::InvalidSpec(_))
+    ));
+    assert!(matches!(
+        PowerKernel::Diffusion { steps: 0 }.validate(),
+        Err(VdtError::InvalidSpec(_))
+    ));
+    // bad walk specs
+    let bad_gamma = GrfConfig { gamma: 1.0, ..GrfConfig::default() };
+    assert!(matches!(
+        kernels::grf_rows(&m, &[0], &bad_gamma),
+        Err(VdtError::InvalidSpec(_))
+    ));
+    assert!(matches!(
+        kernels::grf_rows(&m, &[N + 3], &GrfConfig::default()),
+        Err(VdtError::ShapeMismatch { what: "start index", .. })
+    ));
+    assert!(matches!(
+        kernels::grf_rows(&m, &[], &GrfConfig::default()),
+        Err(VdtError::InvalidSpec(_))
+    ));
+    // a backend without random row access reports Unsupported once
+    struct NoRows;
+    impl TransitionOp for NoRows {
+        fn n(&self) -> usize {
+            4
+        }
+        fn matvec_into(&self, y: &Matrix, out: &mut Matrix) {
+            out.data.copy_from_slice(&y.data);
+        }
+        fn card(&self) -> vdt::ModelCard {
+            vdt::ModelCard::custom("norows", 4)
+        }
+    }
+    assert!(matches!(
+        kernels::grf_rows(&NoRows, &[0], &GrfConfig::default()),
+        Err(VdtError::Unsupported(_))
+    ));
+    // the spec tag stays stable for wire routing
+    assert_eq!(KernelSpec::Power { kernel: PowerKernel::Diffusion { steps: 1 }, y0 }.tag(), "diffusion");
+}
