@@ -1,0 +1,140 @@
+//! Online-ingest throughput — `vdt::vdt::ingest` + the epoch commit path
+//! at BENCH_N (default 4000, |B| = 6N): points/second absorbed into a
+//! shadow copy at several batch sizes, the snapshot-clone cost a first
+//! ingest of an epoch pays, and commit + first-matvec-after-commit
+//! latency. Emits `BENCH_ingest.json` for the CI bench gate.
+//!
+//! Correctness is asserted before timing: the committed model's matvec
+//! of the all-ones vector stays row-stochastic, and its snapshot
+//! round-trips bit-exactly.
+
+use vdt::core::bench::Runner;
+use vdt::data::synthetic;
+use vdt::runtime::Snapshot;
+use vdt::vdt::ingest::{IngestConfig, ShadowIngest};
+use vdt::vdt::{VdtConfig, VdtModel};
+use vdt::Matrix;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Distinct rows near the data manifold, unique per (batch, row).
+fn rows_near(m: &VdtModel, k: usize, tag: usize) -> Matrix {
+    let d = m.tree.d;
+    Matrix::from_fn(k, d, |r, c| {
+        let base = m.tree.s1[(((r + tag * 7) * 13) % m.tree.n) * d + c];
+        base + 1e-3 * (1.0 + r as f32 + c as f32) + 1e-5 * (tag as f32 + 1.0)
+    })
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let n = env_usize("BENCH_N", 4000);
+    let batches = [1usize, 16, 128];
+
+    println!("# ingest throughput (N={n}, |B|=6N)");
+    let ds = synthetic::gaussian_mixture(n, 16, 4, 2, 2.2, 3, "ingest_bench");
+    let mut model = VdtModel::build(&ds.x, &VdtConfig::default());
+    model.refine_to(6 * n);
+    let model = model;
+
+    // correctness gate before any timing: ingest + commit must keep the
+    // operator row-stochastic and v2-snapshot-stable
+    {
+        let mut sh = ShadowIngest::new(clone_via_snapshot(&model), IngestConfig::default());
+        sh.ingest_rows(&rows_near(&model, 32, 0)).unwrap();
+        let committed = sh.into_model();
+        committed.partition.validate(&committed.tree).unwrap();
+        let ones = Matrix::from_fn(committed.n(), 1, |_, _| 1.0);
+        for (i, &v) in committed.matvec(&ones).data.iter().enumerate() {
+            assert!((v - 1.0).abs() < 1e-4, "row {i} sum {v} after ingest");
+        }
+        let bytes = committed.to_snapshot("bench").encode().unwrap();
+        let back = VdtModel::from_snapshot(Snapshot::decode(&bytes).unwrap()).unwrap();
+        assert_eq!(
+            committed.matvec(&ones).data,
+            back.matvec(&ones).data,
+            "snapshot roundtrip drifted"
+        );
+    }
+
+    // ---- shadow clone (the first ingest of an epoch pays this once) ----
+    r.bench("ingest/shadow_clone", || {
+        std::hint::black_box(clone_via_snapshot(&model));
+    });
+
+    // ---- ingest throughput per batch size ----
+    for &k in &batches {
+        let mut tag = 1usize;
+        let mut shadow = Some(ShadowIngest::new(clone_via_snapshot(&model), IngestConfig::default()));
+        r.bench(&format!("ingest/rows/k={k}"), || {
+            // recycle the shadow before it grows far beyond N (keeps the
+            // per-iteration work comparable across the run)
+            let grown = shadow.as_ref().map_or(0, |s| s.inserted()) as usize;
+            if grown > n / 4 {
+                shadow = Some(ShadowIngest::new(
+                    clone_via_snapshot(&model),
+                    IngestConfig::default(),
+                ));
+            }
+            let sh = shadow.as_mut().expect("shadow present");
+            let rows = rows_near(sh.model(), k, tag);
+            tag += 1;
+            sh.ingest_rows(&rows).expect("bench rows are valid");
+        });
+        if let Some(ms) = r.mean_of(&format!("ingest/rows/k={k}")) {
+            println!("#   k={k}: {:.0} points/s", k as f64 / (ms / 1e3));
+        }
+    }
+
+    // ---- commit + first serve after the swap ----
+    let mut sh = ShadowIngest::new(clone_via_snapshot(&model), IngestConfig::default());
+    sh.ingest_rows(&rows_near(&model, 64, 900)).unwrap();
+    let committed = sh.into_model();
+    let y = Matrix::from_fn(committed.n(), 4, |row, c| (((row * 5 + c) % 9) as f32 - 4.0) * 0.2);
+    let mut out = Matrix::zeros(committed.n(), 4);
+    r.bench("ingest/first_matvec_after_commit", || {
+        committed.matvec_into(&y, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    // ---- emit BENCH_ingest.json ----
+    // schema matches benches/check_regression.py: entries under "paths",
+    // keyed by "path", gated timing in "ms"
+    let mut names = vec!["ingest/shadow_clone".to_string()];
+    for &k in &batches {
+        names.push(format!("ingest/rows/k={k}"));
+    }
+    names.push("ingest/first_matvec_after_commit".to_string());
+    let entries: Vec<(String, f64)> =
+        names.into_iter().filter_map(|name| r.mean_of(&name).map(|ms| (name, ms))).collect();
+    if entries.is_empty() {
+        println!("# BENCH_ingest.json skipped (all sections filtered out)");
+        return;
+    }
+    let threads = vdt::core::par::max_threads();
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"ingest_throughput\",\n  \"n\": {n},\n  \"threads\": {threads},\n  \"paths\": [\n"
+    ));
+    for (i, (name, ms)) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"path\": \"{name}\", \"ms\": {ms:.3}}}{}\n",
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write("BENCH_ingest.json", &json) {
+        eprintln!("warn: could not write BENCH_ingest.json: {e}");
+    } else {
+        println!("# wrote BENCH_ingest.json ({} timings)", entries.len());
+    }
+}
+
+/// The epoch ledger's shadow-clone path: encode → decode → rebuild
+/// (VdtModel deliberately has no `Clone`).
+fn clone_via_snapshot(m: &VdtModel) -> VdtModel {
+    let bytes = m.to_snapshot("bench").encode().expect("encode");
+    VdtModel::from_snapshot(Snapshot::decode(&bytes).expect("decode")).expect("rebuild")
+}

@@ -31,6 +31,7 @@ use crate::core::Matrix;
 use crate::core::op::{AnyModel, ModelCard, TransitionOp};
 use crate::kernels::{self, GrfConfig, KernelSpec, PowerKernel};
 use crate::labelprop::{self, LpConfig};
+use crate::runtime::ingest::{EpochLedger, IngestAck};
 
 /// Shared, thread-safe transition operator.
 pub type SharedOp = Arc<dyn TransitionOp + Send + Sync>;
@@ -57,6 +58,15 @@ pub struct ServiceStats {
     pub fused_batches: u64,
     /// Requests answered with a typed error.
     pub errors: u64,
+    /// Rows absorbed into shadow models by ingest requests (committed or
+    /// not).
+    pub ingested_rows: u64,
+    /// Commits that actually swapped a new epoch into the registry
+    /// (no-op commits don't count).
+    pub commits: u64,
+    /// Rows currently pending (ingested but uncommitted) summed over all
+    /// models — a gauge, not a counter.
+    pub pending_ingest: u64,
 }
 
 /// Owner-loop tuning. [`Coordinator::spawn`] uses the defaults; the
@@ -102,6 +112,13 @@ pub enum Request {
     LabelProp { model: String, y0: Matrix, cfg: LpConfig, resp: mpsc::Sender<Response> },
     /// Top-m Ritz values via Arnoldi.
     Spectral { model: String, m: usize, resp: mpsc::Sender<Response> },
+    /// Absorb new data rows into the model's shadow copy (the served
+    /// epoch is untouched until `Commit`). Batchable at the HTTP layer;
+    /// the owner applies ingests in arrival order.
+    Ingest { model: String, rows: Matrix, resp: mpsc::Sender<Response> },
+    /// Atomically swap the model's shadow (if any) in as the next served
+    /// epoch. A commit with nothing pending is a typed no-op.
+    Commit { model: String, resp: mpsc::Sender<Response> },
     /// Structured cards of every registered model, name-sorted.
     ListModels { resp: mpsc::Sender<Vec<ModelCard>> },
     /// Named service counters.
@@ -114,6 +131,7 @@ pub enum Request {
 pub enum Response {
     Matrix(Matrix),
     Eigenvalues(Vec<(f64, f64)>),
+    Ingest(IngestAck),
     Error(VdtError),
 }
 
@@ -230,6 +248,35 @@ impl CoordinatorHandle {
     ) -> Result<Vec<(f64, f64)>, VdtError> {
         match self.roundtrip(|resp| Request::Spectral { model: model.into(), m, resp })? {
             Response::Eigenvalues(e) => Ok(e),
+            Response::Error(e) => Err(e),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Absorb `rows` (one new point per row, `k × d`) into `model`'s
+    /// shadow copy. The served epoch keeps answering bit-identically
+    /// until [`CoordinatorHandle::commit`]. Validation is atomic: a
+    /// batch with any bad row (wrong shape, out-of-domain, duplicate)
+    /// is rejected as a whole with a typed error and the shadow is
+    /// untouched.
+    pub fn ingest(
+        &self,
+        model: impl Into<String>,
+        rows: Matrix,
+    ) -> Result<IngestAck, VdtError> {
+        match self.roundtrip(|resp| Request::Ingest { model: model.into(), rows, resp })? {
+            Response::Ingest(ack) => Ok(ack),
+            Response::Error(e) => Err(e),
+            other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Atomically publish `model`'s pending ingest as the next served
+    /// epoch (copy-on-write swap: in-flight readers keep the old epoch).
+    /// With nothing pending this is a typed no-op ack.
+    pub fn commit(&self, model: impl Into<String>) -> Result<IngestAck, VdtError> {
+        match self.roundtrip(|resp| Request::Commit { model: model.into(), resp })? {
+            Response::Ingest(ack) => Ok(ack),
             Response::Error(e) => Err(e),
             other => Err(VdtError::Internal(format!("unexpected response {other:?}"))),
         }
@@ -455,6 +502,10 @@ struct Owner {
     /// Shared with query workers, which count per-request errors.
     errors: Arc<AtomicU64>,
     fuse: bool,
+    /// Per-model shadow copies + epoch accounting for online ingest.
+    ingest: EpochLedger,
+    ingested_rows: u64,
+    commits: u64,
 }
 
 /// A per-model group of batchable requests awaiting routing.
@@ -566,6 +617,8 @@ impl Owner {
         for req in burst {
             match req {
                 Request::Register { name, op } => {
+                    // pending ingest belonged to whatever this replaces
+                    self.ingest.forget(&name);
                     self.models.insert(name, op);
                 }
                 Request::Matvec { model, y, resp } => {
@@ -669,6 +722,46 @@ impl Owner {
                         Some(op) => work.push(Work::Spectral { op: op.clone(), m, resp }),
                     }
                 }
+                // ingest/commit mutate the ledger, so they run inline on
+                // the owner thread in arrival order — readers are never
+                // blocked because the *served* Arc is untouched until the
+                // commit's registry swap
+                Request::Ingest { model, rows, resp } => {
+                    self.requests += 1;
+                    match self.models.get(&model).cloned() {
+                        None => self.error(&resp, VdtError::UnknownModel(model)),
+                        Some(op) => {
+                            let serving: &dyn TransitionOp = op.as_ref();
+                            match self.ingest.ingest(&model, serving, &rows) {
+                                Ok(ack) => {
+                                    self.ingested_rows += rows.rows as u64;
+                                    let _ = resp.send(Response::Ingest(ack));
+                                }
+                                Err(e) => self.error(&resp, e),
+                            }
+                        }
+                    }
+                }
+                Request::Commit { model, resp } => {
+                    self.requests += 1;
+                    match self.models.get(&model).cloned() {
+                        None => self.error(&resp, VdtError::UnknownModel(model)),
+                        Some(op) => {
+                            let serving: &dyn TransitionOp = op.as_ref();
+                            match self.ingest.commit(&model, serving) {
+                                Ok((swapped, ack)) => {
+                                    if let Some(m) = swapped {
+                                        self.models
+                                            .insert(model, Arc::new(AnyModel::Vdt(m)));
+                                        self.commits += 1;
+                                    }
+                                    let _ = resp.send(Response::Ingest(ack));
+                                }
+                                Err(e) => self.error(&resp, e),
+                            }
+                        }
+                    }
+                }
                 Request::ListModels { resp } => {
                     let mut cards: Vec<ModelCard> = self
                         .models
@@ -676,6 +769,10 @@ impl Owner {
                         .map(|(name, op)| {
                             let mut card = op.card();
                             card.name = name.clone();
+                            // overlay the live ledger: the served card's
+                            // own counters are frozen at fit/commit time
+                            card.pending_ingest = self.ingest.pending(name);
+                            card.ingested_points = self.ingest.total(name);
                             card
                         })
                         .collect();
@@ -688,6 +785,9 @@ impl Owner {
                         fused_cols: self.fused_cols,
                         fused_batches: self.fused_batches,
                         errors: self.errors.load(Ordering::Relaxed),
+                        ingested_rows: self.ingested_rows,
+                        commits: self.commits,
+                        pending_ingest: self.ingest.pending_sum(),
                     });
                 }
                 Request::Shutdown => {
@@ -804,6 +904,9 @@ impl Coordinator {
             fused_batches: 0,
             errors: Arc::new(AtomicU64::new(0)),
             fuse: cfg.fuse,
+            ingest: EpochLedger::default(),
+            ingested_rows: 0,
+            commits: 0,
         };
 
         while let Ok(first) = rx.recv() {
@@ -1193,6 +1296,81 @@ mod tests {
         assert_eq!(s.fused_batches, 0, "unbatched mode must not count fusion");
         batched.shutdown();
         unbatched.shutdown();
+    }
+
+    #[test]
+    fn ingest_then_commit_swaps_the_served_epoch() {
+        let handle = Coordinator::spawn();
+        let ds = synthetic::two_moons(40, 0.07, 31);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * 40);
+        let m: SharedOp = Arc::new(m);
+        handle.register("m", m.clone());
+
+        let y = Matrix::from_fn(40, 2, |r, c| ((r * 3 + c) % 7) as f32 - 3.0);
+        let before = handle.matvec("m", y.clone()).unwrap();
+
+        // three slightly perturbed copies of training points
+        let rows = Matrix::from_fn(3, 2, |r, c| ds.x.get(r * 9, c) + 0.013 * (1 + r + c) as f32);
+        let ack = handle.ingest("m", rows).unwrap();
+        assert_eq!((ack.epoch, ack.pending, ack.total), (0, 3, 0));
+
+        // pre-commit serving is bit-identical to before the ingest
+        let during = handle.matvec("m", y.clone()).unwrap();
+        assert_eq!(before.data, during.data, "ingest must not disturb the served epoch");
+        let cards = handle.list_models();
+        assert_eq!(cards[0].pending_ingest, 3);
+        assert_eq!(cards[0].epoch, 0);
+
+        let ack = handle.commit("m").unwrap();
+        assert_eq!((ack.epoch, ack.pending, ack.total), (1, 0, 3));
+        let cards = handle.list_models();
+        assert_eq!(cards[0].n, 43);
+        assert_eq!(cards[0].epoch, 1);
+        assert_eq!(cards[0].pending_ingest, 0);
+        assert_eq!(cards[0].ingested_points, 3);
+
+        // the swapped-in model answers at its new size
+        let y2 = Matrix::from_fn(43, 2, |r, c| ((r * 3 + c) % 7) as f32 - 3.0);
+        let after = handle.matvec("m", y2).unwrap();
+        assert_eq!(after.rows, 43);
+        assert!(after.data.iter().all(|v| v.is_finite()));
+
+        // a commit with nothing pending is a no-op ack, not an error
+        let ack = handle.commit("m").unwrap();
+        assert_eq!((ack.epoch, ack.pending, ack.total), (1, 0, 3));
+
+        let s = handle.stats();
+        assert_eq!(s.ingested_rows, 3);
+        assert_eq!(s.commits, 1);
+        assert_eq!(s.pending_ingest, 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn ingest_errors_stay_typed_and_leave_serving_untouched() {
+        let handle = Coordinator::spawn();
+        let (op, y) = model(30, 32);
+        handle.register("m", op);
+        // unknown model
+        let err = handle.ingest("nope", Matrix::zeros(1, 2)).unwrap_err();
+        assert!(matches!(err, VdtError::UnknownModel(_)), "{err}");
+        // wrong dimension is an atomic reject
+        let err = handle.ingest("m", Matrix::zeros(2, 5)).unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err}");
+        assert_eq!(handle.stats().pending_ingest, 0);
+        // a backend without a snapshot format answers Unsupported
+        let ds = synthetic::two_moons(20, 0.07, 33);
+        let g = crate::knn::KnnGraph::build(
+            &ds.x,
+            &crate::knn::KnnConfig { k: 2, ..Default::default() },
+        );
+        handle.register("knn", Arc::new(g));
+        let err = handle.ingest("knn", Matrix::zeros(1, 2)).unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+        // serving still answers
+        assert_eq!(handle.matvec("m", y).unwrap().rows, 30);
+        handle.shutdown();
     }
 
     /// Regression for the shutdown drain: requests that were already in

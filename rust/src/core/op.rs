@@ -120,6 +120,15 @@ pub struct ModelCard {
     /// What the model was fitted on (dataset name recorded at build /
     /// snapshot-save time), when known.
     pub provenance: Option<String>,
+    /// Ingest epoch served (0 = fitted from scratch; bumps on every
+    /// ingest commit — see [`crate::runtime::ingest`]).
+    pub epoch: u64,
+    /// Rows ingested into the model's shadow copy but not yet committed
+    /// (filled in by the coordinator's epoch ledger; 0 on a bare model).
+    pub pending_ingest: u64,
+    /// Cumulative rows committed into this model across all epochs
+    /// (ledger-filled, like `pending_ingest`).
+    pub ingested_points: u64,
 }
 
 impl ModelCard {
@@ -133,6 +142,9 @@ impl ModelCard {
             params: 0,
             sigma: None,
             provenance: None,
+            epoch: 0,
+            pending_ingest: 0,
+            ingested_points: 0,
         }
     }
 
@@ -150,6 +162,9 @@ impl ModelCard {
                 "provenance".to_string(),
                 self.provenance.clone().map_or(Json::Null, Json::Str),
             ),
+            ("epoch".to_string(), Json::Num(self.epoch as f64)),
+            ("pending_ingest".to_string(), Json::Num(self.pending_ingest as f64)),
+            ("ingested_points".to_string(), Json::Num(self.ingested_points as f64)),
         ])
     }
 
@@ -170,6 +185,17 @@ impl ModelCard {
         }
         if let Some(p) = &self.provenance {
             s.push_str(&format!(" fitted-on={p}"));
+        }
+        // ingest lineage appears only once a model has one, keeping the
+        // epoch-0 summary identical to the pre-ingest rendering
+        if self.epoch > 0 {
+            s.push_str(&format!(" epoch={}", self.epoch));
+        }
+        if self.pending_ingest > 0 {
+            s.push_str(&format!(" pending-ingest={}", self.pending_ingest));
+        }
+        if self.ingested_points > 0 {
+            s.push_str(&format!(" ingested={}", self.ingested_points));
         }
         s
     }
@@ -273,6 +299,20 @@ pub trait TransitionOp {
         Err(VdtError::Unsupported(format!(
             "the {} backend has no random-access row read (required for \
              random-walk kernel sampling)",
+            self.card().backend
+        )))
+    }
+
+    /// Capture the fitted state as a [`crate::runtime::Snapshot`] — the
+    /// capability the online-ingest path uses to clone a serving model
+    /// into a mutable shadow copy without downcasting
+    /// ([`crate::runtime::ingest::EpochLedger`]). Only backends with a
+    /// snapshot format override this (today: vdt); the default is a typed
+    /// [`VdtError::Unsupported`] so ingest on a kNN/exact/custom model
+    /// answers 4xx instead of panicking.
+    fn snapshot(&self) -> Result<crate::runtime::Snapshot, VdtError> {
+        Err(VdtError::Unsupported(format!(
+            "the {} backend has no snapshot format (required for online ingest)",
             self.card().backend
         )))
     }
@@ -431,6 +471,9 @@ impl TransitionOp for AnyModel {
     fn transition_row_into(&self, i: usize, out: &mut [f32]) -> Result<(), VdtError> {
         self.as_op().transition_row_into(i, out)
     }
+    fn snapshot(&self) -> Result<crate::runtime::Snapshot, VdtError> {
+        self.as_op().snapshot()
+    }
 }
 
 impl From<crate::vdt::VdtModel> for AnyModel {
@@ -505,6 +548,9 @@ mod tests {
         // random-access row reads default to typed Unsupported too
         let err = op.transition_row_into(0, &mut row).unwrap_err();
         assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
+        // and so does the snapshot capability ingest relies on
+        let err = op.snapshot().unwrap_err();
+        assert!(matches!(err, VdtError::Unsupported(_)), "{err}");
     }
 
     #[test]
@@ -517,6 +563,9 @@ mod tests {
             params: 100,
             sigma: Some(0.5),
             provenance: None,
+            epoch: 2,
+            pending_ingest: 5,
+            ingested_points: 17,
         };
         let j = card.to_json();
         let parsed = Json::parse(&j.encode()).unwrap();
@@ -527,5 +576,11 @@ mod tests {
         assert_eq!(parsed.get("params").unwrap().as_usize(), Some(100));
         assert_eq!(parsed.get("sigma").unwrap().as_f64(), Some(0.5));
         assert_eq!(parsed.get("provenance"), Some(&Json::Null));
+        assert_eq!(parsed.get("epoch").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("pending_ingest").unwrap().as_usize(), Some(5));
+        assert_eq!(parsed.get("ingested_points").unwrap().as_usize(), Some(17));
+        // lineage shows in the summary only when nonzero
+        let s = card.summary();
+        assert!(s.contains("epoch=2") && s.contains("pending-ingest=5"), "{s}");
     }
 }

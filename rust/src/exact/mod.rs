@@ -111,6 +111,9 @@ impl TransitionOp for ExactModel {
             params: self.p.rows * self.p.rows.saturating_sub(1),
             sigma: Some(self.sigma),
             provenance: self.provenance.clone(),
+            epoch: 0,
+            pending_ingest: 0,
+            ingested_points: 0,
         }
     }
 

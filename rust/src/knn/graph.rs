@@ -221,6 +221,9 @@ impl TransitionOp for KnnGraph {
             params: self.p.nnz(),
             sigma: Some(self.sigma),
             provenance: self.provenance.clone(),
+            epoch: 0,
+            pending_ingest: 0,
+            ingested_points: 0,
         }
     }
 

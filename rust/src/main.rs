@@ -64,6 +64,13 @@ COMMANDS
             (build flags +) --k <int> (6)  --out <path> (model.vdt)
   load      read a snapshot back and print its model card
             --model-path <path> (model.vdt)
+  ingest    absorb new CSV rows into a saved snapshot offline and write
+            the next epoch (same mechanics as the serve-time
+            POST ingest + commit cycle; see SNAPSHOT.md format v2)
+            --model-path <path> (model.vdt)
+            --csv <path>  (required; label,f0,f1,... rows, labels ignored)
+            --out <path> (default: overwrite --model-path)
+            --staleness <f> (0.25)  per-block re-refinement threshold
   selftest  verify the AOT artifact <-> PJRT round trip
             --artifacts <dir> (artifacts)
   serve     run the coordinator; by default a demo client burst, with
@@ -78,6 +85,7 @@ COMMANDS
                                      GET /healthz /stats /v1/models,
                                      POST /v1/models/{name}/
                                           matvec|query|labelprop|kernel
+                                          |ingest|commit
             --max-conns <int> (4096)      concurrent connections before 429
             --http-workers <int> (32)     compute-pool threads (throughput,
                                           not the connection ceiling)
@@ -312,7 +320,7 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
     println!(
         "listening on http://{} (batching {}); \
          GET /healthz /stats /v1/models, \
-         POST /v1/models/{{name}}/matvec|query|labelprop|kernel",
+         POST /v1/models/{{name}}/matvec|query|labelprop|kernel|ingest|commit",
         server.addr(),
         if batching { "on" } else { "off" }
     );
@@ -601,6 +609,43 @@ fn main() -> Result<()> {
                 m.sigma(),
                 m.num_blocks(),
                 m.loglik()
+            );
+        }
+        "ingest" => {
+            let path = args.get_str("model_path", "model.vdt");
+            let out = args.get_str("out", &path);
+            let csv = args
+                .opt_str("csv")
+                .ok_or_else(|| anyhow!("ingest needs --csv <path> with the new rows"))?;
+            let staleness = args.get("staleness", 0.25f64)?;
+            let t = Timer::start();
+            // checksum the parent's exact on-disk bytes: this is what a
+            // loader of the new epoch verifies lineage against
+            let bytes = std::fs::read(&path)
+                .map_err(|e| anyhow!("read snapshot {path}: {e}"))?;
+            let parent_sum = vdt::runtime::snapshot::fnv1a64(&bytes);
+            let snap = vdt::runtime::Snapshot::decode(&bytes)?;
+            let meta = snap.meta_name.clone();
+            let m = VdtModel::from_snapshot(snap)?;
+            let (epoch, n0) = (m.epoch(), m.n());
+            let ds = io::load_csv(&csv)?;
+            let mut shadow = vdt::vdt::ingest::ShadowIngest::new(
+                m,
+                vdt::vdt::ingest::IngestConfig { staleness_threshold: staleness },
+            );
+            let applied = shadow.ingest_rows(&ds.x)?;
+            let mut m = shadow.into_model();
+            m.set_lineage(epoch + 1, parent_sum);
+            m.save(std::path::Path::new(&out), &meta)?;
+            println!(
+                "ingested {applied} rows from {csv} (N {n0} -> {}) in {:.1} ms",
+                m.n(),
+                t.ms()
+            );
+            println!(
+                "epoch {} -> {} (parent checksum {parent_sum:016x}) written to {out}",
+                epoch,
+                m.epoch()
             );
         }
         "selftest" => {

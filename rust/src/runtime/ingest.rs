@@ -1,0 +1,280 @@
+//! Epoch-based copy-on-write serving of online model updates.
+//!
+//! Readers always serve an **immutable epoch**: the `Arc<dyn
+//! TransitionOp>` registered with the coordinator. Ingested rows never
+//! touch it — they accumulate in a mutable **shadow copy** managed by
+//! the [`EpochLedger`], cloned lazily from the serving model's snapshot
+//! bytes on the first ingest of an epoch (bit-exact: encode → decode →
+//! rebuild replays matvec accumulation identically). A `commit` takes
+//! the shadow, stamps its lineage (epoch + 1, FNV-1a checksum of the
+//! parent's snapshot bytes — what snapshot format v2 persists), and
+//! hands the finished model back to the coordinator, which atomically
+//! swaps the registry pointer. In-flight readers keep the old `Arc`;
+//! serving is therefore bit-exact *within* an epoch and changes only at
+//! commit boundaries.
+//!
+//! The model-mutation mechanics (tree grafting, partition surgery,
+//! staleness-triggered local re-refinement) live in
+//! [`crate::vdt::ingest`]; this module owns the epoch lifecycle and the
+//! per-model pending/total accounting surfaced on `GET /v1/models` and
+//! `/stats`.
+
+use std::collections::HashMap;
+
+use crate::core::error::VdtError;
+use crate::core::op::TransitionOp;
+use crate::core::Matrix;
+use crate::vdt::ingest::{IngestConfig, ShadowIngest};
+use crate::vdt::VdtModel;
+
+use super::snapshot::fnv1a64;
+
+/// What an ingest or commit request observed, returned to the client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IngestAck {
+    /// The epoch currently being *served* (after a commit: the epoch
+    /// that just went live).
+    pub epoch: u64,
+    /// Rows absorbed into the shadow but not yet committed.
+    pub pending: u64,
+    /// Cumulative rows committed into the model across all epochs.
+    pub total: u64,
+}
+
+/// Per-model shadow + accounting.
+struct Entry {
+    shadow: Option<ShadowIngest>,
+    /// FNV-1a checksum of the serving epoch's snapshot bytes (the future
+    /// parent checksum), captured when the shadow was cloned.
+    parent_sum: u64,
+    pending: u64,
+    total: u64,
+}
+
+impl Default for Entry {
+    fn default() -> Entry {
+        Entry { shadow: None, parent_sum: 0, pending: 0, total: 0 }
+    }
+}
+
+/// The coordinator's epoch ledger: one optional shadow model per
+/// registered name, plus the ingest counters observability reports.
+/// Single-owner (the coordinator's worker thread); no interior locking.
+pub struct EpochLedger {
+    entries: HashMap<String, Entry>,
+    cfg: IngestConfig,
+}
+
+impl EpochLedger {
+    pub fn new(cfg: IngestConfig) -> EpochLedger {
+        EpochLedger { entries: HashMap::new(), cfg }
+    }
+
+    /// Absorb `rows` into `name`'s shadow copy, cloning the shadow from
+    /// `serving`'s snapshot on the first ingest of the epoch. The serving
+    /// model is never mutated. Returns the ack the client sees; on error
+    /// (typed: domain/shape/duplicate rows, or a backend with no
+    /// snapshot format) the shadow is left exactly as it was.
+    pub fn ingest(
+        &mut self,
+        name: &str,
+        serving: &dyn TransitionOp,
+        rows: &Matrix,
+    ) -> Result<IngestAck, VdtError> {
+        let entry = self.entries.entry(name.to_string()).or_default();
+        if entry.shadow.is_none() {
+            let snap = serving.snapshot()?;
+            let bytes = snap
+                .encode()
+                .map_err(|e| VdtError::Snapshot(format!("encode serving model: {e}")))?;
+            let parent_sum = fnv1a64(&bytes);
+            let model = VdtModel::from_snapshot(snap)
+                .map_err(|e| VdtError::Snapshot(format!("clone serving model: {e}")))?;
+            entry.shadow = Some(ShadowIngest::new(model, self.cfg.clone()));
+            entry.parent_sum = parent_sum;
+        }
+        let shadow = entry.shadow.as_mut().expect("shadow just ensured");
+        let applied = shadow.ingest_rows(rows)? as u64;
+        entry.pending += applied;
+        Ok(IngestAck {
+            epoch: serving.card().epoch,
+            pending: entry.pending,
+            total: entry.total,
+        })
+    }
+
+    /// Commit `name`'s shadow: stamp the lineage (serving epoch + 1,
+    /// parent checksum captured at clone time) and return the finished
+    /// model for the coordinator to swap into the registry. A commit with
+    /// no pending ingest is a no-op returning the current state.
+    pub fn commit(
+        &mut self,
+        name: &str,
+        serving: &dyn TransitionOp,
+    ) -> Result<(Option<VdtModel>, IngestAck), VdtError> {
+        let entry = self.entries.entry(name.to_string()).or_default();
+        match entry.shadow.take() {
+            None => Ok((
+                None,
+                IngestAck { epoch: serving.card().epoch, pending: 0, total: entry.total },
+            )),
+            Some(shadow) => {
+                let mut model = shadow.into_model();
+                let next_epoch = serving.card().epoch + 1;
+                model.set_lineage(next_epoch, entry.parent_sum);
+                entry.total += entry.pending;
+                entry.pending = 0;
+                entry.parent_sum = 0;
+                Ok((
+                    Some(model),
+                    IngestAck { epoch: next_epoch, pending: 0, total: entry.total },
+                ))
+            }
+        }
+    }
+
+    /// Drop all shadow state for `name` (on model re-registration — the
+    /// pending ingest belonged to the replaced model).
+    pub fn forget(&mut self, name: &str) {
+        self.entries.remove(name);
+    }
+
+    /// Pending (uncommitted) rows for `name`.
+    pub fn pending(&self, name: &str) -> u64 {
+        self.entries.get(name).map_or(0, |e| e.pending)
+    }
+
+    /// Cumulative committed rows for `name`.
+    pub fn total(&self, name: &str) -> u64 {
+        self.entries.get(name).map_or(0, |e| e.total)
+    }
+
+    /// Pending rows summed over every model (`/stats`).
+    pub fn pending_sum(&self) -> u64 {
+        self.entries.values().map(|e| e.pending).sum()
+    }
+}
+
+impl Default for EpochLedger {
+    fn default() -> EpochLedger {
+        EpochLedger::new(IngestConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn fitted(n: usize, seed: u64) -> VdtModel {
+        let ds = synthetic::two_moons(n, 0.08, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * n);
+        m
+    }
+
+    fn rows_near(m: &VdtModel, k: usize, eps: f32) -> Matrix {
+        let d = m.tree.d;
+        Matrix::from_fn(k, d, |r, c| {
+            m.tree.s1[((r * 11) % m.tree.n) * d + c] + eps * (1.0 + r as f32 + c as f32)
+        })
+    }
+
+    #[test]
+    fn ingest_commit_lifecycle_bumps_epochs_and_counters() {
+        let serving = fitted(36, 2);
+        let mut ledger = EpochLedger::default();
+        let rows = rows_near(&serving, 4, 0.012);
+        let ack = ledger.ingest("m", &serving, &rows).unwrap();
+        assert_eq!((ack.epoch, ack.pending, ack.total), (0, 4, 0));
+        assert_eq!(ledger.pending("m"), 4);
+        assert_eq!(ledger.pending_sum(), 4);
+        // serving model untouched
+        assert_eq!(serving.n(), 36);
+
+        let (model, ack) = ledger.commit("m", &serving).unwrap();
+        let model = model.expect("pending ingest must produce a model");
+        assert_eq!((ack.epoch, ack.pending, ack.total), (1, 0, 4));
+        assert_eq!(model.epoch(), 1);
+        assert_ne!(model.parent_sum(), 0);
+        assert_eq!(model.n(), 40);
+        assert_eq!(ledger.pending("m"), 0);
+        assert_eq!(ledger.total("m"), 4);
+
+        // commit with nothing pending is a typed no-op
+        let (none, ack) = ledger.commit("m", &model).unwrap();
+        assert!(none.is_none());
+        assert_eq!((ack.epoch, ack.pending, ack.total), (1, 0, 4));
+
+        // second epoch on top of the first
+        let rows = rows_near(&model, 3, 0.019);
+        let ack = ledger.ingest("m", &model, &rows).unwrap();
+        assert_eq!((ack.epoch, ack.pending, ack.total), (1, 3, 4));
+        let (m2, ack) = ledger.commit("m", &model).unwrap();
+        let m2 = m2.unwrap();
+        assert_eq!(ack.epoch, 2);
+        assert_eq!(m2.epoch(), 2);
+        assert_eq!(m2.n(), 43);
+        assert_eq!(ledger.total("m"), 7);
+    }
+
+    #[test]
+    fn parent_checksum_matches_serving_snapshot_bytes() {
+        let serving = fitted(28, 5);
+        let mut ledger = EpochLedger::default();
+        let expected = fnv1a64(
+            &serving.to_snapshot(serving.provenance().unwrap_or("")).encode().unwrap(),
+        );
+        let rows = rows_near(&serving, 2, 0.017);
+        ledger.ingest("m", &serving, &rows).unwrap();
+        let (model, _) = ledger.commit("m", &serving).unwrap();
+        assert_eq!(model.unwrap().parent_sum(), expected);
+    }
+
+    #[test]
+    fn failed_ingest_leaves_ledger_consistent() {
+        let serving = fitted(24, 7);
+        let mut ledger = EpochLedger::default();
+        let bad = Matrix::from_fn(1, 5, |_, _| 0.5); // wrong dimension
+        let err = ledger.ingest("m", &serving, &bad).unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "{err:?}");
+        assert_eq!(ledger.pending("m"), 0);
+        // a later valid ingest proceeds normally
+        let rows = rows_near(&serving, 2, 0.013);
+        assert_eq!(ledger.ingest("m", &serving, &rows).unwrap().pending, 2);
+    }
+
+    #[test]
+    fn forget_drops_pending_shadow_state() {
+        let serving = fitted(20, 9);
+        let mut ledger = EpochLedger::default();
+        let rows = rows_near(&serving, 2, 0.011);
+        ledger.ingest("m", &serving, &rows).unwrap();
+        ledger.forget("m");
+        assert_eq!(ledger.pending("m"), 0);
+        assert_eq!(ledger.total("m"), 0);
+        let (none, ack) = ledger.commit("m", &serving).unwrap();
+        assert!(none.is_none());
+        assert_eq!(ack.pending, 0);
+    }
+
+    #[test]
+    fn committed_snapshot_roundtrips_with_lineage() {
+        let serving = fitted(30, 11);
+        let mut ledger = EpochLedger::default();
+        let rows = rows_near(&serving, 3, 0.014);
+        ledger.ingest("m", &serving, &rows).unwrap();
+        let (model, _) = ledger.commit("m", &serving).unwrap();
+        let model = model.unwrap();
+        let bytes = model.to_snapshot("ingested").encode().unwrap();
+        let back = VdtModel::from_snapshot(
+            crate::runtime::Snapshot::decode(&bytes).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.epoch(), model.epoch());
+        assert_eq!(back.parent_sum(), model.parent_sum());
+        let y = Matrix::from_fn(model.n(), 2, |r, c| ((r * 3 + c) % 5) as f32 - 2.0);
+        assert_eq!(model.matvec(&y).data, back.matvec(&y).data);
+    }
+}

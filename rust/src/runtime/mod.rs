@@ -16,6 +16,7 @@
 //! std-only HTTP serving subsystem ([`server`]).
 
 pub mod artifacts;
+pub mod ingest;
 pub mod server;
 pub mod snapshot;
 
@@ -29,6 +30,7 @@ use anyhow::{anyhow, Result};
 use crate::core::Matrix;
 
 pub use artifacts::{ArtifactEntry, Manifest};
+pub use ingest::{EpochLedger, IngestAck};
 pub use snapshot::Snapshot;
 
 /// PJRT client + artifact registry + compiled-executable cache.

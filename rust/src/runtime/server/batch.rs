@@ -21,6 +21,9 @@
 //! **Error isolation**: a fused call that fails (e.g. one co-batched
 //! query point outside the divergence domain) is replayed per request, so
 //! every client gets exactly the result/error it would have gotten alone.
+//! Ingest validation is atomic at the model layer, so a fused ingest that
+//! fails applied nothing — the replay then admits the good requests and
+//! answers the bad ones with their own typed errors.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,6 +33,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::CoordinatorHandle;
 use crate::core::error::VdtError;
 use crate::core::Matrix;
+use crate::runtime::ingest::IngestAck;
 
 /// Which batched endpoint a job belongs to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +42,17 @@ pub enum BatchKind {
     Matvec,
     /// Inductive rows — jobs fuse along rows.
     Query,
+    /// Online ingest rows — jobs fuse along rows into one shadow update;
+    /// every fused request observes the post-batch [`IngestAck`].
+    Ingest,
+}
+
+/// What a batched call answers: matvec/query jobs get their slice of the
+/// fused matrix, ingest jobs the shadow's post-batch ack.
+#[derive(Debug)]
+pub enum BatchReply {
+    Matrix(Matrix),
+    Ingest(IngestAck),
 }
 
 /// Counters the server's `/stats` endpoint reports for the batching
@@ -55,7 +70,7 @@ struct Job {
     model: String,
     kind: BatchKind,
     m: Matrix,
-    resp: mpsc::Sender<Result<Matrix, VdtError>>,
+    resp: mpsc::Sender<Result<BatchReply, VdtError>>,
     /// When [`Batcher::submit`] enqueued the job. The coalescing deadline
     /// anchors on the *oldest* member's arrival, so a job parked through
     /// someone else's window doesn't restart its wait from scratch.
@@ -68,7 +83,8 @@ struct Job {
 fn key_of(j: &Job) -> (BatchKind, usize, &str) {
     let dim = match j.kind {
         BatchKind::Matvec => j.m.rows,
-        BatchKind::Query => j.m.cols,
+        // row-concatenating kinds fuse within the point dimension d
+        BatchKind::Query | BatchKind::Ingest => j.m.cols,
     };
     (j.kind, dim, j.model.as_str())
 }
@@ -92,7 +108,7 @@ const MAX_FUSED_ELEMS: usize = 16 << 20; // ≈ 64 MiB of f32
 /// N and rejects oversized requests with a typed error.
 fn fuse_cost(j: &Job) -> usize {
     match j.kind {
-        BatchKind::Matvec => j.m.data.len(),
+        BatchKind::Matvec | BatchKind::Ingest => j.m.data.len(),
         BatchKind::Query => j.m.data.len().max(j.m.rows * 8192),
     }
 }
@@ -149,7 +165,32 @@ impl Batcher {
     }
 
     /// Submit one request and wait for its slice of the batch result.
+    /// For the matrix-answering kinds (matvec, query) only; ingest goes
+    /// through [`Batcher::submit_ingest`].
     pub fn submit(&self, model: &str, kind: BatchKind, m: Matrix) -> Result<Matrix, VdtError> {
+        debug_assert!(kind != BatchKind::Ingest, "use submit_ingest");
+        match self.submit_raw(model, kind, m)? {
+            BatchReply::Matrix(out) => Ok(out),
+            other => Err(VdtError::Internal(format!("unexpected batch reply {other:?}"))),
+        }
+    }
+
+    /// Submit one ingest request; concurrent same-model ingests coalesce
+    /// into one shadow update, and every rider observes the post-batch
+    /// ack.
+    pub fn submit_ingest(&self, model: &str, rows: Matrix) -> Result<IngestAck, VdtError> {
+        match self.submit_raw(model, BatchKind::Ingest, rows)? {
+            BatchReply::Ingest(ack) => Ok(ack),
+            other => Err(VdtError::Internal(format!("unexpected batch reply {other:?}"))),
+        }
+    }
+
+    fn submit_raw(
+        &self,
+        model: &str,
+        kind: BatchKind,
+        m: Matrix,
+    ) -> Result<BatchReply, VdtError> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Job {
@@ -246,24 +287,34 @@ fn flush(handle: &CoordinatorHandle, mut group: Vec<Job>) {
     if group.len() == 1 {
         let Job { model, kind, m, resp, .. } = group.pop().expect("non-empty");
         let out = match kind {
-            BatchKind::Matvec => handle.matvec(model, m),
-            BatchKind::Query => handle.query(model, m),
+            BatchKind::Matvec => handle.matvec(model, m).map(BatchReply::Matrix),
+            BatchKind::Query => handle.query(model, m).map(BatchReply::Matrix),
+            BatchKind::Ingest => handle.ingest(model, m).map(BatchReply::Ingest),
         };
         let _ = resp.send(out);
         return;
     }
     let fused = match group[0].kind {
         BatchKind::Matvec => fuse_cols(&group),
-        BatchKind::Query => fuse_rows(&group),
+        BatchKind::Query | BatchKind::Ingest => fuse_rows(&group),
     };
     match call(handle, &group[0], fused) {
-        Ok(out) => match group[0].kind {
+        Ok(BatchReply::Matrix(out)) => match group[0].kind {
             BatchKind::Matvec => split_cols(&out, group),
-            BatchKind::Query => split_rows(&out, group),
+            _ => split_rows(&out, group),
         },
+        // every fused ingest applied together; they all see the shadow's
+        // post-batch state
+        Ok(BatchReply::Ingest(ack)) => {
+            for j in group {
+                let _ = j.resp.send(Ok(BatchReply::Ingest(ack)));
+            }
+        }
         // a fused failure is replayed per request so each client gets the
         // exact result/error an unbatched call would produce (one bad
-        // co-batched query must not poison its neighbors)
+        // co-batched query or ingest row must not poison its neighbors;
+        // ingest validation is atomic, so the failed fused call applied
+        // nothing before the replay)
         Err(_) => {
             for j in group {
                 let out = call(handle, &j, j.m.clone());
@@ -273,10 +324,11 @@ fn flush(handle: &CoordinatorHandle, mut group: Vec<Job>) {
     }
 }
 
-fn call(handle: &CoordinatorHandle, j: &Job, m: Matrix) -> Result<Matrix, VdtError> {
+fn call(handle: &CoordinatorHandle, j: &Job, m: Matrix) -> Result<BatchReply, VdtError> {
     match j.kind {
-        BatchKind::Matvec => handle.matvec(j.model.clone(), m),
-        BatchKind::Query => handle.query(j.model.clone(), m),
+        BatchKind::Matvec => handle.matvec(j.model.clone(), m).map(BatchReply::Matrix),
+        BatchKind::Query => handle.query(j.model.clone(), m).map(BatchReply::Matrix),
+        BatchKind::Ingest => handle.ingest(j.model.clone(), m).map(BatchReply::Ingest),
     }
 }
 
@@ -305,7 +357,7 @@ fn split_cols(out: &Matrix, group: Vec<Job>) {
                 .copy_from_slice(&out.data[r * total + off..r * total + off + j.m.cols]);
         }
         off += j.m.cols;
-        let _ = j.resp.send(Ok(part));
+        let _ = j.resp.send(Ok(BatchReply::Matrix(part)));
     }
 }
 
@@ -332,7 +384,7 @@ fn split_rows(out: &Matrix, group: Vec<Job>) {
             cols,
         );
         off += rows;
-        let _ = j.resp.send(Ok(part));
+        let _ = j.resp.send(Ok(BatchReply::Matrix(part)));
     }
 }
 
@@ -459,6 +511,57 @@ mod tests {
             waited < window + Duration::from_millis(150),
             "parked job waited {waited:?}, over one window + slack"
         );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn coalesced_ingests_apply_and_share_the_post_batch_ack() {
+        let (handle, model) = serve_model(40, 7);
+        let counters = Arc::new(BatchCounters::default());
+        let batcher = Batcher::spawn(
+            handle.clone(),
+            Duration::from_millis(30),
+            16,
+            counters.clone(),
+        );
+        let mut joins = Vec::new();
+        for c in 0..4usize {
+            let b = batcher.clone();
+            joins.push(std::thread::spawn(move || {
+                let rows =
+                    Matrix::from_fn(1, 2, move |_, k| 3.0 + 0.11 * (1 + c) as f32 + k as f32);
+                b.submit_ingest("m", rows).unwrap()
+            }));
+        }
+        let mut max_pending = 0;
+        for j in joins {
+            let ack = j.join().unwrap();
+            assert_eq!(ack.epoch, 0, "serving epoch is untouched pre-commit");
+            max_pending = max_pending.max(ack.pending);
+        }
+        // all four rows landed in the shadow regardless of how they fused
+        assert_eq!(handle.stats().pending_ingest, 4);
+        assert!(max_pending >= 1 && max_pending <= 4);
+        // serving still answers from the original epoch at the old size
+        let y = Matrix::from_fn(40, 1, |r, _| (r % 5) as f32);
+        assert_eq!(
+            handle.matvec("m", y.clone()).unwrap().data,
+            model.matvec(&y).data
+        );
+        // a bad ingest co-batched with a good one (same shape key, so
+        // they can fuse) is isolated by the replay — the fused atomic
+        // validation applied nothing first
+        let bg = batcher.clone();
+        let good = std::thread::spawn(move || {
+            bg.submit_ingest("m", Matrix::from_fn(1, 2, |_, k| 9.0 + k as f32))
+        });
+        let bb = batcher.clone();
+        let bad = std::thread::spawn(move || {
+            bb.submit_ingest("m", Matrix::from_fn(1, 2, |_, _| f32::NAN))
+        });
+        assert!(good.join().unwrap().is_ok());
+        let err = bad.join().unwrap().unwrap_err();
+        assert!(matches!(err, VdtError::Domain { .. }), "{err}");
         handle.shutdown();
     }
 

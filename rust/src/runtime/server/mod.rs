@@ -31,6 +31,8 @@
 //! | `POST /v1/models/{name}/query` | `{"x": [[..], ..]}` → `{"rows": [[..], ..]}` — **inductive** posterior rows for out-of-sample points |
 //! | `POST /v1/models/{name}/labelprop` | `{"y0": [[..], ..], "alpha": a, "steps": s}` → `{"y": [[..], ..]}` |
 //! | `POST /v1/models/{name}/kernel` | graph kernels ([`crate::kernels`]): `{"kind": "diffusion"\|"ppr", "y0": [[..], ..], "steps": s, "alpha": a}` or `{"kind": "grf", "starts": [..], "walks": w, "gamma": g, "halt": h, "seed": s}` or `{"kind": "commute", "pairs": [[i, j], ..], ...}` → `{"k": [[..], ..]}` |
+//! | `POST /v1/models/{name}/ingest` | `{"rows": [[..], ..]}` — absorb new points into the model's **shadow copy** ([`crate::runtime::ingest`]); serving stays bit-identical until commit → `{"epoch": e, "pending_ingest": p, "ingested_points": t}` |
+//! | `POST /v1/models/{name}/commit` | (empty body) atomically publish the pending ingest as the next served epoch → same ack shape |
 //! | `GET /v1/models` | registered [`crate::core::op::ModelCard`]s as JSON |
 //! | `GET /healthz` | liveness |
 //! | `GET /stats` | coordinator + HTTP + batching counters |
@@ -146,6 +148,8 @@ use crate::core::Matrix;
 use crate::kernels::{GrfConfig, KernelSpec, PowerKernel};
 use crate::labelprop::LpConfig;
 
+use crate::runtime::ingest::IngestAck;
+
 use batch::{BatchCounters, BatchKind, Batcher};
 #[cfg(unix)]
 use conn::{AfterWrite, Conn, DeadlineKind, Io, Parsed, State};
@@ -165,6 +169,13 @@ pub const MAX_LP_WORK: u64 = 10_000_000_000;
 /// without this cap a ~30 MiB body of low-dimensional points (well under
 /// the body cap) could demand a 100+ GiB response allocation.
 pub const MAX_QUERY_ROWS: usize = 1024;
+
+/// Per-request ceiling on ingest rows. Each ingested row rebuilds the
+/// shadow tree's node arena (O(N) per row), so an unbounded batch from a
+/// few-MB body could occupy the coordinator's owner thread for minutes;
+/// beyond the cap the request is a typed 400 telling the client to split
+/// the batch.
+pub const MAX_INGEST_ROWS: usize = 4096;
 
 /// Ceiling on the `walks` a GRF kernel request may ask for. Estimator
 /// error shrinks as `1/√walks`, so 65k walks already buys ~250× the
@@ -1077,11 +1088,23 @@ fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
                     not_found(&format!("/v1/models//{action}"))
                 }
                 Some((name, action)) => {
-                    if !matches!(action, "matvec" | "query" | "labelprop" | "kernel") {
+                    if !matches!(
+                        action,
+                        "matvec" | "query" | "labelprop" | "kernel" | "ingest" | "commit"
+                    ) {
                         return not_found(path);
                     }
                     if method != "POST" {
                         return method_not_allowed("POST");
+                    }
+                    // commit carries no request body (an empty POST is
+                    // the whole message), so it routes before the JSON
+                    // parse that rejects empty bodies
+                    if action == "commit" {
+                        return match shared.handle.commit(name) {
+                            Ok(ack) => (200, ingest_ack_body(&ack)),
+                            Err(e) => (status_of(&e), error_body(&e)),
+                        };
                     }
                     match model_action(shared, name, action, &req.body) {
                         Ok(body) => (200, body),
@@ -1096,7 +1119,7 @@ fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
 fn not_found(path: &str) -> (u16, String) {
     let msg = format!(
         "no route {path}; see /healthz, /stats, /v1/models, \
-         /v1/models/{{name}}/{{matvec|query|labelprop|kernel}}"
+         /v1/models/{{name}}/{{matvec|query|labelprop|kernel|ingest|commit}}"
     );
     (404, kind_body("not_found", &msg))
 }
@@ -1186,6 +1209,21 @@ fn model_action(
             // per-request work with nothing to fuse
             let out = shared.handle.kernel(name, spec)?;
             Ok(matrix_body("k", &out))
+        }
+        "ingest" => {
+            let rows = field_matrix(&parsed, "rows")?;
+            if rows.rows > MAX_INGEST_ROWS {
+                return Err(VdtError::InvalidSpec(format!(
+                    "at most {MAX_INGEST_ROWS} ingest rows per request, got {} \
+                     (each row rebuilds the shadow tree's arena); split the batch",
+                    rows.rows
+                )));
+            }
+            let ack = match &shared.batcher {
+                Some(b) => b.submit_ingest(name, rows)?,
+                None => shared.handle.ingest(name, rows)?,
+            };
+            Ok(ingest_ack_body(&ack))
         }
         _ => unreachable!("route() filters actions"),
     }
@@ -1388,6 +1426,9 @@ fn dispatch(
         (Some(b), _) => b.submit(model, kind, m),
         (None, BatchKind::Matvec) => shared.handle.matvec(model, m),
         (None, BatchKind::Query) => shared.handle.query(model, m),
+        // ingest acks carry epoch state, not a matrix — routed through
+        // `submit_ingest` / `handle.ingest` in the action handler instead
+        (None, BatchKind::Ingest) => unreachable!("ingest does not return a Matrix"),
     }
 }
 
@@ -1424,6 +1465,25 @@ fn stats_body(shared: &Shared) -> String {
                 ("batched_requests".to_string(), num(h.batched_requests)),
             ]),
         ),
+        (
+            "ingest".to_string(),
+            Json::Obj(vec![
+                ("ingested_rows".to_string(), num(c.ingested_rows)),
+                ("commits".to_string(), num(c.commits)),
+                ("pending".to_string(), num(c.pending_ingest)),
+            ]),
+        ),
+    ])
+    .encode()
+}
+
+/// `{"epoch": e, "pending_ingest": p, "ingested_points": t}` — the wire
+/// shape of an [`IngestAck`] (same key names the model cards use).
+fn ingest_ack_body(ack: &IngestAck) -> String {
+    Json::Obj(vec![
+        ("epoch".to_string(), Json::Num(ack.epoch as f64)),
+        ("pending_ingest".to_string(), Json::Num(ack.pending as f64)),
+        ("ingested_points".to_string(), Json::Num(ack.total as f64)),
     ])
     .encode()
 }

@@ -15,12 +15,18 @@
 //!
 //! ```text
 //! magic      8 B    "VDTSNAP\0"
-//! version    u32    format version (this build reads exactly 1)
-//! sections   u32    section count (exactly 4 in version 1)
-//! table      4 × (id u32, offset u64, len u64, fnv1a64 u64)
+//! version    u32    format version (this build reads 1 and 2, writes 2)
+//! sections   u32    section count (4 in version 1, 5 in version 2)
+//! table      k × (id u32, offset u64, len u64, fnv1a64 u64)
 //! payload    section bytes, contiguous, in table order (META, TREE,
-//!            BLOCKS, MARKS)
+//!            BLOCKS, MARKS, and — version 2 — EPOCH)
 //! ```
+//!
+//! Version 2 adds the EPOCH section carrying ingest lineage: the epoch
+//! counter and the FNV-1a checksum of the parent epoch's encoded
+//! snapshot (see [`crate::runtime::ingest`]). Version-1 files decode as
+//! epoch 0 with no parent; lineage must be consistent (`epoch == 0` ⟺
+//! `parent_sum == 0`) or the file is rejected at encode *and* decode.
 //!
 //! Decoding is fail-fast: wrong magic, future format versions, unknown
 //! divergences, truncation, non-contiguous sections and checksum
@@ -39,19 +45,54 @@ use crate::core::divergence::{DiagMahalanobis, Divergence, ItakuraSaito, KlSimpl
 /// File magic: identifies a VDT model snapshot.
 pub const MAGIC: [u8; 8] = *b"VDTSNAP\0";
 
-/// Current (and only) snapshot format version this build reads/writes.
-pub const FORMAT_VERSION: u32 = 1;
+/// Snapshot format version this build writes. Reads accept
+/// [`MIN_FORMAT_VERSION`]..=[`FORMAT_VERSION`].
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Oldest snapshot format version this build still reads (version 1
+/// predates the EPOCH section and loads as epoch 0).
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 /// Section ids, in their mandatory file order.
 const SEC_META: u32 = 1;
 const SEC_TREE: u32 = 2;
 const SEC_BLOCKS: u32 = 3;
 const SEC_MARKS: u32 = 4;
-const SECTIONS: [(u32, &str); 4] =
-    [(SEC_META, "META"), (SEC_TREE, "TREE"), (SEC_BLOCKS, "BLOCKS"), (SEC_MARKS, "MARKS")];
+const SEC_EPOCH: u32 = 5;
+const SECTIONS: [(u32, &str); 5] = [
+    (SEC_META, "META"),
+    (SEC_TREE, "TREE"),
+    (SEC_BLOCKS, "BLOCKS"),
+    (SEC_MARKS, "MARKS"),
+    (SEC_EPOCH, "EPOCH"),
+];
+
+/// Sections a given format version carries (versions differ only in the
+/// trailing EPOCH section, so a prefix slice describes each).
+fn sections_for(version: u32) -> &'static [(u32, &'static str)] {
+    if version == 1 {
+        &SECTIONS[..4]
+    } else {
+        &SECTIONS
+    }
+}
 
 /// Bytes per section-table entry: id u32 + offset u64 + len u64 + sum u64.
 const TABLE_ENTRY: usize = 4 + 8 + 8 + 8;
+
+/// Lineage consistency rule (enforced at encode *and* decode): epoch 0 —
+/// a from-scratch fit — records no parent checksum, and every committed
+/// epoch records exactly one.
+fn check_lineage(epoch: u64, parent_sum: u64) -> Result<()> {
+    if (epoch == 0) != (parent_sum == 0) {
+        bail!(
+            "snapshot lineage mismatch: epoch {epoch} with parent checksum \
+             {parent_sum:#018x} (epoch 0 must have no parent; committed epochs must \
+             record one)"
+        );
+    }
+    Ok(())
+}
 
 /// FNV-1a 64-bit checksum. Not cryptographic, but any single-byte
 /// difference always changes the digest (xor-then-multiply by an odd
@@ -108,6 +149,13 @@ pub struct Snapshot {
     /// whose data node it is — **order preserved verbatim** so a loaded
     /// model replays matvec f64 accumulation bit-identically.
     pub marks: Vec<Vec<u32>>,
+    // ---- epoch lineage (format version 2; v1 files load as 0/0) ----
+    /// Ingest epoch: 0 = fitted from scratch, k+1 = committed on top of
+    /// an epoch-k parent (see [`crate::runtime::ingest`]).
+    pub epoch: u64,
+    /// FNV-1a checksum of the parent epoch's encoded snapshot bytes;
+    /// must be 0 iff `epoch == 0`.
+    pub parent_sum: u64,
 }
 
 /// Validate a divergence name + parameter vector against the snapshot
@@ -306,6 +354,7 @@ impl Snapshot {
     pub fn encode(&self) -> Result<Vec<u8>> {
         instantiate_divergence(&self.divergence, &self.div_params, self.d)
             .map_err(|e| anyhow!("cannot snapshot this model: {e}"))?;
+        check_lineage(self.epoch, self.parent_sum)?;
 
         let mut meta = Enc::default();
         meta.u64(self.n as u64);
@@ -339,7 +388,11 @@ impl Snapshot {
             marks.u32s(m);
         }
 
-        let payloads = [meta.buf, tree.buf, blocks.buf, marks.buf];
+        let mut epoch = Enc::default();
+        epoch.u64(self.epoch);
+        epoch.u64(self.parent_sum);
+
+        let payloads = [meta.buf, tree.buf, blocks.buf, marks.buf, epoch.buf];
         let mut out = Vec::with_capacity(
             16 + SECTIONS.len() * TABLE_ENTRY + payloads.iter().map(Vec::len).sum::<usize>(),
         );
@@ -371,29 +424,30 @@ impl Snapshot {
             bail!("bad magic: not a VDT model snapshot");
         }
         let version = rd_u32(bytes, 8);
-        if version != FORMAT_VERSION {
+        if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
             bail!(
-                "unsupported snapshot format version {version} (this build reads {FORMAT_VERSION})"
+                "unsupported snapshot format version {version} (this build reads \
+                 {MIN_FORMAT_VERSION} and {FORMAT_VERSION})"
             );
         }
+        let sections = sections_for(version);
         let n_sections = rd_u32(bytes, 12) as usize;
-        if n_sections != SECTIONS.len() {
+        if n_sections != sections.len() {
             bail!(
-                "corrupt snapshot: version {FORMAT_VERSION} has {} sections, header says \
-                 {n_sections}",
-                SECTIONS.len()
+                "corrupt snapshot: version {version} has {} sections, header says {n_sections}",
+                sections.len()
             );
         }
-        let table_end = 16 + SECTIONS.len() * TABLE_ENTRY;
+        let table_end = 16 + sections.len() * TABLE_ENTRY;
         if bytes.len() < table_end {
             bail!("truncated snapshot: section table cut short");
         }
 
         // Section table: ids in canonical order, payloads contiguous and
         // exactly tiling the rest of the file, checksums matching.
-        let mut payloads: Vec<&[u8]> = Vec::with_capacity(SECTIONS.len());
+        let mut payloads: Vec<&[u8]> = Vec::with_capacity(sections.len());
         let mut expect_offset = table_end;
-        for (i, (want_id, name)) in SECTIONS.iter().enumerate() {
+        for (i, (want_id, name)) in sections.iter().enumerate() {
             let at = 16 + i * TABLE_ENTRY;
             let id = rd_u32(bytes, at);
             let offset = rd_u64(bytes, at + 4) as usize;
@@ -513,6 +567,18 @@ impl Snapshot {
         }
         k.done()?;
 
+        // ---- EPOCH (version ≥ 2; v1 files are epoch 0 by definition) ----
+        let (epoch, parent_sum) = if version >= 2 {
+            let mut e = Dec::new(payloads[4], "EPOCH");
+            let epoch = e.u64()?;
+            let parent_sum = e.u64()?;
+            e.done()?;
+            (epoch, parent_sum)
+        } else {
+            (0, 0)
+        };
+        check_lineage(epoch, parent_sum)?;
+
         Ok(Snapshot {
             divergence,
             div_params,
@@ -534,6 +600,8 @@ impl Snapshot {
             blk_q,
             blk_d2,
             marks,
+            epoch,
+            parent_sum,
         })
     }
 
@@ -584,6 +652,8 @@ mod tests {
             blk_q: vec![0.5, 0.5, 0.25, 0.25],
             blk_d2: vec![1.0, 1.0, 2.0, 2.0],
             marks: vec![vec![0], vec![1], vec![3], vec![2], vec![]],
+            epoch: 0,
+            parent_sum: 0,
         }
     }
 
@@ -647,5 +717,38 @@ mod tests {
         s.divergence = "custom".into();
         let e = s.encode().unwrap_err().to_string();
         assert!(e.contains("custom"), "{e}");
+    }
+
+    #[test]
+    fn epoch_lineage_roundtrips_and_mismatches_are_rejected() {
+        let mut s = sample();
+        s.epoch = 3;
+        s.parent_sum = 0xdead_beef_cafe_f00d;
+        let bytes = s.encode().unwrap();
+        let r = Snapshot::decode(&bytes).unwrap();
+        assert_eq!(r.epoch, 3);
+        assert_eq!(r.parent_sum, 0xdead_beef_cafe_f00d);
+
+        // epoch 0 with a parent, or a committed epoch without one: both
+        // violate the lineage rule at encode time
+        let mut bad = sample();
+        bad.parent_sum = 7;
+        assert!(bad.encode().unwrap_err().to_string().contains("lineage"));
+        let mut bad = sample();
+        bad.epoch = 2;
+        assert!(bad.encode().unwrap_err().to_string().contains("lineage"));
+    }
+
+    #[test]
+    fn v2_header_pins_five_sections() {
+        let bytes = sample().encode().unwrap();
+        assert_eq!(rd_u32(&bytes, 8), 2, "writes format version 2");
+        assert_eq!(rd_u32(&bytes, 12), 5, "EPOCH is the fifth section");
+        // a v2 file re-labeled as v1 is malformed (section-count clash),
+        // which is exactly what a strict version-1 reader reports too
+        let mut bad = bytes.clone();
+        bad[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let e = Snapshot::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("sections"), "{e}");
     }
 }

@@ -1,0 +1,306 @@
+//! Incremental point insertion into a fitted [`PartitionTree`] — the
+//! structural half of online ingest (`runtime::ingest`).
+//!
+//! A new point is routed root→leaf by divergence-nearest child centroid
+//! (the same greedy descent the inductive path uses), then grafted next
+//! to the leaf it lands on: a fresh leaf `L` holds the point, a fresh
+//! internal node `G` adopts `{old leaf, L}` and takes the old leaf's
+//! place under its parent. Every node id keeps the crate-wide invariants
+//! the matvec sweeps index on — leaves are `0..n`, children have smaller
+//! ids than their parents, the root is the last id — by remapping old
+//! internal ids up by two (`i → i + 2`) in one O(n) arena rebuild.
+//! Sufficient statistics (`count`, `s1`, `s2`, and `sg`/`spsi` when the
+//! divergence needs them) are updated incrementally along the root path,
+//! and the constructive radius bound is maintained for metric
+//! divergences (`r' = max(r + centroid-shift, dist(x, centroid'))`).
+//!
+//! The caller (the [`crate::vdt::ingest`] shadow model) is responsible
+//! for the matching block-partition surgery; [`InsertOutcome::remap`]
+//! gives it the id translation.
+
+use std::sync::Arc;
+
+use crate::core::divergence::Divergence;
+
+use super::{PartitionTree, NONE};
+
+/// What [`insert_point`] did to the tree, in terms of node ids *after*
+/// the rebuild.
+#[derive(Clone, Copy, Debug)]
+pub struct InsertOutcome {
+    /// The new singleton leaf holding the inserted point (`== old n`).
+    pub new_leaf: u32,
+    /// The new internal graft node whose children are
+    /// (`old_leaf`, `new_leaf`) (`== old n + 1`).
+    pub graft: u32,
+    /// The leaf the point was routed to (a pre-existing point index;
+    /// leaf ids are stable across the insert).
+    pub old_leaf: u32,
+    /// Remap base: ids below this (the old n) are unchanged.
+    pub base: u32,
+}
+
+impl InsertOutcome {
+    /// Translate a pre-insert node id into the rebuilt arena: leaves are
+    /// stable, old internal ids shift up by two (`new_leaf` and `graft`
+    /// slot in between).
+    #[inline]
+    pub fn remap(&self, id: u32) -> u32 {
+        if id == NONE || id < self.base {
+            id
+        } else {
+            id + 2
+        }
+    }
+}
+
+/// Greedy root→leaf descent: at every internal node, follow the child
+/// whose centroid is divergence-nearer to `x` (ties go left). Read-only;
+/// O(depth · d).
+pub fn route_to_leaf(tree: &PartitionTree, x: &[f32]) -> u32 {
+    let mut a = tree.root();
+    while !tree.is_leaf(a) {
+        let (l, r) = (tree.left[a as usize], tree.right[a as usize]);
+        let dl = tree.div.point_to_centroid(x, tree.s1_of(l), tree.count[l as usize] as f64);
+        let dr = tree.div.point_to_centroid(x, tree.s1_of(r), tree.count[r as usize] as f64);
+        a = if dr < dl { r } else { l };
+    }
+    a
+}
+
+/// Insert `x` (length `tree.d`) into the tree next to the leaf the greedy
+/// descent routes it to. Rebuilds the node arena (O(n)), updates the
+/// root-path statistics incrementally, and returns the id bookkeeping the
+/// partition surgery needs. The point itself must already have passed the
+/// divergence's domain check — this layer does no input validation beyond
+/// the shape assert.
+pub fn insert_point(tree: &mut PartitionTree, x: &[f32]) -> InsertOutcome {
+    assert_eq!(x.len(), tree.d, "insert_point: point dimension mismatch");
+    let div: Arc<dyn Divergence> = tree.div.clone();
+    let d = tree.d;
+    let n_old = tree.n as u32;
+    let nn_old = tree.num_nodes();
+    let leaf = route_to_leaf(tree, x);
+    let out = InsertOutcome {
+        new_leaf: n_old,
+        graft: n_old + 1,
+        old_leaf: leaf,
+        base: n_old,
+    };
+    let has_grad = !tree.sg.is_empty();
+    let mut grad = vec![0f32; if has_grad { d } else { 0 }];
+    let phi_x = div.phi(x);
+    let dual_x = if has_grad {
+        div.grad(x, &mut grad);
+        div.dual(x)
+    } else {
+        0.0
+    };
+
+    // ---- rebuild the arena with two fresh slots (new leaf + graft) ----
+    let nn_new = nn_old + 2;
+    let mut left = vec![NONE; nn_new];
+    let mut right = vec![NONE; nn_new];
+    let mut parent = vec![NONE; nn_new];
+    let mut count = vec![0u32; nn_new];
+    let mut s2 = vec![0f64; nn_new];
+    let mut radius = vec![0f32; nn_new];
+    let mut s1 = vec![0f32; nn_new * d];
+    let mut sg = vec![0f32; if has_grad { nn_new * d } else { 0 }];
+    let mut spsi = vec![0f64; if has_grad { nn_new } else { 0 }];
+    for a in 0..nn_old as u32 {
+        let (ai, ni) = (a as usize, out.remap(a) as usize);
+        left[ni] = out.remap(tree.left[ai]);
+        right[ni] = out.remap(tree.right[ai]);
+        parent[ni] = out.remap(tree.parent[ai]);
+        count[ni] = tree.count[ai];
+        s2[ni] = tree.s2[ai];
+        radius[ni] = tree.radius[ai];
+        s1[ni * d..(ni + 1) * d].copy_from_slice(&tree.s1[ai * d..(ai + 1) * d]);
+        if has_grad {
+            sg[ni * d..(ni + 1) * d].copy_from_slice(&tree.sg[ai * d..(ai + 1) * d]);
+            spsi[ni] = tree.spsi[ai];
+        }
+    }
+
+    // ---- the new leaf: a singleton holding x ----
+    let li = out.new_leaf as usize;
+    count[li] = 1;
+    s2[li] = phi_x;
+    s1[li * d..(li + 1) * d].copy_from_slice(x);
+    if has_grad {
+        sg[li * d..(li + 1) * d].copy_from_slice(&grad);
+        spsi[li] = dual_x;
+    }
+
+    // ---- the graft node: {old leaf, new leaf}, spliced under the old
+    //      leaf's parent ----
+    let gi = out.graft as usize;
+    let oi = out.old_leaf as usize;
+    left[gi] = out.old_leaf;
+    right[gi] = out.new_leaf;
+    parent[gi] = parent[oi]; // already remapped (or NONE when leaf == root)
+    count[gi] = 2;
+    s2[gi] = s2[oi] + phi_x;
+    for j in 0..d {
+        s1[gi * d + j] = s1[oi * d + j] + x[j];
+    }
+    if has_grad {
+        for j in 0..d {
+            sg[gi * d + j] = sg[oi * d + j] + grad[j];
+        }
+        spsi[gi] = spsi[oi] + dual_x;
+    }
+    if div.is_metric() {
+        // exact two-member radius: the leaf's own point is its s1
+        let leaf_pt = &tree.s1[oi * d..(oi + 1) * d];
+        let c = &s1[gi * d..(gi + 1) * d];
+        let rx = div.point_to_centroid(x, c, 2.0).max(0.0).sqrt();
+        let rl = div.point_to_centroid(leaf_pt, c, 2.0).max(0.0).sqrt();
+        radius[gi] = rx.max(rl) as f32;
+    }
+    // rewire the old leaf's parent slot to point at the graft
+    let p = parent[gi];
+    if p != NONE {
+        let pi = p as usize;
+        if left[pi] == out.old_leaf {
+            left[pi] = out.graft;
+        } else {
+            debug_assert_eq!(right[pi], out.old_leaf);
+            right[pi] = out.graft;
+        }
+    }
+    parent[oi] = out.graft;
+
+    // ---- ancestors of the graft: absorb x into the statistics ----
+    let mut tmp = vec![0f32; d];
+    let mut a = p;
+    while a != NONE {
+        let ai = a as usize;
+        count[ai] += 1;
+        s2[ai] += phi_x;
+        if div.is_metric() {
+            let c_old = (count[ai] - 1) as f64;
+            for j in 0..d {
+                tmp[j] = s1[ai * d + j] + x[j];
+            }
+            // old members: ≤ r + centroid shift; the new point: its own
+            // distance to the shifted centroid (both triangle-inequality
+            // facts, hence metric-only)
+            let shift = div
+                .centroid_dist(&s1[ai * d..(ai + 1) * d], c_old, &tmp, c_old + 1.0)
+                .max(0.0)
+                .sqrt();
+            let dx = div.point_to_centroid(x, &tmp, c_old + 1.0).max(0.0).sqrt();
+            radius[ai] = (radius[ai] as f64 + shift).max(dx) as f32;
+            s1[ai * d..(ai + 1) * d].copy_from_slice(&tmp);
+        } else {
+            for j in 0..d {
+                s1[ai * d + j] += x[j];
+            }
+        }
+        if has_grad {
+            for j in 0..d {
+                sg[ai * d + j] += grad[j];
+            }
+            spsi[ai] += dual_x;
+        }
+        a = parent[ai];
+    }
+
+    tree.n += 1;
+    tree.left = left;
+    tree.right = right;
+    tree.parent = parent;
+    tree.count = count;
+    tree.s2 = s2;
+    tree.radius = radius;
+    tree.s1 = s1;
+    tree.sg = sg;
+    tree.spsi = spsi;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::divergence::KlSimplex;
+    use crate::core::Matrix;
+    use crate::data::synthetic;
+    use crate::tree::{build_tree, build_tree_with, BuildConfig};
+
+    fn extended(x: &Matrix, rows: &[Vec<f32>]) -> Matrix {
+        Matrix::from_fn(x.rows + rows.len(), x.cols, |r, c| {
+            if r < x.rows {
+                x.get(r, c)
+            } else {
+                rows[r - x.rows][c]
+            }
+        })
+    }
+
+    #[test]
+    fn insert_preserves_all_invariants_euclidean() {
+        let ds = synthetic::two_moons(40, 0.08, 3);
+        let mut t = build_tree(&ds.x, &BuildConfig::default());
+        let mut added = Vec::new();
+        for k in 0..12 {
+            let src = ds.x.row((k * 7) % 40).to_vec();
+            let x: Vec<f32> = src.iter().map(|v| v + 0.013 * (k as f32 + 1.0)).collect();
+            let out = insert_point(&mut t, &x);
+            assert_eq!(out.new_leaf as usize, 40 + k);
+            assert_eq!(out.graft as usize, 40 + k + 1);
+            added.push(x);
+        }
+        assert_eq!(t.n, 52);
+        assert_eq!(t.num_nodes(), 2 * 52 - 1);
+        t.validate(&extended(&ds.x, &added)).unwrap();
+    }
+
+    #[test]
+    fn insert_into_singleton_tree() {
+        let x = Matrix::from_fn(1, 2, |_, c| c as f32);
+        let mut t = build_tree(&x, &BuildConfig::default());
+        assert_eq!(t.num_nodes(), 1);
+        let out = insert_point(&mut t, &[3.0, 4.0]);
+        assert_eq!((out.old_leaf, out.new_leaf, out.graft), (0, 1, 2));
+        assert_eq!(t.root(), 2);
+        t.validate(&extended(&x, &[vec![3.0, 4.0]])).unwrap();
+    }
+
+    #[test]
+    fn insert_maintains_grad_stats_for_kl() {
+        let ds = synthetic::simplex_mixture(24, 8, 2, 2, 4.0, 7, "ins_kl");
+        let mut t = build_tree_with(&ds.x, &BuildConfig::default(), std::sync::Arc::new(KlSimplex));
+        assert!(!t.sg.is_empty());
+        // a perturbed copy of a training row, renormalized onto the simplex
+        let mut x: Vec<f32> = ds.x.row(5).iter().map(|v| v + 1e-3).collect();
+        let s: f32 = x.iter().sum();
+        for v in x.iter_mut() {
+            *v /= s;
+        }
+        insert_point(&mut t, &x);
+        t.validate(&extended(&ds.x, &[x])).unwrap();
+    }
+
+    #[test]
+    fn remap_shifts_only_internal_ids() {
+        let out = InsertOutcome { new_leaf: 10, graft: 11, old_leaf: 4, base: 10 };
+        assert_eq!(out.remap(0), 0);
+        assert_eq!(out.remap(9), 9);
+        assert_eq!(out.remap(10), 12); // old internal id
+        assert_eq!(out.remap(18), 20); // old root of n=10
+        assert_eq!(out.remap(NONE), NONE);
+    }
+
+    #[test]
+    fn routed_leaf_is_divergence_nearest_among_siblings() {
+        // routing must land on the exact twin when the query duplicates a
+        // training point in a 2-point tree (the degenerate-insert check
+        // in vdt::ingest relies on this)
+        let x = Matrix::from_fn(2, 2, |r, _| if r == 0 { -5.0 } else { 5.0 });
+        let t = build_tree(&x, &BuildConfig::default());
+        assert_eq!(route_to_leaf(&t, &[-5.0, -5.0]), 0);
+        assert_eq!(route_to_leaf(&t, &[5.0, 5.0]), 1);
+    }
+}

@@ -20,12 +20,14 @@
 //!   pruning in the fast-kNN baseline (metric divergences only).
 
 pub mod build;
+pub mod insert;
 
 use std::sync::Arc;
 
 use crate::core::divergence::{Divergence, NodeStats};
 
 pub use build::{build_tree, build_tree_with, BuildConfig};
+pub use insert::{insert_point, route_to_leaf, InsertOutcome};
 
 /// Sentinel for "no node".
 pub const NONE: u32 = u32::MAX;

@@ -1,0 +1,385 @@
+//! Online ingest: incremental insertion of new points into a fitted
+//! [`VdtModel`] without a global refit.
+//!
+//! Each ingested row is routed root→leaf by divergence-nearest anchor and
+//! grafted into the tree ([`crate::tree::insert`]), after which the block
+//! partition is surgically repaired so it still tiles the (now one larger)
+//! off-diagonal exactly: blocks that referenced the routed leaf expand to
+//! the new two-point graft node, and the twin pair `(leaf, new)` /
+//! `(new, leaf)` is appended — mirroring the coarsest construction's
+//! sibling pairs. Block energies `D_AB` touched by the root path are
+//! recomputed exactly from the updated sufficient statistics, and the
+//! drift each recomputation causes is accrued into a per-block
+//! **staleness score** `Σ q·|ΔD|/2σ²` — an upper-bound proxy for how far
+//! the block has degraded from the fitted variational bound. When a
+//! block's score crosses [`IngestConfig::staleness_threshold`], that
+//! block (and its mirror, per the paper's symmetric-refinement rule) is
+//! locally re-split with the Eq. 18 reallocation — never a global refit.
+//!
+//! After every ingested batch the `q` coefficients are re-optimized
+//! globally in O(|B| + N) at the **frozen** fitted bandwidth σ. This is
+//! deliberately *not* a refit: σ and the pre-existing tree topology are
+//! kept, which is what makes post-commit serving "refit-consistent within
+//! a documented tolerance" (see `rust/tests/ingest_conformance.rs`)
+//! rather than bit-identical to `fit(D ∪ d)`.
+//!
+//! The epoch/commit machinery that serves these updates without blocking
+//! readers lives in [`crate::runtime::ingest`]; this module is the pure
+//! model-mutation layer.
+//!
+//! ```
+//! use vdt::core::Matrix;
+//! use vdt::vdt::ingest::{IngestConfig, ShadowIngest};
+//! use vdt::vdt::{VdtConfig, VdtModel};
+//!
+//! let x = Matrix::from_fn(12, 2, |r, c| ((r * 5 + c * 3) % 13) as f32);
+//! let model = VdtModel::build(&x, &VdtConfig::default());
+//! let mut shadow = ShadowIngest::new(model, IngestConfig::default());
+//! let rows = Matrix::from_fn(2, 2, |r, _| 40.0 + r as f32);
+//! shadow.ingest_rows(&rows).unwrap();
+//! assert_eq!(shadow.model().n(), 14);
+//! // Q is still row-stochastic over the grown point set
+//! let ones = Matrix::from_fn(14, 1, |_, _| 1.0);
+//! for &v in &shadow.model().matvec(&ones).data {
+//!     assert!((v - 1.0).abs() < 1e-4);
+//! }
+//! ```
+
+use std::collections::HashMap;
+
+use crate::core::error::VdtError;
+use crate::core::Matrix;
+use crate::tree::{insert_point, route_to_leaf};
+
+use super::model::VdtModel;
+use super::optimize::{optimize_q, OptScratch};
+use super::refine::split_block;
+
+/// Knobs for the incremental-ingest path.
+#[derive(Clone, Debug)]
+pub struct IngestConfig {
+    /// Per-block staleness budget: accumulated `q·|ΔD_AB|/2σ²` (nats of
+    /// estimated bound degradation per data point of the block) beyond
+    /// which the block is locally re-split. Smaller = more eager local
+    /// refinement, larger |B| growth per ingested point.
+    pub staleness_threshold: f64,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig { staleness_threshold: 0.25 }
+    }
+}
+
+/// A mutable shadow copy of a fitted model absorbing new points.
+///
+/// Owns the [`VdtModel`] it mutates; readers keep serving the immutable
+/// epoch the shadow was cloned from (see
+/// [`crate::runtime::ingest::EpochLedger`]) until the shadow is committed
+/// with [`ShadowIngest::into_model`].
+pub struct ShadowIngest {
+    model: VdtModel,
+    cfg: IngestConfig,
+    /// Accrued bound-degradation proxy per block, in lockstep with
+    /// `model.partition.blocks` (indices are stable: the partition only
+    /// appends and tombstones).
+    staleness: Vec<f64>,
+    scratch: OptScratch,
+    inserted: u64,
+    resplits: u64,
+}
+
+impl ShadowIngest {
+    /// Wrap a model for incremental ingest. The model should be freshly
+    /// fitted or snapshot-loaded; its current partition is taken as the
+    /// zero-staleness reference.
+    pub fn new(model: VdtModel, cfg: IngestConfig) -> ShadowIngest {
+        let nblocks = model.partition.blocks.len();
+        ShadowIngest {
+            model,
+            cfg,
+            staleness: vec![0.0; nblocks],
+            scratch: OptScratch::default(),
+            inserted: 0,
+            resplits: 0,
+        }
+    }
+
+    /// The shadow model (read-only; serving never points here).
+    pub fn model(&self) -> &VdtModel {
+        &self.model
+    }
+
+    /// Points ingested since the shadow was created.
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Threshold-triggered local block splits performed so far.
+    pub fn resplits(&self) -> u64 {
+        self.resplits
+    }
+
+    /// Surrender the mutated model (the commit path).
+    pub fn into_model(self) -> VdtModel {
+        self.model
+    }
+
+    /// Ingest a batch of rows (one point per row, `cols == d`).
+    ///
+    /// Validation is atomic: *every* row is checked — shape, divergence
+    /// domain, exact duplicates within the batch and against the routed
+    /// leaf — before any mutation, so a failed call leaves the shadow
+    /// untouched and the error is typed with the offending row index.
+    /// Returns the number of points inserted.
+    pub fn ingest_rows(&mut self, rows: &Matrix) -> Result<usize, VdtError> {
+        let d = self.model.tree.d;
+        if rows.rows == 0 {
+            return Err(VdtError::InvalidSpec(
+                "ingest request has no rows; send at least one point".into(),
+            ));
+        }
+        if rows.cols != d {
+            return Err(VdtError::InvalidSpec(format!(
+                "ingest rows have {} columns but the model dimension is d = {d}",
+                rows.cols
+            )));
+        }
+        let div = self.model.tree.div.clone();
+        let mut seen: HashMap<Vec<u32>, usize> = HashMap::with_capacity(rows.rows);
+        for r in 0..rows.rows {
+            let x = rows.row(r);
+            div.check_point(x).map_err(|reason| VdtError::Domain {
+                divergence: div.name(),
+                row: r,
+                reason,
+            })?;
+            let bits: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            if let Some(&first) = seen.get(&bits) {
+                return Err(VdtError::InvalidSpec(format!(
+                    "ingest row {r} duplicates row {first} in the same batch; \
+                     points must be distinct"
+                )));
+            }
+            seen.insert(bits, r);
+            // best-effort exact-duplicate check against the current tree:
+            // the greedy descent lands on the nearest anchor chain, so an
+            // exact copy of the routed leaf's point is a degenerate insert
+            let leaf = route_to_leaf(&self.model.tree, x);
+            if div.point_to_centroid(x, self.model.tree.s1_of(leaf), 1.0) == 0.0 {
+                return Err(VdtError::InvalidSpec(format!(
+                    "ingest row {r} duplicates training point {leaf} exactly; \
+                     points must be distinct"
+                )));
+            }
+        }
+
+        // structural mutation begins: derived refine state is now stale
+        self.model.invalidate_derived();
+        let sigma = self.model.sigma();
+        let inv_2s2 = 1.0 / (2.0 * sigma * sigma);
+        for r in 0..rows.rows {
+            let x = rows.row(r).to_vec();
+            let out = insert_point(&mut self.model.tree, &x);
+            let tree = &self.model.tree;
+            let part = &mut self.model.partition;
+
+            // --- partition surgery: renumber nodes, expand leaf→graft ---
+            // marks are keyed by node id; move each list to its new slot,
+            // with the routed leaf's list landing on the graft node
+            let mut marks = vec![Vec::new(); tree.num_nodes()];
+            for (a, ms) in std::mem::take(&mut part.marks).into_iter().enumerate() {
+                let na = if a as u32 == out.old_leaf {
+                    out.graft
+                } else {
+                    out.remap(a as u32)
+                };
+                marks[na as usize] = ms;
+            }
+            part.marks = marks;
+            for b in part.blocks.iter_mut() {
+                b.data = if b.data == out.old_leaf { out.graft } else { out.remap(b.data) };
+                b.kernel =
+                    if b.kernel == out.old_leaf { out.graft } else { out.remap(b.kernel) };
+            }
+            // the twin pair inside the graft, in coarsest's sibling order
+            let d2_ab = tree.d2_between(out.old_leaf, out.new_leaf);
+            part.push_block(out.old_leaf, out.new_leaf, d2_ab);
+            let d2_ba = tree.d2_between(out.new_leaf, out.old_leaf);
+            part.push_block(out.new_leaf, out.old_leaf, d2_ba);
+            self.staleness.resize(part.blocks.len(), 0.0);
+
+            // --- refresh energies touched by the root path, accrue
+            //     staleness, collect threshold crossings ---
+            // the graft and its ancestors are exactly the nodes whose
+            // sufficient statistics changed; ids ascend toward the root,
+            // so the path vector is sorted and binary-searchable
+            let mut path = Vec::with_capacity(16);
+            let mut a = out.graft;
+            while a != crate::tree::NONE {
+                path.push(a);
+                a = tree.parent[a as usize];
+            }
+            let thresh = self.cfg.staleness_threshold;
+            let mut crossed = Vec::new();
+            for bi in 0..part.blocks.len() {
+                let blk = &part.blocks[bi];
+                if !blk.alive {
+                    continue;
+                }
+                if path.binary_search(&blk.data).is_err()
+                    && path.binary_search(&blk.kernel).is_err()
+                {
+                    continue;
+                }
+                let d2_new = tree.d2_between(blk.data, blk.kernel);
+                let blk = &mut part.blocks[bi];
+                self.staleness[bi] += blk.q * (d2_new - blk.d2).abs() * inv_2s2;
+                blk.d2 = d2_new;
+                if self.staleness[bi] > thresh {
+                    crossed.push(bi as u32);
+                }
+            }
+
+            // --- threshold-triggered local re-refinement (Eq. 18 splits,
+            //     symmetric per §4.4) — never a global refit ---
+            for bi in crossed {
+                let blk = &part.blocks[bi as usize];
+                if !blk.alive {
+                    continue; // killed as an earlier crossing's mirror
+                }
+                let (ba, bb) = (blk.data, blk.kernel);
+                self.staleness[bi as usize] = 0.0;
+                if !tree.is_leaf(bb) {
+                    split_block(tree, part, bi, sigma);
+                    self.staleness.resize(part.blocks.len(), 0.0);
+                    self.resplits += 1;
+                }
+                // mirror (B, A): the stand-in for the vertical refinement
+                if !tree.is_leaf(ba) {
+                    let mirror = part
+                        .blocks
+                        .iter()
+                        .position(|b| b.alive && b.data == bb && b.kernel == ba);
+                    if let Some(mi) = mirror {
+                        self.staleness[mi] = 0.0;
+                        split_block(tree, part, mi as u32, sigma);
+                        self.staleness.resize(part.blocks.len(), 0.0);
+                        self.resplits += 1;
+                    }
+                }
+            }
+            self.inserted += 1;
+        }
+
+        // one global q re-optimization per batch at the frozen fitted σ:
+        // O(|B| + N), bit-identical parallel vs serial (see vdt::optimize)
+        optimize_q(
+            &self.model.tree,
+            &mut self.model.partition,
+            sigma,
+            &mut self.scratch,
+        );
+        Ok(rows.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::divergence::DivergenceKind;
+    use crate::data::synthetic;
+    use crate::vdt::{VdtConfig, VdtModel};
+
+    fn fitted(n: usize, seed: u64) -> VdtModel {
+        let ds = synthetic::two_moons(n, 0.08, seed);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * n);
+        m
+    }
+
+    fn perturbed_rows(m: &VdtModel, k: usize, eps: f32) -> Matrix {
+        let d = m.tree.d;
+        Matrix::from_fn(k, d, |r, c| {
+            m.tree.s1[((r * 13) % m.tree.n) * d + c] + eps * (1.0 + r as f32 + c as f32)
+        })
+    }
+
+    #[test]
+    fn ingest_keeps_partition_valid_and_row_stochastic() {
+        let m = fitted(40, 3);
+        let mut sh = ShadowIngest::new(m, IngestConfig::default());
+        let rows = perturbed_rows(sh.model(), 7, 0.011);
+        assert_eq!(sh.ingest_rows(&rows).unwrap(), 7);
+        assert_eq!(sh.model().n(), 47);
+        let m = sh.into_model();
+        m.partition.validate(&m.tree).unwrap();
+        let ones = Matrix::from_fn(47, 1, |_, _| 1.0);
+        for (i, &v) in m.matvec(&ones).data.iter().enumerate() {
+            assert!((v - 1.0).abs() < 1e-4, "row {i} sum {v}");
+        }
+    }
+
+    #[test]
+    fn tight_threshold_triggers_local_resplits() {
+        let m = fitted(48, 5);
+        let mut sh = ShadowIngest::new(m, IngestConfig { staleness_threshold: 1e-12 });
+        let rows = perturbed_rows(sh.model(), 10, 0.017);
+        sh.ingest_rows(&rows).unwrap();
+        assert!(sh.resplits() > 0, "no local re-refinement at a tiny threshold");
+        let m = sh.into_model();
+        m.partition.validate(&m.tree).unwrap();
+    }
+
+    #[test]
+    fn failed_batch_leaves_shadow_untouched() {
+        // a 2-point tree routes by comparing the two leaves directly, so
+        // an exact copy of point 0 deterministically lands on its twin
+        let x = Matrix::from_fn(2, 2, |r, _| 4.0 * r as f32);
+        let m = VdtModel::build(&x, &VdtConfig::default());
+        let mut sh = ShadowIngest::new(m, IngestConfig::default());
+        let before_n = sh.model().n();
+        let before_blocks = sh.model().num_blocks();
+        // row 0 is valid; row 1 duplicates training point 0 → typed error,
+        // and the earlier (valid) row must not have been applied
+        let bad = Matrix::from_fn(2, 2, |r, _| if r == 0 { 1.0 } else { 0.0 });
+        let err = sh.ingest_rows(&bad).unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "got {err:?}");
+        assert_eq!(sh.model().n(), before_n);
+        assert_eq!(sh.model().num_blocks(), before_blocks);
+
+        // batch-internal duplicates are rejected up front too
+        let twin = Matrix::from_fn(2, 2, |_, _| 1.5);
+        let err = sh.ingest_rows(&twin).unwrap_err();
+        assert!(matches!(err, VdtError::InvalidSpec(_)), "got {err:?}");
+        assert_eq!(sh.model().n(), before_n);
+    }
+
+    #[test]
+    fn out_of_domain_rows_answer_typed_domain_errors() {
+        let ds = synthetic::simplex_mixture(30, 8, 2, 2, 4.0, 7, "ing_kl");
+        let mut cfg = VdtConfig::default();
+        cfg.divergence = DivergenceKind::Kl;
+        let m = VdtModel::build(&ds.x, &cfg);
+        let mut sh = ShadowIngest::new(m, IngestConfig::default());
+        let bad = Matrix::from_fn(1, 8, |_, c| if c == 0 { -0.5 } else { 0.2 });
+        let err = sh.ingest_rows(&bad).unwrap_err();
+        match err {
+            VdtError::Domain { divergence, row, .. } => {
+                assert_eq!(divergence, "kl");
+                assert_eq!(row, 0);
+            }
+            other => panic!("expected Domain error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shape_and_empty_batches_are_invalid_specs() {
+        let m = fitted(24, 9);
+        let mut sh = ShadowIngest::new(m, IngestConfig::default());
+        let wrong_d = Matrix::from_fn(2, 5, |_, _| 0.5);
+        assert!(matches!(sh.ingest_rows(&wrong_d), Err(VdtError::InvalidSpec(_))));
+        let empty = Matrix::zeros(0, 2);
+        assert!(matches!(sh.ingest_rows(&empty), Err(VdtError::InvalidSpec(_))));
+    }
+}

@@ -13,8 +13,12 @@
 //! - [`model`]: [`VdtModel`], the user-facing assembly of all of the above.
 //! - [`induct`]: out-of-sample (inductive) transition rows — the paper's
 //!   stated future-work extension.
+//! - [`ingest`]: online ingest — incremental point insertion with
+//!   staleness-triggered local re-refinement (no global refit); the
+//!   epoch/commit serving machinery is [`crate::runtime::ingest`].
 
 pub mod induct;
+pub mod ingest;
 pub mod matvec;
 pub mod model;
 pub mod optimize;

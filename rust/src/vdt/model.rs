@@ -69,6 +69,12 @@ pub struct VdtModel {
     /// Dataset the model was fitted on (recorded by the builder / loaded
     /// from a snapshot's meta section), for [`ModelCard::provenance`].
     provenance: Option<String>,
+    /// Ingest epoch (0 = fitted from scratch, k+1 = committed on top of an
+    /// epoch-k parent; see [`crate::runtime::ingest`]).
+    epoch: u64,
+    /// FNV-1a checksum of the parent epoch's encoded snapshot (0 iff
+    /// `epoch == 0`) — the lineage record snapshot format v2 persists.
+    parent_sum: u64,
 }
 
 impl VdtModel {
@@ -121,6 +127,8 @@ impl VdtModel {
             refiner: None,
             scratch_pool: std::sync::Mutex::new(Vec::new()),
             provenance: None,
+            epoch: 0,
+            parent_sum: 0,
         }
     }
 
@@ -218,6 +226,35 @@ impl VdtModel {
         self.provenance.as_deref()
     }
 
+    /// Ingest epoch this model serves (0 for a from-scratch fit).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// FNV-1a checksum of the parent epoch's encoded snapshot; 0 iff
+    /// `epoch() == 0`.
+    #[inline]
+    pub fn parent_sum(&self) -> u64 {
+        self.parent_sum
+    }
+
+    /// Stamp the epoch lineage on a committed model (see
+    /// [`crate::runtime::ingest::EpochLedger::commit`]). `epoch == 0` must
+    /// pair with `parent_sum == 0` and vice versa — snapshot v2 rejects
+    /// inconsistent lineage at encode *and* decode.
+    pub fn set_lineage(&mut self, epoch: u64, parent_sum: u64) {
+        self.epoch = epoch;
+        self.parent_sum = parent_sum;
+    }
+
+    /// Drop derived state (the refiner's gain heap and block index) after
+    /// an external structural mutation of the tree/partition — the online
+    /// ingest path calls this; `refine_to` rebuilds lazily.
+    pub fn invalidate_derived(&mut self) {
+        self.refiner = None;
+    }
+
     /// Dense materialization of Q (tests / tiny N).
     pub fn materialize(&self) -> Matrix {
         self.partition.materialize(&self.tree)
@@ -273,6 +310,8 @@ impl VdtModel {
             blk_q,
             blk_d2,
             marks,
+            epoch: self.epoch,
+            parent_sum: self.parent_sum,
         }
     }
 
@@ -385,6 +424,8 @@ impl VdtModel {
             refiner: None,
             scratch_pool: std::sync::Mutex::new(Vec::new()),
             provenance: if s.meta_name.is_empty() { None } else { Some(s.meta_name) },
+            epoch: s.epoch,
+            parent_sum: s.parent_sum,
         })
     }
 
@@ -443,7 +484,14 @@ impl TransitionOp for VdtModel {
             params: self.num_blocks(),
             sigma: Some(self.sigma),
             provenance: self.provenance.clone(),
+            epoch: self.epoch,
+            pending_ingest: 0,
+            ingested_points: 0,
         }
+    }
+
+    fn snapshot(&self) -> Result<Snapshot, VdtError> {
+        Ok(self.to_snapshot(self.provenance.as_deref().unwrap_or("")))
     }
 
     fn query_dim(&self) -> Option<usize> {

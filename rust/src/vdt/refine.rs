@@ -175,37 +175,14 @@ impl Refiner {
     /// Horizontally split block `bi` = (A, B) into (A, B_l), (A, B_r) with
     /// the locally-optimal q of Eq. (18).
     fn split(&mut self, tree: &PartitionTree, part: &mut BlockPartition, bi: u32) {
-        let blk = part.blocks[bi as usize].clone();
-        debug_assert!(blk.alive && !tree.is_leaf(blk.kernel));
-        let (a, b) = (blk.data, blk.kernel);
-        let (bl, br) = (tree.left[b as usize], tree.right[b as usize]);
-        let d2l = tree.d2_between(a, bl);
-        let d2r = tree.d2_between(a, br);
-        let (nb, nbl, nbr) = (
-            tree.count[b as usize] as f64,
-            tree.count[bl as usize] as f64,
-            tree.count[br as usize] as f64,
-        );
-        let gl = g_of(tree, a, bl, d2l, self.sigma);
-        let gr = g_of(tree, a, br, d2r, self.sigma);
-        // Eq. (18) in log space: q_c = |B| e^{G_c} q / Σ_t |B_t| e^{G_t}
-        let log_den = logsumexp(&[nbl.ln() + gl, nbr.ln() + gr]);
-        let (ql, qr) = if blk.q > 0.0 {
-            (
-                (nb.ln() + gl + blk.q.ln() - log_den).exp(),
-                (nb.ln() + gr + blk.q.ln() - log_den).exp(),
-            )
-        } else {
-            (0.0, 0.0)
+        let (a, b) = {
+            let blk = &part.blocks[bi as usize];
+            (blk.data, blk.kernel)
         };
-
-        part.kill_block(bi);
+        let (il, ir) = split_block(tree, part, bi, self.sigma);
+        let (bl, br) = (tree.left[b as usize], tree.right[b as usize]);
         self.index.remove(&(a, b));
-        let il = part.push_block(a, bl, d2l);
-        part.blocks[il as usize].q = ql;
         self.index.insert((a, bl), il);
-        let ir = part.push_block(a, br, d2r);
-        part.blocks[ir as usize].q = qr;
         self.index.insert((a, br), ir);
         for i in [il, ir] {
             if let Some(gain) = gain_h(tree, part, i, self.sigma) {
@@ -213,6 +190,50 @@ impl Refiner {
             }
         }
     }
+}
+
+/// Horizontally split block `bi` = (A, B) into (A, B_l), (A, B_r) with the
+/// locally-optimal q reallocation of Eq. (18), returning the two child
+/// block indices `(left, right)`. This is the raw partition operation the
+/// [`Refiner`] wraps with its heap/index bookkeeping; the online-ingest
+/// path ([`crate::vdt::ingest`]) calls it directly for threshold-triggered
+/// local re-refinement. The kernel node of `bi` must not be a leaf.
+pub(crate) fn split_block(
+    tree: &PartitionTree,
+    part: &mut BlockPartition,
+    bi: u32,
+    sigma: f64,
+) -> (u32, u32) {
+    let blk = part.blocks[bi as usize].clone();
+    debug_assert!(blk.alive && !tree.is_leaf(blk.kernel));
+    let (a, b) = (blk.data, blk.kernel);
+    let (bl, br) = (tree.left[b as usize], tree.right[b as usize]);
+    let d2l = tree.d2_between(a, bl);
+    let d2r = tree.d2_between(a, br);
+    let (nb, nbl, nbr) = (
+        tree.count[b as usize] as f64,
+        tree.count[bl as usize] as f64,
+        tree.count[br as usize] as f64,
+    );
+    let gl = g_of(tree, a, bl, d2l, sigma);
+    let gr = g_of(tree, a, br, d2r, sigma);
+    // Eq. (18) in log space: q_c = |B| e^{G_c} q / Σ_t |B_t| e^{G_t}
+    let log_den = logsumexp(&[nbl.ln() + gl, nbr.ln() + gr]);
+    let (ql, qr) = if blk.q > 0.0 {
+        (
+            (nb.ln() + gl + blk.q.ln() - log_den).exp(),
+            (nb.ln() + gr + blk.q.ln() - log_den).exp(),
+        )
+    } else {
+        (0.0, 0.0)
+    };
+
+    part.kill_block(bi);
+    let il = part.push_block(a, bl, d2l);
+    part.blocks[il as usize].q = ql;
+    let ir = part.push_block(a, br, d2r);
+    part.blocks[ir as usize].q = qr;
+    (il, ir)
 }
 
 /// Δʰ_AB of Eq. (19); `None` when B is a leaf (not horizontally

@@ -1,0 +1,482 @@
+//! Conformance suite for the online-ingest subsystem (tree grafting +
+//! `vdt::ingest` partition surgery + `runtime::ingest` epoch ledger +
+//! the HTTP ingest/commit endpoints):
+//!
+//! 1. **Bit-exactness within an epoch**: while concurrent clients ingest
+//!    over HTTP, every concurrent matvec stays bit-identical to the
+//!    fitted model — serving never observes a half-applied shadow.
+//! 2. **Refit consistency**: fit + ingest approximates the exact dense
+//!    transition operator about as well as a from-scratch refit on the
+//!    grown dataset, across all four shipped divergences. The documented
+//!    tolerance: mean |Q·y − P·y| of the ingested model stays within
+//!    3× the refit model's error + 5e-3 absolute slack (ingest freezes σ
+//!    and the pre-existing topology, so it is *not* bit-identical to a
+//!    refit — see `vdt::vdt::ingest` module docs).
+//! 3. **Thread-count invariance**: ingesting the same batch under 1 and
+//!    4 threads produces bit-identical models.
+//! 4. **Degenerate inserts**: wrong shape, out-of-domain coordinates,
+//!    exact duplicates, over-cap batches and snapshot-less backends all
+//!    answer typed HTTP errors and never corrupt the serving model.
+//! 5. The full **fit → serve → ingest → commit → serve** HTTP cycle:
+//!    pre-commit serving is bit-identical, post-commit serving exposes
+//!    the grown epoch, and the committed model round-trips through a v2
+//!    snapshot bit-exactly.
+
+use std::sync::Arc;
+
+use vdt::core::divergence::DivergenceKind;
+use vdt::core::json::Json;
+use vdt::core::par;
+use vdt::core::Matrix;
+use vdt::coordinator::{Coordinator, CoordinatorHandle};
+use vdt::data::{synthetic, Dataset};
+use vdt::exact::ExactModel;
+use vdt::runtime::server::client::HttpClient;
+use vdt::runtime::server::{matrix_body, matrix_from_json, Server, ServerConfig, ServerHandle};
+use vdt::runtime::Snapshot;
+use vdt::vdt::ingest::{IngestConfig, ShadowIngest};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+const N: usize = 80;
+
+/// The thread budget is process-global; serialize the tests that override
+/// it (same idiom as `parallel_equivalence.rs`).
+static BUDGET_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn fitted(seed: u64) -> Arc<VdtModel> {
+    let ds = synthetic::two_moons(N, 0.07, seed);
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    m.refine_to(5 * N);
+    Arc::new(m)
+}
+
+/// Coordinator + HTTP server with a fitted VDT model "m" and a knn
+/// baseline (which has no snapshot format, hence cannot ingest).
+fn spawn(cfg: ServerConfig) -> (CoordinatorHandle, ServerHandle, Arc<VdtModel>) {
+    let model = fitted(1);
+    let handle = Coordinator::spawn();
+    handle.register("m", model.clone());
+    let ds = synthetic::two_moons(40, 0.07, 2);
+    let knn =
+        vdt::knn::KnnGraph::build(&ds.x, &vdt::knn::KnnConfig { k: 3, ..Default::default() });
+    handle.register("knn", Arc::new(knn));
+    let server = Server::bind(handle.clone(), "127.0.0.1:0", cfg).expect("bind");
+    (handle, server, model)
+}
+
+fn parse_matrix(body: &str, key: &str) -> Matrix {
+    let v = Json::parse(body).unwrap_or_else(|e| panic!("bad response body {body}: {e}"));
+    matrix_from_json(v.get(key).unwrap_or_else(|| panic!("no '{key}' in {body}")), key)
+        .expect("response matrix decodes")
+}
+
+fn field_u64(body: &str, key: &str) -> u64 {
+    Json::parse(body)
+        .ok()
+        .and_then(|v| v.get(key)?.as_f64())
+        .unwrap_or_else(|| panic!("no numeric '{key}' in {body}")) as u64
+}
+
+fn error_kind(body: &str) -> String {
+    Json::parse(body)
+        .ok()
+        .and_then(|v| v.get("error")?.get("kind")?.as_str().map(str::to_string))
+        .unwrap_or_else(|| panic!("no error.kind in {body}"))
+}
+
+/// Distinct near-data rows: perturbed copies of training points, with a
+/// per-row tag so rows are globally unique across batches and clients.
+fn rows_near(m: &VdtModel, k: usize, tag: usize) -> Matrix {
+    let d = m.tree.d;
+    Matrix::from_fn(k, d, |r, c| {
+        let base = m.tree.s1[(((r + tag * 3) * 11) % m.tree.n) * d + c];
+        base + 0.009 * (1.0 + r as f32 + c as f32) + 0.0011 * (tag as f32 + 1.0)
+    })
+}
+
+#[test]
+fn the_full_ingest_cycle_over_http() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    // fit → serve: baseline matvec, bit-identical to the operator
+    let y = Matrix::from_fn(N, 2, |r, col| (((r * 17 + col * 5) % 13) as f32 - 6.0) * 0.3);
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let baseline = parse_matrix(&body, "yhat");
+    assert_eq!(baseline.data, model.matvec(&y).data);
+
+    // ingest 5 rows: the ack reports the *served* epoch (still 0) and the
+    // shadow's pending count
+    let rows = rows_near(&model, 5, 0);
+    let (status, body) = c.post("/v1/models/m/ingest", &matrix_body("rows", &rows)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(field_u64(&body, "epoch"), 0, "{body}");
+    assert_eq!(field_u64(&body, "pending_ingest"), 5, "{body}");
+    assert_eq!(field_u64(&body, "ingested_points"), 0, "{body}");
+
+    // pre-commit serving is bit-identical to the pre-ingest epoch
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(
+        parse_matrix(&body, "yhat").data,
+        baseline.data,
+        "serving drifted before commit"
+    );
+
+    // the model listing exposes the pending shadow
+    let (status, body) = c.get("/v1/models").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let models = Json::parse(&body).unwrap();
+    let card = models
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|m| m.get("name").and_then(|v| v.as_str()) == Some("m"))
+        .expect("model m listed")
+        .clone();
+    assert_eq!(card.get("epoch").unwrap().as_f64(), Some(0.0), "{body}");
+    assert_eq!(card.get("pending_ingest").unwrap().as_f64(), Some(5.0), "{body}");
+    assert_eq!(card.get("n").unwrap().as_usize(), Some(N), "{body}");
+
+    // commit: empty body, atomic swap to epoch 1
+    let (status, body) = c.post("/v1/models/m/commit", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(field_u64(&body, "epoch"), 1, "{body}");
+    assert_eq!(field_u64(&body, "pending_ingest"), 0, "{body}");
+    assert_eq!(field_u64(&body, "ingested_points"), 5, "{body}");
+
+    // post-commit serving answers at the grown size, row-stochastic
+    let y2 = Matrix::from_fn(N + 5, 1, |_, _| 1.0);
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y2)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got = parse_matrix(&body, "yhat");
+    assert_eq!((got.rows, got.cols), (N + 5, 1));
+    for (i, &v) in got.data.iter().enumerate() {
+        assert!((v - 1.0).abs() < 1e-4, "row {i} sum {v} after commit");
+    }
+
+    // the listing now shows the committed epoch
+    let (_, body) = c.get("/v1/models").unwrap();
+    let models = Json::parse(&body).unwrap();
+    let card = models
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|m| m.get("name").and_then(|v| v.as_str()) == Some("m"))
+        .unwrap()
+        .clone();
+    assert_eq!(card.get("epoch").unwrap().as_f64(), Some(1.0), "{body}");
+    assert_eq!(card.get("pending_ingest").unwrap().as_f64(), Some(0.0), "{body}");
+    assert_eq!(card.get("ingested_points").unwrap().as_f64(), Some(5.0), "{body}");
+    assert_eq!(card.get("n").unwrap().as_usize(), Some(N + 5), "{body}");
+
+    // /stats aggregates the ingest counters
+    let (_, body) = c.get("/stats").unwrap();
+    let stats = Json::parse(&body).unwrap();
+    let ing = stats.get("ingest").unwrap();
+    assert_eq!(ing.get("ingested_rows").unwrap().as_f64(), Some(5.0), "{body}");
+    assert_eq!(ing.get("commits").unwrap().as_f64(), Some(1.0), "{body}");
+    assert_eq!(ing.get("pending").unwrap().as_f64(), Some(0.0), "{body}");
+
+    // a committed no-op commit acks the current state without a swap
+    let (status, body) = c.post("/v1/models/m/commit", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(field_u64(&body, "epoch"), 1, "{body}");
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn serving_stays_bit_exact_under_concurrent_ingest() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let addr = server.addr();
+
+    const READERS: usize = 6;
+    const WRITERS: usize = 3;
+    const ROUNDS: usize = 8;
+    let mut joins = Vec::new();
+    for w in 0..WRITERS {
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("connect");
+            for round in 0..ROUNDS {
+                let rows = rows_near(&model, 2, w * 100 + round + 1);
+                let (status, body) =
+                    c.post("/v1/models/m/ingest", &matrix_body("rows", &rows)).expect("post");
+                assert_eq!(status, 200, "writer {w} round {round}: {body}");
+                assert_eq!(field_u64(&body, "epoch"), 0, "ingest must not publish: {body}");
+            }
+        }));
+    }
+    for reader in 0..READERS {
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("connect");
+            for round in 0..ROUNDS {
+                let tag = reader * 1000 + round;
+                let y = Matrix::from_fn(N, 1, move |r, _| {
+                    (((r * 29 + tag * 13) % 17) as f32 - 8.0) * 0.2
+                });
+                let (status, body) =
+                    c.post("/v1/models/m/matvec", &matrix_body("y", &y)).expect("post");
+                assert_eq!(status, 200, "reader {reader}: {body}");
+                assert_eq!(
+                    parse_matrix(&body, "yhat").data,
+                    model.matvec(&y).data,
+                    "reader {reader} round {round} observed a mutating epoch"
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client panicked");
+    }
+
+    // every ingested row landed in one shared shadow
+    let mut c = HttpClient::connect(addr).unwrap();
+    let (_, body) = c.get("/stats").unwrap();
+    let stats = Json::parse(&body).unwrap();
+    assert_eq!(
+        stats.get("ingest").unwrap().get("pending").unwrap().as_f64(),
+        Some((WRITERS * ROUNDS * 2) as f64),
+        "{body}"
+    );
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn degenerate_ingests_answer_typed_errors_and_leave_serving_intact() {
+    let (handle, server, model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let dup_row = {
+        let mut m = Matrix::zeros(2, 2);
+        let src = model.tree.s1[..2].to_vec();
+        m.data[..2].copy_from_slice(&src);
+        m.data[2..].copy_from_slice(&src);
+        m
+    };
+    let cases: Vec<(&str, String, u16, &str)> = vec![
+        // wrong dimension (model d = 2)
+        (
+            "/v1/models/m/ingest",
+            matrix_body("rows", &Matrix::from_fn(1, 5, |_, _| 0.4)),
+            400,
+            "invalid_spec",
+        ),
+        // empty batch
+        ("/v1/models/m/ingest", "{\"rows\": []}".to_string(), 400, "invalid_spec"),
+        // missing field
+        ("/v1/models/m/ingest", "{}".to_string(), 400, "invalid_spec"),
+        // a non-finite coordinate never reaches the model (JSON layer)
+        ("/v1/models/m/ingest", "{\"rows\": [[1e999, 0.0]]}".to_string(), 400, "invalid_spec"),
+        // batch-internal exact duplicate
+        ("/v1/models/m/ingest", matrix_body("rows", &dup_row), 400, "invalid_spec"),
+        // unknown model
+        (
+            "/v1/models/ghost/ingest",
+            matrix_body("rows", &Matrix::zeros(1, 2)),
+            404,
+            "unknown_model",
+        ),
+        // a backend with no snapshot format cannot shadow-clone
+        ("/v1/models/knn/ingest", matrix_body("rows", &Matrix::zeros(1, 2)), 501, "unsupported"),
+        // commit on an unknown model
+        ("/v1/models/ghost/commit", String::new(), 404, "unknown_model"),
+    ];
+    for (path, body, want_status, want_kind) in cases {
+        let (status, resp) = c.post(path, &body).unwrap();
+        assert_eq!(status, want_status, "{path} with {body:.60}: {resp}");
+        assert_eq!(error_kind(&resp), want_kind, "{path}: {resp}");
+    }
+
+    // over the per-request row cap: rejected up front, typed
+    let mut big = String::from("{\"rows\": [[0.1,0.2]");
+    for i in 0..4096 {
+        big.push_str(&format!(",[{}.5,0.25]", i + 1));
+    }
+    big.push_str("]}");
+    let (status, resp) = c.post("/v1/models/m/ingest", &big).unwrap();
+    assert_eq!(status, 400, "{resp}");
+    assert_eq!(error_kind(&resp), "invalid_spec", "{resp}");
+
+    // after the whole corpus the serving model is untouched and nothing
+    // is pending (every rejection was atomic)
+    let y = Matrix::from_fn(N, 1, |r, _| (r % 7) as f32 * 0.1);
+    let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(parse_matrix(&body, "yhat").data, model.matvec(&y).data);
+    let (_, body) = c.get("/stats").unwrap();
+    let stats = Json::parse(&body).unwrap();
+    assert_eq!(stats.get("ingest").unwrap().get("pending").unwrap().as_f64(), Some(0.0));
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+/// Datasets + divergences matching the snapshot suite's four geometries.
+fn divergence_cases() -> Vec<(DivergenceKind, Dataset)> {
+    vec![
+        (DivergenceKind::SqEuclidean, synthetic::two_moons(72, 0.08, 5)),
+        (DivergenceKind::Kl, synthetic::simplex_mixture(64, 8, 2, 2, 4.0, 7, "ing_kl")),
+        (DivergenceKind::ItakuraSaito, synthetic::positive_spectra(60, 12, 2, 9)),
+        (DivergenceKind::Mahalanobis(None), synthetic::two_moons(68, 0.07, 11)),
+    ]
+}
+
+/// Mean |Q·y − P·y| over a small deterministic probe basis.
+fn approx_error(q: &VdtModel, p: &Matrix) -> f64 {
+    let n = p.rows;
+    let y = Matrix::from_fn(n, 3, |r, c| (((r * 7 + c * 3) % 11) as f32 - 5.0) * 0.2);
+    let a = q.matvec(&y);
+    let b = p.matmul(&y);
+    a.data
+        .iter()
+        .zip(b.data.iter())
+        .map(|(&x, &z)| (x as f64 - z as f64).abs())
+        .sum::<f64>()
+        / a.data.len() as f64
+}
+
+#[test]
+fn ingest_tracks_a_refit_within_documented_tolerance_for_every_divergence() {
+    for (kind, ds) in divergence_cases() {
+        let tag = kind.name();
+        let n = ds.n();
+        let grow = n / 8; // last n/8 points arrive online
+        let base = n - grow;
+        let d = ds.d();
+        let x_base = Matrix::from_fn(base, d, |r, c| ds.x.row(r)[c]);
+        let cfg = VdtConfig { divergence: kind.clone(), ..Default::default() };
+
+        // fit on the base set, then ingest the remainder
+        let mut m = VdtModel::build(&x_base, &cfg);
+        m.refine_to(4 * base);
+        let mut sh = ShadowIngest::new(m, IngestConfig::default());
+        let extra = Matrix::from_fn(grow, d, |r, c| ds.x.row(base + r)[c]);
+        assert_eq!(sh.ingest_rows(&extra).unwrap(), grow, "{tag}");
+        let ingested = sh.into_model();
+        ingested.partition.validate(&ingested.tree).unwrap();
+        assert_eq!(ingested.n(), n, "{tag}");
+
+        // refit from scratch on the full set
+        let mut refit = VdtModel::build(&ds.x, &cfg);
+        refit.refine_to(4 * n);
+
+        // each model vs the exact dense operator at its own bandwidth
+        let p_ing = ExactModel::build_dense_div(&ds.x, Some(ingested.sigma()), &kind).p;
+        let p_ref = ExactModel::build_dense_div(&ds.x, Some(refit.sigma()), &kind).p;
+        let err_ing = approx_error(&ingested, &p_ing);
+        let err_ref = approx_error(&refit, &p_ref);
+        // the documented tolerance (see module docs): ingest keeps σ and
+        // topology frozen, so it may approximate P somewhat worse than a
+        // refit, but stays within a small constant factor of it
+        assert!(
+            err_ing <= 3.0 * err_ref + 5e-3,
+            "{tag}: ingest error {err_ing:.5} vs refit error {err_ref:.5}"
+        );
+    }
+}
+
+#[test]
+fn ingest_is_thread_count_invariant() {
+    let _guard = BUDGET_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let run = |threads: usize| {
+        let prev = par::set_max_threads(threads);
+        let ds = synthetic::two_moons(96, 0.08, 13);
+        let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+        m.refine_to(4 * 96);
+        let mut sh = ShadowIngest::new(m, IngestConfig::default());
+        let rows = rows_near(sh.model(), 6, 4);
+        sh.ingest_rows(&rows).unwrap();
+        let m = sh.into_model();
+        let y = Matrix::from_fn(m.n(), 2, |r, c| (((r * 5 + c) % 9) as f32 - 4.0) * 0.25);
+        let out = m.matvec(&y).data;
+        par::set_max_threads(prev);
+        (m.num_blocks(), out)
+    };
+    let (blocks_1, out_1) = run(1);
+    let (blocks_4, out_4) = run(4);
+    assert_eq!(blocks_1, blocks_4, "partition shape differs across thread counts");
+    assert_eq!(out_1, out_4, "ingest result not bit-exact across thread counts");
+}
+
+#[test]
+fn committed_models_roundtrip_v2_snapshots_bit_exactly() {
+    let model = fitted(17);
+    // shadow-clone through the snapshot path, exactly as the epoch
+    // ledger does (VdtModel deliberately has no Clone)
+    let parent_bytes = model.to_snapshot("conf").encode().unwrap();
+    let shadow = VdtModel::from_snapshot(Snapshot::decode(&parent_bytes).unwrap()).unwrap();
+    let mut sh = ShadowIngest::new(shadow, IngestConfig::default());
+    let rows = rows_near(&model, 4, 8);
+    sh.ingest_rows(&rows).unwrap();
+    let mut committed = sh.into_model();
+    committed.set_lineage(1, vdt::runtime::snapshot::fnv1a64(&parent_bytes));
+
+    let bytes = committed.to_snapshot("conf+ingest").encode().unwrap();
+    let back = VdtModel::from_snapshot(Snapshot::decode(&bytes).unwrap()).unwrap();
+    assert_eq!(back.epoch(), 1);
+    assert_eq!(back.parent_sum(), committed.parent_sum());
+    let y = Matrix::from_fn(committed.n(), 3, |r, c| (((r * 3 + c) % 7) as f32 - 3.0) * 0.4);
+    assert_eq!(committed.matvec(&y).data, back.matvec(&y).data, "v2 roundtrip drifted");
+}
+
+/// The offline CLI path: `vdt ingest --model-path ... --csv ...` reads a
+/// v2 snapshot, absorbs the rows, and writes the next epoch with lineage.
+#[test]
+fn cli_ingest_writes_the_next_epoch() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let snap = dir.join(format!("vdt_ingconf_{pid}.vdt"));
+    let csv = dir.join(format!("vdt_ingconf_{pid}.csv"));
+    let out = dir.join(format!("vdt_ingconf_{pid}_e1.vdt"));
+
+    let model = fitted(23);
+    model.save(&snap, "cli-ingest").unwrap();
+    let parent_sum = vdt::runtime::snapshot::fnv1a64(&std::fs::read(&snap).unwrap());
+    let rows = rows_near(&model, 3, 5);
+    // the io::load_csv contract: label,f0,f1,... (labels are ignored by
+    // the ingest path)
+    let mut text = String::new();
+    for r in 0..rows.rows {
+        text.push('0');
+        for v in rows.row(r) {
+            text.push_str(&format!(",{v}"));
+        }
+        text.push('\n');
+    }
+    std::fs::write(&csv, text).unwrap();
+
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_vdt"))
+        .args([
+            "ingest",
+            "--model-path",
+            snap.to_str().unwrap(),
+            "--csv",
+            csv.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("run vdt ingest");
+    assert!(status.success(), "vdt ingest exited with {status}");
+
+    let next = VdtModel::load(&out).unwrap();
+    assert_eq!(next.n(), N + 3);
+    assert_eq!(next.epoch(), 1);
+    assert_eq!(next.parent_sum(), parent_sum);
+    next.partition.validate(&next.tree).unwrap();
+
+    std::fs::remove_file(&snap).ok();
+    std::fs::remove_file(&csv).ok();
+    std::fs::remove_file(&out).ok();
+}

@@ -106,9 +106,99 @@ fn rejects_wrong_magic() {
 #[test]
 fn rejects_future_format_version() {
     let mut b = sample_bytes();
-    b[8..12].copy_from_slice(&2u32.to_le_bytes());
+    b[8..12].copy_from_slice(&3u32.to_le_bytes());
     let e = Snapshot::decode(&b).unwrap_err().to_string();
-    assert!(e.contains("version 2"), "{e}");
+    assert!(e.contains("version 3"), "{e}");
+}
+
+/// Bytes per section-table entry (id u32 + offset u64 + len u64 + sum
+/// u64) — mirrors the constant in `runtime::snapshot`.
+const TABLE_ENTRY: usize = 28;
+
+/// Reframe a version-2 byte image as a well-formed version-1 file: drop
+/// the trailing EPOCH section (fixed 16-byte payload), shrink the table
+/// to 4 entries and shift every payload offset accordingly. This is
+/// byte-for-byte what the pre-epoch writer produced for the same model.
+fn reframe_as_v1(b: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(b.len() - TABLE_ENTRY - 16);
+    out.extend_from_slice(&b[..8]); // magic
+    out.extend_from_slice(&1u32.to_le_bytes()); // version
+    out.extend_from_slice(&4u32.to_le_bytes()); // section count
+    for i in 0..4 {
+        let at = 16 + i * TABLE_ENTRY;
+        out.extend_from_slice(&b[at..at + 4]); // id
+        let off = u64::from_le_bytes(b[at + 4..at + 12].try_into().unwrap());
+        out.extend_from_slice(&(off - TABLE_ENTRY as u64).to_le_bytes());
+        out.extend_from_slice(&b[at + 12..at + TABLE_ENTRY]); // len + checksum
+    }
+    out.extend_from_slice(&b[16 + 5 * TABLE_ENTRY..b.len() - 16]);
+    out
+}
+
+#[test]
+fn v1_files_load_as_epoch_zero_and_serve_bit_identically() {
+    let ds = synthetic::two_moons(24, 0.08, 17);
+    let m = fitted(DivergenceKind::SqEuclidean, &ds);
+    let v2 = m.to_snapshot(&ds.name).encode().unwrap();
+    let v1 = reframe_as_v1(&v2);
+    let snap = Snapshot::decode(&v1).expect("legacy v1 framing must decode");
+    assert_eq!((snap.epoch, snap.parent_sum), (0, 0));
+    let l = VdtModel::from_snapshot(snap).unwrap();
+    let y = Matrix::from_fn(24, 2, |r, c| ((r * 7 + c) % 9) as f32 - 4.0);
+    assert_eq!(m.matvec(&y).data, l.matvec(&y).data, "v1 load drifted");
+    // and a re-save upgrades the file to v2, still epoch 0
+    assert_eq!(l.to_snapshot(&ds.name).encode().unwrap(), v2);
+}
+
+#[test]
+fn v2_bytes_relabeled_as_v1_are_rejected() {
+    // a strict version-1 reader sees 5 sections where it expects 4; our
+    // decoder reports the same structural clash instead of misreading
+    let mut b = sample_bytes();
+    b[8..12].copy_from_slice(&1u32.to_le_bytes());
+    let e = Snapshot::decode(&b).unwrap_err().to_string();
+    assert!(e.contains("sections"), "{e}");
+}
+
+#[test]
+fn lineage_rule_is_enforced_at_encode_and_decode() {
+    // encode side: epoch 0 must not carry a parent checksum, committed
+    // epochs must
+    let mut snap = Snapshot::decode(&sample_bytes()).unwrap();
+    snap.parent_sum = 0x1234;
+    assert!(snap.encode().unwrap_err().to_string().contains("lineage"));
+    let mut snap = Snapshot::decode(&sample_bytes()).unwrap();
+    snap.epoch = 1;
+    assert!(snap.encode().unwrap_err().to_string().contains("lineage"));
+
+    // decode side: patch the EPOCH payload of an epoch-0 file to claim a
+    // parent, with a *recomputed* section checksum so only the lineage
+    // check can catch it
+    let mut b = sample_bytes();
+    let len = b.len();
+    b[len - 8..].copy_from_slice(&0xfeed_u64.to_le_bytes());
+    let sum = vdt::runtime::snapshot::fnv1a64(&b[len - 16..]);
+    let sum_at = 16 + 4 * TABLE_ENTRY + 20;
+    b[sum_at..sum_at + 8].copy_from_slice(&sum.to_le_bytes());
+    let e = Snapshot::decode(&b).unwrap_err().to_string();
+    assert!(e.contains("lineage"), "{e}");
+}
+
+#[test]
+fn epoch_section_flips_are_rejected_on_committed_snapshots() {
+    // a nonzero-lineage file: every byte of the 16-byte EPOCH payload is
+    // checksum-covered (the epoch-0 `rejects_any_single_byte_flip` sweep
+    // covers the all-zero payload; this pins the committed case)
+    let mut snap = Snapshot::decode(&sample_bytes()).unwrap();
+    snap.epoch = 4;
+    snap.parent_sum = 0x0bad_cafe_d00d_1234;
+    let b = snap.encode().unwrap();
+    Snapshot::decode(&b).unwrap();
+    for i in b.len() - 16..b.len() {
+        let mut c = b.clone();
+        c[i] ^= 0x01;
+        assert!(Snapshot::decode(&c).is_err(), "epoch flip at byte {i} was accepted");
+    }
 }
 
 #[test]
