@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Lint a Prometheus text-exposition dump (the `GET /metrics` body).
+
+Usage: check_metrics.py <metrics.txt>   (or `-` / no arg for stdin)
+
+Checks the contract `core::obs` promises scrapers, with stdlib only:
+
+- every sample belongs to a family announced by a `# TYPE` line, and
+  every `# TYPE` is paired with a `# HELP` (declared at most once each);
+- metric and label names are legal (`[a-zA-Z_:][a-zA-Z0-9_:]*` /
+  `[a-zA-Z_][a-zA-Z0-9_]*`), label values use only the `\\\\`, `\\"`,
+  `\\n` escapes, and sample values parse as floats;
+- no duplicate (name, labelset) sample;
+- histogram families are complete per labelset: a `_bucket` series with
+  strictly-parsing `le` bounds ending at `le="+Inf"`, cumulative counts
+  that never decrease, plus `_sum` and `_count`, with the `+Inf` bucket
+  equal to `_count`;
+- counter and gauge families carry no `_bucket`/`le` samples.
+
+A `# TYPE` with zero samples is fine (a family can be idle at scrape
+time). Exit status: 0 = clean, 1 = violations (each printed).
+"""
+
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+(\S+)$")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def valid_escapes(value):
+    """Only `\\\\`, `\\"`, `\\n` may follow a backslash (a regex lookahead
+    can't tell the second half of an escaped backslash from a new escape,
+    so scan sequentially)."""
+    i = 0
+    while i < len(value):
+        if value[i] == "\\":
+            if i + 1 >= len(value) or value[i + 1] not in '\\"n':
+                return False
+            i += 2
+        else:
+            i += 1
+    return True
+
+
+def parse_labels(raw):
+    """`k="v",k2="v2"` -> ((k, v), ...), or None on any syntax error."""
+    labels = []
+    i = 0
+    while i < len(raw):
+        m = LABEL_RE.match(raw, i)
+        if not m:
+            return None
+        if not valid_escapes(m.group(2)):
+            return None
+        labels.append((m.group(1), m.group(2)))
+        i = m.end()
+        if i < len(raw):
+            if raw[i] != ",":
+                return None
+            i += 1
+    return tuple(labels)
+
+
+def base_family(name, families):
+    """Histogram series names map back to their declared family."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        stem = name[: -len(suffix)] if name.endswith(suffix) else None
+        if stem and families.get(stem) == "histogram":
+            return stem
+    return name
+
+
+def main(argv):
+    path = argv[1] if len(argv) > 1 and argv[1] != "-" else None
+    text = open(path).read() if path else sys.stdin.read()
+
+    errors = []
+    families = {}  # name -> kind (from # TYPE)
+    helped = set()  # names with a # HELP
+    samples = []  # (family, series name, labels tuple, float value)
+    seen = set()  # duplicate (name, labels) detection
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+
+        def err(msg):
+            errors.append(f"line {lineno}: {msg}: {line!r}")
+
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not NAME_RE.match(parts[2]):
+                err("malformed HELP")
+            elif parts[2] in helped:
+                err(f"duplicate HELP for {parts[2]}")
+            else:
+                helped.add(parts[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or not NAME_RE.match(parts[2]):
+                err("malformed TYPE")
+            elif parts[3] not in ("counter", "gauge", "histogram", "summary", "untyped"):
+                err(f"unknown kind '{parts[3]}'")
+            elif parts[2] in families:
+                err(f"duplicate TYPE for {parts[2]}")
+            else:
+                families[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment
+
+        m = SAMPLE_RE.match(line)
+        if not m:
+            err("unparseable sample")
+            continue
+        name, raw_labels, raw_value = m.groups()
+        labels = parse_labels(raw_labels) if raw_labels is not None else ()
+        if labels is None:
+            err("bad label syntax or escape")
+            continue
+        try:
+            value = float(raw_value)
+        except ValueError:
+            err(f"non-numeric value '{raw_value}'")
+            continue
+        if (name, labels) in seen:
+            err("duplicate sample (same name and labels)")
+            continue
+        seen.add((name, labels))
+
+        family = base_family(name, families)
+        kind = families.get(family)
+        if kind is None:
+            err(f"sample for {name} has no preceding # TYPE")
+            continue
+        if family not in helped:
+            err(f"family {family} has # TYPE but no # HELP")
+        if kind != "histogram" and (
+            name != family or any(k == "le" for k, _ in labels)
+        ):
+            err(f"{kind} family {family} carries a histogram-style sample")
+            continue
+        samples.append((family, name, labels, value))
+
+    # ---- histogram completeness per (family, labelset-minus-le) ----
+    series = {}
+    for family, name, labels, value in samples:
+        if families[family] != "histogram":
+            continue
+        key = (family, tuple(kv for kv in labels if kv[0] != "le"))
+        entry = series.setdefault(key, {"buckets": [], "sum": None, "count": None})
+        if name.endswith("_bucket"):
+            le = dict(labels).get("le")
+            if le is None:
+                errors.append(f"{family}{dict(key[1])}: _bucket without an le label")
+                continue
+            bound = float("inf") if le == "+Inf" else None
+            if bound is None:
+                try:
+                    bound = float(le)
+                except ValueError:
+                    errors.append(f"{family}: unparseable le bound '{le}'")
+                    continue
+            entry["buckets"].append((bound, value))
+        elif name.endswith("_sum"):
+            entry["sum"] = value
+        elif name.endswith("_count"):
+            entry["count"] = value
+        else:
+            errors.append(f"histogram family {family} has a bare sample '{name}'")
+
+    for (family, labels), entry in sorted(series.items()):
+        where = f"{family}{{{','.join(f'{k}={v}' for k, v in labels)}}}"
+        buckets = entry["buckets"]
+        if not buckets:
+            errors.append(f"{where}: no _bucket series")
+            continue
+        bounds = [b for b, _ in buckets]
+        if bounds != sorted(bounds) or len(set(bounds)) != len(bounds):
+            errors.append(f"{where}: le bounds not strictly increasing: {bounds}")
+        if bounds[-1] != float("inf"):
+            errors.append(f"{where}: bucket series does not end at le=\"+Inf\"")
+        counts = [c for _, c in buckets]
+        if any(counts[i] > counts[i + 1] for i in range(len(counts) - 1)):
+            errors.append(f"{where}: cumulative bucket counts decrease: {counts}")
+        if entry["sum"] is None:
+            errors.append(f"{where}: missing _sum")
+        if entry["count"] is None:
+            errors.append(f"{where}: missing _count")
+        elif bounds[-1] == float("inf") and counts[-1] != entry["count"]:
+            errors.append(
+                f"{where}: +Inf bucket {counts[-1]} != _count {entry['count']}"
+            )
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}")
+        print(f"FAIL: {len(errors)} exposition violation(s)")
+        return 1
+    hists = sum(1 for k in families.values() if k == "histogram")
+    print(
+        f"PASS: {len(samples)} samples across {len(families)} families "
+        f"({hists} histograms, {len(series)} histogram series) lint clean"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -29,6 +29,12 @@
 //! now, not the worker count — and hammers matvec over all of them with
 //! sampled bit-parity. Emitted as `batched/matvec@c{conns}` entries in
 //! `BENCH_http.json`.
+//!
+//! Finally, the **observability overhead** entries: `/metrics` and
+//! `/stats` scrape latency against the traffic-populated registry
+//! (`obs/metrics_scrape`, `obs/stats_scrape`) and the raw cost of a
+//! 4M-observation histogram hot loop (`obs/observe_x4m`) — the always-on
+//! per-request instrumentation cost the regression gate watches.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -347,8 +353,68 @@ fn main() {
         assert_eq!(stats.errors, 0, "sweep produced protocol errors");
         assert_eq!(stats.rejected, 0, "sweep was rejected below max_conns");
         results.push((format!("batched/matvec@c{conns}"), r));
+
+        // ---- observability scrape cost ----
+        // against this fully-populated registry (per-endpoint latency
+        // histograms with real samples, batcher instruments, stage
+        // timers): /metrics renders the whole exposition per GET, /stats
+        // snapshots every histogram and interpolates three quantiles
+        let mut http = HttpClient::connect(server.addr()).expect("connect scrape client");
+        for (path, name) in [("/metrics", "obs/metrics_scrape"), ("/stats", "obs/stats_scrape")]
+        {
+            let scrapes = env_usize("BENCH_HTTP_SCRAPES", 200);
+            let mut lat = Vec::with_capacity(scrapes);
+            for i in 0..scrapes {
+                let t = Instant::now();
+                let (status, body) = http.get(path).expect("scrape");
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+                assert_eq!(status, 200, "{body}");
+                if i == 0 && path == "/metrics" {
+                    assert!(
+                        body.contains("vdt_http_requests_total"),
+                        "scrape body lost the core families:\n{body}"
+                    );
+                }
+            }
+            lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+            let total_s: f64 = lat.iter().sum::<f64>() / 1e3;
+            let r = ModeResult {
+                rps: lat.len() as f64 / total_s,
+                p50_ms: percentile(&lat, 50.0),
+                p99_ms: percentile(&lat, 99.0),
+            };
+            println!(
+                "# {name}: {:.0} scrapes/s, p50 {:.3} ms, p99 {:.3} ms",
+                r.rps, r.p50_ms, r.p99_ms
+            );
+            results.push((name.to_string(), r));
+        }
         server.shutdown();
         handle.shutdown();
+    }
+
+    // ---- raw instrument overhead ----
+    // the always-on per-request cost: one histogram observation (shard
+    // pick + bucket search + three relaxed atomics). Recorded as the
+    // wall time of a 4M-observation hot loop so the regression gate
+    // catches an instrumentation slowdown directly.
+    {
+        use vdt::core::obs::Registry;
+        let reg = Registry::new();
+        let h = reg.histogram("bench_observe_seconds", "observe-loop cost", &[]);
+        const OBS: usize = 4_000_000;
+        // spread observations across the full bucket range
+        let t = Instant::now();
+        for i in 0..OBS {
+            h.observe((i % 997) as f64 * 1e-5);
+        }
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(h.count(), OBS as u64);
+        println!("# obs/observe_x4m: {ms:.1} ms ({:.1} ns/observe)", ms * 1e6 / OBS as f64);
+        results.push((
+            "obs/observe_x4m".to_string(),
+            ModeResult { rps: OBS as f64 / (ms / 1e3), p50_ms: ms, p99_ms: ms },
+        ));
     }
 
     let get = |k: &str| results.iter().find(|(name, _)| name == k).expect("mode ran").1;

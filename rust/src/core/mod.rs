@@ -1,8 +1,8 @@
 //! Core substrates: the [`op`] transition-operator layer (the crate's
 //! central abstraction) and its typed [`error`] enum, dense row-major
 //! matrices, vector math with runtime-dispatched [`simd`] kernels,
-//! metrics/timing, a seedable RNG, the bench
-//! harness, and the [`par`] data-parallel execution layer (this is an
+//! metrics/timing, the [`obs`] observability registry, a seedable RNG,
+//! the bench harness, and the [`par`] data-parallel execution layer (this is an
 //! offline build — no external crates beyond the vendored `xla`/`anyhow`
 //! stand-ins, so these are all in-tree).
 
@@ -12,6 +12,7 @@ pub mod error;
 pub mod json;
 pub mod matrix;
 pub mod metrics;
+pub mod obs;
 pub mod op;
 pub mod par;
 pub mod rng;

@@ -1,0 +1,667 @@
+//! Zero-dependency observability: a registry of named, labeled
+//! instruments (sharded counters, gauges, log-linear latency
+//! histograms) plus RAII stage timers and a Prometheus text-exposition
+//! encoder.
+//!
+//! Three consumers share this module: the HTTP server's per-endpoint
+//! request accounting (`GET /metrics` + `GET /stats`), the pipeline
+//! stage timers scattered through `tree`/`vdt`/`kernels`/`ingest`
+//! (recorded into the process-global registry, [`global`]), and the
+//! structured access log. Everything is `std`-only and cheap enough to
+//! stay always-on: counters are sharded across cache lines so
+//! concurrent increments don't bounce, histogram observation is a
+//! short bucket scan plus three relaxed atomic adds, and registry
+//! lookups (one short mutex + linear scan over a handful of families)
+//! happen once per *call*, never per element.
+//!
+//! ```
+//! use vdt::core::obs::Registry;
+//!
+//! let r = Registry::new();
+//! let c = r.counter("demo_requests_total", "requests served", &[("endpoint", "matvec")]);
+//! c.inc();
+//! c.add(2);
+//! assert_eq!(c.get(), 3);
+//!
+//! let h = r.histogram("demo_latency_seconds", "request latency", &[]);
+//! h.observe(0.003);
+//! let p50 = h.quantile(0.5);
+//! assert!(p50 > 0.002 && p50 <= 0.005, "sandwich bound: {p50}");
+//!
+//! let text = r.render();
+//! assert!(text.contains("# TYPE demo_requests_total counter"));
+//! assert!(text.contains("demo_latency_seconds_bucket"));
+//! ```
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Shard count for [`Counter`]; power of two so the thread id masks.
+const SHARDS: usize = 16;
+
+/// One cache line per shard so concurrent increments don't false-share.
+#[repr(align(64))]
+struct Shard(AtomicU64);
+
+/// Stable per-thread shard index: threads are numbered on first use and
+/// the number is masked down to [`SHARDS`].
+fn shard_idx() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    IDX.with(|i| *i & (SHARDS - 1))
+}
+
+/// Monotone counter, sharded across cache lines. `get` sums the shards;
+/// increments from any number of threads are never lost (each lands in
+/// exactly one shard's `fetch_add`).
+#[derive(Clone)]
+pub struct Counter {
+    core: Arc<CounterCore>,
+}
+
+struct CounterCore {
+    shards: Box<[Shard]>,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        let shards: Vec<Shard> = (0..SHARDS).map(|_| Shard(AtomicU64::new(0))).collect();
+        Counter { core: Arc::new(CounterCore { shards: shards.into_boxed_slice() }) }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.core.shards[shard_idx()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.core.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Point-in-time signed gauge (queue depths, connection counts).
+#[derive(Clone)]
+pub struct Gauge {
+    core: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { core: Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn set(&self, v: i64) {
+        self.core.store(v as u64, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.core.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.core.fetch_sub(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.core.load(Ordering::Relaxed) as i64
+    }
+}
+
+/// Latency histogram over log-linear buckets (1-2-5 steps per decade
+/// from 1 µs to 10 s by default) with an overflow bucket, exact
+/// count/sum, and quantile readout by in-bucket interpolation.
+///
+/// `observe` is three relaxed atomic adds after a ≤ 23-entry scan; the
+/// sum is accumulated in integer micro-units so no atomic-float CAS
+/// loop is needed (per-observation precision 1e-6 of the unit).
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+struct HistogramCore {
+    /// Strictly increasing finite upper bounds; the implicit final
+    /// bucket is `+Inf`.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` buckets; the last catches the overflow.
+    counts: Vec<AtomicU64>,
+    /// Sum of observed values in micro-units (value × 1e6, rounded).
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Consistent-enough copy of a histogram for `/stats` snapshots and
+/// tests (reads are relaxed; quiesce writers for exact equality).
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts, overflow bucket last.
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+/// Default latency bounds: 1-2-5 per decade, 1 µs .. 10 s.
+pub fn latency_bounds() -> Vec<f64> {
+    let mut b = Vec::with_capacity(22);
+    let mut decade = 1e-6;
+    for _ in 0..7 {
+        for m in [1.0, 2.0, 5.0] {
+            b.push(decade * m);
+        }
+        decade *= 10.0;
+    }
+    b.push(10.0);
+    b
+}
+
+/// Bounds for small-integer width histograms (fused batch sizes):
+/// 1, 2, 4, ... capped at `max` (clamped to ≥ 2 so the bounds stay
+/// strictly increasing).
+pub fn width_bounds(max: u64) -> Vec<f64> {
+    let max = max.max(2) as f64;
+    let mut b = vec![1.0];
+    let mut v = 2.0;
+    while v < max {
+        b.push(v);
+        v *= 2.0;
+    }
+    b.push(max);
+    b
+}
+
+impl Histogram {
+    fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            core: Arc::new(HistogramCore {
+                bounds,
+                counts,
+                sum_micros: AtomicU64::new(0),
+                count: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let c = &self.core;
+        let idx =
+            c.bounds.iter().position(|&b| v <= b).unwrap_or(c.bounds.len());
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        c.sum_micros.fetch_add((v * 1e6).round() as u64, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observe a duration in seconds.
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.core.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Quantile estimate by linear interpolation inside the containing
+    /// bucket. The result is sandwiched by that bucket's bounds; the
+    /// overflow bucket reports the largest finite bound. Empty → 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let c = &self.core;
+        let total = c.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, bucket) in c.counts.iter().enumerate() {
+            let n = bucket.load(Ordering::Relaxed);
+            if n > 0 && cum + n >= target {
+                let lo = if i == 0 { 0.0 } else { c.bounds[i - 1] };
+                let hi = c.bounds.get(i).copied().unwrap_or(*c.bounds.last().unwrap());
+                if hi <= lo {
+                    return hi;
+                }
+                let frac = (target - cum) as f64 / n as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum += n;
+        }
+        *c.bounds.last().unwrap()
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let c = &self.core;
+        HistogramSnapshot {
+            bounds: c.bounds.clone(),
+            counts: c.counts.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum(),
+            count: c.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII span: records the elapsed wall time into a histogram on drop.
+///
+/// ```
+/// use vdt::core::obs::Registry;
+/// let r = Registry::new();
+/// let h = r.histogram("demo_stage_seconds", "stage wall time", &[("stage", "build")]);
+/// {
+///     let _t = vdt::core::obs::StageTimer::start(h.clone());
+///     // ... timed work ...
+/// }
+/// assert_eq!(h.count(), 1);
+/// ```
+pub struct StageTimer {
+    hist: Histogram,
+    start: Instant,
+}
+
+impl StageTimer {
+    pub fn start(hist: Histogram) -> StageTimer {
+        StageTimer { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for StageTimer {
+    fn drop(&mut self) {
+        self.hist.observe_duration(self.start.elapsed());
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn token(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Instrument {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Metric {
+    labels: Vec<(String, String)>,
+    inst: Instrument,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    metrics: Vec<Metric>,
+}
+
+/// Named, labeled instrument registry. Registration is idempotent:
+/// asking twice for the same (name, labels) returns handles to the same
+/// underlying instrument, so callers register at the point of use
+/// without coordinating. Rendering emits Prometheus text exposition
+/// format (HELP/TYPE pairs, escaped label values, cumulative histogram
+/// buckets with `+Inf`, `_sum`, `_count`).
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { families: Mutex::new(Vec::new()) }
+    }
+
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.instrument(name, help, Kind::Counter, labels, || {
+            Instrument::Counter(Counter::new())
+        }) {
+            Instrument::Counter(c) => c,
+            _ => unreachable!("registry kind mismatch for {name}"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self
+            .instrument(name, help, Kind::Gauge, labels, || Instrument::Gauge(Gauge::new()))
+        {
+            Instrument::Gauge(g) => g,
+            _ => unreachable!("registry kind mismatch for {name}"),
+        }
+    }
+
+    /// Histogram with the default latency bounds ([`latency_bounds`]).
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Histogram {
+        self.histogram_with_bounds(name, help, labels, &latency_bounds())
+    }
+
+    pub fn histogram_with_bounds(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        match self.instrument(name, help, Kind::Histogram, labels, || {
+            Instrument::Histogram(Histogram::new(bounds.to_vec()))
+        }) {
+            Instrument::Histogram(h) => h,
+            _ => unreachable!("registry kind mismatch for {name}"),
+        }
+    }
+
+    fn instrument(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        let labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let mut fams = self.families.lock().unwrap();
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "instrument {name} re-registered as {:?} (was {:?})",
+                    kind,
+                    f.kind
+                );
+                f
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    metrics: Vec::new(),
+                });
+                fams.last_mut().unwrap()
+            }
+        };
+        if let Some(m) = fam.metrics.iter().find(|m| m.labels == labels) {
+            return m.inst.clone();
+        }
+        let inst = make();
+        fam.metrics.push(Metric { labels, inst: inst.clone() });
+        inst
+    }
+
+    /// Visit every histogram as (name, labels, handle) — `/stats` uses
+    /// this to snapshot latency families without knowing their names.
+    pub fn each_histogram(&self, mut f: impl FnMut(&str, &[(String, String)], &Histogram)) {
+        let fams = self.families.lock().unwrap();
+        for fam in fams.iter() {
+            for m in &fam.metrics {
+                if let Instrument::Histogram(h) = &m.inst {
+                    f(&fam.name, &m.labels, h);
+                }
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    pub fn render_into(&self, out: &mut String) {
+        let fams = self.families.lock().unwrap();
+        for fam in fams.iter() {
+            write_help_type(out, &fam.name, &fam.help, fam.kind.token());
+            for m in &fam.metrics {
+                let labels: Vec<(&str, &str)> =
+                    m.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+                match &m.inst {
+                    Instrument::Counter(c) => {
+                        write_sample(out, &fam.name, &labels, c.get() as f64);
+                    }
+                    Instrument::Gauge(g) => {
+                        write_sample(out, &fam.name, &labels, g.get() as f64);
+                    }
+                    Instrument::Histogram(h) => {
+                        let snap = h.snapshot();
+                        let mut cum = 0u64;
+                        let bucket_name = format!("{}_bucket", fam.name);
+                        for (i, &n) in snap.counts.iter().enumerate() {
+                            cum += n;
+                            let le = match snap.bounds.get(i) {
+                                Some(b) => fmt_value(*b),
+                                None => "+Inf".to_string(),
+                            };
+                            let mut ls = labels.clone();
+                            ls.push(("le", le.as_str()));
+                            write_sample(out, &bucket_name, &ls, cum as f64);
+                        }
+                        write_sample(out, &format!("{}_sum", fam.name), &labels, snap.sum);
+                        write_sample(
+                            out,
+                            &format!("{}_count", fam.name),
+                            &labels,
+                            snap.count as f64,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The process-global registry backing the pipeline [`stage_timer`]s.
+/// Library code (tree build, optimizer, matvec, kernels, ingest) cannot
+/// thread a per-server registry through its call graph, so stage
+/// durations land here and every `/metrics` scrape renders them.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// RAII timer for a named pipeline stage, recorded into
+/// `vdt_stage_duration_seconds{stage="..."}` in the global registry.
+/// One registry lookup + one observation per call — cheap relative to
+/// any stage worth timing.
+pub fn stage_timer(stage: &'static str) -> StageTimer {
+    let h = global().histogram(
+        "vdt_stage_duration_seconds",
+        "Wall-clock seconds spent in pipeline stages",
+        &[("stage", stage)],
+    );
+    StageTimer::start(h)
+}
+
+/// `# HELP` + `# TYPE` pair for a family (newlines in help escaped).
+pub fn write_help_type(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    for ch in help.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// One exposition sample line with escaped label values.
+pub fn write_sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            for ch in v.chars() {
+                match ch {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(value));
+    out.push('\n');
+}
+
+/// Integral values print without a fraction; everything else uses the
+/// shortest `f64` display.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_shards_and_threads() {
+        let r = Registry::new();
+        let c = r.counter("t_total", "t", &[]);
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_label_set() {
+        let r = Registry::new();
+        let a = r.counter("x_total", "x", &[("k", "a")]);
+        let b = r.counter("x_total", "x", &[("k", "a")]);
+        let other = r.counter("x_total", "x", &[("k", "b")]);
+        a.inc();
+        assert_eq!(b.get(), 1, "same labels → same instrument");
+        assert_eq!(other.get(), 0, "different labels → distinct instrument");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_consistent() {
+        let h = Histogram::new(vec![1.0, 2.0, 5.0]);
+        for v in [0.5, 1.5, 1.7, 3.0, 100.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![1, 2, 1, 1]);
+        assert_eq!(s.count, 5);
+        assert!((s.sum - 106.7).abs() < 1e-3, "{}", s.sum);
+        // cumulative counts in the rendered exposition are monotone
+        let r = Registry::new();
+        let rh = r.histogram_with_bounds("h_seconds", "h", &[], &[1.0, 2.0, 5.0]);
+        for v in [0.5, 1.5, 1.7, 3.0, 100.0] {
+            rh.observe(v);
+        }
+        let text = r.render();
+        assert!(text.contains("h_seconds_bucket{le=\"+Inf\"} 5"), "{text}");
+        assert!(text.contains("h_seconds_count 5"), "{text}");
+    }
+
+    #[test]
+    fn quantiles_are_sandwiched_by_their_bucket() {
+        let h = Histogram::new(latency_bounds());
+        for _ in 0..90 {
+            h.observe(3e-3); // lands in the (2e-3, 5e-3] bucket
+        }
+        for _ in 0..10 {
+            h.observe(0.8); // (0.5, 1.0]
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 2e-3 && p50 <= 5e-3, "{p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 0.5 && p99 <= 1.0, "{p99}");
+        assert_eq!(h.quantile(0.0).max(0.0), h.quantile(0.0)); // no NaN
+    }
+
+    #[test]
+    fn overflow_bucket_reports_largest_finite_bound() {
+        let h = Histogram::new(vec![1.0, 2.0]);
+        h.observe(50.0);
+        assert_eq!(h.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut out = String::new();
+        write_sample(&mut out, "m", &[("k", "a\"b\\c\nd")], 1.0);
+        assert_eq!(out, "m{k=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn stage_timer_records_on_drop() {
+        let r = Registry::new();
+        let h = r.histogram("st_seconds", "st", &[("stage", "x")]);
+        {
+            let _t = StageTimer::start(h.clone());
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn gauge_tracks_up_and_down() {
+        let g = Gauge::new();
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.set(42);
+        assert_eq!(g.get(), 42);
+    }
+}

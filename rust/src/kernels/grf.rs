@@ -124,6 +124,7 @@ pub fn grf_rows(
     starts: &[usize],
     cfg: &GrfConfig,
 ) -> Result<Matrix, VdtError> {
+    let _t = crate::core::obs::stage_timer("grf_walks");
     cfg.validate()?;
     let n = op.n();
     if starts.is_empty() {

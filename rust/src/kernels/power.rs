@@ -137,6 +137,7 @@ pub fn power_into(
     y: &mut Matrix,
     scratch: &mut Matrix,
 ) {
+    let _t = crate::core::obs::stage_timer("kernel_power");
     assert_eq!(y0.rows, op.n(), "Y0 rows must equal the operator's N");
     assert_eq!((y.rows, y.cols), (y0.rows, y0.cols), "output buffer shape");
     assert_eq!((scratch.rows, scratch.cols), (y0.rows, y0.cols), "scratch buffer shape");

@@ -82,7 +82,7 @@ COMMANDS
             --model-path <p1[,p2,...]>  warm-start from snapshots instead
             of fitting (each registers under its file stem)
             --http <addr>            e.g. 0.0.0.0:8080; endpoints:
-                                     GET /healthz /stats /v1/models,
+                                     GET /healthz /stats /metrics /v1/models,
                                      POST /v1/models/{name}/
                                           matvec|query|labelprop|kernel
                                           |ingest|commit
@@ -94,6 +94,11 @@ COMMANDS
             --batching on|off (on)        micro-batch matvec/query
             --batch-window-us <int> (500) batch coalescing deadline
             --max-batch <int> (64)        requests fused per batch
+            --access-log[=<path>]         structured JSON access log, one
+                                          line per request (bare flag =
+                                          stderr; =<path> appends to file)
+            --slow-ms <int>               log requests slower than this
+                                          even without --access-log
   help      print this text
 ";
 
@@ -111,6 +116,21 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` form, so flags with optional values
+                // (`--access-log=path`) don't collide with the bare form
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.replace('-', "_"), v.to_string());
+                    i += 1;
+                    continue;
+                }
+                // bare `--access-log` is a toggle: empty value = stderr
+                let next_is_value =
+                    argv.get(i + 1).map(|v| !v.starts_with("--")).unwrap_or(false);
+                if key == "access-log" && !next_is_value {
+                    flags.insert("access_log".to_string(), String::new());
+                    i += 1;
+                    continue;
+                }
                 let val = argv
                     .get(i + 1)
                     .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
@@ -294,6 +314,12 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
         "off" | "false" | "0" => false,
         other => return Err(anyhow!("bad value for --batching: {other} (want on|off)")),
     };
+    let slow_ms = match args.opt_str("slow_ms") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|_| anyhow!("bad value for --slow-ms: {v}"))?)
+        }
+    };
     let cfg = ServerConfig {
         workers: args.get("http_workers", defaults.workers)?,
         queue_depth: args.get("queue_depth", defaults.queue_depth)?,
@@ -304,6 +330,8 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
         ),
         max_batch: args.get("max_batch", defaults.max_batch)?,
         batching,
+        access_log: args.opt_str("access_log"),
+        slow_ms,
     };
     // a 4k+ connection ceiling outruns the usual 1024 soft fd limit —
     // raise it to the hard limit before binding (best effort)
@@ -319,7 +347,7 @@ fn serve_http(args: &Args, handle: &CoordinatorHandle, addr: &str) -> Result<()>
     let server = Server::bind(handle.clone(), addr, cfg)?;
     println!(
         "listening on http://{} (batching {}); \
-         GET /healthz /stats /v1/models, \
+         GET /healthz /stats /metrics /v1/models, \
          POST /v1/models/{{name}}/matvec|query|labelprop|kernel|ingest|commit",
         server.addr(),
         if batching { "on" } else { "off" }
@@ -782,5 +810,28 @@ mod tests {
     fn negative_numbers_are_still_valid_values() {
         let a = Args::parse(&argv(&["--shift", "-3"])).unwrap();
         assert_eq!(a.get("shift", 0i64).unwrap(), -3);
+    }
+
+    #[test]
+    fn equals_form_and_bare_access_log() {
+        // --key=value splits without consuming the next token
+        let a = Args::parse(&argv(&["--access-log=/tmp/a.log", "--seed", "3"])).unwrap();
+        assert_eq!(a.opt_str("access_log").as_deref(), Some("/tmp/a.log"));
+        assert_eq!(a.get("seed", 0u64).unwrap(), 3);
+
+        // bare --access-log toggles stderr logging (empty value), even
+        // when another flag follows
+        let a = Args::parse(&argv(&["--access-log", "--seed", "3"])).unwrap();
+        assert_eq!(a.opt_str("access_log").as_deref(), Some(""));
+        assert_eq!(a.get("seed", 0u64).unwrap(), 3);
+        let a = Args::parse(&argv(&["--access-log"])).unwrap();
+        assert_eq!(a.opt_str("access_log").as_deref(), Some(""));
+
+        // --access-log with a plain value still consumes it as the path
+        let a = Args::parse(&argv(&["--access-log", "x.log"])).unwrap();
+        assert_eq!(a.opt_str("access_log").as_deref(), Some("x.log"));
+
+        // other flags keep requiring a value
+        assert!(Args::parse(&argv(&["--slow-ms"])).is_err());
     }
 }

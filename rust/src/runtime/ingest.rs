@@ -112,6 +112,7 @@ impl EpochLedger {
         name: &str,
         serving: &dyn TransitionOp,
     ) -> Result<(Option<VdtModel>, IngestAck), VdtError> {
+        let _t = crate::core::obs::stage_timer("ingest_commit");
         let entry = self.entries.entry(name.to_string()).or_default();
         match entry.shadow.take() {
             None => Ok((

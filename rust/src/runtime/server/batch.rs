@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::CoordinatorHandle;
 use crate::core::error::VdtError;
+use crate::core::obs::Histogram;
 use crate::core::Matrix;
 use crate::runtime::ingest::IngestAck;
 
@@ -64,6 +65,15 @@ pub struct BatchCounters {
     /// Requests that rode in those batches (≥ flushed; the difference is
     /// the coalescing win).
     pub coalesced: AtomicU64,
+}
+
+/// Optional registry-backed instruments the server threads in via
+/// [`Batcher::spawn_observed`]: the fused-width distribution (how many
+/// requests each flush carried) and each job's coalesce wait (arrival →
+/// flush hand-off, the latency micro-batching costs a request).
+pub struct BatchObs {
+    pub width: Histogram,
+    pub wait: Histogram,
 }
 
 struct Job {
@@ -137,6 +147,18 @@ impl Batcher {
         max_batch: usize,
         counters: Arc<BatchCounters>,
     ) -> Batcher {
+        Batcher::spawn_observed(handle, window, max_batch, counters, None)
+    }
+
+    /// [`Batcher::spawn`] with fused-width / coalesce-wait instruments
+    /// recorded per flush (see [`BatchObs`]).
+    pub fn spawn_observed(
+        handle: CoordinatorHandle,
+        window: Duration,
+        max_batch: usize,
+        counters: Arc<BatchCounters>,
+        obs: Option<BatchObs>,
+    ) -> Batcher {
         let (tx, rx) = mpsc::channel::<Job>();
         let (flush_tx, flush_rx) = mpsc::channel::<Vec<Job>>();
         let flush_rx = Arc::new(Mutex::new(flush_rx));
@@ -159,7 +181,7 @@ impl Batcher {
         }
         std::thread::Builder::new()
             .name("vdt-http-batcher".into())
-            .spawn(move || run(rx, handle, window, max_batch.max(1), counters, flush_tx))
+            .spawn(move || run(rx, handle, window, max_batch.max(1), counters, obs, flush_tx))
             .expect("spawn batcher");
         Batcher { tx }
     }
@@ -212,6 +234,7 @@ fn run(
     window: Duration,
     max_batch: usize,
     counters: Arc<BatchCounters>,
+    obs: Option<BatchObs>,
     flush_tx: mpsc::Sender<Vec<Job>>,
 ) {
     // jobs that arrived during someone else's window but belong to a
@@ -272,6 +295,12 @@ fn run(
         }
         counters.flushed.fetch_add(1, Ordering::Relaxed);
         counters.coalesced.fetch_add(group.len() as u64, Ordering::Relaxed);
+        if let Some(obs) = &obs {
+            obs.width.observe(group.len() as f64);
+            for j in &group {
+                obs.wait.observe_duration(j.arrived.elapsed());
+            }
+        }
         // execute on the flush pool so the next window opens immediately;
         // the waiting HTTP workers are the backpressure. A send only
         // fails if the pool died, in which case running inline is still

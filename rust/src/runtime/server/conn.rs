@@ -240,6 +240,9 @@ pub(crate) struct Conn {
     pub half_closed: bool,
     /// Admission-control 429 connection (not a served client).
     pub is_reject: bool,
+    /// Requests dispatched on this connection so far — the access log's
+    /// per-connection request ordinal (`{token}-{seq}`).
+    pub seq: u64,
     /// Marked dead; the loop deregisters and removes it on sync.
     pub closing: bool,
 }
@@ -263,6 +266,7 @@ impl Conn {
             drain_budget: 0,
             half_closed: false,
             is_reject: false,
+            seq: 0,
             closing: false,
         };
         conn.enter_idle();
@@ -351,13 +355,31 @@ impl Conn {
     /// readiness on unread pipelined bytes would spin).
     pub fn begin_dispatch(&mut self) {
         self.state = State::Dispatched;
+        self.seq += 1;
         self.clear_deadline();
     }
 
-    /// Queue a complete response and transition to `Writing`.
+    /// Queue a complete JSON response and transition to `Writing`.
     pub fn queue_response(&mut self, status: u16, body: &str, after: AfterWrite) {
+        self.queue_response_with_type(status, body, http::CONTENT_TYPE_JSON, after);
+    }
+
+    /// [`Conn::queue_response`] with an explicit content type (the
+    /// `/metrics` endpoint answers Prometheus text exposition).
+    pub fn queue_response_with_type(
+        &mut self,
+        status: u16,
+        body: &str,
+        content_type: &str,
+        after: AfterWrite,
+    ) {
         let keep = after == AfterWrite::KeepAlive;
-        self.write_buf.extend_from_slice(&http::encode_response(status, body, keep));
+        self.write_buf.extend_from_slice(&http::encode_response_with_type(
+            status,
+            body,
+            content_type,
+            keep,
+        ));
         self.state = State::Writing(after);
         self.set_deadline(DeadlineKind::Write, Instant::now() + http::WRITE_TIMEOUT);
     }

@@ -131,11 +131,28 @@ pub(crate) fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
+/// Content type of every JSON endpoint.
+pub const CONTENT_TYPE_JSON: &str = "application/json";
+
+/// Content type of `GET /metrics` (Prometheus text exposition).
+pub const CONTENT_TYPE_METRICS: &str = "text/plain; version=0.0.4; charset=utf-8";
+
 /// Encode a complete JSON response (head + body) as wire bytes, ready
 /// for the connection's write buffer.
 pub fn encode_response(status: u16, body: &str, keep_alive: bool) -> Vec<u8> {
+    encode_response_with_type(status, body, CONTENT_TYPE_JSON, keep_alive)
+}
+
+/// [`encode_response`] with an explicit content type (the `/metrics`
+/// endpoint answers text exposition, everything else JSON).
+pub fn encode_response_with_type(
+    status: u16,
+    body: &str,
+    content_type: &str,
+    keep_alive: bool,
+) -> Vec<u8> {
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         reason_phrase(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
@@ -248,5 +265,17 @@ mod tests {
         let text = std::str::from_utf8(&wire).unwrap();
         assert!(text.contains("429 Too Many Requests"), "{text}");
         assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn encode_response_with_type_sets_the_content_type() {
+        let wire = encode_response_with_type(200, "m 1\n", CONTENT_TYPE_METRICS, true);
+        let text = std::str::from_utf8(&wire).unwrap();
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4"), "{text}");
+        assert!(text.ends_with("\r\n\r\nm 1\n"), "{text}");
+        // the JSON path is unchanged
+        let wire = encode_response(200, "{}", true);
+        let text = std::str::from_utf8(&wire).unwrap();
+        assert!(text.contains("Content-Type: application/json\r\n"), "{text}");
     }
 }

@@ -34,8 +34,9 @@
 //! | `POST /v1/models/{name}/ingest` | `{"rows": [[..], ..]}` — absorb new points into the model's **shadow copy** ([`crate::runtime::ingest`]); serving stays bit-identical until commit → `{"epoch": e, "pending_ingest": p, "ingested_points": t}` |
 //! | `POST /v1/models/{name}/commit` | (empty body) atomically publish the pending ingest as the next served epoch → same ack shape |
 //! | `GET /v1/models` | registered [`crate::core::op::ModelCard`]s as JSON |
-//! | `GET /healthz` | liveness |
-//! | `GET /stats` | coordinator + HTTP + batching counters |
+//! | `GET /healthz` | liveness + version/uptime build info |
+//! | `GET /stats` | JSON snapshot of the observability registry (coordinator + HTTP + batching + latency quantiles) |
+//! | `GET /metrics` | Prometheus text exposition of the same registry ([`crate::core::obs`]): per-endpoint latency histograms, batcher/queue gauges, pipeline stage timers, per-model epoch gauges |
 //!
 //! Model names may contain `/` (e.g. `moons/vdt`): the action is the last
 //! path segment, everything between `/v1/models/` and it is the name.
@@ -124,9 +125,9 @@ pub fn raise_fd_limit() -> Option<u64> {
 use std::collections::HashSet;
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[cfg(unix)]
 use std::collections::HashMap;
@@ -138,19 +139,18 @@ use std::net::TcpStream;
 use std::os::unix::io::AsRawFd;
 #[cfg(unix)]
 use std::sync::mpsc;
-#[cfg(unix)]
-use std::time::Instant;
 
 use crate::coordinator::CoordinatorHandle;
 use crate::core::error::VdtError;
 use crate::core::json::{self, Json};
+use crate::core::obs::{self, Counter, Gauge, Histogram, Registry};
 use crate::core::Matrix;
 use crate::kernels::{GrfConfig, KernelSpec, PowerKernel};
 use crate::labelprop::LpConfig;
 
 use crate::runtime::ingest::IngestAck;
 
-use batch::{BatchCounters, BatchKind, Batcher};
+use batch::{BatchCounters, BatchKind, BatchObs, Batcher};
 #[cfg(unix)]
 use conn::{AfterWrite, Conn, DeadlineKind, Io, Parsed, State};
 
@@ -222,6 +222,16 @@ pub struct ServerConfig {
     /// coordinator round-trip per request (the unbatched baseline the
     /// `http_throughput` bench compares against).
     pub batching: bool,
+    /// Structured JSON access log: `None` = off, `Some("")` = stderr,
+    /// `Some(path)` = append to that file. One line per routed request
+    /// with a per-connection request id, method, route, model, status,
+    /// bytes, and microsecond latency. `vdt serve --http` exposes it as
+    /// `--access-log[=path]`.
+    pub access_log: Option<String>,
+    /// Log requests slower than this many milliseconds even when the
+    /// access log is off (to stderr). `vdt serve --http` exposes it as
+    /// `--slow-ms`.
+    pub slow_ms: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -234,6 +244,8 @@ impl Default for ServerConfig {
             batch_window: Duration::from_micros(500),
             max_batch: 64,
             batching: true,
+            access_log: None,
+            slow_ms: None,
         }
     }
 }
@@ -263,17 +275,171 @@ pub struct HttpStats {
     pub accept_failures: u64,
 }
 
+/// Label values of the per-endpoint latency histograms
+/// (`vdt_http_request_duration_seconds{endpoint=...}`). Fixed at server
+/// start so every endpoint appears in `/metrics` from the first scrape.
+const ENDPOINTS: [&str; 11] = [
+    "healthz", "models", "stats", "metrics", "matvec", "query", "labelprop", "kernel", "ingest",
+    "commit", "other",
+];
+
+/// Index into [`ENDPOINTS`] for a request path — mirrors [`route`]'s
+/// shape matching without parsing the body.
+fn endpoint_index(path: &str) -> usize {
+    match path {
+        "/healthz" => 0,
+        "/v1/models" => 1,
+        "/stats" => 2,
+        "/metrics" => 3,
+        _ => match path.strip_prefix("/v1/models/").and_then(|rest| rest.rsplit_once('/')) {
+            Some((_, "matvec")) => 4,
+            Some((_, "query")) => 5,
+            Some((_, "labelprop")) => 6,
+            Some((_, "kernel")) => 7,
+            Some((_, "ingest")) => 8,
+            Some((_, "commit")) => 9,
+            _ => 10,
+        },
+    }
+}
+
+/// Model name of a `/v1/models/{name}/{action}` path, if any (names may
+/// contain `/`; the action is the last segment).
+fn model_of(path: &str) -> Option<&str> {
+    let (name, _) = path.strip_prefix("/v1/models/")?.rsplit_once('/')?;
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// "debug" or "release" — a label on `vdt_build_info` and a `/healthz`
+/// field, so a scrape can tell an unoptimized build from a real one.
+fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+/// The server's instrument set, registered once per [`Server`] instance
+/// at bind time so the hot path bumps pre-resolved handles instead of
+/// taking the registry lock per request. Per-instance (not
+/// process-global) so concurrently running servers — every test in the
+/// suite — keep exact, isolated counts.
+struct ServerObs {
+    registry: Registry,
+    start: Instant,
+    /// `vdt_http_requests_total` — backs [`HttpStats::requests`].
+    requests: Counter,
+    /// `vdt_http_errors_total` — backs [`HttpStats::errors`].
+    errors: Counter,
+    /// `vdt_http_rejected_total` — backs [`HttpStats::rejected`].
+    rejected: Counter,
+    /// `vdt_accept_failures_total` (Backoff + Fatal only) — backs
+    /// [`HttpStats::accept_failures`].
+    accept_failures: Counter,
+    /// `vdt_accept_errors_total{class=...}` — the classification
+    /// breakdown, including Retry hiccups the lump counter skips.
+    accept_retry: Counter,
+    accept_backoff: Counter,
+    accept_fatal: Counter,
+    /// `vdt_http_active_connections` — backs
+    /// [`HttpStats::active_connections`].
+    active: Gauge,
+    /// `vdt_http_queue_depth` — jobs dispatched to the compute pool and
+    /// not yet completed.
+    queue_depth: Gauge,
+    /// `vdt_http_request_duration_seconds{endpoint=...}`, indexed by
+    /// [`endpoint_index`].
+    latency: Vec<Histogram>,
+}
+
+impl ServerObs {
+    fn new() -> ServerObs {
+        let registry = Registry::new();
+        let requests = registry.counter(
+            "vdt_http_requests_total",
+            "Complete HTTP requests parsed and routed",
+            &[],
+        );
+        let errors = registry.counter(
+            "vdt_http_errors_total",
+            "Responses with status >= 400, including wire-level 400/408/413",
+            &[],
+        );
+        let rejected = registry.counter(
+            "vdt_http_rejected_total",
+            "Connections and requests answered 429 by admission control",
+            &[],
+        );
+        let accept_failures = registry.counter(
+            "vdt_accept_failures_total",
+            "Accept errors beyond per-connection hiccups (listener pauses and fatal failures)",
+            &[],
+        );
+        let accept_class = |class| {
+            registry.counter(
+                "vdt_accept_errors_total",
+                "Accept errors by disposition class",
+                &[("class", class)],
+            )
+        };
+        let active = registry.gauge(
+            "vdt_http_active_connections",
+            "Connections currently open in the event loop (rejects excluded)",
+            &[],
+        );
+        let queue_depth = registry.gauge(
+            "vdt_http_queue_depth",
+            "Requests dispatched to the compute pool and not yet completed",
+            &[],
+        );
+        let latency = ENDPOINTS
+            .iter()
+            .map(|&ep| {
+                registry.histogram(
+                    "vdt_http_request_duration_seconds",
+                    "Request latency from dispatch to routed response, per endpoint",
+                    &[("endpoint", ep)],
+                )
+            })
+            .collect();
+        registry
+            .gauge(
+                "vdt_build_info",
+                "Build metadata carried in labels; the value is always 1",
+                &[("version", env!("CARGO_PKG_VERSION")), ("profile", build_profile())],
+            )
+            .set(1);
+        ServerObs {
+            registry,
+            start: Instant::now(),
+            requests,
+            errors,
+            rejected,
+            accept_failures,
+            accept_retry: accept_class("retry"),
+            accept_backoff: accept_class("backoff"),
+            accept_fatal: accept_class("fatal"),
+            active,
+            queue_depth,
+            latency,
+        }
+    }
+}
+
 struct Shared {
     handle: CoordinatorHandle,
     batcher: Option<Batcher>,
     cfg: ServerConfig,
     shutdown: AtomicBool,
-    requests: AtomicU64,
-    errors: AtomicU64,
-    rejected: AtomicU64,
-    accept_failures: AtomicU64,
-    active: AtomicU64,
+    obs: ServerObs,
     batch_counters: Arc<BatchCounters>,
+    /// Access-log sink, shared by the compute pool ([`log_request`]).
+    access_log: Option<Mutex<Box<dyn std::io::Write + Send>>>,
     /// Completions the compute pool hands back to the event loop.
     #[cfg(unix)]
     done: Mutex<Vec<Completion>>,
@@ -289,16 +455,17 @@ impl Shared {
     }
 
     /// One snapshot of the HTTP counters — the single source for both
-    /// [`ServerHandle::stats`] and the `/stats` endpoint.
+    /// [`ServerHandle::stats`] and the `/stats` endpoint, read straight
+    /// off the observability registry's instruments.
     fn http_stats(&self) -> HttpStats {
         HttpStats {
-            requests: self.requests.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
+            requests: self.obs.requests.get(),
+            errors: self.obs.errors.get(),
+            rejected: self.obs.rejected.get(),
             batches: self.batch_counters.flushed.load(Ordering::Relaxed),
             batched_requests: self.batch_counters.coalesced.load(Ordering::Relaxed),
-            active_connections: self.active.load(Ordering::Relaxed),
-            accept_failures: self.accept_failures.load(Ordering::Relaxed),
+            active_connections: self.obs.active.get().max(0) as u64,
+            accept_failures: self.obs.accept_failures.get(),
         }
     }
 }
@@ -307,6 +474,12 @@ impl Shared {
 #[cfg(unix)]
 struct ComputeJob {
     token: u64,
+    /// Request ordinal on its connection — the access log's per-request
+    /// id is `{token}-{seq}`.
+    seq: u64,
+    /// When the event loop dispatched the job. The latency histograms
+    /// measure from here, so compute-queue wait is included.
+    dispatched: Instant,
     req: http::HttpRequest,
 }
 
@@ -316,6 +489,7 @@ struct Completion {
     token: u64,
     status: u16,
     body: String,
+    content_type: &'static str,
     keep_alive: bool,
 }
 
@@ -351,16 +525,45 @@ impl Server {
         listener
             .set_nonblocking(true)
             .map_err(|e| VdtError::Runtime(format!("nonblocking listener: {e}")))?;
+        let obs = ServerObs::new();
         let batch_counters = Arc::new(BatchCounters::default());
         let batcher = if cfg.batching {
-            Some(Batcher::spawn(
+            let batch_obs = BatchObs {
+                width: obs.registry.histogram_with_bounds(
+                    "vdt_batch_fused_width",
+                    "Requests fused per micro-batch flush",
+                    &[],
+                    &obs::width_bounds(cfg.max_batch as u64),
+                ),
+                wait: obs.registry.histogram(
+                    "vdt_batch_coalesce_wait_seconds",
+                    "Per-request wait from arrival to micro-batch flush",
+                    &[],
+                ),
+            };
+            Some(Batcher::spawn_observed(
                 handle.clone(),
                 cfg.batch_window,
                 cfg.max_batch,
                 batch_counters.clone(),
+                Some(batch_obs),
             ))
         } else {
             None
+        };
+        let access_log = match cfg.access_log.as_deref() {
+            None => None,
+            Some("") => Some(Mutex::new(
+                Box::new(std::io::stderr()) as Box<dyn std::io::Write + Send>
+            )),
+            Some(path) => {
+                let f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .map_err(|e| VdtError::Runtime(format!("open access log {path}: {e}")))?;
+                Some(Mutex::new(Box::new(f) as Box<dyn std::io::Write + Send>))
+            }
         };
         let waker = poll::Waker::new()
             .map_err(|e| VdtError::Runtime(format!("event-loop waker: {e}")))?;
@@ -369,12 +572,9 @@ impl Server {
             batcher,
             cfg: cfg.clone(),
             shutdown: AtomicBool::new(false),
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            accept_failures: AtomicU64::new(0),
-            active: AtomicU64::new(0),
+            obs,
             batch_counters,
+            access_log,
             done: Mutex::new(Vec::new()),
             waker,
         });
@@ -480,15 +680,66 @@ fn compute_worker(shared: &Shared, job_rx: &Mutex<mpsc::Receiver<ComputeJob>>) {
             }
         };
         let (status, body) = route(shared, &job.req);
+        let latency = job.dispatched.elapsed();
+        shared.obs.latency[endpoint_index(&job.req.path)].observe_duration(latency);
         if status >= 400 {
-            shared.errors.fetch_add(1, Ordering::Relaxed);
+            shared.obs.errors.inc();
         }
+        log_request(shared, &job, status, body.len(), latency);
+        let content_type = if status == 200 && job.req.path == "/metrics" {
+            http::CONTENT_TYPE_METRICS
+        } else {
+            http::CONTENT_TYPE_JSON
+        };
         let keep_alive = job.req.keep_alive && !shared.stopping();
         {
             let mut done = shared.done.lock().unwrap_or_else(|e| e.into_inner());
-            done.push(Completion { token: job.token, status, body, keep_alive });
+            done.push(Completion { token: job.token, status, body, content_type, keep_alive });
         }
         shared.waker.wake();
+    }
+}
+
+/// Emit one structured JSON access-log line for a routed request — to the
+/// configured sink, or to stderr when only the slow-request trigger
+/// fired. No-op (one branch, no formatting) when neither is configured,
+/// so always-on instrumentation stays off the latency floor.
+#[cfg(unix)]
+fn log_request(shared: &Shared, job: &ComputeJob, status: u16, bytes: usize, latency: Duration) {
+    let slow = shared.cfg.slow_ms.is_some_and(|ms| latency.as_millis() as u64 >= ms);
+    if shared.access_log.is_none() && !slow {
+        return;
+    }
+    use std::io::Write;
+    let ts_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    let num = |v: u64| Json::Num(v as f64);
+    let mut fields = vec![
+        ("ts_ms".to_string(), num(ts_ms)),
+        ("id".to_string(), Json::Str(format!("{}-{}", job.token, job.seq))),
+        ("method".to_string(), Json::Str(job.req.method.clone())),
+        ("path".to_string(), Json::Str(job.req.path.clone())),
+        ("endpoint".to_string(), Json::Str(ENDPOINTS[endpoint_index(&job.req.path)].to_string())),
+        ("status".to_string(), num(status as u64)),
+        ("bytes".to_string(), num(bytes as u64)),
+        ("latency_us".to_string(), num(latency.as_micros() as u64)),
+    ];
+    if let Some(model) = model_of(&job.req.path) {
+        fields.push(("model".to_string(), Json::Str(model.to_string())));
+    }
+    if slow {
+        fields.push(("slow".to_string(), Json::Bool(true)));
+    }
+    let line = Json::Obj(fields).encode();
+    match &shared.access_log {
+        Some(sink) => {
+            let mut sink = sink.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = writeln!(sink, "{line}");
+            let _ = sink.flush();
+        }
+        None => eprintln!("{line}"), // slow-request trigger without a sink
     }
 }
 
@@ -661,14 +912,19 @@ impl EventLoop {
                 Ok((stream, _)) => self.admit(stream),
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return,
                 Err(e) => match classify_accept_error(&e) {
-                    AcceptDisposition::Retry => continue,
+                    AcceptDisposition::Retry => {
+                        self.shared.obs.accept_retry.inc();
+                        continue;
+                    }
                     AcceptDisposition::Backoff => {
-                        self.shared.accept_failures.fetch_add(1, Ordering::Relaxed);
+                        self.shared.obs.accept_failures.inc();
+                        self.shared.obs.accept_backoff.inc();
                         self.pause_listener();
                         return;
                     }
                     AcceptDisposition::Fatal => {
-                        self.shared.accept_failures.fetch_add(1, Ordering::Relaxed);
+                        self.shared.obs.accept_failures.inc();
+                        self.shared.obs.accept_fatal.inc();
                         let _ = self.poller.deregister(self.listener.as_raw_fd());
                         self.listener_armed = false;
                         self.listener_gen += 1; // invalidate pending re-arms
@@ -691,7 +947,7 @@ impl EventLoop {
     fn admit(&mut self, stream: TcpStream) {
         if self.served >= self.shared.cfg.max_conns.max(1) {
             // admission control: reject now rather than serve unboundedly
-            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            self.shared.obs.rejected.inc();
             if self.rejects_open >= MAX_REJECT_CONNS {
                 return; // drop: close without a body, cheapest possible shed
             }
@@ -713,7 +969,7 @@ impl EventLoop {
         if let Ok(c) = Conn::new(stream) {
             if self.install(c).is_some() {
                 self.served += 1;
-                self.shared.active.store(self.served as u64, Ordering::Relaxed);
+                self.shared.obs.active.set(self.served as i64);
             }
         }
     }
@@ -777,7 +1033,7 @@ impl EventLoop {
                 match verdict {
                     Some((true, true)) => {
                         // EOF truncated a request
-                        self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                        self.shared.obs.errors.inc();
                         let body = error_body(&VdtError::InvalidSpec(
                             "connection closed mid-request".to_string(),
                         ));
@@ -831,7 +1087,7 @@ impl EventLoop {
             }
             Parsed::Request(req) => self.dispatch_request(token, req),
             Parsed::Bad(msg) => {
-                self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                self.shared.obs.errors.inc();
                 let body = error_body(&VdtError::InvalidSpec(msg));
                 if let Some(c) = self.conns.get_mut(&token) {
                     c.queue_response(400, &body, AfterWrite::Drain);
@@ -839,7 +1095,7 @@ impl EventLoop {
                 self.flush(token);
             }
             Parsed::TooLarge { limit } => {
-                self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                self.shared.obs.errors.inc();
                 let body = error_body(&VdtError::InvalidSpec(format!(
                     "request body exceeds the {limit}-byte cap"
                 )));
@@ -852,11 +1108,11 @@ impl EventLoop {
     }
 
     fn dispatch_request(&mut self, token: u64, req: http::HttpRequest) {
-        self.shared.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared.obs.requests.inc();
         let cap = self.shared.cfg.workers.max(1) + self.shared.cfg.queue_depth;
         if self.pending_jobs >= cap {
             // per-request admission control: the compute queue is full
-            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            self.shared.obs.rejected.inc();
             let body = error_body(&VdtError::ServiceUnavailable(format!(
                 "server at capacity ({} compute workers busy, {} requests queued)",
                 self.shared.cfg.workers.max(1),
@@ -868,14 +1124,21 @@ impl EventLoop {
             self.flush(token);
             return;
         }
-        if let Some(c) = self.conns.get_mut(&token) {
-            c.begin_dispatch();
-        }
+        let seq = match self.conns.get_mut(&token) {
+            Some(c) => {
+                c.begin_dispatch();
+                c.seq
+            }
+            None => 0,
+        };
         self.pending_jobs += 1;
-        if self.job_tx.send(ComputeJob { token, req }).is_err() {
+        self.shared.obs.queue_depth.set(self.pending_jobs as i64);
+        let job = ComputeJob { token, seq, dispatched: Instant::now(), req };
+        if self.job_tx.send(job).is_err() {
             // compute pool unreachable — only possible during teardown
             self.pending_jobs -= 1;
-            self.shared.errors.fetch_add(1, Ordering::Relaxed);
+            self.shared.obs.queue_depth.set(self.pending_jobs as i64);
+            self.shared.obs.errors.inc();
             let body = error_body(&VdtError::Internal("compute pool unavailable".to_string()));
             if let Some(c) = self.conns.get_mut(&token) {
                 c.queue_response(500, &body, AfterWrite::Close);
@@ -932,6 +1195,7 @@ impl EventLoop {
         };
         for completion in done {
             self.pending_jobs = self.pending_jobs.saturating_sub(1);
+            self.shared.obs.queue_depth.set(self.pending_jobs as i64);
             let token = completion.token;
             let Some(c) = self.conns.get_mut(&token) else { continue };
             if c.closing {
@@ -942,7 +1206,12 @@ impl EventLoop {
             } else {
                 AfterWrite::Close
             };
-            c.queue_response(completion.status, &completion.body, after);
+            c.queue_response_with_type(
+                completion.status,
+                &completion.body,
+                completion.content_type,
+                after,
+            );
             self.flush(token);
             self.sync(token);
         }
@@ -982,7 +1251,7 @@ impl EventLoop {
             }
             DeadlineKind::Read => {
                 // the request stalled mid-read (slow-loris / trickle)
-                self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                self.shared.obs.errors.inc();
                 // a distinct kind: clients matching on error.kind must
                 // not confuse "your upload stalled" (408, retry the
                 // request) with server overload (429/503, back off)
@@ -1011,7 +1280,7 @@ impl EventLoop {
                 self.rejects_open = self.rejects_open.saturating_sub(1);
             } else {
                 self.served = self.served.saturating_sub(1);
-                self.shared.active.store(self.served as u64, Ordering::Relaxed);
+                self.shared.obs.active.set(self.served as i64);
             }
             return;
         }
@@ -1064,13 +1333,19 @@ impl EventLoop {
 fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            let draining = shared.stopping();
+            let status = if shared.stopping() { "draining" } else { "ok" };
             (
                 200,
-                format!(
-                    "{{\"status\":\"{}\"}}",
-                    if draining { "draining" } else { "ok" }
-                ),
+                Json::Obj(vec![
+                    ("status".to_string(), Json::Str(status.to_string())),
+                    ("version".to_string(), Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+                    ("profile".to_string(), Json::Str(build_profile().to_string())),
+                    (
+                        "uptime_seconds".to_string(),
+                        Json::Num(shared.obs.start.elapsed().as_secs_f64()),
+                    ),
+                ])
+                .encode(),
             )
         }
         ("GET", "/v1/models") => {
@@ -1079,7 +1354,10 @@ fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
             (200, Json::Obj(vec![("models".to_string(), Json::Arr(cards))]).encode())
         }
         ("GET", "/stats") => (200, stats_body(shared)),
-        (_, "/healthz") | (_, "/v1/models") | (_, "/stats") => method_not_allowed("GET"),
+        ("GET", "/metrics") => (200, metrics_body(shared)),
+        (_, "/healthz") | (_, "/v1/models") | (_, "/stats") | (_, "/metrics") => {
+            method_not_allowed("GET")
+        }
         (method, path) => match path.strip_prefix("/v1/models/") {
             None => not_found(path),
             Some(rest) => match rest.rsplit_once('/') {
@@ -1118,7 +1396,7 @@ fn route(shared: &Shared, req: &http::HttpRequest) -> (u16, String) {
 
 fn not_found(path: &str) -> (u16, String) {
     let msg = format!(
-        "no route {path}; see /healthz, /stats, /v1/models, \
+        "no route {path}; see /healthz, /stats, /metrics, /v1/models, \
          /v1/models/{{name}}/{{matvec|query|labelprop|kernel|ingest|commit}}"
     );
     (404, kind_body("not_found", &msg))
@@ -1454,7 +1732,16 @@ fn stats_body(shared: &Shared) -> String {
                 ("errors".to_string(), num(h.errors)),
                 ("rejected".to_string(), num(h.rejected)),
                 ("active_connections".to_string(), num(h.active_connections)),
+                ("queue_depth".to_string(), num(shared.obs.queue_depth.get().max(0) as u64)),
                 ("accept_failures".to_string(), num(h.accept_failures)),
+                (
+                    "accept_classes".to_string(),
+                    Json::Obj(vec![
+                        ("retry".to_string(), num(shared.obs.accept_retry.get())),
+                        ("backoff".to_string(), num(shared.obs.accept_backoff.get())),
+                        ("fatal".to_string(), num(shared.obs.accept_fatal.get())),
+                    ]),
+                ),
             ]),
         ),
         (
@@ -1473,8 +1760,82 @@ fn stats_body(shared: &Shared) -> String {
                 ("pending".to_string(), num(c.pending_ingest)),
             ]),
         ),
+        ("uptime_seconds".to_string(), Json::Num(shared.obs.start.elapsed().as_secs_f64())),
+        (
+            "latency".to_string(),
+            Json::Obj(
+                ENDPOINTS
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &ep)| {
+                        let hist = &shared.obs.latency[i];
+                        let count = hist.count();
+                        if count == 0 {
+                            return None;
+                        }
+                        Some((
+                            ep.to_string(),
+                            Json::Obj(vec![
+                                ("count".to_string(), num(count)),
+                                ("p50_us".to_string(), Json::Num(hist.quantile(0.5) * 1e6)),
+                                ("p90_us".to_string(), Json::Num(hist.quantile(0.9) * 1e6)),
+                                ("p99_us".to_string(), Json::Num(hist.quantile(0.99) * 1e6)),
+                            ]),
+                        ))
+                    })
+                    .collect(),
+            ),
+        ),
     ])
     .encode()
+}
+
+/// `GET /metrics` — Prometheus text exposition: the server's registry
+/// (HTTP counters, per-endpoint latency histograms, batcher instruments,
+/// build info), the process-global pipeline stage timers, and scrape-time
+/// families for the coordinator, ingest ledger, per-model epochs, and
+/// uptime. Everything carries the `vdt_` prefix.
+fn metrics_body(shared: &Shared) -> String {
+    let mut out = String::with_capacity(8192);
+    shared.obs.registry.render_into(&mut out);
+    obs::global().render_into(&mut out);
+    let c = shared.handle.stats();
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        obs::write_help_type(out, name, help, "counter");
+        obs::write_sample(out, name, &[], v as f64);
+    };
+    counter(&mut out, "vdt_coordinator_requests_total", "Requests the coordinator answered", c.requests);
+    counter(&mut out, "vdt_coordinator_errors_total", "Coordinator requests answered with a typed error", c.errors);
+    counter(&mut out, "vdt_coordinator_fused_cols_total", "Columns carried by fused multi-RHS coordinator calls", c.fused_cols);
+    counter(&mut out, "vdt_coordinator_fused_batches_total", "Fused coordinator batches executed", c.fused_batches);
+    obs::write_help_type(&mut out, "vdt_coordinator_inflight", "Coordinator requests currently in flight", "gauge");
+    obs::write_sample(&mut out, "vdt_coordinator_inflight", &[], shared.handle.inflight() as f64);
+    counter(&mut out, "vdt_ingest_rows_total", "Rows absorbed into model shadow copies", c.ingested_rows);
+    counter(&mut out, "vdt_ingest_commits_total", "Ingest epochs atomically published", c.commits);
+    obs::write_help_type(&mut out, "vdt_ingest_pending", "Ingested rows awaiting commit across models", "gauge");
+    obs::write_sample(&mut out, "vdt_ingest_pending", &[], c.pending_ingest as f64);
+    let cards = shared.handle.list_models();
+    obs::write_help_type(&mut out, "vdt_model_epoch", "Ingest epoch each model currently serves", "gauge");
+    for card in &cards {
+        obs::write_sample(
+            &mut out,
+            "vdt_model_epoch",
+            &[("model", &card.name), ("backend", card.backend.token())],
+            card.epoch as f64,
+        );
+    }
+    obs::write_help_type(&mut out, "vdt_model_pending_ingest", "Shadow rows awaiting commit, per model", "gauge");
+    for card in &cards {
+        obs::write_sample(
+            &mut out,
+            "vdt_model_pending_ingest",
+            &[("model", &card.name)],
+            card.pending_ingest as f64,
+        );
+    }
+    obs::write_help_type(&mut out, "vdt_uptime_seconds", "Seconds since the server started", "gauge");
+    obs::write_sample(&mut out, "vdt_uptime_seconds", &[], shared.obs.start.elapsed().as_secs_f64());
+    out
 }
 
 /// `{"epoch": e, "pending_ingest": p, "ingested_points": t}` — the wire
@@ -1685,6 +2046,35 @@ pub fn install_shutdown_signals() -> &'static AtomicBool {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn endpoint_index_mirrors_route_shapes() {
+        for (path, want) in [
+            ("/healthz", "healthz"),
+            ("/v1/models", "models"),
+            ("/stats", "stats"),
+            ("/metrics", "metrics"),
+            ("/v1/models/m/matvec", "matvec"),
+            ("/v1/models/a/b/query", "query"),
+            ("/v1/models/m/labelprop", "labelprop"),
+            ("/v1/models/m/kernel", "kernel"),
+            ("/v1/models/m/ingest", "ingest"),
+            ("/v1/models/m/commit", "commit"),
+            ("/v1/models/m/unknown", "other"),
+            ("/nope", "other"),
+        ] {
+            assert_eq!(ENDPOINTS[endpoint_index(path)], want, "{path}");
+        }
+    }
+
+    #[test]
+    fn model_of_extracts_slashy_names() {
+        assert_eq!(model_of("/v1/models/m/matvec"), Some("m"));
+        assert_eq!(model_of("/v1/models/moons/vdt/query"), Some("moons/vdt"));
+        assert_eq!(model_of("/v1/models//commit"), None);
+        assert_eq!(model_of("/stats"), None);
+        assert_eq!(model_of("/v1/models"), None);
+    }
 
     #[test]
     fn parse_model_paths_names_by_stem_and_rejects_duplicates() {

@@ -597,6 +597,7 @@ fn build_tree_impl<D: Divergence + ?Sized>(
     div: &D,
     handle: Arc<dyn Divergence>,
 ) -> PartitionTree {
+    let _t = crate::core::obs::stage_timer("tree_build");
     assert!(x.rows >= 1, "need at least one point");
     // fail fast on out-of-domain data (non-finite coordinates anywhere;
     // negative coordinates under KL, near-zeros under Itakura-Saito)

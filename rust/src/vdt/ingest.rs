@@ -133,6 +133,7 @@ impl ShadowIngest {
     /// untouched and the error is typed with the offending row index.
     /// Returns the number of points inserted.
     pub fn ingest_rows(&mut self, rows: &Matrix) -> Result<usize, VdtError> {
+        let _t = crate::core::obs::stage_timer("ingest_graft");
         let d = self.model.tree.d;
         if rows.rows == 0 {
             return Err(VdtError::InvalidSpec(
@@ -243,6 +244,11 @@ impl ShadowIngest {
 
             // --- threshold-triggered local re-refinement (Eq. 18 splits,
             //     symmetric per §4.4) — never a global refit ---
+            let _t = if crossed.is_empty() {
+                None
+            } else {
+                Some(crate::core::obs::stage_timer("ingest_resplit"))
+            };
             for bi in crossed {
                 let blk = &part.blocks[bi as usize];
                 if !blk.alive {

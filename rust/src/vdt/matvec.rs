@@ -275,6 +275,7 @@ pub fn matmul_into(
     scratch: &mut MatvecScratch,
     out: &mut Matrix,
 ) {
+    let _t = crate::core::obs::stage_timer("matmul");
     assert_eq!(y.rows, tree.n, "Y rows must equal N");
     let c = y.cols;
     let n = tree.n;

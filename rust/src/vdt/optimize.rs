@@ -69,6 +69,7 @@ pub fn optimize_q(
     sigma: f64,
     scratch: &mut OptScratch,
 ) {
+    let _t = crate::core::obs::stage_timer("optimize_q");
     let nn = tree.num_nodes();
     let nblocks = part.blocks.len();
     scratch.log_z.clear();

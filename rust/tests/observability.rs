@@ -1,0 +1,375 @@
+//! Observability-layer test suite:
+//!
+//! - histogram invariants (bucket partition sums, sum/count consistency,
+//!   quantile sandwich bounds, overflow and empty-histogram behaviour),
+//! - counter concurrency hammer (no lost increments across threads),
+//! - registry idempotence (same (name, labels) → same instrument),
+//! - exposition-format shape (HELP/TYPE pairs, label escaping,
+//!   cumulative `_bucket` + `_sum`/`_count` + `le="+Inf"`),
+//! - a scripted HTTP session with **exact** request/error counts in
+//!   `/stats` and `/metrics` (deterministic under every
+//!   `VDT_THREADS`/`VDT_SIMD` CI leg),
+//! - `/metrics` ⇄ `/stats` consistency off the same registry,
+//! - batcher instruments (fused width + coalesce wait) under real
+//!   micro-batching,
+//! - structured access-log line schema.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use vdt::coordinator::{Coordinator, CoordinatorHandle};
+use vdt::core::json::Json;
+use vdt::core::obs::{latency_bounds, width_bounds, Registry};
+use vdt::core::Matrix;
+use vdt::runtime::server::client::HttpClient;
+use vdt::runtime::server::{matrix_body, Server, ServerConfig, ServerHandle};
+use vdt::vdt::{VdtConfig, VdtModel};
+
+const N: usize = 80;
+
+fn fitted(seed: u64) -> Arc<VdtModel> {
+    let ds = vdt::data::synthetic::two_moons(N, 0.07, seed);
+    let mut m = VdtModel::build(&ds.x, &VdtConfig::default());
+    m.refine_to(4 * N);
+    Arc::new(m)
+}
+
+fn spawn(cfg: ServerConfig) -> (CoordinatorHandle, ServerHandle, Arc<VdtModel>) {
+    let model = fitted(1);
+    let handle = Coordinator::spawn();
+    handle.register("m", model.clone());
+    let server = Server::bind(handle.clone(), "127.0.0.1:0", cfg).expect("bind");
+    (handle, server, model)
+}
+
+/// Value of the exposition sample whose name{labels} prefix is exactly
+/// `key` (the next byte must be the sample separator space, so `_count`
+/// never matches `_count_more` and a bare name never matches its
+/// `_bucket` series).
+fn sample(body: &str, key: &str) -> f64 {
+    let line = body
+        .lines()
+        .find(|l| l.starts_with(key) && l.as_bytes().get(key.len()) == Some(&b' '))
+        .unwrap_or_else(|| panic!("no sample '{key}' in exposition:\n{body}"));
+    line.rsplit(' ').next().unwrap().parse().unwrap_or_else(|e| panic!("bad value in '{line}': {e}"))
+}
+
+// ------------------------------------------------------------ instruments
+
+#[test]
+fn histogram_buckets_partition_the_observations() {
+    let reg = Registry::new();
+    let h = reg.histogram_with_bounds("t_h", "help", &[], &[1.0, 2.0, 4.0, 8.0]);
+    let values = [0.5, 1.0, 1.5, 2.0, 3.0, 5.0, 7.9, 8.0, 9.0, 100.0];
+    for v in values {
+        h.observe(v);
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.bounds, vec![1.0, 2.0, 4.0, 8.0]);
+    // bucket i holds values in (bounds[i-1], bounds[i]]; last is overflow
+    assert_eq!(snap.counts, vec![2, 2, 1, 3, 2]);
+    assert_eq!(snap.counts.iter().sum::<u64>(), snap.count);
+    assert_eq!(snap.count, values.len() as u64);
+    let want_sum: f64 = values.iter().sum();
+    assert!((snap.sum - want_sum).abs() < 1e-3, "sum {} want {want_sum}", snap.sum);
+    assert!((h.sum() - want_sum).abs() < 1e-3);
+    assert_eq!(h.count(), values.len() as u64);
+}
+
+#[test]
+fn quantiles_are_sandwiched_by_their_bucket() {
+    let reg = Registry::new();
+    let h = reg.histogram_with_bounds("t_q", "help", &[], &[1.0, 2.0, 4.0, 8.0]);
+    for _ in 0..100 {
+        h.observe(1.5); // all mass in the (1, 2] bucket
+    }
+    for q in [0.1, 0.5, 0.9, 0.99] {
+        let v = h.quantile(q);
+        assert!((1.0..=2.0).contains(&v), "q{q} = {v} outside its bucket");
+    }
+    // overflow mass reports the largest finite bound, not +Inf
+    for _ in 0..1000 {
+        h.observe(100.0);
+    }
+    assert_eq!(h.quantile(0.99), 8.0);
+}
+
+#[test]
+fn empty_and_degenerate_observations_are_safe() {
+    let reg = Registry::new();
+    let h = reg.histogram("t_e", "help", &[]);
+    assert_eq!(h.quantile(0.5), 0.0, "empty histogram quantile");
+    // non-finite and non-positive observations clamp to 0 (first bucket)
+    h.observe(f64::NAN);
+    h.observe(f64::INFINITY);
+    h.observe(-3.0);
+    let snap = h.snapshot();
+    assert_eq!(snap.count, 3);
+    assert_eq!(snap.counts[0], 3);
+}
+
+#[test]
+fn default_bound_builders_are_strictly_increasing() {
+    for bounds in [latency_bounds(), width_bounds(1), width_bounds(2), width_bounds(8), width_bounds(1000)] {
+        assert!(!bounds.is_empty());
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bounds not strictly increasing: {bounds:?}"
+        );
+    }
+    // the cap is always the last bound, so max-width batches land in a
+    // finite bucket
+    assert_eq!(*width_bounds(24).last().unwrap(), 24.0);
+}
+
+#[test]
+fn counter_hammer_loses_no_increments() {
+    let reg = Arc::new(Registry::new());
+    let c = reg.counter("t_c", "help", &[]);
+    const THREADS: usize = 8;
+    const PER: u64 = 20_000;
+    let mut joins = Vec::new();
+    for _ in 0..THREADS {
+        let c = c.clone();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..PER {
+                c.inc();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(c.get(), THREADS as u64 * PER);
+}
+
+#[test]
+fn registry_registration_is_idempotent() {
+    let reg = Registry::new();
+    let a = reg.counter("t_i", "help", &[("k", "v")]);
+    let b = reg.counter("t_i", "help", &[("k", "v")]);
+    a.inc();
+    b.add(2);
+    assert_eq!(a.get(), 3, "same (name, labels) must share one instrument");
+    // a different label set is a distinct instrument in the same family
+    let other = reg.counter("t_i", "help", &[("k", "w")]);
+    assert_eq!(other.get(), 0);
+}
+
+#[test]
+fn exposition_escapes_label_values_and_pairs_help_type() {
+    let reg = Registry::new();
+    let c = reg.counter("t_esc", "line1\nline2", &[("p", "a\\b\"c\nd")]);
+    c.inc();
+    let out = reg.render();
+    assert!(out.contains("# HELP t_esc line1\\nline2\n"), "{out}");
+    assert!(out.contains("# TYPE t_esc counter\n"), "{out}");
+    assert!(out.contains("t_esc{p=\"a\\\\b\\\"c\\nd\"} 1\n"), "{out}");
+}
+
+#[test]
+fn rendered_histogram_buckets_are_cumulative_with_inf() {
+    let reg = Registry::new();
+    let h = reg.histogram_with_bounds("t_r", "help", &[("l", "x")], &[1.0, 2.0]);
+    h.observe(0.5);
+    h.observe(1.5);
+    h.observe(99.0);
+    let out = reg.render();
+    assert!(out.contains("t_r_bucket{l=\"x\",le=\"1\"} 1\n"), "{out}");
+    assert!(out.contains("t_r_bucket{l=\"x\",le=\"2\"} 2\n"), "{out}");
+    assert!(out.contains("t_r_bucket{l=\"x\",le=\"+Inf\"} 3\n"), "{out}");
+    assert!(out.contains("t_r_count{l=\"x\"} 3\n"), "{out}");
+    assert_eq!(sample(&out, "t_r_sum{l=\"x\"}"), 101.0);
+}
+
+// ---------------------------------------------------------- HTTP surface
+
+#[test]
+fn scripted_session_counts_are_exact() {
+    let (handle, server, _model) = spawn(ServerConfig::default());
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    // 1: healthz carries version + uptime build info
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(health.get("version").unwrap().as_str(), Some(env!("CARGO_PKG_VERSION")));
+    assert!(health.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(health.get("profile").unwrap().as_str().is_some());
+
+    // 2: models; 3: unknown route (404, error); 4: unknown model (404, error)
+    assert_eq!(c.get("/v1/models").unwrap().0, 200);
+    assert_eq!(c.get("/nope").unwrap().0, 404);
+    let y = Matrix::from_fn(1, 1, |_, _| 1.0);
+    assert_eq!(c.post("/v1/models/absent/matvec", &matrix_body("y", &y)).unwrap().0, 404);
+
+    // 5: /stats — the keep-alive connection serializes requests, so the
+    // counters are exact: five dispatched (this one included), two errors
+    let (status, body) = c.get("/stats").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let stats = Json::parse(&body).unwrap();
+    let http = stats.get("http").unwrap();
+    assert_eq!(http.get("requests").unwrap().as_usize(), Some(5), "{body}");
+    assert_eq!(http.get("errors").unwrap().as_usize(), Some(2), "{body}");
+    assert_eq!(http.get("rejected").unwrap().as_usize(), Some(0), "{body}");
+    assert_eq!(http.get("accept_failures").unwrap().as_usize(), Some(0), "{body}");
+    let classes = http.get("accept_classes").unwrap();
+    for class in ["retry", "backoff", "fatal"] {
+        assert_eq!(classes.get(class).unwrap().as_usize(), Some(0), "{class}: {body}");
+    }
+    assert!(stats.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    // latency quantiles for every endpoint that has completed requests
+    let latency = stats.get("latency").unwrap();
+    let healthz = latency.get("healthz").unwrap();
+    assert_eq!(healthz.get("count").unwrap().as_usize(), Some(1), "{body}");
+    assert!(healthz.get("p50_us").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(healthz.get("p99_us").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(latency.get("models").unwrap().get("count").unwrap().as_usize(), Some(1));
+    assert_eq!(latency.get("other").unwrap().get("count").unwrap().as_usize(), Some(1));
+    assert_eq!(latency.get("matvec").unwrap().get("count").unwrap().as_usize(), Some(1));
+
+    // 6: /metrics agrees with /stats off the same registry (one more
+    // request — /metrics itself — has been dispatched since)
+    let (status, metrics) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200, "{metrics}");
+    assert_eq!(sample(&metrics, "vdt_http_requests_total"), 6.0);
+    assert_eq!(sample(&metrics, "vdt_http_errors_total"), 2.0);
+    assert_eq!(sample(&metrics, "vdt_http_rejected_total"), 0.0);
+    assert_eq!(sample(&metrics, "vdt_accept_failures_total"), 0.0);
+    for class in ["retry", "backoff", "fatal"] {
+        assert_eq!(sample(&metrics, &format!("vdt_accept_errors_total{{class=\"{class}\"}}")), 0.0);
+    }
+    // this connection is the only one open
+    assert_eq!(sample(&metrics, "vdt_http_active_connections"), 1.0);
+
+    // exposition shape: HELP/TYPE pairs, build info, per-endpoint
+    // histograms with cumulative buckets and +Inf
+    assert!(metrics.contains("# HELP vdt_http_requests_total "), "{metrics}");
+    assert!(metrics.contains("# TYPE vdt_http_requests_total counter"), "{metrics}");
+    assert!(metrics.contains("# TYPE vdt_http_request_duration_seconds histogram"), "{metrics}");
+    let build = format!("vdt_build_info{{version=\"{}\"", env!("CARGO_PKG_VERSION"));
+    assert!(metrics.contains(&build), "{metrics}");
+    assert_eq!(
+        sample(&metrics, "vdt_http_request_duration_seconds_count{endpoint=\"healthz\"}"),
+        1.0
+    );
+    assert!(
+        metrics.contains("vdt_http_request_duration_seconds_bucket{endpoint=\"healthz\",le=\"+Inf\"} 1"),
+        "{metrics}"
+    );
+    // the fitted model was built in this process, so the global pipeline
+    // stage timers have samples
+    assert!(metrics.contains("vdt_stage_duration_seconds_bucket{stage=\"tree_build\""), "{metrics}");
+    // scrape-time families: coordinator, ingest ledger, per-model, uptime
+    assert!(sample(&metrics, "vdt_coordinator_requests_total") >= 1.0);
+    assert!(metrics.contains("vdt_model_epoch{model=\"m\",backend=\"vdt\"} 0"), "{metrics}");
+    assert!(metrics.contains("vdt_model_pending_ingest{model=\"m\"} 0"), "{metrics}");
+    assert!(sample(&metrics, "vdt_uptime_seconds") >= 0.0);
+    assert_eq!(sample(&metrics, "vdt_ingest_rows_total"), 0.0);
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn batcher_instruments_record_width_and_wait() {
+    let (handle, server, _model) = spawn(ServerConfig {
+        batch_window: Duration::from_millis(2),
+        max_batch: 8,
+        batching: true,
+        ..ServerConfig::default()
+    });
+    let addr = server.addr();
+
+    const CLIENTS: usize = 6;
+    let mut joins = Vec::new();
+    for client in 0..CLIENTS {
+        joins.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("connect");
+            let y = Matrix::from_fn(N, 1, move |r, _| (((r + client) % 7) as f32 - 3.0) * 0.2);
+            let (status, body) = c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap();
+            assert_eq!(status, 200, "{body}");
+            let got = Json::parse(&body).unwrap();
+            let _ = got.get("yhat").expect("yhat present");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let mut c = HttpClient::connect(addr).unwrap();
+    let (status, metrics) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    // the width histogram sees one observation per flushed batch, the
+    // wait histogram one per request that rode in a batch — and every
+    // matvec rides a batch when batching is on, so widths sum exactly to
+    // the request count
+    let batches = sample(&metrics, "vdt_batch_fused_width_count");
+    assert!((1.0..=CLIENTS as f64).contains(&batches), "batches = {batches}");
+    assert_eq!(sample(&metrics, "vdt_batch_coalesce_wait_seconds_count"), CLIENTS as f64);
+    assert_eq!(sample(&metrics, "vdt_batch_fused_width_sum"), CLIENTS as f64);
+    assert!(metrics.contains("# TYPE vdt_batch_fused_width histogram"), "{metrics}");
+    assert!(
+        metrics.contains("vdt_batch_coalesce_wait_seconds_bucket"),
+        "{metrics}"
+    );
+
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn access_log_lines_follow_the_schema() {
+    let path = std::env::temp_dir().join(format!(
+        "vdt_obs_access_{}_{:?}.log",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_file(&path).ok();
+    let (handle, server, _model) = spawn(ServerConfig {
+        access_log: Some(path.to_string_lossy().into_owned()),
+        ..ServerConfig::default()
+    });
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    assert_eq!(c.get("/healthz").unwrap().0, 200);
+    let y = Matrix::from_fn(N, 1, |r, _| ((r % 5) as f32 - 2.0) * 0.3);
+    assert_eq!(c.post("/v1/models/m/matvec", &matrix_body("y", &y)).unwrap().0, 200);
+    assert_eq!(c.get("/nope").unwrap().0, 404);
+    server.shutdown();
+    handle.shutdown();
+
+    let text = std::fs::read_to_string(&path).expect("access log written");
+    std::fs::remove_file(&path).ok();
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("unparseable log line '{l}': {e}")))
+        .collect();
+    assert_eq!(lines.len(), 3, "one line per routed request:\n{text}");
+
+    for line in &lines {
+        assert!(line.get("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+        let id = line.get("id").unwrap().as_str().unwrap();
+        assert!(id.contains('-'), "id '{id}' should be token-seq");
+        for key in ["method", "path", "endpoint"] {
+            assert!(line.get(key).unwrap().as_str().is_some(), "{key} missing");
+        }
+        for key in ["status", "bytes", "latency_us"] {
+            assert!(line.get(key).unwrap().as_f64().unwrap() >= 0.0, "{key} missing");
+        }
+    }
+    assert_eq!(lines[0].get("endpoint").unwrap().as_str(), Some("healthz"));
+    assert_eq!(lines[0].get("status").unwrap().as_usize(), Some(200));
+    assert!(lines[0].get("model").is_none(), "healthz line carries no model");
+    assert_eq!(lines[1].get("endpoint").unwrap().as_str(), Some("matvec"));
+    assert_eq!(lines[1].get("model").unwrap().as_str(), Some("m"));
+    assert!(lines[1].get("bytes").unwrap().as_usize().unwrap() > 2);
+    assert_eq!(lines[2].get("endpoint").unwrap().as_str(), Some("other"));
+    assert_eq!(lines[2].get("status").unwrap().as_usize(), Some(404));
+
+    // per-request ids are unique within the session
+    let ids: std::collections::HashSet<_> =
+        lines.iter().map(|l| l.get("id").unwrap().as_str().unwrap().to_string()).collect();
+    assert_eq!(ids.len(), 3);
+}
